@@ -1,0 +1,45 @@
+//! Quickstart: load the trained artifacts, run one AgileNN inference end to
+//! end, and print the full latency/energy breakdown.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Requires `make artifacts` to have been run (or AGILENN_ARTIFACTS set).
+
+use agilenn::baselines::{make_runner, SchemeRunner};
+use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
+use agilenn::runtime::Engine;
+use agilenn::workload::TestSet;
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let cfg = RunConfig::new(default_artifacts_dir(), "svhns", Scheme::Agile);
+    let meta = Meta::load(&cfg.dataset_dir())?;
+    let testset = TestSet::load(&cfg.dataset_dir().join("test.bin"))?;
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+    println!(
+        "AgileNN[{}]: {} classes, k={} of {} channels local, alpha={:.3}",
+        meta.dataset, meta.num_classes, meta.k, meta.feature[2], meta.alpha
+    );
+
+    let mut runner = make_runner(&engine, &cfg, &meta)?;
+    let mut correct = 0;
+    let n = 16.min(testset.len());
+    for i in 0..n {
+        let out = runner.process(&testset.image(i)?, testset.labels[i])?;
+        correct += out.correct as usize;
+        if i == 0 {
+            println!("\nfirst request breakdown:");
+            println!("  local NN    : {:.2} ms", out.breakdown.local_nn_s * 1e3);
+            println!("  compression : {:.2} ms", out.breakdown.compression_s * 1e3);
+            println!("  network     : {:.2} ms", out.breakdown.network_s * 1e3);
+            println!("  remote NN   : {:.2} ms", out.breakdown.remote_s * 1e3);
+            println!("  total       : {:.2} ms", out.breakdown.total_s() * 1e3);
+            println!("  tx bytes    : {} (raw would be {})", out.tx_bytes,
+                     meta.tx_elements(Scheme::Agile) * 4);
+            println!("  energy      : {:.2} mJ", out.energy.total_mj());
+        }
+    }
+    println!("\naccuracy over {n} requests: {:.1}%", 100.0 * correct as f64 / n as f64);
+    Ok(())
+}

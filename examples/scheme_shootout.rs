@@ -1,0 +1,36 @@
+//! Scheme shootout: every serving scheme on every built dataset — a compact
+//! version of the paper's whole evaluation section in one run.
+//!
+//!     cargo run --release --example scheme_shootout [n_per_point]
+
+use agilenn::config::Scheme;
+use agilenn::experiments::{eval_scheme, EvalCtx};
+use agilenn::report::{mj, ms, pct, Table};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let ctx = EvalCtx::from_env()?;
+    for ds in ctx.datasets.clone() {
+        let mut t = Table::new(
+            format!("shootout [{ds}] ({n} requests/scheme)"),
+            &["scheme", "total_ms", "local_ms", "net_ms", "tx_bytes", "energy_mJ", "acc", "early_exit"],
+        );
+        for scheme in Scheme::all() {
+            let e = eval_scheme(&ctx, &ctx.run_config(&ds, scheme), n)?;
+            t.row(vec![
+                scheme.name().into(),
+                ms(e.total_latency_s()),
+                ms(e.mean.local_nn_s),
+                ms(e.mean.network_s),
+                format!("{:.0}", e.mean_tx_bytes),
+                mj(e.mean_energy.total_j()),
+                pct(e.accuracy),
+                pct(e.early_exit_rate),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    Ok(())
+}

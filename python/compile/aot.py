@@ -1,0 +1,316 @@
+"""AOT export: trains every scheme and lowers all serving-path graphs to HLO
+text for the Rust coordinator (build-time only; never on the request path).
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the `xla`
+crate's backend) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Per dataset, artifacts/<dataset>/ receives:
+  agile_device_b{1,8}.hlo.txt   x -> (local_logits, remote_feats)  [Pallas conv]
+  agile_remote_b{1,2,4,8}.hlo.txt   remote_feats -> logits
+  deepcod_device_b{1,8}.hlo.txt x -> code
+  deepcod_remote_b{1,2,4,8}.hlo.txt code -> logits
+  spinn_device_b{1,8}.hlo.txt   x -> (feats, exit_logits)
+  spinn_remote_b{1,2,4,8}.hlo.txt   feats -> logits
+  mcunet_local_b{1,8}.hlo.txt   x -> logits
+  edge_remote_b{1,4}.hlo.txt    x -> logits
+  meta.json                     alpha, k, rho, codebooks, MACs, bytes, accs
+  test.bin                      test images + labels (Rust workload loader)
+
+Usage: python -m compile.aot --out ../artifacts [--datasets a,b] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, models, quantize, train, xai
+
+REMOTE_BATCHES = (1, 2, 4, 8)
+DEVICE_BATCHES = (1, 8)
+CODEBOOK_BITS = (1, 2, 3, 4, 5, 6)
+TEST_BIN_MAGIC = 0x41474C45  # "AGLE"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default HLO printer
+    # elides big weight constants as `{...}`, which the text parser on the
+    # Rust side silently reads back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_fn(fn, example_args, path: pathlib.Path) -> int:
+    """Lower `fn` at `example_args` shapes and write HLO text. Returns bytes."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path.write_text(text)
+    return len(text)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving graphs (closures over trained params; params get constant-folded
+# into the HLO so the artifact is self-contained)
+# ---------------------------------------------------------------------------
+
+
+def agile_device_fn(res: train.TrainResult, *, use_pallas=True):
+    k = res.cfg.k
+
+    def fn(x):
+        feats = models.extractor_apply(res.ext, x, use_pallas=use_pallas)
+        local_logits = models.local_apply(res.local, feats[..., :k])
+        return local_logits, feats[..., k:]
+
+    return fn
+
+
+def agile_remote_fn(res: train.TrainResult):
+    def fn(feats):
+        return (models.remote_apply(res.remote, feats),)
+
+    return fn
+
+
+def write_test_bin(path: pathlib.Path, x: np.ndarray, y: np.ndarray) -> None:
+    """Header: magic, n, h, w, c (LE u32); then f32 images; then i32 labels."""
+    n, h, w, c = x.shape
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIIII", TEST_BIN_MAGIC, n, h, w, c))
+        f.write(np.ascontiguousarray(x, dtype="<f4").tobytes())
+        f.write(np.ascontiguousarray(y, dtype="<i4").tobytes())
+
+
+# ---------------------------------------------------------------------------
+# per-dataset pipeline
+# ---------------------------------------------------------------------------
+
+
+def build_dataset(name: str, out_dir: pathlib.Path, *, quick: bool, log) -> dict:
+    t0 = time.time()
+    spec = data.SPECS[name]
+    ddir = out_dir / name
+    ddir.mkdir(parents=True, exist_ok=True)
+
+    if quick:
+        cfg = train.AgileConfig(dataset=name, pre_steps=80, joint_steps=80, ig_steps=2)
+        bl_steps = 80
+        test_n = 256
+    else:
+        cfg = train.AgileConfig(dataset=name, pre_steps=250, joint_steps=350, ig_steps=4)
+        bl_steps = 350
+        test_n = 512
+
+    x_train, y_train = data.load(name, "train")
+    x_test, y_test = data.load(name, "test")
+
+    log(f"[{name}] training AgileNN (pre={cfg.pre_steps}, joint={cfg.joint_steps})")
+    res = train.train_agilenn(cfg, log_every=0)
+
+    log(f"[{name}] training baselines ({bl_steps} steps each)")
+    deepcod, dc_hist = train.train_deepcod(cfg, x_train, y_train, steps=bl_steps)
+    spinn, sp_hist = train.train_spinn(cfg, x_train, y_train, steps=bl_steps)
+    mcunet, mc_hist = train.train_mcunet(cfg, x_train, y_train, steps=bl_steps)
+    edge, eo_hist = train.train_edgeonly(cfg, x_train, y_train, steps=bl_steps)
+
+    # ---- export HLO ----
+    log(f"[{name}] exporting HLO artifacts")
+    k, c, nc = cfg.k, models.FEATURE_CHANNELS, spec.num_classes
+    hw = models.FEATURE_HW
+    for b in DEVICE_BATCHES:
+        export_fn(agile_device_fn(res), (_spec((b, 32, 32, 3)),),
+                  ddir / f"agile_device_b{b}.hlo.txt")
+        export_fn(lambda x: (models.deepcod_encode(deepcod, x),),
+                  (_spec((b, 32, 32, 3)),), ddir / f"deepcod_device_b{b}.hlo.txt")
+        export_fn(lambda x: models.spinn_device(spinn, x),
+                  (_spec((b, 32, 32, 3)),), ddir / f"spinn_device_b{b}.hlo.txt")
+        export_fn(lambda x: (models.mcunet_apply(mcunet, x),),
+                  (_spec((b, 32, 32, 3)),), ddir / f"mcunet_local_b{b}.hlo.txt")
+    for b in REMOTE_BATCHES:
+        export_fn(agile_remote_fn(res), (_spec((b, hw, hw, c - k)),),
+                  ddir / f"agile_remote_b{b}.hlo.txt")
+        export_fn(lambda z: (models.deepcod_decode(deepcod, z),),
+                  (_spec((b, hw, hw, models.DEEPCOD_CODE_CHANNELS)),),
+                  ddir / f"deepcod_remote_b{b}.hlo.txt")
+        export_fn(lambda f: (models.spinn_remote(spinn, f),),
+                  (_spec((b, hw, hw, 32)),), ddir / f"spinn_remote_b{b}.hlo.txt")
+    for b in (1, 4):
+        export_fn(lambda x: (models.edgeonly_apply(edge, x),),
+                  (_spec((b, 32, 32, 3)),), ddir / f"edge_remote_b{b}.hlo.txt")
+
+    # ---- codebooks over the transmitted-feature distribution ----
+    feats_fn = jax.jit(lambda xb: models.extractor_apply(res.ext, xb))
+    sample_feats = np.asarray(feats_fn(jnp.asarray(x_train[:512])))
+    remote_feats = sample_feats[..., k:]
+    codebooks = {str(b): quantize.fit_codebook(remote_feats, b).tolist() for b in CODEBOOK_BITS}
+    code_entropy = {
+        b: quantize.code_entropy_bits(quantize.quantize(remote_feats,
+                                                        np.asarray(codebooks[str(b)], np.float32)))
+        for b in CODEBOOK_BITS
+    }
+    # DeepCOD transmits its learned code; fit codebooks for it too
+    dc_code = np.asarray(jax.jit(lambda xb: models.deepcod_encode(deepcod, xb))(
+        jnp.asarray(x_train[:512])))
+    dc_codebooks = {str(b): quantize.fit_codebook(dc_code, b).tolist() for b in CODEBOOK_BITS}
+    # SPINN transmits raw intermediate features
+    sp_feats = np.asarray(jax.jit(lambda xb: models.spinn_device(spinn, xb)[0])(
+        jnp.asarray(x_train[:512])))
+    sp_codebooks = {str(b): quantize.fit_codebook(sp_feats, b).tolist() for b in CODEBOOK_BITS}
+
+    # ---- accuracies (python cross-check; Rust re-measures end-to-end) ----
+    log(f"[{name}] measuring accuracies")
+    xt, yt = x_test[:test_n], y_test[:test_n]
+    acc_agile = train.eval_agilenn(res, xt, yt)
+    acc_agile_q4 = train.eval_agilenn(
+        res, xt, yt, quant_codebook=np.asarray(codebooks["4"], np.float32))
+    acc_agile_local = train.eval_agilenn(res, xt, yt, alpha=1.0)
+    acc_deepcod = train.eval_simple(
+        lambda p, x: models.deepcod_decode(p, models.deepcod_encode(p, x)), deepcod, xt, yt,
+        use_jit=False)
+    acc_spinn = train.eval_simple(
+        lambda p, x: models.spinn_remote(p, models.spinn_device(p, x)[0]), spinn, xt, yt,
+        use_jit=False)
+    acc_mcunet = train.eval_simple(models.mcunet_apply, mcunet, xt, yt, use_jit=False)
+    acc_edge = train.eval_simple(models.edgeonly_apply, edge, xt, yt, use_jit=False)
+
+    # SPINN early-exit calibration: max-softmax confidence on train subset
+    sp_dev = jax.jit(lambda xb: models.spinn_device(spinn, xb))
+    _, exit_logits = sp_dev(jnp.asarray(x_train[:1024]))
+    conf = np.asarray(jax.nn.softmax(exit_logits).max(axis=-1))
+    exit_pred = np.asarray(exit_logits.argmax(axis=-1))
+    thr = 0.9
+    exit_rate = float((conf >= thr).mean())
+    exit_acc = float((exit_pred[conf >= thr] == y_train[:1024][conf >= thr]).mean()) \
+        if exit_rate > 0 else 0.0
+
+    # ---- importance statistics (Fig 4 / Fig 21 inputs) ----
+    imps = train.collect_importances(res, xt, yt, max_samples=min(512, test_n))
+    nat_skew = np.sort(np.asarray(xai.natural_skewness(jnp.asarray(imps), k)))
+    ach_skew = np.asarray(xai.achieved_skewness(jnp.asarray(imps), k))
+    dis_rate = float(np.asarray(xai.disorder_rate(jnp.asarray(imps), k)))
+
+    # ---- test set for Rust ----
+    write_test_bin(ddir / "test.bin", x_test[:test_n], y_test[:test_n])
+
+    meta = {
+        "dataset": name,
+        "num_classes": nc,
+        "image": [32, 32, 3],
+        "feature": [hw, hw, c],
+        "k": k,
+        "rho": cfg.rho,
+        "lambda": cfg.lam,
+        "T": cfg.T,
+        "alpha": res.alpha,
+        "w_alpha": res.w_alpha,
+        "xai_tool": cfg.xai_tool,
+        "selected_channels": res.selected_channels,
+        "channel_likelihood": res.channel_likelihood,
+        "codebooks": codebooks,
+        "code_entropy_bits": {str(b): e for b, e in code_entropy.items()},
+        "deepcod_codebooks": dc_codebooks,
+        "spinn_codebooks": sp_codebooks,
+        "macs": {
+            "agile_device": models.extractor_macs() + models.local_macs(k, nc),
+            "agile_extractor": models.extractor_macs(),
+            "agile_local": models.local_macs(k, nc),
+            "agile_remote": models.remote_macs(c - k, nc),
+            "deepcod_device": models.deepcod_encoder_macs(),
+            "spinn_device": models.spinn_device_macs(nc),
+            "mcunet_local": models.mcunet_macs(nc),
+        },
+        "param_bytes_int8": {
+            "agile_device": models.param_bytes({"e": res.ext, "l": res.local}),
+            "deepcod_device": models.param_bytes(
+                {k2: deepcod[k2] for k2 in ("enc1", "enc2", "enc3")}),
+            "spinn_device": models.param_bytes(
+                {k2: spinn[k2] for k2 in ("conv1", "conv2", "exit_fc")}),
+            "mcunet_local": models.param_bytes(mcunet),
+        },
+        "tx_elements": {
+            "agile": hw * hw * (c - k),
+            "deepcod": hw * hw * models.DEEPCOD_CODE_CHANNELS,
+            "spinn": hw * hw * 32,
+            "edge_raw_bytes": 32 * 32 * 3,
+        },
+        "accuracy": {
+            "agile": acc_agile,
+            "agile_quant4": acc_agile_q4,
+            "agile_local_only": acc_agile_local,
+            "deepcod": acc_deepcod,
+            "spinn_final": acc_spinn,
+            "mcunet": acc_mcunet,
+            "edge_only": acc_edge,
+        },
+        "spinn_exit": {"threshold": thr, "rate": exit_rate, "accuracy": exit_acc},
+        "importance": {
+            "natural_skewness_quantiles": {
+                "p10": float(nat_skew[int(0.10 * len(nat_skew))]),
+                "p50": float(nat_skew[int(0.50 * len(nat_skew))]),
+                "p90": float(nat_skew[int(0.90 * len(nat_skew))]),
+            },
+            "achieved_skewness_mean": float(ach_skew.mean()),
+            "disorder_rate": dis_rate,
+            "mean_importance_per_channel": imps.mean(axis=0).tolist(),
+        },
+        "training": {
+            "pre_steps": cfg.pre_steps,
+            "joint_steps": cfg.joint_steps,
+            "final_train_acc": float(np.mean(res.history["acc"][-25:])),
+            "final_skew": float(np.mean(res.history["skew"][-25:])),
+            "loss_curve": res.history["loss"][::5],
+            "acc_curve": res.history["acc"][::5],
+            "baseline_loss_final": {
+                "deepcod": float(np.mean(dc_hist[-25:])),
+                "spinn": float(np.mean(sp_hist[-25:])),
+                "mcunet": float(np.mean(mc_hist[-25:])),
+                "edge_only": float(np.mean(eo_hist[-25:])),
+            },
+        },
+        "build_seconds": round(time.time() - t0, 1),
+    }
+    (ddir / "meta.json").write_text(json.dumps(meta, indent=1))
+    log(f"[{name}] done in {meta['build_seconds']}s: "
+        f"agile={acc_agile:.3f} deepcod={acc_deepcod:.3f} spinn={acc_spinn:.3f} "
+        f"mcunet={acc_mcunet:.3f} edge={acc_edge:.3f} alpha={res.alpha:.2f}")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--datasets", default="svhns,cifar10s,cifar100s,imagenet200s")
+    ap.add_argument("--quick", action="store_true", help="tiny training runs (CI)")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = [n.strip() for n in args.datasets.split(",") if n.strip()]
+    manifest = {"datasets": [], "quick": args.quick}
+    for name in names:
+        build_dataset(name, out_dir, quick=args.quick, log=print)
+        manifest["datasets"].append(name)
+        # incremental: a partially-built tree is already servable
+        (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"manifest: {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# Training-side figure regeneration (paper Figs 4, 6, 8, 9, 10, 11, 15, 21, 24).
+# Each module exposes run(out_dir) and is runnable as `python -m
+# compile.experiments.<name>`; `run_all` drives the whole set.

@@ -1,0 +1,35 @@
+"""Shared helpers for the training-side figure experiments."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DEFAULT_OUT = pathlib.Path("../artifacts/figures")
+
+
+def out_dir(arg: str | None = None) -> pathlib.Path:
+    d = pathlib.Path(arg) if arg else DEFAULT_OUT
+    d.mkdir(parents=True, exist_ok=True)
+    return d
+
+
+def emit(out: pathlib.Path, name: str, title: str, headers: list[str], rows: list[list]) -> None:
+    """Print an aligned table and persist it as JSON for the Rust side."""
+    widths = [len(h) for h in headers]
+    srows = [[f"{c:.4f}" if isinstance(c, float) else str(c) for c in r] for r in rows]
+    for r in srows:
+        widths = [max(w, len(c)) for w, c in zip(widths, r)]
+    print(f"== {title} ==")
+    print("  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    print("-" * (sum(widths) + 2 * (len(widths) - 1)))
+    for r in srows:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+    print()
+    (out / f"{name}.json").write_text(
+        json.dumps({"title": title, "headers": headers, "rows": rows}, indent=1)
+    )
+
+
+def quick_flag(argv: list[str]) -> bool:
+    return "--quick" in argv

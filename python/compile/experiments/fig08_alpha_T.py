@@ -1,0 +1,45 @@
+"""Fig 8: the alpha(w;T) soft constraint — sensitivity and accuracy vs T.
+
+(a) alpha's trajectory range for different temperatures T;
+(b) final accuracy vs T: very small T lets alpha saturate toward 0/1 and
+    starve one branch (the paper's bias failure mode); T in [4,8] is safe.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from .. import data, losses, train
+from .common import emit, out_dir, quick_flag
+
+
+def run(out, *, quick=False):
+    x_test, y_test = data.load("svhns", "test")
+    steps = 60 if quick else 250
+    rows = []
+    for t in [1.0, 2.0, 4.0, 6.0, 8.0, 16.0]:
+        cfg = train.AgileConfig(
+            dataset="svhns",
+            T=t,
+            pre_steps=60 if quick else 250,
+            joint_steps=steps,
+            ig_steps=2,
+            preselect_samples=256,
+        )
+        res = train.train_agilenn(cfg)
+        acc = train.eval_agilenn(res, x_test[:256], y_test[:256])
+        # sensitivity: |d alpha / d w| at the trained w
+        eps = 1e-3
+        sens = abs(
+            float(losses.alpha_of(np.float32(res.w_alpha + eps), T=t))
+            - float(losses.alpha_of(np.float32(res.w_alpha - eps), T=t))
+        ) / (2 * eps)
+        rows.append([t, res.alpha, sens, acc])
+    emit(out, "fig08", "Fig 8: alpha soft-constraint temperature T",
+         ["T", "trained_alpha", "d_alpha/d_w", "accuracy"], rows)
+
+
+if __name__ == "__main__":
+    run(out_dir(), quick=quick_flag(sys.argv))

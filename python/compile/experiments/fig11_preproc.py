@@ -1,0 +1,43 @@
+"""Fig 11: effectiveness of pre-processing (Algorithm 1 channel selection)
+vs random channel selection — random init brings learning difficulty from
+the first epochs and worse convergence.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from .. import data, train
+from .common import emit, out_dir, quick_flag
+
+
+def run(out, *, quick=False):
+    x_test, y_test = data.load("cifar100s", "test")
+    steps = 60 if quick else 250
+    rows = []
+    for preselect, label in [(True, "Algorithm 1"), (False, "random channels")]:
+        cfg = train.AgileConfig(
+            dataset="cifar100s",
+            preselect=preselect,
+            pre_steps=60 if quick else 250,
+            joint_steps=steps,
+            ig_steps=2,
+            preselect_samples=256,
+        )
+        res = train.train_agilenn(cfg)
+        acc = train.eval_agilenn(res, x_test[:256], y_test[:256])
+        losses = np.asarray(res.history["pred"])
+        rows.append([
+            label,
+            float(losses[: steps // 4].mean()),
+            float(losses[-steps // 4 :].mean()),
+            acc,
+        ])
+    emit(out, "fig11", "Fig 11: Algorithm-1 pre-processing vs random channel init",
+         ["channel_init", "early_pred_loss", "late_pred_loss", "accuracy"], rows)
+
+
+if __name__ == "__main__":
+    run(out_dir(), quick=quick_flag(sys.argv))

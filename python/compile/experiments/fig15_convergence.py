@@ -1,0 +1,78 @@
+"""Fig 15: training convergence — AgileNN's joint training (with XAI losses)
+vs regular training of the same capacity, on CIFAR-100-s and SVHN-s.
+
+The paper's point: skewness manipulation does not slow convergence.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import data, losses as L, models, train
+from .common import emit, out_dir, quick_flag
+
+
+def _train_regular(cfg, x_train, y_train, steps):
+    """Same extractor + remote-NN capacity, plain cross-entropy."""
+    spec = data.SPECS[cfg.dataset]
+    key = jax.random.PRNGKey(cfg.seed + 999)
+    ke, kr = jax.random.split(key)
+    params = {
+        "ext": models.init_extractor(ke),
+        "net": models.init_remote(kr, models.FEATURE_CHANNELS, spec.num_classes),
+    }
+    vel = train.sgd_init(params)
+
+    @jax.jit
+    def step(params, vel, xb, yb, lr):
+        def loss_fn(p):
+            feats = models.extractor_apply(p["ext"], xb)
+            logits = models.remote_apply(p["net"], feats)
+            return L.cross_entropy(logits, yb), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, vel = train.sgd_step(params, grads, vel, lr=lr, momentum=cfg.momentum,
+                                     weight_decay=cfg.weight_decay)
+        acc = jnp.mean((jnp.argmax(logits, -1) == yb).astype(jnp.float32))
+        return params, vel, loss, acc
+
+    it = data.batches(x_train, y_train, cfg.batch_size, seed=cfg.seed + 7, epochs=10_000)
+    hist = {"loss": [], "acc": []}
+    for i in range(steps):
+        xb, yb = next(it)
+        params, vel, loss, acc = step(params, vel, jnp.asarray(xb), jnp.asarray(yb),
+                                      train.cosine_lr(cfg.lr, i, steps))
+        hist["loss"].append(float(loss))
+        hist["acc"].append(float(acc))
+    return hist
+
+
+def run(out, *, quick=False):
+    steps = 60 if quick else 300
+    rows = []
+    for ds in ["cifar100s", "svhns"]:
+        cfg = train.AgileConfig(dataset=ds, pre_steps=60 if quick else 250,
+                                joint_steps=steps, ig_steps=2, preselect_samples=256)
+        x_train, y_train = data.load(ds, "train")
+        res = train.train_agilenn(cfg)
+        reg = _train_regular(cfg, x_train, y_train, steps)
+        for quarter in range(4):
+            lo, hi = quarter * steps // 4, (quarter + 1) * steps // 4
+            rows.append([
+                ds,
+                f"q{quarter + 1}",
+                float(np.mean(res.history["pred"][lo:hi])),
+                float(np.mean(res.history["acc"][lo:hi])),
+                float(np.mean(reg["loss"][lo:hi])),
+                float(np.mean(reg["acc"][lo:hi])),
+            ])
+    emit(out, "fig15", "Fig 15: convergence — AgileNN joint training vs regular training",
+         ["dataset", "phase", "agile_loss", "agile_acc", "regular_loss", "regular_acc"], rows)
+
+
+if __name__ == "__main__":
+    run(out_dir(), quick=quick_flag(sys.argv))

@@ -1,0 +1,79 @@
+"""Fig 21 sweep: train 9 AgileNN variants over (k, rho) in
+{3,5,7} x {0.7,0.8,0.9} (10/20/30% features local x skewness targets), and
+write slim per-variant metas to artifacts/fig21/k{K}_rho{R}/meta.json for
+`agilenn bench --figure 21`.
+
+Slow (9 trainings) — opt-in via `make fig21-train`. --quick shrinks steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import data, models, quantize, train, xai
+
+
+def run_variant(ds: str, k: int, rho: float, out_root: pathlib.Path, *, quick: bool):
+    cfg = train.AgileConfig(
+        dataset=ds,
+        k=k,
+        rho=rho,
+        pre_steps=60 if quick else 250,
+        joint_steps=80 if quick else 300,
+        ig_steps=2 if quick else 4,
+        preselect_samples=256 if quick else 1024,
+    )
+    res = train.train_agilenn(cfg)
+    x_test, y_test = data.load(ds, "test")
+    n = 256
+    acc = train.eval_agilenn(res, x_test[:n], y_test[:n])
+    imps = train.collect_importances(res, x_test, y_test, max_samples=n)
+    ach = float(np.asarray(xai.achieved_skewness(jnp.asarray(imps), k)).mean())
+
+    # mean transmitted payload: 4-bit quantized entropy estimate over the
+    # remote features (the Rust side recomputes exact LZW sizes for the main
+    # trained point; here the entropy bound keeps the sweep fast)
+    feats_fn = jax.jit(lambda xb: models.extractor_apply(res.ext, xb))
+    feats = np.asarray(feats_fn(jnp.asarray(x_test[:n])))[..., k:]
+    cb = quantize.fit_codebook(feats, 4)
+    ent = quantize.code_entropy_bits(quantize.quantize(feats, cb))
+    elems = feats.shape[1] * feats.shape[2] * feats.shape[3]
+    payload_bytes = elems * ent / 8.0 + 4
+
+    vdir = out_root / f"k{k}_rho{int(rho * 100)}"
+    vdir.mkdir(parents=True, exist_ok=True)
+    meta = {
+        "k": k,
+        "rho": rho,
+        "accuracy": acc,
+        "achieved_skewness": ach,
+        "mean_tx_payload_bytes": payload_bytes,
+        "alpha": res.alpha,
+        "dataset": ds,
+    }
+    (vdir / "meta.json").write_text(json.dumps(meta, indent=1))
+    print(f"k={k} rho={rho}: acc={acc:.3f} skew={ach:.3f} payload~{payload_bytes:.0f}B")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/fig21")
+    ap.add_argument("--dataset", default="cifar10s")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    out_root = pathlib.Path(args.out)
+    # paper §7.4: retain 10/20/30% of features with rho 0.7/0.8/0.9
+    for k in (3, 5, 7):
+        for rho in (0.7, 0.8, 0.9):
+            run_variant(args.dataset, k, rho, out_root, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Fig 24: choice of XAI technique — Integrated Gradients vs Gradient
+Saliency. Trains one AgileNN variant per tool and writes fig24.json, which
+`agilenn bench --figure 24` renders alongside the serving-side numbers.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+import numpy as np
+
+from .. import data, train
+from .common import emit, out_dir, quick_flag
+
+
+def run(out, *, quick=False):
+    x_test, y_test = data.load("svhns", "test")
+    steps = 60 if quick else 300
+    points = []
+    rows = []
+    for tool, grads_per_eval in [("ig", 4), ("gs", 1)]:
+        cfg = train.AgileConfig(
+            dataset="svhns",
+            xai_tool=tool,
+            pre_steps=60 if quick else 250,
+            joint_steps=steps,
+            ig_steps=4,
+            preselect_samples=256,
+        )
+        res = train.train_agilenn(cfg)
+        acc = train.eval_agilenn(res, x_test[:256], y_test[:256])
+        skew = float(np.mean(res.history["skew"][-25:]))
+        points.append({
+            "dataset": "svhns",
+            "tool": tool,
+            "accuracy": acc,
+            "achieved_skewness": skew,
+            "grad_computations_per_eval": grads_per_eval,
+        })
+        rows.append([tool.upper(), acc, skew, grads_per_eval])
+    (out / "fig24.json").write_text(json.dumps(points, indent=1))
+    emit(out, "fig24_table", "Fig 24: IG vs Gradient Saliency",
+         ["tool", "accuracy", "achieved_skewness", "grads/eval"], rows)
+
+
+if __name__ == "__main__":
+    run(out_dir(), quick=quick_flag(sys.argv))

@@ -1,0 +1,54 @@
+"""Run every training-side figure experiment (Figs 4, 6, 8, 9, 10, 11, 15,
+24). `--quick` shrinks all trainings for smoke runs.
+
+    cd python && python -m compile.experiments.run_all --out ../artifacts/figures
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (
+    fig04_skewness,
+    fig06_stability,
+    fig08_alpha_T,
+    fig09_ordering,
+    fig10_lambda,
+    fig11_preproc,
+    fig15_convergence,
+    fig24_xai,
+)
+from .common import out_dir
+
+MODULES = [
+    ("fig04", fig04_skewness),
+    ("fig06", fig06_stability),
+    ("fig08", fig08_alpha_T),
+    ("fig09", fig09_ordering),
+    ("fig10", fig10_lambda),
+    ("fig11", fig11_preproc),
+    ("fig15", fig15_convergence),
+    ("fig24", fig24_xai),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/figures")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="comma-separated subset, e.g. fig04,fig10")
+    args = ap.parse_args()
+    out = out_dir(args.out)
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"--- {name} ---")
+        mod.run(out, quick=args.quick)
+        print(f"[{name} done in {time.time() - t0:.0f}s]\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Pallas kernel for the on-device feature extractor's convolutions (L1).
+
+This is the paper's *online* hot spot: the only NN compute that runs on the
+embedded device is the 2-conv feature extractor, so its conv is the kernel we
+hand-schedule.  The conv is expressed the TPU-native way — as a sum of nine
+shifted `(Ho*Wo, Cin) x (Cin, Cout)` matmuls (one per 3x3 tap), which on real
+hardware map straight onto the MXU systolic array, with the whole per-image
+activation block resident in VMEM:
+
+  grid = (B,)                      one program per image
+  x block   : (H+2, W+2, Cin)      padded activations  -> VMEM
+  w block   : (3, 3, Cin, Cout)    weights (replicated) -> VMEM
+  out block : (Ho, Wo, Cout)                            -> VMEM
+
+VMEM footprint per program (f32, extractor conv2: H=16, Cin=16, Cout=24):
+  x 18*18*16*4 = 20.7 KiB, w 3*3*16*24*4 = 13.8 KiB, out 8*8*24*4 = 6 KiB
+  -> ~41 KiB, far under the ~16 MiB VMEM budget; the grid could be widened to
+  batch tiles of 64+ images per program on a real TPU (see EXPERIMENTS.md
+  §Perf for the block-shape sweep).
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the same dataflow to plain HLO so the
+exported artifact runs on the Rust side unchanged.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KH = KW = 3  # the extractor uses 3x3 convs only
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, relu: bool):
+    """One image: 'SAME' 3x3 conv as 9 tap-matmuls accumulated in f32."""
+    x = x_ref[0]  # (H+2, W+2, Cin) — already padded; block carries a unit batch dim
+    w = w_ref[...]  # (3, 3, Cin, Cout)
+    b = b_ref[...]
+    _, ho, wo, cout = o_ref.shape
+    cin = x.shape[-1]
+    acc = jnp.zeros((ho * wo, cout), jnp.float32)
+    for i in range(KH):
+        for j in range(KW):
+            # shifted, strided activation window for tap (i, j)
+            tap = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, cin),
+                (stride, stride, 1),
+            )  # (ho, wo, cin)
+            # MXU-shaped contraction: (ho*wo, cin) @ (cin, cout)
+            acc += tap.reshape(ho * wo, cin) @ w[i, j]
+    out = acc.reshape(ho, wo, cout) + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[0] = out
+
+
+def _conv2d(x, w, b, *, stride: int, relu: bool):
+    if x.ndim != 4 or w.ndim != 4 or w.shape[0] != KH or w.shape[1] != KW:
+        raise ValueError(f"expected NHWC x and (3,3,cin,cout) w, got {x.shape} {w.shape}")
+    bsz, h, wd, cin = x.shape
+    cout = w.shape[-1]
+    ho, wo = -(-h // stride), -(-wd // stride)  # ceil-div, 'SAME'
+    # 'SAME' padding for odd kernels: one pixel each side (stride 1) or
+    # asymmetric for stride 2 on even sizes; jnp.pad once outside the kernel.
+    pad_h = (ho - 1) * stride + KH - h
+    pad_w = (wo - 1) * stride + KW - wd
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pad_h // 2, pad_h - pad_h // 2), (pad_w // 2, pad_w - pad_w // 2), (0, 0)),
+    )
+    kernel = partial(_conv_kernel, stride=stride, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, xp.shape[1], xp.shape[2], cin), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((KH, KW, cin, cout), lambda n: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, cout), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ho, wo, cout), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, w, b)
+
+
+def conv2d_relu(x, w, b, *, stride=1):
+    """Fused 'SAME' 3x3 conv + bias + ReLU (NHWC)."""
+    return _conv2d(x, w, b, stride=stride, relu=True)
+
+
+def conv2d_linear(x, w, b, *, stride=1):
+    """'SAME' 3x3 conv + bias, no activation (pre-mapping-layer conv2)."""
+    return _conv2d(x, w, b, stride=stride, relu=False)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Every Pallas kernel in this package must match its oracle to float32
+tolerance; python/tests/test_kernels.py sweeps shapes/dtypes with hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, b, *, stride=1):
+    """NHWC 'SAME' conv, no activation. w: (kh,kw,cin,cout)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def conv2d_relu_ref(x, w, b, *, stride=1):
+    return jax.nn.relu(conv2d_ref(x, w, b, stride=stride))
+
+
+def ig_channel_importance_ref(feats, grads):
+    """Reference Integrated-Gradients channel importance.
+
+    feats: (B,H,W,C) features; baseline is zero (paper §2.2).
+    grads: (S,B,H,W,C) gradients of the reference NN's target logit at S
+           linear interpolation points between baseline and feats.
+    Returns (B,C): per-channel importance, L1-normalised per sample.
+    """
+    avg_grad = jnp.mean(grads, axis=0)  # path-integral approximation
+    ig = feats * avg_grad  # (x - x0) * avg_grad with x0 = 0
+    imp = jnp.sum(jnp.abs(ig), axis=(1, 2))  # (B,C)
+    return imp / (jnp.sum(imp, axis=-1, keepdims=True) + 1e-9)

@@ -1,0 +1,60 @@
+"""AgileNN training losses (paper Eq. 1, Eq. 2, §4.2) and the alpha combiner."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_LAMBDA = 0.3  # paper §4.2: moderate lambda in [0.2, 0.4]
+DEFAULT_T = 6.0  # paper §3.3: moderate T in [4, 8]
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def disorder_loss(imp, k, *, sample_mask=None):
+    """Eq. (1): max(0, max(I2) - min(I1)) per sample, averaged.
+
+    I1 = importances of the first k channels, I2 = the rest.  Non-zero only
+    when some less-important-slot channel outranks a top-k-slot channel.
+    """
+    viol = jax.nn.relu(jnp.max(imp[:, k:], axis=-1) - jnp.min(imp[:, :k], axis=-1))
+    return _masked_mean(viol, sample_mask)
+
+
+def skewness_loss(imp, k, rho, *, sample_mask=None):
+    """Eq. (2): max(0, rho - |I1|_1) per sample, averaged."""
+    deficit = jax.nn.relu(rho - jnp.sum(imp[:, :k], axis=-1))
+    return _masked_mean(deficit, sample_mask)
+
+
+def descending_sort_loss(imp, *, sample_mask=None):
+    """The strawman L_descent = ||I - sort_desc(I)||^2 (§4.1, Fig 9)."""
+    target = -jnp.sort(-imp, axis=-1)
+    per_sample = jnp.sum((imp - target) ** 2, axis=-1)
+    return _masked_mean(per_sample, sample_mask)
+
+
+def _masked_mean(x, mask):
+    if mask is None:
+        return jnp.mean(x)
+    # mask: 1.0 where the reference NN predicted correctly (§3.1) — XAI
+    # evaluations from wrong reference outputs are discarded.
+    return jnp.sum(x * mask) / (jnp.sum(mask) + 1e-9)
+
+
+def alpha_of(w, *, T=DEFAULT_T):
+    """alpha(w; T) = sigmoid(w / T) — the soft-constrained combiner weight."""
+    return jax.nn.sigmoid(w / T)
+
+
+def combine_predictions(local_logits, remote_logits, alpha):
+    """Final output: alpha * local + (1 - alpha) * remote (point-to-point)."""
+    return alpha * local_logits + (1.0 - alpha) * remote_logits
+
+
+def combined_loss(pred_loss, skew_loss, dis_loss, *, lam=DEFAULT_LAMBDA):
+    """L = lambda * L_pred + (1 - lambda) * (L_skew + L_dis)  (§4.2)."""
+    return lam * pred_loss + (1.0 - lam) * (skew_loss + dis_loss)

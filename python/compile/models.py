@@ -1,0 +1,378 @@
+"""Functional JAX model zoo for the AgileNN reproduction.
+
+Every network is a pure function over an explicit parameter pytree so that
+jax.grad / jax.jit / AOT lowering compose cleanly.  NHWC layout throughout.
+
+Components (paper §3, §6, §7):
+  * feature extractor — 2 convs, C=24 output channels (the on-device net),
+    whose second conv is *linear* so the training-time 1x1 mapping layer can
+    be folded into it exactly at export time (DESIGN.md §4),
+  * mapping layer    — trainable 1x1 channel mix used only during training,
+  * local NN         — GAP + dense over the top-k channels,
+  * remote NN        — inverted-residual CNN over the remaining channels
+    (MobileNetV2-family stand-in),
+  * reference NN     — wide CNN head over the full feature map, pre-trained,
+    frozen during joint training; target of XAI attribution,
+  * baseline nets    — DeepCOD encoder/decoder, SPINN early-exit net,
+    MCUNet-class full local net, edge-only remote net.
+
+`macs()` helpers compute multiply-accumulate counts; the Rust device
+simulator prices latency/energy from these numbers (exported in meta.json).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b, *, stride=1, padding="SAME"):
+    """NHWC conv. w: (kh, kw, cin, cout)."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def depthwise_conv2d(x, w, b, *, stride=1):
+    """NHWC depthwise conv. w: (kh, kw, c, 1)."""
+    c = x.shape[-1]
+    y = jax.lax.conv_general_dilated(
+        x,
+        jnp.reshape(jnp.transpose(w, (0, 1, 3, 2)), (w.shape[0], w.shape[1], 1, c)),
+        window_strides=(stride, stride),
+        padding="SAME",
+        feature_group_count=c,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def dense(x, w, b):
+    return x @ w + b
+
+
+def gap(x):
+    """Global average pool NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * np.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _dense_init(key, din, dout):
+    w = jax.random.normal(key, (din, dout), jnp.float32) * np.sqrt(2.0 / din)
+    return {"w": w, "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def conv_macs(h, w, kh, kw, cin, cout, stride=1):
+    return (h // stride) * (w // stride) * kh * kw * cin * cout
+
+
+# ---------------------------------------------------------------------------
+# feature extractor (on-device): conv s2 -> ReLU -> conv s2 (linear) -> map -> ReLU
+# ---------------------------------------------------------------------------
+
+EXTRACTOR_MID = 16
+FEATURE_CHANNELS = 24  # C in the paper (§7: 24 output channels)
+FEATURE_HW = 8  # 32 -> 16 -> 8 with two stride-2 convs
+
+
+def init_extractor(key, *, mid=EXTRACTOR_MID, out=FEATURE_CHANNELS):
+    k1, k2 = jax.random.split(key)
+    return {
+        "conv1": _conv_init(k1, 3, 3, 3, mid),
+        "conv2": _conv_init(k2, 3, 3, mid, out),
+    }
+
+
+def init_mapping(key, *, out=FEATURE_CHANNELS):
+    # identity-initialised 1x1 channel mix; Algorithm 1 re-initialises it as a
+    # permutation (see train.permutation_mapping).
+    del key
+    return {"m": jnp.eye(out, dtype=jnp.float32)}
+
+
+def extractor_apply(params, x, mapping=None, *, use_pallas=False):
+    """x: (B,32,32,3) -> features (B,8,8,C), post-ReLU.
+
+    The mapping layer (1x1 channel mix) sits *before* the final ReLU so it is
+    linear w.r.t. conv2 and can be folded into conv2's weights at export time.
+    """
+    if use_pallas:
+        from .kernels import extractor_conv as ek
+
+        h = ek.conv2d_relu(x, params["conv1"]["w"], params["conv1"]["b"], stride=2)
+        z = ek.conv2d_linear(h, params["conv2"]["w"], params["conv2"]["b"], stride=2)
+    else:
+        h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"], stride=2))
+        z = conv2d(h, params["conv2"]["w"], params["conv2"]["b"], stride=2)
+    if mapping is not None:
+        z = jnp.einsum("bhwc,cd->bhwd", z, mapping["m"])
+    return jax.nn.relu(z)
+
+
+def fold_mapping(params, mapping):
+    """Return extractor params with the 1x1 mapping folded into conv2 (exact)."""
+    m = mapping["m"]
+    return {
+        "conv1": params["conv1"],
+        "conv2": {
+            "w": jnp.einsum("hwio,od->hwid", params["conv2"]["w"], m),
+            "b": params["conv2"]["b"] @ m,
+        },
+    }
+
+
+def extractor_macs(*, mid=EXTRACTOR_MID, out=FEATURE_CHANNELS):
+    return conv_macs(32, 32, 3, 3, 3, mid, 2) + conv_macs(16, 16, 3, 3, mid, out, 2)
+
+
+# ---------------------------------------------------------------------------
+# local NN: GAP + dense over top-k channels
+# ---------------------------------------------------------------------------
+
+
+def init_local(key, k, num_classes):
+    return {"fc": _dense_init(key, k, num_classes)}
+
+
+def local_apply(params, feats_topk):
+    """feats_topk: (B,8,8,k) -> logits (B,nc)."""
+    return dense(gap(feats_topk), params["fc"]["w"], params["fc"]["b"])
+
+
+def local_macs(k, num_classes):
+    return FEATURE_HW * FEATURE_HW * k + k * num_classes  # GAP adds + dense
+
+
+# ---------------------------------------------------------------------------
+# remote NN: inverted-residual stack (MobileNetV2 stand-in, first conv removed)
+# ---------------------------------------------------------------------------
+
+REMOTE_WIDTHS = (48, 64, 96)
+REMOTE_EXPAND = 3
+
+
+def init_remote(key, cin, num_classes, *, widths=REMOTE_WIDTHS, expand=REMOTE_EXPAND):
+    keys = jax.random.split(key, 3 * len(widths) + 2)
+    blocks = []
+    c = cin
+    ki = 0
+    for w in widths:
+        e = c * expand
+        blocks.append(
+            {
+                "expand": _conv_init(keys[ki], 1, 1, c, e),
+                "dw": _conv_init(keys[ki + 1], 3, 3, 1, e),  # stored (3,3,1,e)
+                "project": _conv_init(keys[ki + 2], 1, 1, e, w),
+            }
+        )
+        ki += 3
+        c = w
+    head = _conv_init(keys[ki], 1, 1, c, 2 * c)
+    fc = _dense_init(keys[ki + 1], 2 * c, num_classes)
+    return {"blocks": blocks, "head": head, "fc": fc}
+
+
+def remote_apply(params, feats):
+    """feats: (B,8,8,cin) -> logits (B,nc). Strides: 1,2,1 over blocks."""
+    x = feats
+    strides = [1, 2, 1]
+    for blk, s in zip(params["blocks"], strides):
+        e = jax.nn.relu6(conv2d(x, blk["expand"]["w"], blk["expand"]["b"]))
+        dw_w = jnp.transpose(blk["dw"]["w"], (0, 1, 3, 2))  # (3,3,e,1)
+        d = jax.nn.relu6(depthwise_conv2d(e, dw_w, blk["dw"]["b"], stride=s))
+        p = conv2d(d, blk["project"]["w"], blk["project"]["b"])
+        if p.shape == x.shape:
+            p = p + x
+        x = p
+    h = jax.nn.relu(conv2d(x, params["head"]["w"], params["head"]["b"]))
+    return dense(gap(h), params["fc"]["w"], params["fc"]["b"])
+
+
+def remote_macs(cin, num_classes, *, widths=REMOTE_WIDTHS, expand=REMOTE_EXPAND):
+    total, c, hw = 0, cin, FEATURE_HW
+    for w, s in zip(widths, [1, 2, 1]):
+        e = c * expand
+        total += conv_macs(hw, hw, 1, 1, c, e)
+        total += conv_macs(hw, hw, 3, 3, 1, e, s)  # depthwise
+        hw //= s
+        total += conv_macs(hw, hw, 1, 1, e, w)
+        c = w
+    total += conv_macs(hw, hw, 1, 1, c, 2 * c)
+    total += 2 * c * num_classes
+    return total
+
+
+# ---------------------------------------------------------------------------
+# reference NN head (XAI target): wide CNN over the full feature map, frozen
+# ---------------------------------------------------------------------------
+
+REFERENCE_WIDTH = 96
+
+
+def init_reference(key, cin, num_classes, *, width=REFERENCE_WIDTH):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "conv1": _conv_init(k1, 3, 3, cin, width),
+        "conv2": _conv_init(k2, 3, 3, width, width),
+        "fc": _dense_init(k3, width, num_classes),
+    }
+
+
+def reference_apply(params, feats):
+    x = jax.nn.relu(conv2d(feats, params["conv1"]["w"], params["conv1"]["b"]))
+    x = jax.nn.relu(conv2d(x, params["conv2"]["w"], params["conv2"]["b"], stride=2))
+    return dense(gap(x), params["fc"]["w"], params["fc"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# DeepCOD baseline: learned encoder on-device, decoder + classifier remote
+# ---------------------------------------------------------------------------
+
+DEEPCOD_CODE_CHANNELS = 12
+
+
+def init_deepcod(key, num_classes, *, code=DEEPCOD_CODE_CHANNELS):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        # encoder (on device): heavier than AgileNN's extractor, as in §2.1
+        "enc1": _conv_init(k1, 3, 3, 3, 32),
+        "enc2": _conv_init(k2, 3, 3, 32, 32),
+        "enc3": _conv_init(k3, 3, 3, 32, code),
+        # decoder + classifier (remote)
+        "dec1": _conv_init(k4, 3, 3, code, 48),
+        "remote": init_remote(k5, 48, num_classes),
+    }
+
+
+def deepcod_encode(params, x):
+    """(B,32,32,3) -> code (B,8,8,code). The transmitted representation."""
+    h = jax.nn.relu(conv2d(x, params["enc1"]["w"], params["enc1"]["b"], stride=2))
+    h = jax.nn.relu(conv2d(h, params["enc2"]["w"], params["enc2"]["b"]))
+    return conv2d(h, params["enc3"]["w"], params["enc3"]["b"], stride=2)
+
+
+def deepcod_decode(params, code):
+    h = jax.nn.relu(conv2d(code, params["dec1"]["w"], params["dec1"]["b"]))
+    return remote_apply(params["remote"], h)
+
+
+def deepcod_encoder_macs(*, code=DEEPCOD_CODE_CHANNELS):
+    return (
+        conv_macs(32, 32, 3, 3, 3, 32, 2)
+        + conv_macs(16, 16, 3, 3, 32, 32)
+        + conv_macs(16, 16, 3, 3, 32, code, 2)
+    )
+
+
+# ---------------------------------------------------------------------------
+# SPINN baseline: partitioned net with an on-device early exit
+# ---------------------------------------------------------------------------
+
+
+def init_spinn(key, num_classes):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # device part: 3 convs (heavier than AgileNN, per Fig 16's local times)
+        "conv1": _conv_init(k1, 3, 3, 3, 24),
+        "conv2": _conv_init(k2, 3, 3, 24, 32),
+        "exit_fc": _dense_init(k3, 32, num_classes),  # early-exit head
+        "remote": init_remote(k4, 32, num_classes),
+    }
+
+
+def spinn_device(params, x):
+    """-> (features (B,8,8,32), early-exit logits (B,nc))."""
+    h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"], stride=2))
+    h = jax.nn.relu(conv2d(h, params["conv2"]["w"], params["conv2"]["b"], stride=2))
+    exit_logits = dense(gap(h), params["exit_fc"]["w"], params["exit_fc"]["b"])
+    return h, exit_logits
+
+
+def spinn_remote(params, feats):
+    return remote_apply(params["remote"], feats)
+
+
+def spinn_device_macs(num_classes):
+    return (
+        conv_macs(32, 32, 3, 3, 3, 24, 2)
+        + conv_macs(16, 16, 3, 3, 24, 32, 2)
+        + 32 * num_classes
+    )
+
+
+# ---------------------------------------------------------------------------
+# MCUNet baseline: full local inference, NAS-style budgeted CNN
+# ---------------------------------------------------------------------------
+
+
+def init_mcunet(key, num_classes):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "conv1": _conv_init(k1, 3, 3, 3, 16),
+        "conv2": _conv_init(k2, 3, 3, 16, 32),
+        "conv3": _conv_init(k3, 3, 3, 32, 64),
+        "conv4": _conv_init(k4, 3, 3, 64, 96),
+        "fc": _dense_init(k5, 96, num_classes),
+    }
+
+
+def mcunet_apply(params, x):
+    h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"], stride=2))
+    h = jax.nn.relu(conv2d(h, params["conv2"]["w"], params["conv2"]["b"], stride=2))
+    h = jax.nn.relu(conv2d(h, params["conv3"]["w"], params["conv3"]["b"], stride=2))
+    h = jax.nn.relu(conv2d(h, params["conv4"]["w"], params["conv4"]["b"]))
+    return dense(gap(h), params["fc"]["w"], params["fc"]["b"])
+
+
+def mcunet_macs(num_classes):
+    return (
+        conv_macs(32, 32, 3, 3, 3, 16, 2)
+        + conv_macs(16, 16, 3, 3, 16, 32, 2)
+        + conv_macs(8, 8, 3, 3, 32, 64, 2)
+        + conv_macs(4, 4, 3, 3, 64, 96)
+        + 96 * num_classes
+    )
+
+
+# ---------------------------------------------------------------------------
+# edge-only baseline: full remote model over the (compressed) raw image
+# ---------------------------------------------------------------------------
+
+
+def init_edgeonly(key, num_classes):
+    k1, k2 = jax.random.split(key)
+    return {"stem": _conv_init(k1, 3, 3, 3, 24), "remote": init_remote(k2, 24, num_classes)}
+
+
+def edgeonly_apply(params, x):
+    h = jax.nn.relu(conv2d(x, params["stem"]["w"], params["stem"]["b"], stride=4))
+    return remote_apply(params["remote"], h)
+
+
+# ---------------------------------------------------------------------------
+# parameter accounting
+# ---------------------------------------------------------------------------
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree_util.tree_leaves(tree)))
+
+
+def param_bytes(tree, *, dtype_bytes=1) -> int:
+    """Model size on flash; device models ship int8 (dtype_bytes=1)."""
+    return param_count(tree) * dtype_bytes

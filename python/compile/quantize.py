@@ -1,0 +1,66 @@
+"""Learned scalar quantization for the transmitted (less-important) features.
+
+Paper §6: "we first adopt learning-based quantization [4] and then apply
+standard LZW compression".  We fit a k-means codebook (Lloyd's algorithm) per
+bit-width over the remote-feature distribution of the training set — the
+learned, non-uniform analogue of [4]'s soft-to-hard VQ — and export the
+codebooks in meta.json.  The Rust coordinator performs the actual
+quantize -> LZW -> transmit path at serving time; this module is also used at
+build time to measure accuracy-vs-rate (Fig 17/21) and to inject quantization
+noise during joint training.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def fit_codebook(values: np.ndarray, bits: int, *, iters: int = 25, seed: int = 0) -> np.ndarray:
+    """Lloyd k-means over scalar feature values -> sorted codebook (2^bits,)."""
+    flat = np.asarray(values, dtype=np.float32).ravel()
+    if flat.size > 200_000:  # subsample for speed; distribution is what matters
+        rng = np.random.default_rng(seed)
+        flat = rng.choice(flat, 200_000, replace=False)
+    n = 1 << bits
+    # init at quantiles — robust for the heavily zero-skewed feature dists
+    code = np.quantile(flat, (np.arange(n) + 0.5) / n).astype(np.float32)
+    for _ in range(iters):
+        edges = (code[1:] + code[:-1]) / 2
+        idx = np.searchsorted(edges, flat)
+        sums = np.bincount(idx, weights=flat, minlength=n)
+        cnts = np.bincount(idx, minlength=n)
+        nonempty = cnts > 0
+        new = code.copy()
+        new[nonempty] = (sums[nonempty] / cnts[nonempty]).astype(np.float32)
+        if np.allclose(new, code, atol=1e-7):
+            code = new
+            break
+        code = new
+    return np.sort(code.astype(np.float32))
+
+
+def quantize(values: np.ndarray, codebook: np.ndarray) -> np.ndarray:
+    """-> uint8/uint16 code indices (nearest codeword)."""
+    edges = (codebook[1:] + codebook[:-1]) / 2
+    idx = np.searchsorted(edges, values)
+    return idx.astype(np.uint16 if len(codebook) > 256 else np.uint8)
+
+
+def dequantize(indices: np.ndarray, codebook: np.ndarray) -> np.ndarray:
+    return codebook[indices.astype(np.int64)].astype(np.float32)
+
+
+def roundtrip(values: np.ndarray, codebook: np.ndarray) -> np.ndarray:
+    return dequantize(quantize(values, codebook), codebook)
+
+
+def quantization_mse(values: np.ndarray, codebook: np.ndarray) -> float:
+    return float(np.mean((roundtrip(values, codebook) - values) ** 2))
+
+
+def code_entropy_bits(indices: np.ndarray) -> float:
+    """Empirical entropy of the code stream — lower bound on LZW output bits
+    per symbol; used for the compression-rate estimates in meta.json."""
+    _, counts = np.unique(indices, return_counts=True)
+    p = counts / counts.sum()
+    return float(-(p * np.log2(p)).sum())

@@ -1,0 +1,104 @@
+"""XAI attribution tools (paper §2.2, §7.7): Integrated Gradients + Gradient
+Saliency over the *reference NN*, producing per-channel feature importance.
+
+The reference NN is pre-trained and frozen; attribution asks "how much does
+feature channel c of this sample contribute to the reference NN's confidence
+in the true class?".  Importance is L1-normalised per sample so skewness
+thresholds (rho) are scale-free.
+
+Both tools are differentiable w.r.t. the features, which is what lets the
+disorder/skewness losses push gradients back into the feature extractor
+(grad-of-grad through the reference NN; it is small enough for this to be
+cheap at build time).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import models
+
+IG_STEPS = 8  # paper: 20-100 for reporting; 8 suffices for the training signal
+
+
+def _target_logit(ref_params, feats, labels):
+    logits = models.reference_apply(ref_params, feats)
+    return jnp.sum(jnp.take_along_axis(logits, labels[:, None], axis=1))
+
+
+def _feat_grad(ref_params, feats, labels):
+    return jax.grad(_target_logit, argnums=1)(ref_params, feats, labels)
+
+
+def ig_grads(ref_params, feats, labels, *, steps=IG_STEPS):
+    """Gradients at `steps` linear interpolation points (zero baseline).
+
+    Returns (steps, B, H, W, C) — the input to the Pallas IG kernel.
+    """
+    # midpoint rule over the path integral: alpha = (i + 0.5) / steps
+    alphas = (jnp.arange(steps, dtype=jnp.float32) + 0.5) / steps
+
+    def one(a):
+        return _feat_grad(ref_params, a * feats, labels)
+
+    return jax.vmap(one)(alphas)
+
+
+def ig_importance(ref_params, feats, labels, *, steps=IG_STEPS, use_pallas=False):
+    """Integrated-Gradients per-channel importance, (B, C), L1-normalised."""
+    grads = ig_grads(ref_params, feats, labels, steps=steps)
+    if use_pallas:
+        from .kernels import ig as ig_kernel
+
+        return ig_kernel.ig_channel_importance(feats, grads)
+    from .kernels import ref as kref
+
+    return kref.ig_channel_importance_ref(feats, grads)
+
+
+def gs_importance(ref_params, feats, labels):
+    """Gradient-Saliency importance (single gradient), (B, C)."""
+    g = _feat_grad(ref_params, feats, labels)
+    imp = jnp.sum(jnp.abs(feats * g), axis=(1, 2))
+    return imp / (jnp.sum(imp, axis=-1, keepdims=True) + 1e-9)
+
+
+def importance_fn(name: str):
+    if name == "ig":
+        return partial(ig_importance, steps=IG_STEPS)
+    if name == "gs":
+        return gs_importance
+    raise ValueError(f"unknown XAI tool {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# skewness metrics (paper §2.3, Fig 4 / Fig 21)
+# ---------------------------------------------------------------------------
+
+
+def natural_skewness(imp, k):
+    """Normalised importance of the top-k channels after sorting, (B,).
+
+    This is the paper's Fig-4 metric ("normalized importance of the top 20%
+    features") — position-agnostic.
+    """
+    top = jax.lax.top_k(imp, k)[0]
+    return jnp.sum(top, axis=-1)
+
+
+def achieved_skewness(imp, k):
+    """Normalised importance mass of the *first* k channels, (B,).
+
+    Position-aware: this is what the trained extractor must deliver at
+    runtime, where the XAI tool is unavailable and the split is by position.
+    """
+    return jnp.sum(imp[:, :k], axis=-1)
+
+
+def disorder_rate(imp, k):
+    """Fraction of samples where some channel >= k outranks a channel < k."""
+    viol = jnp.max(imp[:, k:], axis=-1) > jnp.min(imp[:, :k], axis=-1)
+    return jnp.mean(viol.astype(jnp.float32))

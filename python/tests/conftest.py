@@ -1,0 +1,7 @@
+"""Make `compile` importable whether pytest runs from python/ or the repo
+root (the final validation command runs `pytest python/tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

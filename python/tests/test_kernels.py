@@ -1,0 +1,99 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+hypothesis sweeps shapes; tolerances are f32-accumulation-order level.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import extractor_conv as ek
+from compile.kernels import ig as igk
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([4, 8, 16]),
+    cin=st.sampled_from([1, 3, 16]),
+    cout=st.sampled_from([4, 24]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 10_000),
+)
+def test_conv_relu_matches_ref(b, hw, cin, cout, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, hw, hw, cin)
+    w = _rand(rng, 3, 3, cin, cout)
+    bias = _rand(rng, cout)
+    got = ek.conv2d_relu(x, w, bias, stride=stride)
+    want = ref.conv2d_relu_ref(x, w, bias, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    b=st.integers(1, 3),
+    hw=st.sampled_from([8, 16]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 10_000),
+)
+def test_conv_linear_matches_ref(b, hw, stride, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, hw, hw, 16)
+    w = _rand(rng, 3, 3, 16, 24)
+    bias = _rand(rng, 24)
+    got = ek.conv2d_linear(x, w, bias, stride=stride)
+    want = ref.conv2d_ref(x, w, bias, stride=stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_conv_relu_nonnegative():
+    rng = np.random.default_rng(0)
+    x, w, bias = _rand(rng, 2, 8, 8, 4), _rand(rng, 3, 3, 4, 6), _rand(rng, 6)
+    out = np.asarray(ek.conv2d_relu(x, w, bias))
+    assert (out >= 0).all()
+
+
+def test_conv_rejects_bad_kernel_shape():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        ek.conv2d_relu(_rand(rng, 1, 8, 8, 3), _rand(rng, 5, 5, 3, 4), _rand(rng, 4))
+
+
+@given(
+    b=st.integers(1, 4),
+    s=st.sampled_from([1, 4, 8]),
+    hw=st.sampled_from([4, 8]),
+    c=st.sampled_from([6, 24]),
+    seed=st.integers(0, 10_000),
+)
+def test_ig_kernel_matches_ref(b, s, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    feats = _rand(rng, b, hw, hw, c)
+    grads = _rand(rng, s, b, hw, hw, c)
+    got = igk.ig_channel_importance(feats, grads)
+    want = ref.ig_channel_importance_ref(feats, grads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@given(b=st.integers(1, 3), seed=st.integers(0, 1000))
+def test_ig_importance_normalised(b, seed):
+    rng = np.random.default_rng(seed)
+    feats = _rand(rng, b, 8, 8, 12)
+    grads = _rand(rng, 4, b, 8, 8, 12)
+    imp = np.asarray(igk.ig_channel_importance(feats, grads))
+    assert (imp >= 0).all()
+    np.testing.assert_allclose(imp.sum(axis=-1), np.ones(b), rtol=1e-4)
+
+
+def test_ig_kernel_shape_mismatch_raises():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        igk.ig_channel_importance(_rand(rng, 2, 8, 8, 4), _rand(rng, 3, 2, 8, 8, 5))

@@ -1,0 +1,151 @@
+"""Unit + property tests for the loss functions and XAI attribution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import losses, models, xai
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _norm_imp(rng, b, c):
+    imp = rng.uniform(0.01, 1.0, size=(b, c)).astype(np.float32)
+    return jnp.asarray(imp / imp.sum(axis=1, keepdims=True))
+
+
+# ---- disorder loss (Eq. 1) ----
+
+
+def test_disorder_loss_zero_when_ordered():
+    imp = jnp.asarray([[0.4, 0.3, 0.2, 0.07, 0.03]])
+    assert float(losses.disorder_loss(imp, 2)) == 0.0
+
+
+def test_disorder_loss_positive_on_violation():
+    imp = jnp.asarray([[0.1, 0.2, 0.5, 0.1, 0.1]])  # channel 2 outranks 0,1
+    assert float(losses.disorder_loss(imp, 2)) > 0.0
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 6))
+def test_disorder_loss_nonnegative(seed, k):
+    imp = _norm_imp(np.random.default_rng(seed), 4, 8)
+    assert float(losses.disorder_loss(imp, k)) >= 0.0
+
+
+def test_disorder_loss_mask_discards_wrong_reference_samples():
+    imp = jnp.asarray([[0.1, 0.2, 0.5, 0.1, 0.1], [0.5, 0.3, 0.1, 0.05, 0.05]])
+    mask = jnp.asarray([0.0, 1.0])  # first sample: reference was wrong
+    assert float(losses.disorder_loss(imp, 2, sample_mask=mask)) == 0.0
+
+
+# ---- skewness loss (Eq. 2) ----
+
+
+def test_skewness_loss_zero_when_met():
+    imp = jnp.asarray([[0.5, 0.4, 0.05, 0.03, 0.02]])
+    assert float(losses.skewness_loss(imp, 2, 0.8)) == 0.0
+
+
+def test_skewness_loss_measures_deficit():
+    imp = jnp.asarray([[0.3, 0.3, 0.2, 0.1, 0.1]])
+    np.testing.assert_allclose(float(losses.skewness_loss(imp, 2, 0.8)), 0.2, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 6), rho=st.floats(0.0, 1.0))
+def test_skewness_loss_bounded(seed, k, rho):
+    imp = _norm_imp(np.random.default_rng(seed), 4, 8)
+    v = float(losses.skewness_loss(imp, k, rho))
+    assert 0.0 <= v <= rho + 1e-6
+
+
+# ---- alpha combiner (§3.3) ----
+
+
+def test_alpha_monotone_in_w_and_saturates_slower_with_high_T():
+    w = jnp.asarray(4.0)
+    assert float(losses.alpha_of(w, T=2.0)) > float(losses.alpha_of(w, T=8.0)) > 0.5
+    assert float(losses.alpha_of(jnp.asarray(0.0), T=6.0)) == 0.5
+
+
+def test_combine_predictions_endpoints():
+    lo, hi = jnp.asarray([[1.0, 0.0]]), jnp.asarray([[0.0, 1.0]])
+    np.testing.assert_allclose(np.asarray(losses.combine_predictions(lo, hi, 1.0)),
+                               np.asarray(lo))
+    np.testing.assert_allclose(np.asarray(losses.combine_predictions(lo, hi, 0.0)),
+                               np.asarray(hi))
+
+
+def test_combined_loss_lambda_weighting():
+    v = float(losses.combined_loss(1.0, 0.5, 0.5, lam=0.3))
+    np.testing.assert_allclose(v, 0.3 * 1.0 + 0.7 * 1.0, rtol=1e-6)
+
+
+# ---- XAI attribution ----
+
+
+def _tiny_ref(nc=4):
+    return models.init_reference(jax.random.PRNGKey(0), 6, nc, width=8)
+
+
+@given(seed=st.integers(0, 1000))
+def test_ig_importance_is_distribution(seed):
+    rng = np.random.default_rng(seed)
+    ref = _tiny_ref()
+    feats = jnp.asarray(rng.normal(size=(3, 8, 8, 6)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 4, size=3))
+    imp = np.asarray(xai.ig_importance(ref, feats, labels, steps=4))
+    assert imp.shape == (3, 6)
+    assert (imp >= 0).all()
+    np.testing.assert_allclose(imp.sum(axis=1), np.ones(3), rtol=1e-4)
+
+
+def test_gs_importance_is_distribution():
+    rng = np.random.default_rng(7)
+    ref = _tiny_ref()
+    feats = jnp.asarray(rng.normal(size=(2, 8, 8, 6)).astype(np.float32))
+    labels = jnp.asarray([0, 1])
+    imp = np.asarray(xai.gs_importance(ref, feats, labels))
+    np.testing.assert_allclose(imp.sum(axis=1), np.ones(2), rtol=1e-4)
+
+
+def test_ig_zero_feature_channel_gets_zero_importance():
+    """IG with zero baseline: a channel identically 0 has (x - x0) = 0."""
+    rng = np.random.default_rng(3)
+    ref = _tiny_ref()
+    feats = rng.normal(size=(2, 8, 8, 6)).astype(np.float32)
+    feats[..., 2] = 0.0
+    imp = np.asarray(xai.ig_importance(ref, jnp.asarray(feats), jnp.asarray([0, 1]), steps=4))
+    np.testing.assert_allclose(imp[:, 2], 0.0, atol=1e-7)
+
+
+def test_ig_differentiable_wrt_features():
+    ref = _tiny_ref()
+    rng = np.random.default_rng(5)
+    feats = jnp.asarray(rng.normal(size=(2, 8, 8, 6)).astype(np.float32))
+    labels = jnp.asarray([0, 1])
+
+    def loss(f):
+        imp = xai.ig_importance(ref, f, labels, steps=2)
+        return jnp.sum(imp[:, :2])  # the skewness objective shape
+
+    g = jax.grad(loss)(feats)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).sum()) > 0.0
+
+
+# ---- skewness metrics ----
+
+
+def test_natural_vs_achieved_skewness():
+    imp = jnp.asarray([[0.05, 0.05, 0.5, 0.3, 0.1]])
+    # top-2 sorted mass = 0.8; first-2-position mass = 0.1
+    np.testing.assert_allclose(float(xai.natural_skewness(imp, 2)[0]), 0.8, rtol=1e-5)
+    np.testing.assert_allclose(float(xai.achieved_skewness(imp, 2)[0]), 0.1, rtol=1e-5)
+
+
+def test_disorder_rate():
+    imp = jnp.asarray([[0.4, 0.3, 0.2, 0.1], [0.1, 0.2, 0.4, 0.3]])
+    np.testing.assert_allclose(float(xai.disorder_rate(imp, 2)), 0.5)

@@ -1,0 +1,88 @@
+"""L2 shape/semantic tests for the model zoo."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models
+
+KEY = jax.random.PRNGKey(0)
+X = jnp.asarray(np.random.default_rng(1).normal(size=(2, 32, 32, 3)).astype(np.float32))
+
+
+def test_extractor_shape_and_relu():
+    p = models.init_extractor(KEY)
+    f = models.extractor_apply(p, X)
+    assert f.shape == (2, models.FEATURE_HW, models.FEATURE_HW, models.FEATURE_CHANNELS)
+    assert (np.asarray(f) >= 0).all()
+
+
+def test_extractor_mapping_fold_is_exact():
+    p = models.init_extractor(KEY)
+    m = {"m": jax.random.normal(jax.random.PRNGKey(3),
+                                (models.FEATURE_CHANNELS, models.FEATURE_CHANNELS))}
+    with_map = models.extractor_apply(p, X, mapping=m)
+    folded = models.extractor_apply(models.fold_mapping(p, m), X)
+    np.testing.assert_allclose(np.asarray(with_map), np.asarray(folded), rtol=1e-5, atol=1e-5)
+
+
+def test_extractor_pallas_path_matches_jnp_path():
+    p = models.init_extractor(KEY)
+    a = models.extractor_apply(p, X, use_pallas=True)
+    b = models.extractor_apply(p, X, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("k,nc", [(3, 10), (5, 100), (7, 200)])
+def test_local_nn_shape(k, nc):
+    p = models.init_local(KEY, k, nc)
+    f = jnp.ones((4, 8, 8, k))
+    assert models.local_apply(p, f).shape == (4, nc)
+
+
+@pytest.mark.parametrize("cin,nc", [(19, 10), (21, 100)])
+def test_remote_nn_shape(cin, nc):
+    p = models.init_remote(KEY, cin, nc)
+    f = jnp.ones((2, 8, 8, cin))
+    assert models.remote_apply(p, f).shape == (2, nc)
+
+
+def test_reference_nn_shape():
+    p = models.init_reference(KEY, 24, 100)
+    assert models.reference_apply(p, jnp.ones((2, 8, 8, 24))).shape == (2, 100)
+
+
+def test_deepcod_shapes():
+    p = models.init_deepcod(KEY, 10)
+    code = models.deepcod_encode(p, X)
+    assert code.shape == (2, 8, 8, models.DEEPCOD_CODE_CHANNELS)
+    assert models.deepcod_decode(p, code).shape == (2, 10)
+
+
+def test_spinn_shapes():
+    p = models.init_spinn(KEY, 10)
+    feats, exit_logits = models.spinn_device(p, X)
+    assert feats.shape == (2, 8, 8, 32)
+    assert exit_logits.shape == (2, 10)
+    assert models.spinn_remote(p, feats).shape == (2, 10)
+
+
+def test_mcunet_and_edgeonly_shapes():
+    assert models.mcunet_apply(models.init_mcunet(KEY, 10), X).shape == (2, 10)
+    assert models.edgeonly_apply(models.init_edgeonly(KEY, 10), X).shape == (2, 10)
+
+
+def test_macs_ordering_matches_paper():
+    """AgileNN's device compute must be far below every baseline's (Fig 16)."""
+    nc = 100
+    agile = models.extractor_macs() + models.local_macs(5, nc)
+    assert agile < models.deepcod_encoder_macs() / 3
+    assert agile < models.spinn_device_macs(nc) / 1.8
+    assert agile < models.mcunet_macs(nc) / 4
+
+
+def test_param_count_and_bytes():
+    p = models.init_local(KEY, 5, 10)
+    assert models.param_count(p) == 5 * 10 + 10
+    assert models.param_bytes(p, dtype_bytes=1) == 60

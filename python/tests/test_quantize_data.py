@@ -1,0 +1,104 @@
+"""Quantizer + synthetic-dataset tests."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data, quantize
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+# ---- quantizer ----
+
+
+@given(bits=st.integers(1, 6), seed=st.integers(0, 1000))
+def test_codebook_size_and_sorted(bits, seed):
+    rng = np.random.default_rng(seed)
+    vals = np.abs(rng.normal(size=5000)).astype(np.float32)
+    cb = quantize.fit_codebook(vals, bits)
+    assert cb.shape == (1 << bits,)
+    assert (np.diff(cb) >= 0).all()
+
+
+@given(bits=st.integers(2, 6), seed=st.integers(0, 1000))
+def test_roundtrip_error_bounded_by_range(bits, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.uniform(0, 4, size=4000).astype(np.float32)
+    cb = quantize.fit_codebook(vals, bits)
+    err = np.abs(quantize.roundtrip(vals, cb) - vals)
+    # nearest-codeword error can never exceed the largest half-gap
+    max_gap = np.max(np.diff(cb)) if len(cb) > 1 else np.ptp(vals)
+    assert err.max() <= max_gap / 2 + max(vals.max() - cb[-1], cb[0] - vals.min(), 0) + 1e-6
+
+
+def test_more_bits_less_mse():
+    rng = np.random.default_rng(0)
+    vals = np.abs(rng.normal(size=8000)).astype(np.float32)
+    mses = [quantize.quantization_mse(vals, quantize.fit_codebook(vals, b))
+            for b in (1, 2, 4, 6)]
+    assert mses == sorted(mses, reverse=True)
+
+
+def test_quantize_indices_within_codebook():
+    rng = np.random.default_rng(1)
+    vals = rng.normal(size=1000).astype(np.float32)
+    cb = quantize.fit_codebook(vals, 3)
+    idx = quantize.quantize(vals, cb)
+    assert idx.max() < 8 and idx.min() >= 0
+
+
+def test_entropy_at_most_bits():
+    rng = np.random.default_rng(2)
+    vals = np.abs(rng.normal(size=4000)).astype(np.float32)
+    for b in (2, 4):
+        cb = quantize.fit_codebook(vals, b)
+        h = quantize.code_entropy_bits(quantize.quantize(vals, cb))
+        assert 0.0 < h <= b + 1e-6
+
+
+def test_zero_skewed_values_entropy_below_bits():
+    """Post-ReLU features are zero-heavy -> entropy well below bit width,
+    which is exactly why LZW wins (paper §6)."""
+    rng = np.random.default_rng(3)
+    vals = rng.normal(size=8000).astype(np.float32)
+    vals[vals < 0.8] = 0.0  # ~80% zeros
+    cb = quantize.fit_codebook(vals, 4)
+    h = quantize.code_entropy_bits(quantize.quantize(vals, cb))
+    assert h < 2.5
+
+
+# ---- datasets ----
+
+
+def test_dataset_shapes_and_ranges():
+    for name, spec in data.SPECS.items():
+        x, y = data.load(name, "test")
+        assert x.shape == (spec.test_size, data.IMG, data.IMG, 3)
+        assert x.dtype == np.float32 and y.dtype == np.int32
+        assert 0.0 <= x.min() and x.max() <= 1.0
+        assert y.min() >= 0 and y.max() < spec.num_classes
+
+
+def test_dataset_deterministic():
+    x1, y1 = data.load("svhns", "test")
+    x2, y2 = data.load("svhns", "test")
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_train_test_disjoint_noise():
+    xtr, _ = data.load("svhns", "train")
+    xte, _ = data.load("svhns", "test")
+    assert not np.array_equal(xtr[: len(xte)], xte)
+
+
+def test_batches_shapes_and_coverage():
+    x = np.arange(40, dtype=np.float32).reshape(10, 2, 2, 1)
+    y = np.arange(10, dtype=np.int32)
+    seen = []
+    for xb, yb in data.batches(x, y, 4, seed=0, epochs=1):
+        assert xb.shape == (4, 2, 2, 1)
+        seen.extend(yb.tolist())
+    assert len(seen) == 8  # drops ragged tail
+    assert len(set(seen)) == 8  # no duplicates within an epoch

@@ -1,0 +1,127 @@
+"""Training-pipeline smoke + semantics tests (tiny steps — CI-speed)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, losses, models, train, xai
+
+
+@pytest.fixture(scope="module")
+def tiny_result():
+    cfg = train.AgileConfig(
+        dataset="svhns",
+        pre_steps=10,
+        joint_steps=10,
+        ig_steps=2,
+        batch_size=32,
+        preselect_samples=128,
+    )
+    return train.train_agilenn(cfg)
+
+
+def test_train_produces_deploy_form(tiny_result):
+    res = tiny_result
+    # mapping layer folded away: deploy extractor has exactly two convs
+    assert set(res.ext.keys()) == {"conv1", "conv2"}
+    assert 0.0 < res.alpha < 1.0
+    assert len(res.selected_channels) == res.cfg.k
+    assert len(set(res.selected_channels)) == res.cfg.k
+    assert len(res.channel_likelihood) == models.FEATURE_CHANNELS
+
+
+def test_train_history_recorded(tiny_result):
+    res = tiny_result
+    for key in ("loss", "pred", "skew_loss", "dis_loss", "acc", "skew"):
+        assert len(res.history[key]) == res.cfg.joint_steps
+    assert all(np.isfinite(res.history["loss"]))
+
+
+def test_skewness_moves_toward_target(tiny_result):
+    # even 10 steps of skewness loss should not *decrease* skewness
+    res = tiny_result
+    assert res.history["skew"][-1] >= res.history["skew"][0] - 0.05
+
+
+def test_eval_and_forward_shapes(tiny_result):
+    res = tiny_result
+    x, y = data.load("svhns", "test")
+    acc = train.eval_agilenn(res, x[:64], y[:64])
+    assert 0.0 <= acc <= 1.0
+    logits, feats = train.agile_forward(res, jnp.asarray(x[:2]))
+    assert logits.shape == (2, 10)
+    assert feats.shape == (2, 8, 8, 24)
+
+
+def test_collect_importances_normalised(tiny_result):
+    res = tiny_result
+    x, y = data.load("svhns", "test")
+    imps = train.collect_importances(res, x, y, max_samples=32)
+    assert imps.shape == (32, models.FEATURE_CHANNELS)
+    np.testing.assert_allclose(imps.sum(axis=1), 1.0, rtol=1e-3)
+
+
+def test_permutation_mapping_moves_selected_first():
+    m = train.permutation_mapping([3, 1], 4)["m"]
+    feats = jnp.asarray(np.arange(4, dtype=np.float32)[None, None, None, :])
+    mapped = jnp.einsum("bhwc,cd->bhwd", feats, m)[0, 0, 0]
+    assert mapped.tolist() == [3.0, 1.0, 0.0, 2.0]
+
+
+def test_sgd_step_descends_quadratic():
+    params = {"w": jnp.asarray(4.0)}
+    vel = train.sgd_init(params)
+    for _ in range(50):
+        grads = {"w": 2.0 * params["w"]}
+        params, vel = train.sgd_step(params, grads, vel, lr=0.05, momentum=0.9, weight_decay=0.0)
+    assert abs(float(params["w"])) < 0.5
+
+
+def test_cosine_lr_endpoints():
+    # linear warmup over the first 10%: step 0 is base/warmup_steps
+    assert train.cosine_lr(0.1, 0, 100) == pytest.approx(0.01, rel=1e-2)
+    # warmup complete by 10%: full cosine value from there
+    assert train.cosine_lr(0.1, 10, 100) == pytest.approx(
+        0.1 * 0.5 * (1 + np.cos(np.pi * 0.1)), rel=1e-6
+    )
+    assert train.cosine_lr(0.1, 100, 100) == pytest.approx(0.0, abs=1e-9)
+    # warmup can be disabled (joint phase)
+    assert train.cosine_lr(0.1, 0, 100, warmup_frac=0.0) == pytest.approx(0.1)
+
+
+def test_quant_noise_disabled_at_zero_bits():
+    import jax
+
+    f = jnp.ones((2, 4, 4, 3))
+    out = train._quant_noise(jax.random.PRNGKey(0), f, 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(f))
+
+
+def test_alpha_sigmoid_matches_losses():
+    assert float(losses.alpha_of(jnp.asarray(0.0), T=4.0)) == 0.5
+
+
+def test_baseline_training_smoke():
+    cfg = train.AgileConfig(dataset="svhns", batch_size=32)
+    x, y = data.load("svhns", "train")
+    x, y = x[:256], y[:256]
+    dc, hist = train.train_deepcod(cfg, x, y, steps=4)
+    assert len(hist) == 4 and np.isfinite(hist).all()
+    sp, hist = train.train_spinn(cfg, x, y, steps=4)
+    assert np.isfinite(hist).all()
+    mc, hist = train.train_mcunet(cfg, x, y, steps=4)
+    assert np.isfinite(hist).all()
+
+
+def test_natural_skewness_of_untrained_extractor_is_moderate():
+    """Fig 4's premise: without manipulation, importance is not very skewed."""
+    import jax
+
+    cfg = train.AgileConfig(dataset="svhns", pre_steps=30, batch_size=32)
+    x, y = data.load("svhns", "train")
+    ext, ref, _ = train.train_reference(cfg, x, y)
+    feats = models.extractor_apply(ext, jnp.asarray(x[:64]))
+    imp = xai.ig_importance(ref, feats, jnp.asarray(y[:64]), steps=2)
+    skew = np.asarray(xai.natural_skewness(imp, 5))
+    # top-5 of 24 channels hold well under 100% of the mass before training
+    assert skew.mean() < 0.95

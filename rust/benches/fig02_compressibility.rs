@@ -1,0 +1,21 @@
+//! Fig 2 bench: data-compressibility motivation; times the DCT codec at two
+//! quality levels.
+
+use agilenn::bench::Bench;
+use agilenn::compression::dct;
+use agilenn::experiments::{run_figure, EvalCtx};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "2").expect("fig02") {
+        t.print();
+        println!();
+    }
+    let img: Vec<f32> = (0..32 * 32 * 3).map(|i| ((i % 97) as f32) / 97.0).collect();
+    let b = Bench::new();
+    for q in [10.0f32, 90.0] {
+        b.run(&format!("fig02_dct_encode/q{}", q as u32), || {
+            dct::encode(&img, 32, 32, 3, q).unwrap()
+        });
+    }
+}

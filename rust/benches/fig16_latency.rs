@@ -1,0 +1,27 @@
+//! Fig 16 bench: regenerates the end-to-end latency/accuracy table and
+//! times the AgileNN request hot path against DeepCOD's.
+
+use agilenn::baselines::make_runner;
+use agilenn::bench::Bench;
+use agilenn::config::Scheme;
+use agilenn::experiments::{run_figure, EvalCtx};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "16").expect("fig16") {
+        t.print();
+        println!();
+    }
+    let ds = ctx.datasets[0].clone();
+    let meta = ctx.meta(&ds).unwrap();
+    let testset = ctx.testset(&ds).unwrap();
+    let img = testset.image(0).unwrap();
+    let b = Bench::new();
+    for scheme in [Scheme::Agile, Scheme::Deepcod] {
+        let cfg = ctx.run_config(&ds, scheme);
+        let mut runner = make_runner(&ctx.engine, &cfg, &meta).unwrap();
+        b.run(&format!("fig16_request_path/{}", scheme.name()), || {
+            runner.process(&img, testset.labels[0]).unwrap()
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Fig 17 bench: accuracy vs compression rate (AgileNN vs DeepCOD);
+//! times codebook quantization across bit widths.
+
+use agilenn::bench::Bench;
+use agilenn::compression::quantizer::{bitpack, Codebook};
+use agilenn::config::Scheme;
+use agilenn::experiments::{run_figure, EvalCtx};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "17").expect("fig17") {
+        t.print();
+        println!();
+    }
+    let ds = ctx.datasets[0].clone();
+    let meta = ctx.meta(&ds).unwrap();
+    let vals: Vec<f32> = (0..1216).map(|i| if i % 5 == 0 { 0.4 } else { 0.0 }).collect();
+    let b = Bench::new();
+    for bits in [1u32, 4] {
+        let cb = Codebook::new(meta.codebook(Scheme::Agile, bits).unwrap()).unwrap();
+        let mut idx = Vec::new();
+        b.run(&format!("fig17_quantize/{bits}bit"), || {
+            cb.quantize(&vals, &mut idx);
+            bitpack(&idx, bits)
+        });
+    }
+}

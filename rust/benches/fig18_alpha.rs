@@ -1,0 +1,19 @@
+//! Fig 18 bench: accuracy vs prediction re-weighting alpha; times the
+//! combiner (which must be negligible — §3.3's argument for weighted
+//! summation over an extra NN layer).
+
+use agilenn::bench::Bench;
+use agilenn::coordinator::Combiner;
+use agilenn::experiments::{run_figure, EvalCtx};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "18").expect("fig18") {
+        t.print();
+        println!();
+    }
+    let combiner = Combiner::new(0.3).unwrap();
+    let local: Vec<f32> = (0..200).map(|i| (i as f32 * 0.37).sin()).collect();
+    let remote: Vec<f32> = (0..200).map(|i| (i as f32 * 0.11).cos()).collect();
+    Bench::new().run("fig18_combine_200class", || combiner.predict(&local, &remote).unwrap());
+}

@@ -1,0 +1,18 @@
+//! Fig 19 bench: device energy per inference across schemes/datasets.
+
+use agilenn::bench::Bench;
+use agilenn::experiments::{run_figure, EvalCtx};
+use agilenn::simulator::{DeviceProfile, DeviceSim};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "19").expect("fig19") {
+        t.print();
+        println!();
+    }
+    let sim = DeviceSim::new(DeviceProfile::stm32f746());
+    Bench::new().run("fig19_energy_model", || {
+        let t = sim.nn_latency_s(332_146) + sim.quantize_latency_s(1216);
+        sim.compute_energy_j(t) + sim.radio_energy_j(0.001)
+    });
+}

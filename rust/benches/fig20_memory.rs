@@ -1,0 +1,17 @@
+//! Fig 20 bench: SRAM/flash usage per scheme (static accounting).
+
+use agilenn::bench::Bench;
+use agilenn::experiments::{run_figure, EvalCtx};
+use agilenn::simulator::{DeviceProfile, MemoryReport};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "20").expect("fig20") {
+        t.print();
+        println!();
+    }
+    let profile = DeviceProfile::stm32f746();
+    Bench::new().run("fig20_memory_report", || {
+        MemoryReport::new(&profile, 64 * 1024, 100 * 1024).fits()
+    });
+}

@@ -1,0 +1,22 @@
+//! Fig 21 bench: skewness-manipulation effectiveness; times the runtime
+//! skewness metrics over importance vectors.
+
+use agilenn::bench::Bench;
+use agilenn::experiments::{run_figure, EvalCtx};
+use agilenn::xai;
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "21").expect("fig21") {
+        t.print();
+        println!();
+    }
+    let imp: Vec<f64> = (0..24).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    Bench::new().run("fig21_skewness_metrics", || {
+        (
+            xai::natural_skewness(&imp, 5),
+            xai::achieved_skewness(&imp, 5),
+            xai::is_disordered(&imp, 5),
+        )
+    });
+}

@@ -1,0 +1,21 @@
+//! Fig 22 bench: latency vs device CPU frequency.
+
+use agilenn::bench::Bench;
+use agilenn::experiments::{run_figure, EvalCtx};
+use agilenn::simulator::{DeviceProfile, DeviceSim};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "22").expect("fig22") {
+        t.print();
+        println!();
+    }
+    Bench::new().run("fig22_cost_model_sweep", || {
+        [216e6, 160e6, 108e6, 64e6]
+            .iter()
+            .map(|&f| {
+                DeviceSim::new(DeviceProfile::stm32f746().with_freq(f)).nn_latency_s(332_146)
+            })
+            .sum::<f64>()
+    });
+}

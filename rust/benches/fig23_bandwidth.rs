@@ -1,0 +1,15 @@
+//! Fig 23 bench: latency vs wireless bandwidth.
+
+use agilenn::bench::Bench;
+use agilenn::experiments::{run_figure, EvalCtx};
+use agilenn::simulator::{NetworkProfile, NetworkSim};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "23").expect("fig23") {
+        t.print();
+        println!();
+    }
+    let net = NetworkSim::new(NetworkProfile::ble_270kbps());
+    Bench::new().run("fig23_link_model", || net.transfer_s(420));
+}

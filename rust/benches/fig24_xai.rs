@@ -1,0 +1,15 @@
+//! Fig 24 bench: IG vs Gradient-Saliency XAI comparison table.
+
+use agilenn::bench::Bench;
+use agilenn::experiments::{run_figure, EvalCtx};
+use agilenn::xai;
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "24").expect("fig24") {
+        t.print();
+        println!();
+    }
+    let imp: Vec<f64> = (0..24).map(|i| ((i * 7919) % 101) as f64).collect();
+    Bench::new().run("fig24_normalize", || xai::normalize(&imp));
+}

@@ -1,0 +1,48 @@
+//! Hot-path microbenches for the perf pass (EXPERIMENTS.md §Perf):
+//! device PJRT call, remote PJRT call per batch size, LZW, quantize,
+//! end-to-end request.
+
+use agilenn::baselines::make_runner;
+use agilenn::bench::Bench;
+use agilenn::compression::{lzw, quantizer::Codebook, TxEncoder};
+use agilenn::config::Scheme;
+use agilenn::coordinator::{DeviceRuntime, RemoteServer};
+use agilenn::experiments::EvalCtx;
+use agilenn::tensor::Tensor;
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    let ds = ctx.datasets[0].clone();
+    let meta = ctx.meta(&ds).unwrap();
+    let testset = ctx.testset(&ds).unwrap();
+    let img = testset.image(0).unwrap();
+    let cfg = ctx.run_config(&ds, Scheme::Agile);
+    let b = Bench::new();
+
+    // device phase (PJRT extractor+local + quantize + LZW)
+    let mut device = DeviceRuntime::new(&ctx.engine, &cfg, &meta).unwrap();
+    b.run("hot_device_phase", || device.process(&img).unwrap());
+
+    // remote phase per batch size
+    let mut server = RemoteServer::new(&ctx.engine, &cfg, &meta).unwrap();
+    let out = device.process(&img).unwrap();
+    let feat = server.decode(&out.frame).unwrap();
+    for bsz in [1usize, 4, 8] {
+        let feats: Vec<Tensor> = (0..bsz).map(|_| feat.clone()).collect();
+        b.run(&format!("hot_remote_batch/{bsz}"), || server.infer(&feats).unwrap());
+    }
+
+    // compression kernels
+    let vals: Vec<f32> = (0..meta.tx_elements(Scheme::Agile))
+        .map(|i| if i % 6 == 0 { 0.4 } else { 0.0 })
+        .collect();
+    let cb = Codebook::new(meta.codebook(Scheme::Agile, 4).unwrap()).unwrap();
+    let mut tx = TxEncoder::new(cb);
+    b.run("hot_tx_encode", || tx.encode(&vals));
+    let frame = tx.encode(&vals);
+    b.run("hot_lzw_decompress", || lzw::decompress(&frame.payload).unwrap());
+
+    // end-to-end request
+    let mut runner = make_runner(&ctx.engine, &cfg, &meta).unwrap();
+    b.run("hot_e2e_agile_request", || runner.process(&img, testset.labels[0]).unwrap());
+}

@@ -1,0 +1,24 @@
+//! Table 2 bench: transmitted-bytes reduction vs DeepCOD; times the
+//! device-side transmit encoder (quantize + bitpack + LZW).
+
+use agilenn::bench::Bench;
+use agilenn::compression::{quantizer::Codebook, TxEncoder};
+use agilenn::config::Scheme;
+use agilenn::experiments::{run_figure, EvalCtx};
+
+fn main() {
+    let ctx = EvalCtx::from_env().expect("run `make artifacts` first");
+    for t in run_figure(&ctx, "t2").expect("tab02") {
+        t.print();
+        println!();
+    }
+    let ds = ctx.datasets[0].clone();
+    let meta = ctx.meta(&ds).unwrap();
+    let cb = Codebook::new(meta.codebook(Scheme::Agile, 4).unwrap()).unwrap();
+    let mut tx = TxEncoder::new(cb);
+    // representative zero-skewed feature frame
+    let feats: Vec<f32> = (0..meta.tx_elements(Scheme::Agile))
+        .map(|i| if i % 6 == 0 { (i % 13) as f32 * 0.11 } else { 0.0 })
+        .collect();
+    Bench::new().run("tab02_tx_encode", || tx.encode(&feats));
+}

@@ -1,0 +1,59 @@
+//! All five serving schemes behind one trait, so every bench/figure sweeps
+//! them uniformly (paper §7's comparison set: AgileNN, DeepCOD, SPINN,
+//! MCUNet, edge-only).
+//!
+//! Each runner produces, per request: the prediction, a latency breakdown
+//! priced by the device/network simulators (plus measured wall-clock for the
+//! server-side NN), the device energy ledger, and the transmitted bytes.
+
+mod runners;
+
+pub use runners::{
+    AgileRunner, DeepcodRunner, EdgeOnlyRunner, McunetRunner, SpinnRunner,
+};
+
+use crate::config::{Meta, RunConfig, Scheme};
+use crate::metrics::{EnergyLedger, LatencyBreakdown};
+use crate::runtime::Engine;
+use crate::simulator::MemoryReport;
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Outcome of one request under some scheme.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub predicted: usize,
+    pub correct: bool,
+    pub breakdown: LatencyBreakdown,
+    pub energy: EnergyLedger,
+    /// application-layer uplink payload bytes (0 for local-only schemes)
+    pub tx_bytes: usize,
+    /// SPINN: request resolved at the on-device early exit
+    pub exited_early: bool,
+}
+
+/// A serving scheme, end to end.
+pub trait SchemeRunner {
+    fn scheme(&self) -> Scheme;
+
+    /// Process one sensor sample; `label` is used only for accuracy scoring.
+    fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome>;
+
+    /// Static on-device memory accounting (Fig 20).
+    fn memory_report(&self) -> MemoryReport;
+}
+
+/// Instantiate a runner for any scheme.
+pub fn make_runner(
+    engine: &Engine,
+    cfg: &RunConfig,
+    meta: &Meta,
+) -> Result<Box<dyn SchemeRunner>> {
+    Ok(match cfg.scheme {
+        Scheme::Agile => Box::new(AgileRunner::new(engine, cfg, meta)?),
+        Scheme::Deepcod => Box::new(DeepcodRunner::new(engine, cfg, meta)?),
+        Scheme::Spinn => Box::new(SpinnRunner::new(engine, cfg, meta)?),
+        Scheme::Mcunet => Box::new(McunetRunner::new(engine, cfg, meta)?),
+        Scheme::EdgeOnly => Box::new(EdgeOnlyRunner::new(engine, cfg, meta)?),
+    })
+}

@@ -1,0 +1,109 @@
+//! Micro-bench harness (criterion stand-in — the build environment vendors
+//! no criterion). Benches are `harness = false` binaries calling
+//! [`Bench::run`]; output is one line per benchmark with median / p10 / p90
+//! nanoseconds per iteration, plus a machine-greppable `BENCH\t` prefix.
+
+use std::time::Instant;
+
+pub struct Bench {
+    /// minimum sampling time per benchmark
+    budget: std::time::Duration,
+    /// samples to collect
+    samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        let ms = std::env::var("AGILENN_BENCH_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+        Self { budget: std::time::Duration::from_millis(ms), samples: 30 }
+    }
+
+    pub fn with_budget_ms(mut self, ms: u64) -> Self {
+        self.budget = std::time::Duration::from_millis(ms);
+        self
+    }
+
+    /// Measure `f`, printing a stats line. Returns median ns/iter.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> f64 {
+        // warmup + calibrate iterations per sample
+        let t0 = Instant::now();
+        let mut iters_per_sample = 1usize;
+        loop {
+            std::hint::black_box(f());
+            if t0.elapsed() > self.budget / 10 {
+                break;
+            }
+            iters_per_sample += 1;
+        }
+        iters_per_sample = iters_per_sample.max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        let deadline = Instant::now() + self.budget;
+        for _ in 0..self.samples {
+            let s0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            samples_ns.push(s0.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+            if Instant::now() > deadline {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| samples_ns[((samples_ns.len() - 1) as f64 * p).round() as usize];
+        let (p10, med, p90) = (q(0.1), q(0.5), q(0.9));
+        println!(
+            "BENCH\t{name}\tmedian {}\tp10 {}\tp90 {}\t({} samples x {} iters)",
+            fmt_ns(med),
+            fmt_ns(p10),
+            fmt_ns(p90),
+            samples_ns.len(),
+            iters_per_sample
+        );
+        med
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench::new().with_budget_ms(20);
+        let med = b.run("noop_loop", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(med > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,241 @@
+//! JPEG-style 8x8 DCT + quantization codec for the raw-data-compression
+//! baselines (paper Fig 2: "standard JPEG" compressing the NN input before
+//! transmission; higher quality factor = lower compression rate).
+//!
+//! This is deliberately the minimal transform-coding pipeline — blockwise
+//! DCT-II, quality-scaled quantization table, zig-zag + LZW entropy stage —
+//! enough to reproduce Fig 2's accuracy-vs-rate tradeoff shape.
+
+use super::lzw;
+use anyhow::{ensure, Result};
+
+const N: usize = 8;
+
+/// Luminance quantization table (ITU-T T.81 Annex K).
+#[rustfmt::skip]
+const QTABLE: [f32; 64] = [
+    16., 11., 10., 16., 24., 40., 51., 61.,
+    12., 12., 14., 19., 26., 58., 60., 55.,
+    14., 13., 16., 24., 40., 57., 69., 56.,
+    14., 17., 22., 29., 51., 87., 80., 62.,
+    18., 22., 37., 56., 68., 109., 103., 77.,
+    24., 35., 55., 64., 81., 104., 113., 92.,
+    49., 64., 78., 87., 103., 121., 120., 101.,
+    72., 92., 95., 98., 112., 100., 103., 99.,
+];
+
+fn quality_scale(quality: f32) -> f32 {
+    // libjpeg quality mapping
+    let q = quality.clamp(1.0, 100.0);
+    if q < 50.0 {
+        50.0 / q
+    } else {
+        2.0 - q / 50.0
+    }
+}
+
+fn dct_1d(input: &[f32; N], out: &mut [f32; N]) {
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut s = 0.0;
+        for (n, &v) in input.iter().enumerate() {
+            s += v * ((std::f32::consts::PI / N as f32) * (n as f32 + 0.5) * k as f32).cos();
+        }
+        let scale = if k == 0 { (1.0 / N as f32).sqrt() } else { (2.0 / N as f32).sqrt() };
+        *o = s * scale;
+    }
+}
+
+fn idct_1d(input: &[f32; N], out: &mut [f32; N]) {
+    for (n, o) in out.iter_mut().enumerate() {
+        let mut s = input[0] * (1.0 / N as f32).sqrt();
+        for (k, &v) in input.iter().enumerate().skip(1) {
+            s += v
+                * (2.0 / N as f32).sqrt()
+                * ((std::f32::consts::PI / N as f32) * (n as f32 + 0.5) * k as f32).cos();
+        }
+        *o = s;
+    }
+}
+
+fn block_transform(block: &mut [f32; 64], inverse: bool) {
+    let mut tmp = [0.0f32; 64];
+    let (mut row_in, mut row_out) = ([0.0f32; N], [0.0f32; N]);
+    // rows
+    for r in 0..N {
+        row_in.copy_from_slice(&block[r * N..(r + 1) * N]);
+        if inverse {
+            idct_1d(&row_in, &mut row_out);
+        } else {
+            dct_1d(&row_in, &mut row_out);
+        }
+        tmp[r * N..(r + 1) * N].copy_from_slice(&row_out);
+    }
+    // columns
+    for c in 0..N {
+        for r in 0..N {
+            row_in[r] = tmp[r * N + c];
+        }
+        if inverse {
+            idct_1d(&row_in, &mut row_out);
+        } else {
+            dct_1d(&row_in, &mut row_out);
+        }
+        for r in 0..N {
+            block[r * N + c] = row_out[r];
+        }
+    }
+}
+
+/// Zig-zag scan order for an 8x8 block.
+fn zigzag_order() -> [usize; 64] {
+    let mut order = [0usize; 64];
+    let (mut r, mut c, mut up) = (0i32, 0i32, true);
+    for o in order.iter_mut() {
+        *o = (r * 8 + c) as usize;
+        if up {
+            if c == 7 {
+                r += 1;
+                up = false;
+            } else if r == 0 {
+                c += 1;
+                up = false;
+            } else {
+                r -= 1;
+                c += 1;
+            }
+        } else if r == 7 {
+            c += 1;
+            up = true;
+        } else if c == 0 {
+            r += 1;
+            up = true;
+        } else {
+            r += 1;
+            c -= 1;
+        }
+    }
+    order
+}
+
+/// Encoded image: quantized DCT coefficients, LZW-entropy-coded.
+pub struct DctEncoded {
+    pub payload: Vec<u8>,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub quality: f32,
+}
+
+/// Encode an HWC f32 image in [0,1]. Dimensions must be multiples of 8.
+pub fn encode(img: &[f32], h: usize, w: usize, c: usize, quality: f32) -> Result<DctEncoded> {
+    ensure!(img.len() == h * w * c, "image size mismatch");
+    ensure!(h % N == 0 && w % N == 0, "dims must be multiples of 8");
+    let scale = quality_scale(quality);
+    let zz = zigzag_order();
+    // i16 coefficients, serialized as zig-zagged bytes (i8 saturating) + LZW
+    let mut symbols: Vec<u8> = Vec::with_capacity(img.len());
+    let mut block = [0.0f32; 64];
+    for ch in 0..c {
+        for by in (0..h).step_by(N) {
+            for bx in (0..w).step_by(N) {
+                for r in 0..N {
+                    for cc in 0..N {
+                        block[r * N + cc] = img[((by + r) * w + bx + cc) * c + ch] * 255.0 - 128.0;
+                    }
+                }
+                block_transform(&mut block, false);
+                for &zi in zz.iter() {
+                    let q = (QTABLE[zi] * scale).max(1.0);
+                    let v = (block[zi] / q).round().clamp(-127.0, 127.0) as i8;
+                    symbols.push(v as u8);
+                }
+            }
+        }
+    }
+    Ok(DctEncoded { payload: lzw::compress(&symbols), h, w, c, quality })
+}
+
+/// Decode back to an HWC f32 image in [0,1].
+pub fn decode(enc: &DctEncoded) -> Result<Vec<f32>> {
+    let symbols = lzw::decompress(&enc.payload)?;
+    ensure!(symbols.len() == enc.h * enc.w * enc.c, "corrupt DCT payload");
+    let scale = quality_scale(enc.quality);
+    let zz = zigzag_order();
+    let mut img = vec![0.0f32; enc.h * enc.w * enc.c];
+    let mut block = [0.0f32; 64];
+    let mut si = 0;
+    for ch in 0..enc.c {
+        for by in (0..enc.h).step_by(N) {
+            for bx in (0..enc.w).step_by(N) {
+                for &zi in zz.iter() {
+                    let q = (QTABLE[zi] * scale).max(1.0);
+                    block[zi] = (symbols[si] as i8) as f32 * q;
+                    si += 1;
+                }
+                block_transform(&mut block, true);
+                for r in 0..N {
+                    for cc in 0..N {
+                        img[((by + r) * enc.w + bx + cc) * enc.c + ch] =
+                            ((block[r * N + cc] + 128.0) / 255.0).clamp(0.0, 1.0);
+                    }
+                }
+            }
+        }
+    }
+    Ok(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_image() -> Vec<f32> {
+        (0..32 * 32 * 3)
+            .map(|i| (((i % 37) as f32 / 37.0) + ((i / 96) as f32 / 40.0)).fract())
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_error_shrinks_with_quality() {
+        let img = test_image();
+        let mut errs = Vec::new();
+        for q in [10.0, 50.0, 95.0] {
+            let enc = encode(&img, 32, 32, 3, q).unwrap();
+            let dec = decode(&enc).unwrap();
+            let mse: f32 =
+                img.iter().zip(&dec).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / img.len() as f32;
+            errs.push(mse);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn lower_quality_smaller_payload() {
+        let img = test_image();
+        let hi = encode(&img, 32, 32, 3, 90.0).unwrap().payload.len();
+        let lo = encode(&img, 32, 32, 3, 10.0).unwrap().payload.len();
+        assert!(lo < hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn smooth_image_compresses_hard() {
+        let img = vec![0.5f32; 32 * 32 * 3];
+        let enc = encode(&img, 32, 32, 3, 50.0).unwrap();
+        assert!(enc.payload.len() < 32 * 32 * 3 / 10);
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        assert!(encode(&[0.0; 10 * 10 * 3], 10, 10, 3, 50.0).is_err());
+        assert!(encode(&[0.0; 100], 32, 32, 3, 50.0).is_err());
+    }
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let mut seen = [false; 64];
+        for i in zigzag_order() {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+}

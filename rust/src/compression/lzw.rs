@@ -1,0 +1,336 @@
+//! LZW codec — the paper's §6 transmitter ("we first adopt learning-based
+//! quantization and then apply standard LZW compression").
+//!
+//! Classic dictionary LZW over bytes with 12-bit codes (dictionary reset at
+//! 4096 entries), output bit-packed MSB-first. The zero-heavy quantized
+//! feature streams AgileNN produces compress extremely well here, which is
+//! the mechanism behind Table 2's transmitted-byte reductions.
+
+use anyhow::{bail, Result};
+
+const MAX_CODE: usize = 1 << 12; // 12-bit codes
+const RESET_SENTINEL: u16 = 256; // emitted when the dictionary resets
+const FIRST_FREE: u16 = 257;
+
+/// Bit writer, MSB-first.
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self { out: Vec::new(), acc: 0, nbits: 0 }
+    }
+
+    fn push(&mut self, code: u16, width: u32) {
+        self.acc = (self.acc << width) | u32::from(code);
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.out.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.out.push((self.acc << (8 - self.nbits)) as u8);
+        }
+        self.out
+    }
+}
+
+/// Bit reader, MSB-first.
+struct BitReader<'a> {
+    input: &'a [u8],
+    pos: usize,
+    acc: u32,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(input: &'a [u8]) -> Self {
+        Self { input, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    fn pull(&mut self, width: u32) -> Option<u16> {
+        while self.nbits < width {
+            if self.pos >= self.input.len() {
+                return None;
+            }
+            self.acc = (self.acc << 8) | u32::from(self.input[self.pos]);
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        self.nbits -= width;
+        Some(((self.acc >> self.nbits) & ((1 << width) - 1)) as u16)
+    }
+}
+
+fn code_width(next_code: usize) -> u32 {
+    // enough bits for the largest code currently assignable
+    let mut w = 9;
+    while (1usize << w) < next_code + 1 {
+        w += 1;
+    }
+    w
+}
+
+/// Open-addressed (prefix-code, byte) -> code dictionary.
+///
+/// Perf: the std HashMap's SipHash dominated the encoder profile
+/// (EXPERIMENTS.md §Perf); LZW needs at most 4096 live entries with u32
+/// keys, so a fixed 8192-slot linear-probe table with a multiplicative hash
+/// is both allocation-free after construction and ~3x faster. Generation
+/// tagging makes `clear()` O(1) for the dictionary-reset path.
+struct Dict {
+    keys: Vec<u32>,
+    vals: Vec<u16>,
+    gens: Vec<u32>,
+    gen: u32,
+}
+
+const DICT_SLOTS: usize = 8192; // 2x MAX_CODE keeps load factor <= 0.5
+
+impl Dict {
+    fn new() -> Self {
+        Self {
+            keys: vec![0; DICT_SLOTS],
+            vals: vec![0; DICT_SLOTS],
+            gens: vec![0; DICT_SLOTS],
+            gen: 1,
+        }
+    }
+
+    #[inline]
+    fn slot(key: u32) -> usize {
+        // Fibonacci hashing; table size is a power of two
+        ((key.wrapping_mul(0x9E37_79B9)) >> (32 - 13)) as usize
+    }
+
+    #[inline]
+    fn get(&self, key: u32) -> Option<u16> {
+        let mut i = Self::slot(key);
+        loop {
+            if self.gens[i] != self.gen {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(self.vals[i]);
+            }
+            i = (i + 1) & (DICT_SLOTS - 1);
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, key: u32, val: u16) {
+        let mut i = Self::slot(key);
+        while self.gens[i] == self.gen {
+            i = (i + 1) & (DICT_SLOTS - 1);
+        }
+        self.keys[i] = key;
+        self.vals[i] = val;
+        self.gens[i] = self.gen;
+    }
+
+    #[inline]
+    fn clear(&mut self) {
+        self.gen += 1;
+    }
+}
+
+/// LZW-compress a byte stream.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    if input.is_empty() {
+        return Vec::new();
+    }
+    let mut dict = Dict::new();
+    let mut next: u16 = FIRST_FREE;
+    let mut w = BitWriter::new();
+    let mut cur: u16 = u16::from(input[0]);
+    for &byte in &input[1..] {
+        let key = (u32::from(cur) << 8) | u32::from(byte);
+        match dict.get(key) {
+            Some(code) => cur = code,
+            None => {
+                w.push(cur, code_width(next as usize));
+                if (next as usize) < MAX_CODE {
+                    dict.insert(key, next);
+                    next += 1;
+                } else {
+                    w.push(RESET_SENTINEL, code_width(next as usize));
+                    dict.clear();
+                    next = FIRST_FREE;
+                }
+                cur = u16::from(byte);
+            }
+        }
+    }
+    w.push(cur, code_width(next as usize));
+    w.finish()
+}
+
+/// Inverse of [`compress`].
+///
+/// Perf: entries are (prefix-code, byte) parent pointers expanded in place —
+/// no per-entry `Vec` allocation (EXPERIMENTS.md §Perf). `prev`/`entry` are
+/// tracked as (start, len) ranges into `out`, so emitting an entry is a
+/// within-vector copy.
+pub fn decompress(input: &[u8]) -> Result<Vec<u8>> {
+    if input.is_empty() {
+        return Ok(Vec::new());
+    }
+    // parent[c] = (prefix code, appended byte); codes < 256 are literals
+    let mut parent: Vec<(u16, u8)> = Vec::with_capacity(MAX_CODE);
+    let reset_table = |parent: &mut Vec<(u16, u8)>| {
+        parent.clear();
+        for b in 0..=255u16 {
+            parent.push((u16::MAX, b as u8));
+        }
+        parent.push((u16::MAX, 0)); // 256 reset sentinel placeholder
+    };
+    reset_table(&mut parent);
+
+    let mut r = BitReader::new(input);
+    let mut out: Vec<u8> = Vec::with_capacity(input.len() * 3);
+    let mut scratch: Vec<u8> = Vec::with_capacity(64);
+
+    // append the expansion of `code` to out; returns (start, len) of it
+    let emit = |code: u16, parent: &[(u16, u8)], out: &mut Vec<u8>, scratch: &mut Vec<u8>| {
+        let start = out.len();
+        scratch.clear();
+        let mut c = code;
+        while c != u16::MAX {
+            let (p, b) = parent[c as usize];
+            scratch.push(b);
+            c = p;
+        }
+        out.extend(scratch.iter().rev());
+        (start, out.len() - start)
+    };
+
+    let first = match r.pull(code_width(parent.len() + 1)) {
+        Some(c) => c,
+        None => return Ok(out),
+    };
+    if first as usize >= parent.len() || first == RESET_SENTINEL {
+        bail!("corrupt LZW stream: bad first code {first}");
+    }
+    let mut prev_code = first;
+    let (mut prev_start, mut prev_len) = emit(first, &parent, &mut out, &mut scratch);
+    loop {
+        // width accounts for the entry we are about to add
+        let width = code_width(parent.len() + 1);
+        let code = match r.pull(width) {
+            Some(c) => c,
+            None => break,
+        };
+        if code == RESET_SENTINEL {
+            reset_table(&mut parent);
+            let width = code_width(parent.len() + 1);
+            let c2 = match r.pull(width) {
+                Some(c) => c,
+                None => break,
+            };
+            if c2 as usize >= parent.len() || c2 == RESET_SENTINEL {
+                bail!("corrupt LZW stream after reset: code {c2}");
+            }
+            prev_code = c2;
+            (prev_start, prev_len) = emit(c2, &parent, &mut out, &mut scratch);
+            continue;
+        }
+        let (entry_start, entry_len);
+        if (code as usize) < parent.len() {
+            (entry_start, entry_len) = emit(code, &parent, &mut out, &mut scratch);
+        } else if code as usize == parent.len() {
+            // KwKwK special case: entry = prev + prev[0]
+            entry_start = out.len();
+            let first_byte = out[prev_start];
+            out.extend_from_within(prev_start..prev_start + prev_len);
+            out.push(first_byte);
+            entry_len = prev_len + 1;
+        } else {
+            bail!("corrupt LZW stream: code {code} beyond table {}", parent.len());
+        }
+        if parent.len() < MAX_CODE {
+            parent.push((prev_code, out[entry_start]));
+        }
+        prev_code = code;
+        (prev_start, prev_len) = (entry_start, entry_len);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c).unwrap();
+        assert_eq!(d, data, "roundtrip failed for len {}", data.len());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        roundtrip(&[]);
+        roundtrip(&[42]);
+    }
+
+    #[test]
+    fn repetitive_compresses_well() {
+        let data = vec![0u8; 4096];
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 10, "got {} bytes", c.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn kwkwk_pattern() {
+        // the classic aba ababa... case exercising code == table.len()
+        roundtrip(b"abababababababababab");
+    }
+
+    #[test]
+    fn incompressible_random_roundtrips() {
+        let mut state = 0x12345678u32;
+        let data: Vec<u8> = (0..10_000)
+            .map(|_| {
+                state = state.wrapping_mul(1664525).wrapping_add(1013904223);
+                (state >> 24) as u8
+            })
+            .collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn dictionary_reset_path() {
+        // enough distinct bigrams to overflow 4096 dictionary entries
+        let mut data = Vec::new();
+        for i in 0..60_000u32 {
+            data.push((i % 251) as u8);
+            data.push((i * 7 % 253) as u8);
+        }
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn zero_skewed_stream_high_ratio() {
+        // quantized post-ReLU features: ~85% zeros — paper's sparsity case
+        let mut state = 7u32;
+        let data: Vec<u8> = (0..8192)
+            .map(|_| {
+                state = state.wrapping_mul(48271) % 0x7fffffff;
+                if state % 100 < 85 {
+                    0
+                } else {
+                    (state % 16) as u8
+                }
+            })
+            .collect();
+        let c = compress(&data);
+        assert!(c.len() * 2 < data.len(), "ratio only {}/{}", c.len(), data.len());
+        roundtrip(&data);
+    }
+}

@@ -1,0 +1,122 @@
+//! Compression substrate: the device-side transmit pipeline
+//! (learned quantization -> bit-packing -> LZW, paper §6) plus the
+//! JPEG-style DCT codec used by the raw-compression baselines (Fig 2).
+
+pub mod dct;
+pub mod lzw;
+pub mod quantizer;
+
+use anyhow::Result;
+use quantizer::Codebook;
+
+/// One compressed feature frame as it would go on the wire.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// LZW-compressed bit-packed code indices.
+    pub payload: Vec<u8>,
+    /// number of feature elements encoded
+    pub count: usize,
+    /// bits per symbol before entropy coding
+    pub bits: u32,
+}
+
+impl Frame {
+    /// On-wire size in bytes (payload + 4-byte header carrying count/bits).
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.len() + 4
+    }
+}
+
+/// Device-side transmit path: quantize -> bitpack -> LZW.
+/// Scratch buffers are caller-provided so the hot loop does not allocate.
+pub struct TxEncoder {
+    codebook: Codebook,
+    idx_scratch: Vec<u8>,
+}
+
+impl TxEncoder {
+    pub fn new(codebook: Codebook) -> Self {
+        Self { codebook, idx_scratch: Vec::new() }
+    }
+
+    pub fn codebook(&self) -> &Codebook {
+        &self.codebook
+    }
+
+    pub fn encode(&mut self, values: &[f32]) -> Frame {
+        let bits = self.codebook.bits();
+        self.codebook.quantize(values, &mut self.idx_scratch);
+        let packed = quantizer::bitpack(&self.idx_scratch, bits);
+        Frame { payload: lzw::compress(&packed), count: values.len(), bits }
+    }
+}
+
+/// Server-side receive path: LZW -> bitunpack -> dequantize.
+pub struct RxDecoder {
+    codebook: Codebook,
+}
+
+impl RxDecoder {
+    pub fn new(codebook: Codebook) -> Self {
+        Self { codebook }
+    }
+
+    pub fn decode(&self, frame: &Frame) -> Result<Vec<f32>> {
+        let packed = lzw::decompress(&frame.payload)?;
+        let idx = quantizer::bitunpack(&packed, frame.bits, frame.count);
+        let mut out = Vec::new();
+        self.codebook.dequantize(&idx, &mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_features(n: usize) -> Vec<f32> {
+        // post-ReLU-like: mostly zeros, a few positive values
+        (0..n)
+            .map(|i| if i % 7 == 0 { (i % 13) as f32 * 0.17 } else { 0.0 })
+            .collect()
+    }
+
+    #[test]
+    fn tx_rx_roundtrip_values_snap_to_codebook() {
+        let cb = Codebook::new(vec![0.0, 0.25, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0]).unwrap();
+        let mut tx = TxEncoder::new(cb.clone());
+        let rx = RxDecoder::new(cb.clone());
+        let vals = skewed_features(1216);
+        let frame = tx.encode(&vals);
+        let back = rx.decode(&frame).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (orig, got) in vals.iter().zip(&back) {
+            // got must be the nearest codeword of orig
+            let nearest = cb.levels()[cb.index_of(*orig) as usize];
+            assert_eq!(*got, nearest);
+        }
+    }
+
+    #[test]
+    fn skewed_stream_beats_raw_f32_by_a_lot() {
+        let cb = Codebook::new((0..16).map(|i| i as f32 * 0.2).collect()).unwrap();
+        let mut tx = TxEncoder::new(cb);
+        let vals = skewed_features(1216); // AgileNN tx size: 8*8*19
+        let frame = tx.encode(&vals);
+        let raw = vals.len() * 4;
+        assert!(
+            frame.wire_bytes() * 8 < raw,
+            "compressed {} vs raw {}",
+            frame.wire_bytes(),
+            raw
+        );
+    }
+
+    #[test]
+    fn wire_bytes_includes_header() {
+        let cb = Codebook::new(vec![0.0, 1.0]).unwrap();
+        let mut tx = TxEncoder::new(cb);
+        let frame = tx.encode(&[0.0, 1.0, 0.0]);
+        assert_eq!(frame.wire_bytes(), frame.payload.len() + 4);
+    }
+}

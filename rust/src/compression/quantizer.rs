@@ -1,0 +1,164 @@
+//! Learned-codebook scalar quantizer (paper §6, [4]): the codebook is fitted
+//! offline in python (k-means over the transmitted-feature distribution,
+//! exported per bit-width in meta.json); the runtime only does a nearest-
+//! codeword lookup — O(log n) binary search over midpoints.
+
+use anyhow::{ensure, Result};
+
+/// Scalar quantizer defined by a sorted codebook.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    levels: Vec<f32>,
+    /// decision boundaries: midpoint between adjacent codewords
+    midpoints: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn new(mut levels: Vec<f32>) -> Result<Self> {
+        ensure!(!levels.is_empty(), "empty codebook");
+        ensure!(levels.len() <= 256, "codebook larger than u8 index space");
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let midpoints = levels.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect();
+        Ok(Self { levels, midpoints })
+    }
+
+    pub fn len(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    /// Bits per symbol this codebook implies.
+    pub fn bits(&self) -> u32 {
+        (usize::BITS - (self.levels.len() - 1).leading_zeros()).max(1)
+    }
+
+    pub fn levels(&self) -> &[f32] {
+        &self.levels
+    }
+
+    /// Nearest-codeword index.
+    #[inline]
+    pub fn index_of(&self, v: f32) -> u8 {
+        self.midpoints.partition_point(|&m| m < v) as u8
+    }
+
+    pub fn quantize(&self, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(values.len());
+        out.extend(values.iter().map(|&v| self.index_of(v)));
+    }
+
+    pub fn dequantize(&self, indices: &[u8], out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(indices.len());
+        out.extend(indices.iter().map(|&i| self.levels[(i as usize).min(self.levels.len() - 1)]));
+    }
+}
+
+/// Pack `bits`-wide indices into a dense byte stream (MSB-first).
+pub fn bitpack(indices: &[u8], bits: u32) -> Vec<u8> {
+    debug_assert!(bits >= 1 && bits <= 8);
+    let mut out = Vec::with_capacity((indices.len() * bits as usize + 7) / 8);
+    let mut acc: u32 = 0;
+    let mut n: u32 = 0;
+    for &i in indices {
+        acc = (acc << bits) | u32::from(i);
+        n += bits;
+        while n >= 8 {
+            n -= 8;
+            out.push((acc >> n) as u8);
+        }
+    }
+    if n > 0 {
+        out.push((acc << (8 - n)) as u8);
+    }
+    out
+}
+
+/// Inverse of [`bitpack`]; `count` symbols are recovered.
+pub fn bitunpack(bytes: &[u8], bits: u32, count: usize) -> Vec<u8> {
+    debug_assert!(bits >= 1 && bits <= 8);
+    let mut out = Vec::with_capacity(count);
+    let mut acc: u32 = 0;
+    let mut n: u32 = 0;
+    let mask: u32 = (1 << bits) - 1;
+    let mut it = bytes.iter();
+    while out.len() < count {
+        while n < bits {
+            match it.next() {
+                Some(&b) => {
+                    acc = (acc << 8) | u32::from(b);
+                    n += 8;
+                }
+                None => return out, // truncated stream: best-effort
+            }
+        }
+        n -= bits;
+        out.push(((acc >> n) & mask) as u8);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cb4() -> Codebook {
+        Codebook::new(vec![0.0, 0.5, 1.0, 2.0]).unwrap()
+    }
+
+    #[test]
+    fn nearest_codeword() {
+        let cb = cb4();
+        assert_eq!(cb.index_of(-1.0), 0);
+        assert_eq!(cb.index_of(0.2), 0);
+        assert_eq!(cb.index_of(0.3), 1);
+        assert_eq!(cb.index_of(0.8), 2);
+        assert_eq!(cb.index_of(5.0), 3);
+    }
+
+    #[test]
+    fn bits_computation() {
+        assert_eq!(Codebook::new(vec![0.0, 1.0]).unwrap().bits(), 1);
+        assert_eq!(cb4().bits(), 2);
+        assert_eq!(Codebook::new((0..64).map(|i| i as f32).collect()).unwrap().bits(), 6);
+    }
+
+    #[test]
+    fn quantize_dequantize_is_nearest() {
+        let cb = cb4();
+        let vals = [0.1f32, 0.6, 1.4, 3.0];
+        let (mut idx, mut deq) = (Vec::new(), Vec::new());
+        cb.quantize(&vals, &mut idx);
+        cb.dequantize(&idx, &mut deq);
+        assert_eq!(deq, vec![0.0, 0.5, 1.0, 2.0]); // 1.4 -> 1.0 (midpoint 1.5)
+    }
+
+    #[test]
+    fn empty_and_oversize_codebooks_rejected() {
+        assert!(Codebook::new(vec![]).is_err());
+        assert!(Codebook::new(vec![0.0; 257]).is_err());
+    }
+
+    #[test]
+    fn bitpack_roundtrip_all_widths() {
+        for bits in 1..=8u32 {
+            let n = 101;
+            let idx: Vec<u8> = (0..n).map(|i| (i % (1 << bits)) as u8).collect();
+            let packed = bitpack(&idx, bits);
+            assert_eq!(packed.len(), (n * bits as usize + 7) / 8);
+            assert_eq!(bitunpack(&packed, bits, n), idx);
+        }
+    }
+
+    #[test]
+    fn bitunpack_truncated_is_best_effort() {
+        let idx = vec![3u8; 16];
+        let packed = bitpack(&idx, 4);
+        let got = bitunpack(&packed[..4], 4, 16);
+        assert_eq!(got, vec![3u8; 8]);
+    }
+}

@@ -1,0 +1,424 @@
+//! Typed configuration: trained-artifact metadata (meta.json, written by
+//! `python -m compile.aot`) and the runtime configuration assembled from
+//! CLI flags.
+
+use crate::json::Value;
+use crate::simulator::{DeviceProfile, NetworkProfile};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::str::FromStr;
+
+/// Which serving scheme to run (paper §7's comparison set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// AgileNN: XAI-partitioned offloading (the paper's system)
+    Agile,
+    /// DeepCOD [65]: learned encoder on-device, decoder remote
+    Deepcod,
+    /// SPINN [39]: partitioned NN with on-device early exit
+    Spinn,
+    /// MCUNet [44]: full local inference
+    Mcunet,
+    /// Edge-only: LZW-compressed raw data to the server
+    EdgeOnly,
+}
+
+impl Scheme {
+    pub fn all() -> [Scheme; 5] {
+        [Scheme::Agile, Scheme::Deepcod, Scheme::Spinn, Scheme::Mcunet, Scheme::EdgeOnly]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Agile => "AgileNN",
+            Scheme::Deepcod => "DeepCOD",
+            Scheme::Spinn => "SPINN",
+            Scheme::Mcunet => "MCUNet",
+            Scheme::EdgeOnly => "EdgeOnly",
+        }
+    }
+}
+
+impl FromStr for Scheme {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "agile" | "agilenn" => Ok(Scheme::Agile),
+            "deepcod" => Ok(Scheme::Deepcod),
+            "spinn" => Ok(Scheme::Spinn),
+            "mcunet" => Ok(Scheme::Mcunet),
+            "edge" | "edgeonly" | "edge-only" => Ok(Scheme::EdgeOnly),
+            other => bail!("unknown scheme {other:?} (agile|deepcod|spinn|mcunet|edge)"),
+        }
+    }
+}
+
+/// MAC counts per component (exported by python, 32x32 models).
+#[derive(Debug, Clone)]
+pub struct MacCounts {
+    pub agile_device: u64,
+    pub agile_extractor: u64,
+    pub agile_local: u64,
+    pub agile_remote: u64,
+    pub deepcod_device: u64,
+    pub spinn_device: u64,
+    pub mcunet_local: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamBytes {
+    pub agile_device: u64,
+    pub deepcod_device: u64,
+    pub spinn_device: u64,
+    pub mcunet_local: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TxElements {
+    pub agile: usize,
+    pub deepcod: usize,
+    pub spinn: usize,
+    pub edge_raw_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct PyAccuracy {
+    pub agile: f64,
+    pub agile_quant4: f64,
+    pub agile_local_only: f64,
+    pub deepcod: f64,
+    pub spinn_final: f64,
+    pub mcunet: f64,
+    pub edge_only: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SpinnExit {
+    pub threshold: f64,
+    pub rate: f64,
+    pub accuracy: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SkewQuantiles {
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ImportanceStats {
+    pub natural_skewness_quantiles: SkewQuantiles,
+    pub achieved_skewness_mean: f64,
+    pub disorder_rate: f64,
+    pub mean_importance_per_channel: Vec<f64>,
+}
+
+/// Everything the python build exported about one trained dataset.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub dataset: String,
+    pub num_classes: usize,
+    pub image: [usize; 3],
+    pub feature: [usize; 3],
+    pub k: usize,
+    pub rho: f64,
+    pub alpha: f64,
+    pub xai_tool: String,
+    pub selected_channels: Vec<usize>,
+    /// codebooks keyed by bit width ("1".."6")
+    pub codebooks: HashMap<String, Vec<f32>>,
+    pub code_entropy_bits: HashMap<String, f64>,
+    pub deepcod_codebooks: HashMap<String, Vec<f32>>,
+    pub spinn_codebooks: HashMap<String, Vec<f32>>,
+    pub macs: MacCounts,
+    pub param_bytes_int8: ParamBytes,
+    pub tx_elements: TxElements,
+    pub accuracy: PyAccuracy,
+    pub spinn_exit: SpinnExit,
+    pub importance: ImportanceStats,
+}
+
+fn dims3(v: &Value, key: &str) -> Result<[usize; 3]> {
+    let xs = v.usize_vec_at(key)?;
+    if xs.len() != 3 {
+        bail!("{key} must have 3 dims");
+    }
+    Ok([xs[0], xs[1], xs[2]])
+}
+
+fn codebook_map(v: &Value, key: &str) -> Result<HashMap<String, Vec<f32>>> {
+    let mut out = HashMap::new();
+    for (k, val) in v.get(key)?.as_obj()? {
+        let levels: Vec<f32> =
+            val.as_arr()?.iter().map(|x| Ok(x.as_f64()? as f32)).collect::<Result<_>>()?;
+        out.insert(k.clone(), levels);
+    }
+    Ok(out)
+}
+
+impl Meta {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let macs = v.get("macs")?;
+        let pb = v.get("param_bytes_int8")?;
+        let tx = v.get("tx_elements")?;
+        let acc = v.get("accuracy")?;
+        let se = v.get("spinn_exit")?;
+        let imp = v.get("importance")?;
+        let nsq = imp.get("natural_skewness_quantiles")?;
+        let mut entropy = HashMap::new();
+        for (k, val) in v.get("code_entropy_bits")?.as_obj()? {
+            entropy.insert(k.clone(), val.as_f64()?);
+        }
+        Ok(Meta {
+            dataset: v.str_at("dataset")?,
+            num_classes: v.usize_at("num_classes")?,
+            image: dims3(v, "image")?,
+            feature: dims3(v, "feature")?,
+            k: v.usize_at("k")?,
+            rho: v.f64_at("rho")?,
+            alpha: v.f64_at("alpha")?,
+            xai_tool: v.str_at("xai_tool")?,
+            selected_channels: v.usize_vec_at("selected_channels")?,
+            codebooks: codebook_map(v, "codebooks")?,
+            code_entropy_bits: entropy,
+            deepcod_codebooks: codebook_map(v, "deepcod_codebooks")?,
+            spinn_codebooks: codebook_map(v, "spinn_codebooks")?,
+            macs: MacCounts {
+                agile_device: macs.u64_at("agile_device")?,
+                agile_extractor: macs.u64_at("agile_extractor")?,
+                agile_local: macs.u64_at("agile_local")?,
+                agile_remote: macs.u64_at("agile_remote")?,
+                deepcod_device: macs.u64_at("deepcod_device")?,
+                spinn_device: macs.u64_at("spinn_device")?,
+                mcunet_local: macs.u64_at("mcunet_local")?,
+            },
+            param_bytes_int8: ParamBytes {
+                agile_device: pb.u64_at("agile_device")?,
+                deepcod_device: pb.u64_at("deepcod_device")?,
+                spinn_device: pb.u64_at("spinn_device")?,
+                mcunet_local: pb.u64_at("mcunet_local")?,
+            },
+            tx_elements: TxElements {
+                agile: tx.usize_at("agile")?,
+                deepcod: tx.usize_at("deepcod")?,
+                spinn: tx.usize_at("spinn")?,
+                edge_raw_bytes: tx.usize_at("edge_raw_bytes")?,
+            },
+            accuracy: PyAccuracy {
+                agile: acc.f64_at("agile")?,
+                agile_quant4: acc.f64_at("agile_quant4")?,
+                agile_local_only: acc.f64_at("agile_local_only")?,
+                deepcod: acc.f64_at("deepcod")?,
+                spinn_final: acc.f64_at("spinn_final")?,
+                mcunet: acc.f64_at("mcunet")?,
+                edge_only: acc.f64_at("edge_only")?,
+            },
+            spinn_exit: SpinnExit {
+                threshold: se.f64_at("threshold")?,
+                rate: se.f64_at("rate")?,
+                accuracy: se.f64_at("accuracy")?,
+            },
+            importance: ImportanceStats {
+                natural_skewness_quantiles: SkewQuantiles {
+                    p10: nsq.f64_at("p10")?,
+                    p50: nsq.f64_at("p50")?,
+                    p90: nsq.f64_at("p90")?,
+                },
+                achieved_skewness_mean: imp.f64_at("achieved_skewness_mean")?,
+                disorder_rate: imp.f64_at("disorder_rate")?,
+                mean_importance_per_channel: imp.f64_vec_at("mean_importance_per_channel")?,
+            },
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Value::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    /// Codebook for a bit width, for a given scheme's transmitted stream.
+    pub fn codebook(&self, scheme: Scheme, bits: u32) -> Result<Vec<f32>> {
+        let table = match scheme {
+            Scheme::Agile => &self.codebooks,
+            Scheme::Deepcod => &self.deepcod_codebooks,
+            Scheme::Spinn => &self.spinn_codebooks,
+            _ => return Err(anyhow!("{} does not quantize features", scheme.name())),
+        };
+        table
+            .get(&bits.to_string())
+            .cloned()
+            .ok_or_else(|| anyhow!("no {}-bit codebook for {}", bits, scheme.name()))
+    }
+
+    /// Transmitted feature-element count for a scheme (0 = no feature tx).
+    pub fn tx_elements(&self, scheme: Scheme) -> usize {
+        match scheme {
+            Scheme::Agile => self.tx_elements.agile,
+            Scheme::Deepcod => self.tx_elements.deepcod,
+            Scheme::Spinn => self.tx_elements.spinn,
+            _ => 0,
+        }
+    }
+
+    /// Device-side NN MACs for a scheme.
+    pub fn device_macs(&self, scheme: Scheme) -> u64 {
+        match scheme {
+            Scheme::Agile => self.macs.agile_device,
+            Scheme::Deepcod => self.macs.deepcod_device,
+            Scheme::Spinn => self.macs.spinn_device,
+            Scheme::Mcunet => self.macs.mcunet_local,
+            Scheme::EdgeOnly => 0,
+        }
+    }
+
+    /// Device-side int8 weight bytes for a scheme.
+    pub fn device_param_bytes(&self, scheme: Scheme) -> u64 {
+        match scheme {
+            Scheme::Agile => self.param_bytes_int8.agile_device,
+            Scheme::Deepcod => self.param_bytes_int8.deepcod_device,
+            Scheme::Spinn => self.param_bytes_int8.spinn_device,
+            Scheme::Mcunet => self.param_bytes_int8.mcunet_local,
+            Scheme::EdgeOnly => 0,
+        }
+    }
+}
+
+/// Artifact-tree manifest (which datasets were built).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub datasets: Vec<String>,
+    pub quick: bool,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let v = Value::parse(&text)?;
+        Ok(Manifest {
+            datasets: v
+                .get("datasets")?
+                .as_arr()?
+                .iter()
+                .map(|d| Ok(d.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            quick: v.opt("quick").map(|q| q.as_bool().unwrap_or(false)).unwrap_or(false),
+        })
+    }
+}
+
+/// Fully-resolved runtime configuration for one serving setup.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    pub dataset: String,
+    pub scheme: Scheme,
+    pub device: DeviceProfile,
+    pub network: NetworkProfile,
+    /// quantizer bit width for transmitted features
+    pub bits: u32,
+    /// override the trained alpha (paper §3.3 runtime re-weighting)
+    pub alpha_override: Option<f64>,
+    /// dynamic batcher: max batch (must be an exported remote batch size)
+    pub max_batch: usize,
+    /// dynamic batcher: max queueing delay before dispatch
+    pub batch_deadline_us: u64,
+}
+
+impl RunConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>, dataset: &str, scheme: Scheme) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            dataset: dataset.to_string(),
+            scheme,
+            device: DeviceProfile::stm32f746(),
+            network: NetworkProfile::wifi_6mbps(),
+            bits: 4,
+            alpha_override: None,
+            max_batch: 8,
+            batch_deadline_us: 2000,
+        }
+    }
+
+    pub fn dataset_dir(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.dataset)
+    }
+}
+
+/// Default artifacts directory: $AGILENN_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AGILENN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_names_unique_and_parseable() {
+        let names: std::collections::HashSet<_> = Scheme::all().iter().map(|s| s.name()).collect();
+        assert_eq!(names.len(), 5);
+        assert_eq!("agile".parse::<Scheme>().unwrap(), Scheme::Agile);
+        assert_eq!("EDGE".parse::<Scheme>().unwrap(), Scheme::EdgeOnly);
+        assert!("bogus".parse::<Scheme>().is_err());
+    }
+
+    #[test]
+    fn run_config_defaults() {
+        let c = RunConfig::new("artifacts", "svhns", Scheme::Agile);
+        assert_eq!(c.bits, 4);
+        assert_eq!(c.max_batch, 8);
+        assert!(c.dataset_dir().ends_with("artifacts/svhns"));
+    }
+
+    pub(crate) const MINIMAL_META: &str = r#"{
+        "dataset":"t","num_classes":10,"image":[32,32,3],"feature":[8,8,24],
+        "k":5,"rho":0.8,"alpha":0.5,"xai_tool":"ig",
+        "selected_channels":[1,2,3,4,5],
+        "codebooks":{"4":[0.0,1.0]},"code_entropy_bits":{"4":1.0},
+        "deepcod_codebooks":{"4":[0.0,1.0]},"spinn_codebooks":{"4":[0.0,1.0]},
+        "macs":{"agile_device":1,"agile_extractor":1,"agile_local":1,
+                "agile_remote":1,"deepcod_device":1,"spinn_device":1,"mcunet_local":1},
+        "param_bytes_int8":{"agile_device":1,"deepcod_device":1,"spinn_device":1,"mcunet_local":1},
+        "tx_elements":{"agile":1216,"deepcod":768,"spinn":2048,"edge_raw_bytes":3072},
+        "accuracy":{"agile":0.9,"agile_quant4":0.9,"agile_local_only":0.2,
+                    "deepcod":0.9,"spinn_final":0.9,"mcunet":0.9,"edge_only":0.9},
+        "spinn_exit":{"threshold":0.9,"rate":0.5,"accuracy":0.9},
+        "importance":{"natural_skewness_quantiles":{"p10":0.3,"p50":0.5,"p90":0.7},
+                      "achieved_skewness_mean":0.8,"disorder_rate":0.02,
+                      "mean_importance_per_channel":[0.1,0.9]}
+    }"#;
+
+    #[test]
+    fn meta_parses_minimal_json() {
+        let v = Value::parse(MINIMAL_META).unwrap();
+        let m = Meta::from_json(&v).unwrap();
+        assert_eq!(m.k, 5);
+        assert_eq!(m.tx_elements(Scheme::Agile), 1216);
+        assert_eq!(m.device_macs(Scheme::EdgeOnly), 0);
+        assert!(m.codebook(Scheme::Agile, 4).is_ok());
+        assert!(m.codebook(Scheme::Agile, 7).is_err());
+        assert!(m.codebook(Scheme::Mcunet, 4).is_err());
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("agilenn_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"datasets":["a","b"],"quick":true}"#)
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.datasets, vec!["a", "b"]);
+        assert!(m.quick);
+    }
+}

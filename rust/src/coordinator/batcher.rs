@@ -1,0 +1,147 @@
+//! Dynamic batcher for the remote NN (vLLM-router-style deadline batching).
+//!
+//! Remote HLO executables are compiled for fixed batch sizes {1,2,4,8};
+//! the batcher accumulates decoded feature tensors until either the largest
+//! batch fills or the oldest request's deadline expires, then dispatches and
+//! pads to the smallest exported batch size that fits.
+
+use std::time::{Duration, Instant};
+
+/// Exported remote batch sizes (must match compile/aot.py REMOTE_BATCHES).
+pub const REMOTE_BATCH_SIZES: [usize; 4] = [1, 2, 4, 8];
+
+/// Smallest exported batch size >= n.
+pub fn pad_batch_size(n: usize) -> usize {
+    for &b in REMOTE_BATCH_SIZES.iter() {
+        if b >= n {
+            return b;
+        }
+    }
+    *REMOTE_BATCH_SIZES.last().unwrap()
+}
+
+/// A queued request awaiting batching.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Deadline-driven batch queue. Pure data structure (no async) so the policy
+/// is unit-testable; `pipeline.rs` drives it from the pipeline thread.
+#[derive(Debug)]
+pub struct BatchQueue<T> {
+    pending: Vec<Pending<T>>,
+    max_batch: usize,
+    deadline: Duration,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        assert!(REMOTE_BATCH_SIZES.contains(&max_batch), "max_batch must be exported");
+        Self { pending: Vec::new(), max_batch, deadline }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Enqueue; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, id: u64, payload: T, now: Instant) -> Option<Vec<Pending<T>>> {
+        self.pending.push(Pending { id, payload, enqueued: now });
+        if self.pending.len() >= self.max_batch {
+            return Some(std::mem::take(&mut self.pending));
+        }
+        None
+    }
+
+    /// Dispatch if the oldest request has waited past the deadline.
+    pub fn poll_deadline(&mut self, now: Instant) -> Option<Vec<Pending<T>>> {
+        match self.pending.first() {
+            Some(oldest) if now.duration_since(oldest.enqueued) >= self.deadline => {
+                Some(std::mem::take(&mut self.pending))
+            }
+            _ => None,
+        }
+    }
+
+    /// Time until the current deadline fires (None if queue empty).
+    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.pending.first().map(|oldest| {
+            self.deadline
+                .checked_sub(now.duration_since(oldest.enqueued))
+                .unwrap_or(Duration::ZERO)
+        })
+    }
+
+    /// Drain whatever is queued (shutdown path).
+    pub fn flush(&mut self) -> Vec<Pending<T>> {
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_batch_size_snaps_up() {
+        assert_eq!(pad_batch_size(1), 1);
+        assert_eq!(pad_batch_size(3), 4);
+        assert_eq!(pad_batch_size(5), 8);
+        assert_eq!(pad_batch_size(8), 8);
+        assert_eq!(pad_batch_size(20), 8); // clamped to max exported
+    }
+
+    #[test]
+    fn size_trigger_dispatches_full_batch() {
+        let mut q = BatchQueue::new(2, Duration::from_millis(10));
+        let t = Instant::now();
+        assert!(q.push(1, "a", t).is_none());
+        let batch = q.push(2, "b", t).expect("size trigger");
+        assert_eq!(batch.len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut q = BatchQueue::new(8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        q.push(1, "a", t0);
+        assert!(q.poll_deadline(t0).is_none());
+        let later = t0 + Duration::from_millis(6);
+        let batch = q.poll_deadline(later).expect("deadline trigger");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut q = BatchQueue::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(q.next_deadline_in(t0).is_none());
+        q.push(1, "a", t0);
+        let d = q.next_deadline_in(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn flush_drains() {
+        let mut q = BatchQueue::new(8, Duration::from_millis(10));
+        q.push(1, "a", Instant::now());
+        q.push(2, "b", Instant::now());
+        assert_eq!(q.flush().len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_exported_max_batch_panics() {
+        let _ = BatchQueue::<u8>::new(3, Duration::from_millis(1));
+    }
+}

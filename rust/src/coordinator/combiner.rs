@@ -1,0 +1,91 @@
+//! Prediction combiner (paper §3.3): final logits are the point-to-point
+//! weighted sum alpha*local + (1-alpha)*remote. alpha is trained offline
+//! (sigmoid(w/T)) and can be overridden at runtime to re-balance the split
+//! when XAI mis-evaluated some features (§3.3's runtime fine-tuning knob).
+
+use crate::tensor::argmax;
+use anyhow::{ensure, Result};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Combiner {
+    alpha: f64,
+}
+
+impl Combiner {
+    pub fn new(alpha: f64) -> Result<Self> {
+        ensure!((0.0..=1.0).contains(&alpha), "alpha must be in [0,1], got {alpha}");
+        Ok(Self { alpha })
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Runtime re-weighting (paper §3.3 / Fig 18).
+    pub fn with_alpha(&self, alpha: f64) -> Result<Self> {
+        Self::new(alpha)
+    }
+
+    /// Combined logits (allocating variant).
+    pub fn combine(&self, local: &[f32], remote: &[f32]) -> Result<Vec<f32>> {
+        ensure!(
+            local.len() == remote.len(),
+            "logit length mismatch: {} vs {}",
+            local.len(),
+            remote.len()
+        );
+        let a = self.alpha as f32;
+        Ok(local.iter().zip(remote).map(|(l, r)| a * l + (1.0 - a) * r).collect())
+    }
+
+    /// Final class prediction.
+    pub fn predict(&self, local: &[f32], remote: &[f32]) -> Result<usize> {
+        Ok(argmax(&self.combine(local, remote)?))
+    }
+
+    /// Local-only fallback (paper §9 "extreme network conditions": when the
+    /// link is down the device still predicts from the top-k features).
+    pub fn predict_local_only(&self, local: &[f32]) -> usize {
+        argmax(local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_out_of_range_alpha() {
+        assert!(Combiner::new(-0.1).is_err());
+        assert!(Combiner::new(1.1).is_err());
+        assert!(Combiner::new(0.5).is_ok());
+    }
+
+    #[test]
+    fn endpoints_select_one_side() {
+        let local = [10.0, 0.0];
+        let remote = [0.0, 10.0];
+        assert_eq!(Combiner::new(1.0).unwrap().predict(&local, &remote).unwrap(), 0);
+        assert_eq!(Combiner::new(0.0).unwrap().predict(&local, &remote).unwrap(), 1);
+    }
+
+    #[test]
+    fn weighted_sum_is_pointwise() {
+        let c = Combiner::new(0.3).unwrap();
+        let out = c.combine(&[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        assert!((out[0] - (0.3 * 1.0 + 0.7 * 3.0)).abs() < 1e-6);
+        assert!((out[1] - (0.3 * 2.0 + 0.7 * 4.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mismatched_lengths_error() {
+        let c = Combiner::new(0.5).unwrap();
+        assert!(c.combine(&[1.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn local_fallback() {
+        let c = Combiner::new(0.5).unwrap();
+        assert_eq!(c.predict_local_only(&[0.0, 5.0, 1.0]), 1);
+    }
+}

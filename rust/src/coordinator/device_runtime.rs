@@ -1,0 +1,77 @@
+//! Device-side runtime (what would run on the MCU): one PJRT call for the
+//! fused extractor+local-NN artifact, positional feature split (already done
+//! inside the artifact), learned quantization + LZW of the transmitted
+//! features, and cost-model pricing of every step.
+
+use crate::compression::{quantizer::Codebook, Frame, TxEncoder};
+use crate::config::{Meta, RunConfig, Scheme};
+use crate::runtime::{Engine, Executable};
+use crate::simulator::{DeviceSim, DeviceTimings};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Result of the on-device phase for one request.
+#[derive(Debug)]
+pub struct DeviceOutput {
+    /// Local NN logits over the top-k important features.
+    pub local_logits: Vec<f32>,
+    /// Compressed less-important features, ready for the uplink.
+    pub frame: Frame,
+    /// Raw remote-feature tensor shape (needed server-side to rebuild).
+    pub remote_shape: Vec<usize>,
+    /// Simulated device timings.
+    pub timings: DeviceTimings,
+}
+
+pub struct DeviceRuntime {
+    device_exe: Arc<Executable>,
+    tx: TxEncoder,
+    sim: DeviceSim,
+    nn_macs: u64,
+    num_classes: usize,
+}
+
+impl DeviceRuntime {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        ensure!(cfg.scheme == Scheme::Agile, "DeviceRuntime is the AgileNN device path");
+        let device_exe = engine.load_artifact(&cfg.dataset_dir(), "agile_device_b1")?;
+        let codebook = Codebook::new(meta.codebook(Scheme::Agile, cfg.bits)?)?;
+        Ok(Self {
+            device_exe,
+            tx: TxEncoder::new(codebook),
+            sim: DeviceSim::new(cfg.device.clone()),
+            nn_macs: meta.macs.agile_device,
+            num_classes: meta.num_classes,
+        })
+    }
+
+    /// Run the device phase on one image (unit batch).
+    pub fn process(&mut self, image: &Tensor) -> Result<DeviceOutput> {
+        ensure!(image.batch() == 1, "device path takes unit-batch images");
+        let outputs = self.device_exe.run(std::slice::from_ref(image))?;
+        ensure!(outputs.len() == 2, "device artifact must yield (logits, remote_feats)");
+        let local_logits = outputs[0].data().to_vec();
+        ensure!(local_logits.len() == self.num_classes, "unexpected logit width");
+        let remote_feats = &outputs[1];
+
+        let frame = self.tx.encode(remote_feats.data());
+        let timings = DeviceTimings {
+            nn_compute_s: self.sim.nn_latency_s(self.nn_macs),
+            quantize_s: self.sim.quantize_latency_s(remote_feats.len()),
+            compress_s: self
+                .sim
+                .compress_latency_s((remote_feats.len() * self.tx.codebook().bits() as usize + 7) / 8),
+        };
+        Ok(DeviceOutput {
+            local_logits,
+            frame,
+            remote_shape: remote_feats.shape().to_vec(),
+            timings,
+        })
+    }
+
+    pub fn sim(&self) -> &DeviceSim {
+        &self.sim
+    }
+}

@@ -1,0 +1,20 @@
+//! The AgileNN serving coordinator (the paper's system contribution, L3):
+//!
+//! * [`device_runtime`] — on-device phase: fused extractor+local-NN PJRT
+//!   call, positional feature split, learned quantization + LZW.
+//! * [`server`] — server phase: decode, fixed-shape batched remote NN.
+//! * [`batcher`] — deadline-driven dynamic batching policy.
+//! * [`combiner`] — alpha-weighted local/remote prediction fusion (§3.3).
+//! * [`pipeline`] — the threaded multi-device serving loop.
+
+pub mod batcher;
+pub mod combiner;
+pub mod device_runtime;
+pub mod pipeline;
+pub mod server;
+
+pub use batcher::{BatchQueue, REMOTE_BATCH_SIZES};
+pub use combiner::Combiner;
+pub use device_runtime::{DeviceOutput, DeviceRuntime};
+pub use pipeline::{run_pipeline, run_single, PipelineReport};
+pub use server::RemoteServer;

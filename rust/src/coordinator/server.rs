@@ -1,0 +1,83 @@
+//! Server-side runtime: decompress received frames, rebuild feature
+//! tensors, run the remote NN through the exported fixed-batch executables
+//! (padding up via the batcher policy), return per-request logits.
+
+use crate::compression::{quantizer::Codebook, Frame, RxDecoder};
+use crate::config::{Meta, RunConfig, Scheme};
+use crate::coordinator::batcher::pad_batch_size;
+use crate::runtime::{Engine, Executable};
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub struct RemoteServer {
+    exes: HashMap<usize, Arc<Executable>>,
+    rx: RxDecoder,
+    feature_shape: Vec<usize>, // (1, h, w, c_remote)
+    num_classes: usize,
+    /// wall-clock spent in remote NN execution (for perf accounting)
+    pub exec_time: Duration,
+    pub batches_run: usize,
+}
+
+impl RemoteServer {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        let (stem, ch) = match cfg.scheme {
+            Scheme::Agile => ("agile_remote", meta.feature[2] - meta.k),
+            Scheme::Deepcod => ("deepcod_remote", 12),
+            Scheme::Spinn => ("spinn_remote", 32),
+            _ => anyhow::bail!("{} has no feature-receiving server", cfg.scheme.name()),
+        };
+        let mut exes = HashMap::new();
+        for b in super::batcher::REMOTE_BATCH_SIZES {
+            exes.insert(b, engine.load_artifact(&cfg.dataset_dir(), &format!("{stem}_b{b}"))?);
+        }
+        let codebook = Codebook::new(meta.codebook(cfg.scheme, cfg.bits)?)?;
+        Ok(Self {
+            exes,
+            rx: RxDecoder::new(codebook),
+            feature_shape: vec![1, meta.feature[0], meta.feature[1], ch],
+            num_classes: meta.num_classes,
+            exec_time: Duration::ZERO,
+            batches_run: 0,
+        })
+    }
+
+    /// Decode one frame back into a unit-batch feature tensor.
+    pub fn decode(&self, frame: &Frame) -> Result<Tensor> {
+        let values = self.rx.decode(frame)?;
+        ensure!(
+            values.len() == self.feature_shape.iter().product::<usize>(),
+            "frame decodes to {} values, expected shape {:?}",
+            values.len(),
+            self.feature_shape
+        );
+        Tensor::new(self.feature_shape.clone(), values)
+    }
+
+    /// Run the remote NN on a group of decoded feature tensors.
+    /// Returns per-request logits (padding rows are dropped).
+    pub fn infer(&mut self, feats: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        ensure!(!feats.is_empty(), "empty batch");
+        let padded = pad_batch_size(feats.len());
+        ensure!(padded <= 8, "batch exceeds exported sizes");
+        let batch = Tensor::stack_padded(feats, padded)?;
+        let exe = self.exes.get(&padded).expect("exported batch size");
+        let t0 = Instant::now();
+        let out = exe.run(std::slice::from_ref(&batch))?;
+        self.exec_time += t0.elapsed();
+        self.batches_run += 1;
+        ensure!(out.len() == 1, "remote artifact must yield (logits,)");
+        let logits = &out[0];
+        ensure!(logits.shape() == [padded, self.num_classes], "bad remote logits shape");
+        (0..feats.len()).map(|i| Ok(logits.row(i)?.to_vec())).collect()
+    }
+
+    /// End-to-end server phase for one frame (decode + batch-1 inference).
+    pub fn process_frame(&mut self, frame: &Frame) -> Result<Vec<f32>> {
+        let feats = self.decode(frame)?;
+        Ok(self.infer(std::slice::from_ref(&feats))?.remove(0))
+    }
+}

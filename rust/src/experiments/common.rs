@@ -1,0 +1,150 @@
+//! Shared evaluation context and the per-scheme evaluation loop.
+
+use crate::baselines::{make_runner, SchemeRunner};
+use crate::config::{Manifest, Meta, RunConfig, Scheme};
+use crate::metrics::{AccuracyCounter, EnergyLedger, LatencyBreakdown};
+use crate::runtime::Engine;
+use crate::workload::TestSet;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// Number of test samples per evaluation sweep point (env-overridable:
+/// AGILENN_EVAL_N). Figures sweep many points; 128 keeps a full `cargo
+/// bench` run in minutes while staying statistically stable on a 512-sample
+/// test set.
+pub fn eval_n() -> usize {
+    std::env::var("AGILENN_EVAL_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Shared state for figure regeneration: PJRT engine + cached metas/testsets.
+pub struct EvalCtx {
+    pub engine: Engine,
+    pub artifacts_dir: PathBuf,
+    pub datasets: Vec<String>,
+    metas: Mutex<HashMap<String, Meta>>,
+    testsets: Mutex<HashMap<String, std::sync::Arc<TestSet>>>,
+}
+
+impl EvalCtx {
+    pub fn new(artifacts_dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        Ok(Self {
+            engine: Engine::cpu()?,
+            artifacts_dir,
+            datasets: manifest.datasets,
+            metas: Mutex::new(HashMap::new()),
+            testsets: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::new(crate::config::default_artifacts_dir())
+    }
+
+    pub fn meta(&self, dataset: &str) -> Result<Meta> {
+        let mut metas = self.metas.lock().unwrap();
+        if let Some(m) = metas.get(dataset) {
+            return Ok(m.clone());
+        }
+        let m = Meta::load(&self.artifacts_dir.join(dataset))?;
+        metas.insert(dataset.to_string(), m.clone());
+        Ok(m)
+    }
+
+    pub fn testset(&self, dataset: &str) -> Result<std::sync::Arc<TestSet>> {
+        let mut sets = self.testsets.lock().unwrap();
+        if let Some(t) = sets.get(dataset) {
+            return Ok(t.clone());
+        }
+        let t = std::sync::Arc::new(TestSet::load(
+            &self.artifacts_dir.join(dataset).join("test.bin"),
+        )?);
+        sets.insert(dataset.to_string(), t.clone());
+        Ok(t)
+    }
+
+    pub fn run_config(&self, dataset: &str, scheme: Scheme) -> RunConfig {
+        RunConfig::new(self.artifacts_dir.clone(), dataset, scheme)
+    }
+}
+
+/// Aggregated evaluation of one scheme over n test samples.
+#[derive(Debug, Clone)]
+pub struct SchemeEval {
+    pub scheme: Scheme,
+    pub dataset: String,
+    pub n: usize,
+    pub accuracy: f64,
+    /// mean per-request latency breakdown (simulated device/network +
+    /// measured server wall-clock)
+    pub mean: LatencyBreakdown,
+    pub mean_energy: EnergyLedger,
+    pub mean_tx_bytes: f64,
+    pub early_exit_rate: f64,
+    pub memory: crate::simulator::MemoryReport,
+}
+
+impl SchemeEval {
+    pub fn total_latency_s(&self) -> f64 {
+        self.mean.total_s()
+    }
+}
+
+/// Evaluate a scheme under `cfg` over the first `n` test samples.
+pub fn eval_scheme(ctx: &EvalCtx, cfg: &RunConfig, n: usize) -> Result<SchemeEval> {
+    let meta = ctx.meta(&cfg.dataset)?;
+    let testset = ctx.testset(&cfg.dataset)?;
+    let mut runner = make_runner(&ctx.engine, cfg, &meta)?;
+    eval_with_runner(runner.as_mut(), &testset, &cfg.dataset, n)
+}
+
+/// Evaluation loop over an already-built runner (alpha sweeps etc. reuse the
+/// runner to avoid recompiling executables).
+pub fn eval_with_runner(
+    runner: &mut dyn SchemeRunner,
+    testset: &TestSet,
+    dataset: &str,
+    n: usize,
+) -> Result<SchemeEval> {
+    let n = n.min(testset.len());
+    let mut acc = AccuracyCounter::default();
+    let mut mean = LatencyBreakdown::default();
+    let mut energy = EnergyLedger::default();
+    let mut tx_total = 0usize;
+    let mut exits = 0usize;
+    for i in 0..n {
+        let img = testset.image(i)?;
+        let out = runner.process(&img, testset.labels[i])?;
+        acc.record(out.correct);
+        mean.local_nn_s += out.breakdown.local_nn_s;
+        mean.compression_s += out.breakdown.compression_s;
+        mean.network_s += out.breakdown.network_s;
+        mean.remote_s += out.breakdown.remote_s;
+        energy.add(&out.energy);
+        tx_total += out.tx_bytes;
+        exits += out.exited_early as usize;
+    }
+    let nf = n as f64;
+    mean.local_nn_s /= nf;
+    mean.compression_s /= nf;
+    mean.network_s /= nf;
+    mean.remote_s /= nf;
+    energy.compute_j /= nf;
+    energy.radio_j /= nf;
+    Ok(SchemeEval {
+        scheme: runner.scheme(),
+        dataset: dataset.to_string(),
+        n,
+        accuracy: acc.accuracy(),
+        mean,
+        mean_energy: energy,
+        mean_tx_bytes: tx_total as f64 / nf,
+        early_exit_rate: exits as f64 / nf,
+        memory: runner.memory_report(),
+    })
+}

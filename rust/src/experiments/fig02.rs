@@ -1,0 +1,85 @@
+//! Fig 2: data compressibility in NN offloading (motivation).
+//! (a) raw-data compression (JPEG-style DCT codec) — accuracy loss grows
+//!     quickly with compression rate;
+//! (b) feature-space compression (partitioned DeepCOD encoder + learned
+//!     quantizer) — similar rates with far smaller accuracy loss, but at a
+//!     much larger on-device model cost.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::compression::dct;
+use crate::config::Scheme;
+use crate::metrics::AccuracyCounter;
+use crate::report::{pct, Table};
+use crate::tensor::{argmax, Tensor};
+use anyhow::Result;
+
+pub const QUALITY_SWEEP: [f32; 5] = [90.0, 50.0, 20.0, 8.0, 2.0];
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let ds = ctx
+        .datasets
+        .iter()
+        .find(|d| d.contains("cifar10s"))
+        .or_else(|| ctx.datasets.first())
+        .ok_or_else(|| anyhow::anyhow!("no datasets built"))?
+        .clone();
+    let testset = ctx.testset(&ds)?;
+    let cfg = ctx.run_config(&ds, Scheme::EdgeOnly);
+    let exe = ctx.engine.load_artifact(&cfg.dataset_dir(), "edge_remote_b1")?;
+    let n = eval_n().min(testset.len());
+    let [h, w, c] = [32usize, 32, 3];
+
+    // (a) raw-data DCT compression sweep
+    let mut ta = Table::new(
+        format!("Fig 2(a) [{ds}]: raw-data compression vs accuracy"),
+        &["quality", "rate", "accuracy", "acc_loss"],
+    );
+    // baseline: uncompressed accuracy
+    let mut base_acc = AccuracyCounter::default();
+    for i in 0..n {
+        let img = testset.image(i)?;
+        let out = exe.run(std::slice::from_ref(&img))?;
+        base_acc.record(argmax(out[0].data()) as i32 == testset.labels[i]);
+    }
+    for q in QUALITY_SWEEP {
+        let mut acc = AccuracyCounter::default();
+        let mut bytes_total = 0usize;
+        for i in 0..n {
+            let img = testset.image(i)?;
+            let enc = dct::encode(img.data(), h, w, c, q)?;
+            bytes_total += enc.payload.len();
+            let dec = dct::decode(&enc)?;
+            let t = Tensor::new(vec![1, h, w, c], dec)?;
+            let out = exe.run(std::slice::from_ref(&t))?;
+            acc.record(argmax(out[0].data()) as i32 == testset.labels[i]);
+        }
+        let raw = (h * w * c) as f64; // u8 raw image bytes
+        let rate = raw / (bytes_total as f64 / n as f64);
+        ta.row(vec![
+            format!("{q:.0}"),
+            format!("{rate:.1}x"),
+            pct(acc.accuracy()),
+            pct((base_acc.accuracy() - acc.accuracy()).max(0.0)),
+        ]);
+    }
+
+    // (b) feature-space compression (DeepCOD-style partitioning)
+    let mut tb = Table::new(
+        format!("Fig 2(b) [{ds}]: feature compression (DeepCOD encoder)"),
+        &["bits", "rate_vs_raw_image", "accuracy", "device_model_KB"],
+    );
+    let meta = ctx.meta(&ds)?;
+    for bits in [6u32, 4, 2, 1] {
+        let mut cfg_d = ctx.run_config(&ds, Scheme::Deepcod);
+        cfg_d.bits = bits;
+        let e = eval_scheme(ctx, &cfg_d, n)?;
+        let raw = (h * w * c) as f64;
+        tb.row(vec![
+            bits.to_string(),
+            format!("{:.1}x", raw / e.mean_tx_bytes),
+            pct(e.accuracy),
+            format!("{:.1}", meta.param_bytes_int8.deepcod_device as f64 / 1024.0),
+        ]);
+    }
+    Ok(vec![ta, tb])
+}

@@ -1,0 +1,32 @@
+//! Fig 16: end-to-end inference latency breakdown + accuracy, all datasets x
+//! all schemes (the paper's headline comparison).
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{ms, pct, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds in &ctx.datasets {
+        let mut t = Table::new(
+            format!("Fig 16 [{ds}]: latency breakdown (ms) + accuracy"),
+            &["scheme", "local_nn", "compress", "network", "remote", "total", "accuracy"],
+        );
+        for scheme in Scheme::all() {
+            let cfg = ctx.run_config(ds, scheme);
+            let e = eval_scheme(ctx, &cfg, eval_n())?;
+            t.row(vec![
+                scheme.name().into(),
+                ms(e.mean.local_nn_s),
+                ms(e.mean.compression_s),
+                ms(e.mean.network_s),
+                ms(e.mean.remote_s),
+                ms(e.total_latency_s()),
+                pct(e.accuracy),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

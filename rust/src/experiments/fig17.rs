@@ -1,0 +1,40 @@
+//! Fig 17: accuracy vs feature-compression rate, AgileNN vs DeepCOD.
+//! The rate knob is the quantizer bit width (6..1 bits/value + LZW); the
+//! compression rate is computed against the raw f32 feature payload.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{pct, Table};
+use anyhow::Result;
+
+pub const BIT_SWEEP: [u32; 5] = [6, 4, 3, 2, 1];
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds in ctx.datasets.iter().filter(|d| d.contains("cifar100") || d.contains("svhn")) {
+        let meta = ctx.meta(ds)?;
+        let mut t = Table::new(
+            format!("Fig 17 [{ds}]: accuracy vs compression rate"),
+            &["bits", "agile_rate", "agile_acc", "deepcod_rate", "deepcod_acc"],
+        );
+        for bits in BIT_SWEEP {
+            let mut cfg_a = ctx.run_config(ds, Scheme::Agile);
+            cfg_a.bits = bits;
+            let a = eval_scheme(ctx, &cfg_a, eval_n())?;
+            let mut cfg_d = ctx.run_config(ds, Scheme::Deepcod);
+            cfg_d.bits = bits;
+            let d = eval_scheme(ctx, &cfg_d, eval_n())?;
+            let raw_a = (meta.tx_elements(Scheme::Agile) * 4) as f64;
+            let raw_d = (meta.tx_elements(Scheme::Deepcod) * 4) as f64;
+            t.row(vec![
+                bits.to_string(),
+                format!("{:.1}x", raw_a / a.mean_tx_bytes),
+                pct(a.accuracy),
+                format!("{:.1}x", raw_d / d.mean_tx_bytes),
+                pct(d.accuracy),
+            ]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

@@ -1,0 +1,32 @@
+//! Fig 18: accuracy under different prediction re-weightings alpha (paper
+//! §3.3's runtime knob). Sweeps alpha in [0,1]; reuses one runner to avoid
+//! recompiling the PJRT executables per point.
+
+use super::common::{eval_n, eval_with_runner, EvalCtx};
+use crate::baselines::AgileRunner;
+use crate::config::Scheme;
+use crate::report::{pct, Table};
+use anyhow::Result;
+
+pub const ALPHA_SWEEP: [f64; 11] = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds in ctx.datasets.iter().filter(|d| d.contains("cifar100") || d.contains("svhn")) {
+        let meta = ctx.meta(ds)?;
+        let testset = ctx.testset(ds)?;
+        let cfg = ctx.run_config(ds, Scheme::Agile);
+        let mut runner = AgileRunner::new(&ctx.engine, &cfg, &meta)?;
+        let mut t = Table::new(
+            format!("Fig 18 [{ds}]: accuracy vs alpha (trained alpha={:.2})", meta.alpha),
+            &["alpha", "accuracy"],
+        );
+        for alpha in ALPHA_SWEEP {
+            runner.set_alpha(alpha)?;
+            let e = eval_with_runner(&mut runner, &testset, ds, eval_n())?;
+            t.row(vec![format!("{alpha:.1}"), pct(e.accuracy)]);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

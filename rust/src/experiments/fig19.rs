@@ -1,0 +1,27 @@
+//! Fig 19: local energy consumption per inference run (compute + radio),
+//! all datasets x all schemes.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{mj, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 19: device energy per inference (mJ)",
+        &["dataset", "scheme", "compute_mJ", "radio_mJ", "total_mJ"],
+    );
+    for ds in &ctx.datasets {
+        for scheme in Scheme::all() {
+            let e = eval_scheme(ctx, &ctx.run_config(ds, scheme), eval_n())?;
+            t.row(vec![
+                ds.clone(),
+                scheme.name().into(),
+                mj(e.mean_energy.compute_j),
+                mj(e.mean_energy.radio_j),
+                mj(e.mean_energy.total_j()),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,33 @@
+//! Fig 20: on-device memory (SRAM) and storage (flash) usage per scheme.
+//! Static accounting — no inference needed.
+
+use super::common::EvalCtx;
+use crate::baselines::make_runner;
+use crate::config::Scheme;
+use crate::report::{kb, pct, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 20: device memory/storage usage",
+        &["dataset", "scheme", "sram_KB", "sram_%", "flash_KB", "flash_%", "fits"],
+    );
+    for ds in &ctx.datasets {
+        let meta = ctx.meta(ds)?;
+        for scheme in Scheme::all() {
+            let cfg = ctx.run_config(ds, scheme);
+            let runner = make_runner(&ctx.engine, &cfg, &meta)?;
+            let m = runner.memory_report();
+            t.row(vec![
+                ds.clone(),
+                scheme.name().into(),
+                kb(m.sram_used),
+                pct(m.sram_frac()),
+                kb(m.flash_used),
+                pct(m.flash_frac()),
+                if m.fits() { "yes".into() } else { "NO".into() },
+            ]);
+        }
+    }
+    Ok(vec![t])
+}

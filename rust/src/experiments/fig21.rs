@@ -1,0 +1,86 @@
+//! Fig 21: effectiveness of skewness manipulation under different
+//! requirements (k, rho) — achieved skewness, accuracy, transmission latency.
+//!
+//! The full sweep needs 9 trained variants (`make fig21-train`, writes
+//! artifacts/fig21/k{K}_rho{R}/meta.json). When the sweep artifacts are
+//! absent, we report the main trained point from each dataset's meta.json so
+//! the bench always produces the figure's series shape.
+
+use super::common::EvalCtx;
+use crate::report::{pct, Table};
+use crate::simulator::{NetworkProfile, NetworkSim};
+use anyhow::Result;
+
+/// Slim meta for sweep variants (written by compile/experiments/fig21_variants.py).
+#[derive(Debug)]
+struct VariantMeta {
+    k: usize,
+    rho: f64,
+    accuracy: f64,
+    achieved_skewness: f64,
+    mean_tx_payload_bytes: f64,
+}
+
+impl VariantMeta {
+    fn parse(text: &str) -> Result<Self> {
+        let v = crate::json::Value::parse(text)?;
+        Ok(Self {
+            k: v.usize_at("k")?,
+            rho: v.f64_at("rho")?,
+            accuracy: v.f64_at("accuracy")?,
+            achieved_skewness: v.f64_at("achieved_skewness")?,
+            mean_tx_payload_bytes: v.f64_at("mean_tx_payload_bytes")?,
+        })
+    }
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let sweep_dir = ctx.artifacts_dir.join("fig21");
+    let net = NetworkSim::new(NetworkProfile::wifi_6mbps());
+    let mut t = Table::new(
+        "Fig 21: skewness manipulation effectiveness",
+        &["source", "k", "rho_target", "achieved_skew", "accuracy", "tx_latency_ms"],
+    );
+    let mut found_sweep = false;
+    if sweep_dir.is_dir() {
+        let mut entries: Vec<_> = std::fs::read_dir(&sweep_dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("meta.json").exists())
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let text = std::fs::read_to_string(e.path().join("meta.json"))?;
+            let v = VariantMeta::parse(&text)?;
+            t.row(vec![
+                format!("sweep/{}", e.file_name().to_string_lossy()),
+                v.k.to_string(),
+                format!("{:.2}", v.rho),
+                pct(v.achieved_skewness),
+                pct(v.accuracy),
+                format!("{:.2}", net.transfer_s(v.mean_tx_payload_bytes as usize) * 1e3),
+            ]);
+            found_sweep = true;
+        }
+    }
+    if !found_sweep {
+        // fall back to the trained point of every dataset
+        for ds in &ctx.datasets {
+            let meta = ctx.meta(ds)?;
+            let eval = super::common::eval_scheme(
+                ctx,
+                &ctx.run_config(ds, crate::config::Scheme::Agile),
+                super::common::eval_n(),
+            )?;
+            t.row(vec![
+                ds.clone(),
+                meta.k.to_string(),
+                format!("{:.2}", meta.rho),
+                pct(meta.importance.achieved_skewness_mean),
+                pct(eval.accuracy),
+                format!("{:.2}", net.transfer_s(eval.mean_tx_bytes as usize) * 1e3),
+            ]);
+        }
+        t.title.push_str("  [run `make fig21-train` for the full (k,rho) sweep]");
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,39 @@
+//! Fig 22: end-to-end latency vs device CPU frequency (216 -> 64 MHz).
+//! AgileNN's tiny device NN keeps the curve flat; the baselines blow up.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{ms, Table};
+use anyhow::Result;
+
+pub const FREQ_SWEEP_MHZ: [f64; 4] = [216.0, 160.0, 108.0, 64.0];
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds in ctx.datasets.iter().filter(|d| d.contains("cifar100") || d.contains("svhn")) {
+        let mut t = Table::new(
+            format!("Fig 22 [{ds}]: total latency (ms) vs CPU frequency"),
+            &["scheme", "216MHz", "160MHz", "108MHz", "64MHz", "degradation"],
+        );
+        for scheme in [Scheme::Agile, Scheme::Deepcod, Scheme::Spinn, Scheme::Mcunet] {
+            let mut cells = vec![scheme.name().to_string()];
+            let mut first = 0.0;
+            let mut last = 0.0;
+            for (i, mhz) in FREQ_SWEEP_MHZ.iter().enumerate() {
+                let mut cfg = ctx.run_config(ds, scheme);
+                cfg.device = cfg.device.with_freq(mhz * 1e6);
+                let e = eval_scheme(ctx, &cfg, eval_n())?;
+                let total = e.total_latency_s();
+                if i == 0 {
+                    first = total;
+                }
+                last = total;
+                cells.push(ms(total));
+            }
+            cells.push(format!("+{:.0}%", (last / first - 1.0) * 100.0));
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

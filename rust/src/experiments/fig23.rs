@@ -1,0 +1,37 @@
+//! Fig 23: end-to-end latency vs wireless bandwidth (6 Mbps WiFi down to a
+//! 270 kbps BLE-class link). AgileNN's high feature sparsity keeps latency
+//! bounded; DeepCOD/SPINN track the link rate.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{ms, Table};
+use crate::simulator::NetworkProfile;
+use anyhow::Result;
+
+pub const BW_SWEEP_KBPS: [f64; 5] = [6000.0, 2000.0, 1000.0, 500.0, 270.0];
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds in ctx.datasets.iter().filter(|d| d.contains("cifar100") || d.contains("svhn")) {
+        let mut t = Table::new(
+            format!("Fig 23 [{ds}]: total latency (ms) vs bandwidth"),
+            &["scheme", "6Mbps", "2Mbps", "1Mbps", "500kbps", "270kbps"],
+        );
+        for scheme in [Scheme::Agile, Scheme::Deepcod, Scheme::Spinn, Scheme::EdgeOnly] {
+            let mut cells = vec![scheme.name().to_string()];
+            for kbps in BW_SWEEP_KBPS {
+                let mut cfg = ctx.run_config(ds, scheme);
+                cfg.network = if kbps <= 300.0 {
+                    NetworkProfile::ble_270kbps()
+                } else {
+                    NetworkProfile::wifi_6mbps().with_bandwidth(kbps * 1e3)
+                };
+                let e = eval_scheme(ctx, &cfg, eval_n())?;
+                cells.push(ms(e.total_latency_s()));
+            }
+            t.row(cells);
+        }
+        tables.push(t);
+    }
+    Ok(tables)
+}

@@ -1,0 +1,60 @@
+//! Fig 24: choice of XAI technique (Integrated Gradients vs Gradient
+//! Saliency). The GS-variant training happens python-side
+//! (`python -m compile.experiments.fig24_xai`, writing
+//! artifacts/figures/fig24.json); here we render the comparison, falling
+//! back to the IG-trained point alone if the GS variant is absent.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{pct, Table};
+use anyhow::Result;
+
+#[derive(Debug)]
+struct Fig24Point {
+    dataset: String,
+    tool: String,
+    accuracy: f64,
+    achieved_skewness: f64,
+    grad_computations_per_eval: usize,
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Fig 24: XAI technique comparison (IG vs GS)",
+        &["dataset", "tool", "accuracy", "achieved_skew", "grads/eval"],
+    );
+    let path = ctx.artifacts_dir.join("figures").join("fig24.json");
+    if path.exists() {
+        let parsed = crate::json::Value::parse(&std::fs::read_to_string(&path)?)?;
+        for v in parsed.as_arr()? {
+            let p = Fig24Point {
+                dataset: v.str_at("dataset")?,
+                tool: v.str_at("tool")?,
+                accuracy: v.f64_at("accuracy")?,
+                achieved_skewness: v.f64_at("achieved_skewness")?,
+                grad_computations_per_eval: v.usize_at("grad_computations_per_eval")?,
+            };
+            t.row(vec![
+                p.dataset,
+                p.tool.to_uppercase(),
+                pct(p.accuracy),
+                pct(p.achieved_skewness),
+                p.grad_computations_per_eval.to_string(),
+            ]);
+        }
+    } else {
+        for ds in &ctx.datasets {
+            let meta = ctx.meta(ds)?;
+            let e = eval_scheme(ctx, &ctx.run_config(ds, Scheme::Agile), eval_n())?;
+            t.row(vec![
+                ds.clone(),
+                meta.xai_tool.to_uppercase(),
+                pct(e.accuracy),
+                pct(meta.importance.achieved_skewness_mean),
+                "4".into(), // training-time IG steps
+            ]);
+        }
+        t.title.push_str("  [run `make figures` for the GS-trained variant]");
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,25 @@
+//! Table 2: reduction of transmitted data size vs DeepCOD, per dataset.
+
+use super::common::{eval_n, eval_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{pct, Table};
+use anyhow::Result;
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 2: transmitted-bytes reduction vs DeepCOD",
+        &["dataset", "agile_bytes", "deepcod_bytes", "reduction"],
+    );
+    for ds in &ctx.datasets {
+        let agile = eval_scheme(ctx, &ctx.run_config(ds, Scheme::Agile), eval_n())?;
+        let deepcod = eval_scheme(ctx, &ctx.run_config(ds, Scheme::Deepcod), eval_n())?;
+        let reduction = 1.0 - agile.mean_tx_bytes / deepcod.mean_tx_bytes;
+        t.row(vec![
+            ds.clone(),
+            format!("{:.0}", agile.mean_tx_bytes),
+            format!("{:.0}", deepcod.mean_tx_bytes),
+            pct(reduction),
+        ]);
+    }
+    Ok(vec![t])
+}

@@ -1,0 +1,345 @@
+//! Minimal JSON parser — substrate for reading meta.json / manifest.json.
+//!
+//! The build environment vendors only the `xla` dependency tree, so instead
+//! of serde_json we carry a small recursive-descent parser covering the JSON
+//! the python exporter writes (objects, arrays, strings, f64 numbers, bools,
+//! null; UTF-8 passthrough with \uXXXX escapes).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(HashMap<String, Value>),
+}
+
+impl Value {
+    pub fn parse(text: &str) -> Result<Value> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    // ---- typed accessors ----
+
+    pub fn get(&self, key: &str) -> Result<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            _ => bail!("not an object (looking up {key:?})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(n) => Ok(*n),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 {
+            bail!("not a non-negative integer: {n}");
+        }
+        Ok(n as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Value]> {
+        match self {
+            Value::Arr(v) => Ok(v),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&HashMap<String, Value>> {
+        match self {
+            Value::Obj(m) => Ok(m),
+            _ => bail!("not an object: {self:?}"),
+        }
+    }
+
+    /// `get` chained with context for nicer error messages.
+    pub fn f64_at(&self, key: &str) -> Result<f64> {
+        self.get(key)?.as_f64().with_context(|| format!("key {key:?}"))
+    }
+
+    pub fn usize_at(&self, key: &str) -> Result<usize> {
+        self.get(key)?.as_usize().with_context(|| format!("key {key:?}"))
+    }
+
+    pub fn u64_at(&self, key: &str) -> Result<u64> {
+        self.get(key)?.as_u64().with_context(|| format!("key {key:?}"))
+    }
+
+    pub fn str_at(&self, key: &str) -> Result<String> {
+        Ok(self.get(key)?.as_str().with_context(|| format!("key {key:?}"))?.to_string())
+    }
+
+    pub fn f32_vec_at(&self, key: &str) -> Result<Vec<f32>> {
+        self.get(key)?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_f64()? as f32))
+            .collect::<Result<_>>()
+            .with_context(|| format!("key {key:?}"))
+    }
+
+    pub fn f64_vec_at(&self, key: &str) -> Result<Vec<f64>> {
+        self.get(key)?.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    pub fn usize_vec_at(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)?.as_arr()?.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.bytes.get(self.pos).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek()? != b {
+            bail!("expected {:?} at byte {}, found {:?}", b as char, self.pos, self.peek()? as char);
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, lit: &str, v: Value) -> Result<Value> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Value::Str(self.string()?)),
+            b't' => self.literal("true", Value::Bool(true)),
+            b'f' => self.literal("false", Value::Bool(false)),
+            b'n' => self.literal("null", Value::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => bail!("unexpected byte {:?} at {}", c as char, self.pos),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut map = HashMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Value::Obj(map));
+                }
+                c => bail!("expected ',' or '}}', found {:?}", c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Value::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Value::Arr(items));
+                }
+                c => bail!("expected ',' or ']', found {:?}", c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => bail!("bad escape \\{}", c as char),
+                    }
+                }
+                _ => {
+                    // copy raw UTF-8 bytes through
+                    let start = self.pos - 1;
+                    while self.pos < self.bytes.len()
+                        && self.bytes[self.pos] != b'"'
+                        && self.bytes[self.pos] != b'\\'
+                    {
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos])?);
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Value::Num(s.parse().with_context(|| format!("bad number {s:?}"))?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Value::parse("42").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(Value::parse("-1.5e2").unwrap().as_f64().unwrap(), -150.0);
+        assert!(Value::parse("true").unwrap().as_bool().unwrap());
+        assert_eq!(Value::parse("null").unwrap(), Value::Null);
+        assert_eq!(Value::parse(r#""hi""#).unwrap().as_str().unwrap(), "hi");
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = Value::parse(r#"{"a": [1, 2.5, {"b": "x"}], "c": {"d": false}}"#).unwrap();
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b").unwrap().as_str().unwrap(), "x");
+        assert!(!v.get("c").unwrap().get("d").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn escapes() {
+        let v = Value::parse(r#""a\nb\t\"q\" A""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\nb\t\"q\" A");
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let v = Value::parse(r#"{"n": 3, "xs": [1.0, 2.0], "is": [1,2,3]}"#).unwrap();
+        assert_eq!(v.usize_at("n").unwrap(), 3);
+        assert_eq!(v.f32_vec_at("xs").unwrap(), vec![1.0f32, 2.0]);
+        assert_eq!(v.usize_vec_at("is").unwrap(), vec![1, 2, 3]);
+        assert!(v.get("missing").is_err());
+        assert!(v.get("n").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Value::parse("{").is_err());
+        assert!(Value::parse("[1,]").is_err());
+        assert!(Value::parse("1 2").is_err());
+        assert!(Value::parse("{'a': 1}").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Value::parse("[]").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(Value::parse("{}").unwrap().as_obj().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn fractional_usize_rejected() {
+        assert!(Value::parse("1.5").unwrap().as_usize().is_err());
+        assert!(Value::parse("-2").unwrap().as_usize().is_err());
+    }
+}

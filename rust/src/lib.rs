@@ -1,0 +1,49 @@
+//! # AgileNN reproduction — serving library
+//!
+//! Reproduction of *"Real-time Neural Network Inference on Extremely Weak
+//! Devices: Agile Offloading with Explainable AI"* (Huang & Gao, MobiCom '22)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build time)** — the feature-extractor conv and the
+//!   Integrated-Gradients accumulation kernels (`python/compile/kernels/`).
+//! * **L2 (JAX, build time)** — model graphs + XAI-driven joint training
+//!   with skewness manipulation (`python/compile/`), AOT-lowered to HLO
+//!   text.
+//! * **L3 (this crate, run time)** — the serving coordinator: device
+//!   runtime simulator, learned quantization + LZW transmit path, dynamic
+//!   remote batching, alpha-weighted prediction fusion, baseline schemes,
+//!   and the bench harness regenerating every figure/table in the paper's
+//!   evaluation. Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use agilenn::config::{RunConfig, Scheme, default_artifacts_dir, Meta};
+//! use agilenn::runtime::Engine;
+//! use agilenn::baselines::{make_runner, SchemeRunner};
+//! use agilenn::workload::TestSet;
+//!
+//! let cfg = RunConfig::new(default_artifacts_dir(), "svhns", Scheme::Agile);
+//! let meta = Meta::load(&cfg.dataset_dir()).unwrap();
+//! let testset = TestSet::load(&cfg.dataset_dir().join("test.bin")).unwrap();
+//! let engine = Engine::cpu().unwrap();
+//! let mut runner = make_runner(&engine, &cfg, &meta).unwrap();
+//! let out = runner.process(&testset.image(0).unwrap(), testset.labels[0]).unwrap();
+//! println!("pred={} correct={} latency={:.2}ms",
+//!          out.predicted, out.correct, out.breakdown.total_s() * 1e3);
+//! ```
+
+pub mod baselines;
+pub mod bench;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod json;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod tensor;
+pub mod workload;
+pub mod xai;

@@ -1,0 +1,179 @@
+//! AgileNN CLI: serve (multi-device pipeline), infer (single request,
+//! verbose), bench (regenerate a paper figure/table), report (summary).
+//!
+//! Argument parsing is hand-rolled (`cli` module below) — the build
+//! environment vendors only the xla dependency tree.
+
+use agilenn::config::{default_artifacts_dir, Manifest, Meta, RunConfig, Scheme};
+use agilenn::coordinator::run_pipeline;
+use agilenn::experiments::{all_ids, run_figure, EvalCtx};
+use agilenn::report::{ms, pct};
+use agilenn::runtime::Engine;
+use agilenn::workload::{Arrival, TestSet};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Tiny `--flag value` parser.
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = std::collections::HashMap::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?
+                .to_string();
+            let val = it.next().unwrap_or_else(|| "true".into());
+            flags.insert(key, val);
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.flags.get(key) {
+            Some(v) => Ok(Some(v.parse()?)),
+            None => Ok(None),
+        }
+    }
+}
+
+const HELP: &str = "\
+agilenn — AgileNN (MobiCom '22) serving coordinator
+
+USAGE: agilenn <command> [--flag value ...]
+
+COMMANDS:
+  serve    run the multi-device serving pipeline
+             --dataset svhns --devices 4 --requests 256 --rate-hz 30
+             --max-batch 8 --deadline-us 2000
+  infer    process one request, print the full breakdown
+             --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
+             --index 0 --bits 4 [--alpha 0.3]
+  bench    regenerate a paper figure/table
+             --figure 2|16|t2|17|18|19|20|21|22|23|24|all
+  report   print what was trained/exported per dataset
+  help     this text
+
+GLOBAL:
+  --artifacts DIR   artifacts directory (default ./artifacts or
+                    $AGILENN_ARTIFACTS)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    let artifacts: PathBuf = args
+        .flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    match args.cmd.as_str() {
+        "serve" => {
+            let dataset = args.get_str("dataset", "svhns");
+            let devices: usize = args.get("devices", 4)?;
+            let requests: usize = args.get("requests", 256)?;
+            let rate_hz: f64 = args.get("rate-hz", 30.0)?;
+            let mut cfg = RunConfig::new(artifacts, &dataset, Scheme::Agile);
+            cfg.max_batch = args.get("max-batch", 8)?;
+            cfg.batch_deadline_us = args.get("deadline-us", 2000)?;
+            let meta = Meta::load(&cfg.dataset_dir())?;
+            let testset = Arc::new(TestSet::load(&cfg.dataset_dir().join("test.bin"))?);
+            let arrival = if rate_hz > 0.0 {
+                Arrival::Poisson { hz: rate_hz, seed: 42 }
+            } else {
+                Arrival::Periodic { hz: 1e9 }
+            };
+            let rep = run_pipeline(&cfg, &meta, testset, devices, requests, arrival)?;
+            println!("pipeline: {} requests over {} devices", rep.requests, devices);
+            println!("  wall time      : {:.2} s", rep.wall_s);
+            println!("  throughput     : {:.1} req/s", rep.throughput_rps);
+            println!("  accuracy       : {}", pct(rep.accuracy));
+            println!("  latency mean   : {} ms", ms(rep.mean_latency_s));
+            println!("  latency p95    : {} ms", ms(rep.p95_latency_s));
+            println!("  batches        : {} (mean size {:.2})", rep.batches, rep.mean_batch_size);
+        }
+        "infer" => {
+            let dataset = args.get_str("dataset", "svhns");
+            let scheme: Scheme = args.get_str("scheme", "agile").parse()?;
+            let index: usize = args.get("index", 0)?;
+            let mut cfg = RunConfig::new(artifacts, &dataset, scheme);
+            cfg.bits = args.get("bits", 4)?;
+            cfg.alpha_override = args.get_opt_f64("alpha")?;
+            let meta = Meta::load(&cfg.dataset_dir())?;
+            let testset = TestSet::load(&cfg.dataset_dir().join("test.bin"))?;
+            let engine = Engine::cpu()?;
+            let mut runner = agilenn::baselines::make_runner(&engine, &cfg, &meta)?;
+            let idx = index % testset.len();
+            let out = runner.process(&testset.image(idx)?, testset.labels[idx])?;
+            println!("{} on {dataset}[{index}]:", scheme.name());
+            println!("  predicted      : {} (label {})", out.predicted, testset.labels[idx]);
+            println!("  correct        : {}", out.correct);
+            println!("  local NN       : {} ms", ms(out.breakdown.local_nn_s));
+            println!("  compression    : {} ms", ms(out.breakdown.compression_s));
+            println!("  network        : {} ms", ms(out.breakdown.network_s));
+            println!("  remote         : {} ms", ms(out.breakdown.remote_s));
+            println!("  total          : {} ms", ms(out.breakdown.total_s()));
+            println!("  tx bytes       : {}", out.tx_bytes);
+            println!("  energy         : {:.2} mJ", out.energy.total_mj());
+            if out.exited_early {
+                println!("  (resolved at the on-device early exit)");
+            }
+        }
+        "bench" => {
+            let figure = args.get_str("figure", "16");
+            let ctx = EvalCtx::new(artifacts)?;
+            let ids: Vec<&str> =
+                if figure == "all" { all_ids().to_vec() } else { vec![figure.as_str()] };
+            for id in ids {
+                for table in run_figure(&ctx, id)? {
+                    table.print();
+                    println!();
+                }
+            }
+        }
+        "report" => {
+            let manifest = Manifest::load(&artifacts)?;
+            println!("artifacts: {} (quick={})", artifacts.display(), manifest.quick);
+            for ds in &manifest.datasets {
+                let meta = Meta::load(&artifacts.join(ds))?;
+                println!(
+                    "  {ds}: {} classes, k={}, rho={:.2}, alpha={:.3}, xai={}, \
+                     py-acc agile={:.3} deepcod={:.3} spinn={:.3} mcunet={:.3} edge={:.3}",
+                    meta.num_classes,
+                    meta.k,
+                    meta.rho,
+                    meta.alpha,
+                    meta.xai_tool,
+                    meta.accuracy.agile,
+                    meta.accuracy.deepcod,
+                    meta.accuracy.spinn_final,
+                    meta.accuracy.mcunet,
+                    meta.accuracy.edge_only,
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Serving metrics: latency histograms, energy ledger, throughput counters.
+
+
+/// Streaming latency statistics with exact quantiles (stores samples;
+/// request counts here are small enough that this is the simplest correct
+/// thing — benches run thousands, not billions, of requests).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_s: Vec<f64>,
+    sorted: bool,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples_s.push(seconds);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_s.len()
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.samples_s.is_empty() {
+            return 0.0;
+        }
+        self.samples_s.iter().sum::<f64>() / self.samples_s.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples_s.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let idx = ((self.samples_s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
+        self.samples_s[idx]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Per-request latency breakdown (paper §7.2's four components).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyBreakdown {
+    /// device NN compute (feature extractor + local NN), seconds
+    pub local_nn_s: f64,
+    /// device-side quantize + LZW compress
+    pub compression_s: f64,
+    /// uplink + downlink transfer
+    pub network_s: f64,
+    /// server decompress + remote NN (+ batch queueing)
+    pub remote_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.local_nn_s + self.compression_s + self.network_s + self.remote_s
+    }
+}
+
+/// Energy ledger for the device (Fig 19: compute + radio terms).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyLedger {
+    pub compute_j: f64,
+    pub radio_j: f64,
+}
+
+impl EnergyLedger {
+    pub fn total_j(&self) -> f64 {
+        self.compute_j + self.radio_j
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_j() * 1e3
+    }
+
+    pub fn add(&mut self, other: &EnergyLedger) {
+        self.compute_j += other.compute_j;
+        self.radio_j += other.radio_j;
+    }
+}
+
+/// Aggregate accuracy counter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AccuracyCounter {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl AccuracyCounter {
+    pub fn record(&mut self, correct: bool) {
+        self.total += 1;
+        if correct {
+            self.correct += 1;
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_quantiles() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_s() - 50.5).abs() < 1e-9);
+        assert!((s.p50() - 50.0).abs() <= 1.0);
+        assert!((s.p99() - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let mut s = LatencyStats::new();
+        assert_eq!(s.mean_s(), 0.0);
+        assert_eq!(s.p95(), 0.0);
+    }
+
+    #[test]
+    fn breakdown_total() {
+        let b = LatencyBreakdown {
+            local_nn_s: 0.01,
+            compression_s: 0.002,
+            network_s: 0.005,
+            remote_s: 0.003,
+        };
+        assert!((b.total_s() - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_ledger_accumulates() {
+        let mut e = EnergyLedger::default();
+        e.add(&EnergyLedger { compute_j: 0.001, radio_j: 0.002 });
+        e.add(&EnergyLedger { compute_j: 0.001, radio_j: 0.0 });
+        assert!((e.total_mj() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_counter() {
+        let mut a = AccuracyCounter::default();
+        a.record(true);
+        a.record(false);
+        a.record(true);
+        assert!((a.accuracy() - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! PJRT engine: executable cache + tensor <-> literal marshalling.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with f32 tensors; returns the decomposed output tuple.
+    ///
+    /// All our AOT exports lower with `return_tuple=True`, so the single
+    /// result literal is always a tuple (possibly of one element).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<Result<_>>()
+            .with_context(|| format!("marshalling inputs for {}", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        ensure!(
+            !result.is_empty() && !result[0].is_empty(),
+            "empty result from {}",
+            self.name
+        );
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = lit.to_tuple().with_context(|| format!("untupling result of {}", self.name))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<usize> = t.shape().to_vec();
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &dims, bytes)
+        .map_err(|e| anyhow!("literal creation failed: {e}"))
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("result shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("result data: {e}"))?;
+    Tensor::new(dims, data)
+}
+
+/// PJRT client + compiled-executable cache, shared across the coordinator.
+///
+/// Compilation happens once per artifact at startup/first use (AOT spirit:
+/// the request path only executes). The cache is keyed by file stem.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by `key`).
+    pub fn load(&self, key: &str, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let exe = Arc::new(Executable { exe, name: key.to_string() });
+        self.cache.lock().unwrap().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Convenience: load `<dir>/<stem>.hlo.txt`, keyed by the full path so
+    /// identically-named artifacts from different datasets never collide in
+    /// the cache.
+    pub fn load_artifact(&self, dir: &Path, stem: &str) -> Result<Arc<Executable>> {
+        let path = dir.join(format!("{stem}.hlo.txt"));
+        let key = path.to_string_lossy().into_owned();
+        self.load(&key, &path)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// PJRT CPU client and loaded executables are thread-safe to invoke.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them on
+//! the CPU PJRT client. This is the only place the `xla` crate is touched.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO text ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Text is the interchange format because
+//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos.
+
+mod engine;
+
+pub use engine::{Engine, Executable};

@@ -1,0 +1,11 @@
+//! Hardware simulators standing in for the paper's physical testbed:
+//! an STM32-class device cost/energy/memory model and a wireless-link model.
+//! See DESIGN.md §3 for the substitution rationale and calibration.
+
+pub mod device;
+pub mod network;
+pub mod profiles;
+
+pub use device::{DeviceSim, DeviceTimings, MemoryReport};
+pub use network::NetworkSim;
+pub use profiles::{DeviceProfile, NetworkProfile};

@@ -1,0 +1,90 @@
+//! Wireless-link model (substitutes the paper's ESP-WROOM WiFi module).
+//!
+//! Transfer time = packetized serialization delay + one-way latency.
+//! Packetization matters: small payloads on a 244-byte-MTU BLE link pay a
+//! much larger relative overhead than on WiFi, which is exactly the regime
+//! Fig 23 sweeps.
+
+use super::profiles::NetworkProfile;
+
+#[derive(Debug, Clone)]
+pub struct NetworkSim {
+    pub profile: NetworkProfile,
+}
+
+impl NetworkSim {
+    pub fn new(profile: NetworkProfile) -> Self {
+        Self { profile }
+    }
+
+    /// Number of packets for `bytes` of application payload.
+    pub fn packets(&self, bytes: usize) -> usize {
+        if bytes == 0 {
+            0
+        } else {
+            bytes.div_ceil(self.profile.mtu)
+        }
+    }
+
+    /// On-air bytes including per-packet overhead.
+    pub fn wire_bytes(&self, bytes: usize) -> usize {
+        bytes + self.packets(bytes) * self.profile.per_packet_overhead
+    }
+
+    /// One-way transfer time for `bytes` of application payload, seconds.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.wire_bytes(bytes) as f64 * 8.0 / self.profile.bandwidth_bps
+            + self.profile.one_way_latency_s
+    }
+
+    /// Radio-active airtime (serialization only, for the energy model).
+    pub fn airtime_s(&self, bytes: usize) -> f64 {
+        self.wire_bytes(bytes) as f64 * 8.0 / self.profile.bandwidth_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::profiles::NetworkProfile;
+
+    #[test]
+    fn zero_bytes_zero_time() {
+        let net = NetworkSim::new(NetworkProfile::wifi_6mbps());
+        assert_eq!(net.transfer_s(0), 0.0);
+        assert_eq!(net.packets(0), 0);
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let net = NetworkSim::new(NetworkProfile::wifi_6mbps());
+        assert!(net.transfer_s(2000) > net.transfer_s(200));
+    }
+
+    #[test]
+    fn packetization() {
+        let net = NetworkSim::new(NetworkProfile::ble_270kbps());
+        assert_eq!(net.packets(244), 1);
+        assert_eq!(net.packets(245), 2);
+        assert_eq!(net.wire_bytes(244), 244 + 10);
+    }
+
+    #[test]
+    fn slow_link_slower() {
+        let wifi = NetworkSim::new(NetworkProfile::wifi_6mbps());
+        let ble = NetworkSim::new(NetworkProfile::ble_270kbps());
+        assert!(ble.transfer_s(1000) > 10.0 * wifi.transfer_s(1000));
+    }
+
+    #[test]
+    fn bandwidth_scaling() {
+        let base = NetworkProfile::wifi_6mbps();
+        let half = NetworkSim::new(base.with_bandwidth(3e6));
+        let full = NetworkSim::new(base);
+        let b = 10_000;
+        assert!(half.airtime_s(b) / full.airtime_s(b) > 1.99);
+    }
+}

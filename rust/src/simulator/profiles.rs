@@ -1,0 +1,141 @@
+//! Device and network profiles.
+//!
+//! Calibration (see DESIGN.md §3): the paper measures on a physical
+//! STM32F746 board; we price device compute from MAC counts with CMSIS-NN
+//! int8 throughput, and scale MACs by `resolution_scale` = (96/32)^2 = 9 so
+//! latencies correspond to the paper's 96x96 input resolution while the
+//! functional models run at 32x32.
+
+
+/// Embedded-device cost model parameters.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// CPU frequency in Hz (STM32F746: 216 MHz, scalable; §7.5)
+    pub freq_hz: f64,
+    /// effective int8 MACs per cycle with CMSIS-NN on Cortex-M7
+    pub macs_per_cycle: f64,
+    /// SRAM budget in bytes (STM32F746: 320 KB)
+    pub sram_bytes: usize,
+    /// flash budget in bytes (STM32F746: 1 MB)
+    pub flash_bytes: usize,
+    /// active-compute power draw in watts (core + SRAM at full speed)
+    pub active_power_w: f64,
+    /// radio power draw while transmitting, watts (ESP-WROOM-02D class)
+    pub radio_power_w: f64,
+    /// cycles per byte for LZW compression on-device
+    pub lzw_cycles_per_byte: f64,
+    /// cycles per element for codebook quantization (binary search)
+    pub quant_cycles_per_elem: f64,
+    /// MAC-count multiplier translating 32x32 models to the paper's 96x96
+    pub resolution_scale: f64,
+}
+
+impl DeviceProfile {
+    /// STM32F746NG discovery board — the paper's device (§6).
+    pub fn stm32f746() -> Self {
+        Self {
+            name: "STM32F746".into(),
+            freq_hz: 216e6,
+            macs_per_cycle: 0.5,
+            sram_bytes: 320 * 1024,
+            flash_bytes: 1024 * 1024,
+            active_power_w: 0.33, // ~100 mA @ 3.3 V at 216 MHz
+            radio_power_w: 0.56,  // ESP WiFi tx ~170 mA @ 3.3 V
+            lzw_cycles_per_byte: 30.0,
+            quant_cycles_per_elem: 12.0,
+            resolution_scale: 9.0,
+        }
+    }
+
+    /// STM32H743 — faster sibling (§7.5 mentions 480 MHz dual-core M7).
+    pub fn stm32h743() -> Self {
+        Self { name: "STM32H743".into(), freq_hz: 480e6, ..Self::stm32f746() }
+    }
+
+    /// Arduino-Nano-class ATmega328 (16 MHz, tiny memories) — §7.5's low end.
+    pub fn arduino_nano() -> Self {
+        Self {
+            name: "ArduinoNano".into(),
+            freq_hz: 16e6,
+            macs_per_cycle: 0.1, // no DSP extensions
+            sram_bytes: 2 * 1024,
+            flash_bytes: 32 * 1024,
+            active_power_w: 0.05,
+            ..Self::stm32f746()
+        }
+    }
+
+    /// Same device with the CPU clock scaled (paper §7.5 frequency sweep).
+    pub fn with_freq(&self, freq_hz: f64) -> Self {
+        Self { name: format!("{}@{:.0}MHz", self.name, freq_hz / 1e6), freq_hz, ..self.clone() }
+    }
+}
+
+/// Wireless link model.
+#[derive(Debug, Clone)]
+pub struct NetworkProfile {
+    pub name: String,
+    /// application-layer goodput, bits per second
+    pub bandwidth_bps: f64,
+    /// one-way propagation + stack latency, seconds
+    pub one_way_latency_s: f64,
+    /// per-packet header overhead (UDP/IP), bytes
+    pub per_packet_overhead: usize,
+    /// maximum payload per packet, bytes
+    pub mtu: usize,
+}
+
+impl NetworkProfile {
+    /// ESP-WROOM-02D WiFi capped at 6 Mbps UDP (paper §6).
+    pub fn wifi_6mbps() -> Self {
+        Self {
+            name: "WiFi-6Mbps".into(),
+            bandwidth_bps: 6e6,
+            one_way_latency_s: 2e-3,
+            per_packet_overhead: 42,
+            mtu: 1400,
+        }
+    }
+
+    /// Narrowband low-energy radio, 270 kbps (paper §7.6's BLE-class link).
+    pub fn ble_270kbps() -> Self {
+        Self {
+            name: "BLE-270kbps".into(),
+            bandwidth_bps: 270e3,
+            one_way_latency_s: 8e-3,
+            per_packet_overhead: 10,
+            mtu: 244,
+        }
+    }
+
+    /// Same link with scaled bandwidth (paper §7.6 sweep).
+    pub fn with_bandwidth(&self, bps: f64) -> Self {
+        Self { name: format!("{}@{:.0}kbps", self.name, bps / 1e3), bandwidth_bps: bps, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stm32_profile_matches_datasheet() {
+        let p = DeviceProfile::stm32f746();
+        assert_eq!(p.freq_hz, 216e6);
+        assert_eq!(p.sram_bytes, 320 * 1024);
+        assert_eq!(p.flash_bytes, 1024 * 1024);
+    }
+
+    #[test]
+    fn with_freq_scales_only_frequency() {
+        let p = DeviceProfile::stm32f746().with_freq(64e6);
+        assert_eq!(p.freq_hz, 64e6);
+        assert_eq!(p.sram_bytes, DeviceProfile::stm32f746().sram_bytes);
+    }
+
+    #[test]
+    fn network_profiles_ordered() {
+        assert!(NetworkProfile::wifi_6mbps().bandwidth_bps > NetworkProfile::ble_270kbps().bandwidth_bps);
+    }
+}

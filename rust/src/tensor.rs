@@ -1,0 +1,195 @@
+//! Minimal dense f32 tensor substrate for the coordinator hot path.
+//!
+//! The request path needs only a handful of operations (channel slicing,
+//! batch stacking/padding, argmax/softmax over logits), so we carry a tiny
+//! purpose-built NHWC tensor instead of pulling in an ndarray dependency.
+
+use anyhow::{ensure, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(
+            n == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Leading-dimension (batch) size; 1 for rank-0.
+    pub fn batch(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1)
+    }
+
+    /// Reinterpret the shape without moving data.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(n == self.data.len(), "reshape {:?} incompatible with {} elems", shape, n);
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> Result<&[f32]> {
+        ensure!(self.shape.len() == 2, "row() needs rank-2, got {:?}", self.shape);
+        let w = self.shape[1];
+        ensure!(i < self.shape[0], "row {} out of bounds {:?}", i, self.shape);
+        Ok(&self.data[i * w..(i + 1) * w])
+    }
+
+    /// Extract sample `i` along the batch dimension (keeps a unit batch dim).
+    pub fn select_batch(&self, i: usize) -> Result<Tensor> {
+        ensure!(!self.shape.is_empty() && i < self.shape[0], "batch index {i} out of bounds");
+        let per: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = 1;
+        Tensor::new(shape, self.data[i * per..(i + 1) * per].to_vec())
+    }
+
+    /// Stack unit-batch tensors into one batch, padding with repeats of the
+    /// last element up to `pad_to` (dynamic batcher feeding fixed-shape HLO).
+    pub fn stack_padded(items: &[Tensor], pad_to: usize) -> Result<Tensor> {
+        ensure!(!items.is_empty(), "stack_padded on empty slice");
+        ensure!(items.len() <= pad_to, "{} items exceed pad_to={}", items.len(), pad_to);
+        let inner = &items[0].shape[1..];
+        for t in items {
+            ensure!(t.shape[0] == 1, "stack_padded wants unit-batch tensors");
+            ensure!(&t.shape[1..] == inner, "inhomogeneous shapes in stack");
+        }
+        let per: usize = inner.iter().product();
+        let mut data = Vec::with_capacity(pad_to * per);
+        for t in items {
+            data.extend_from_slice(&t.data);
+        }
+        let last = &items[items.len() - 1].data;
+        for _ in items.len()..pad_to {
+            data.extend_from_slice(last);
+        }
+        let mut shape = vec![pad_to];
+        shape.extend_from_slice(inner);
+        Tensor::new(shape, data)
+    }
+}
+
+/// Index of the maximum element (ties -> first).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically stable softmax.
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|&v| (v - m).exp()).collect();
+    let s: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / s).collect()
+}
+
+/// Max softmax probability — SPINN's early-exit confidence measure.
+pub fn max_confidence(logits: &[f32]) -> f32 {
+    softmax(logits).into_iter().fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn select_batch_slices_correctly() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let s = t.select_batch(1).unwrap();
+        assert_eq!(s.shape(), &[1, 3]);
+        assert_eq!(s.data(), &[4., 5., 6.]);
+        assert!(t.select_batch(2).is_err());
+    }
+
+    #[test]
+    fn stack_padded_pads_with_last() {
+        let a = Tensor::new(vec![1, 2], vec![1., 2.]).unwrap();
+        let b = Tensor::new(vec![1, 2], vec![3., 4.]).unwrap();
+        let s = Tensor::stack_padded(&[a, b], 4).unwrap();
+        assert_eq!(s.shape(), &[4, 2]);
+        assert_eq!(s.data(), &[1., 2., 3., 4., 3., 4., 3., 4.]);
+    }
+
+    #[test]
+    fn stack_padded_rejects_overflow_and_mismatch() {
+        let a = Tensor::new(vec![1, 2], vec![1., 2.]).unwrap();
+        let b = Tensor::new(vec![1, 3], vec![3., 4., 5.]).unwrap();
+        assert!(Tensor::stack_padded(&[a.clone(), b], 4).is_err());
+        assert!(Tensor::stack_padded(&[a.clone(), a.clone(), a], 2).is_err());
+    }
+
+    #[test]
+    fn argmax_and_softmax() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[1.0, 1.0]), 0);
+        let p = softmax(&[0.0, 0.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        let p = softmax(&[100.0, -100.0]);
+        assert!(p[0] > 0.999 && p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn confidence_in_unit_interval() {
+        let c = max_confidence(&[2.0, 1.0, 0.5]);
+        assert!(c > 1.0 / 3.0 && c < 1.0);
+    }
+
+    #[test]
+    fn row_access() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(t.row(1).unwrap(), &[3., 4.]);
+        assert!(t.row(2).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Workloads: the exported test set (test.bin, written by compile/aot.py)
+//! and sensor-style arrival traces driving the serving pipeline.
+
+use crate::tensor::Tensor;
+use anyhow::{ensure, Result, Context};
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: u32 = 0x4147_4C45; // "AGLE"
+
+/// Test set: images (N,H,W,C) f32 + labels, exported from python.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+}
+
+impl TestSet {
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {} — run `make artifacts`", path.display()))?;
+        let mut hdr = [0u8; 20];
+        f.read_exact(&mut hdr)?;
+        let rd = |i: usize| u32::from_le_bytes(hdr[i * 4..i * 4 + 4].try_into().unwrap());
+        ensure!(rd(0) == MAGIC, "bad magic in {}", path.display());
+        let (n, h, w, c) = (rd(1) as usize, rd(2) as usize, rd(3) as usize, rd(4) as usize);
+        ensure!(n > 0 && n < 1_000_000, "implausible test set size {n}");
+        let mut img_bytes = vec![0u8; n * h * w * c * 4];
+        f.read_exact(&mut img_bytes)?;
+        let images: Vec<f32> = img_bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let mut lab_bytes = vec![0u8; n * 4];
+        f.read_exact(&mut lab_bytes)?;
+        let labels: Vec<i32> = lab_bytes
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Self { images: Tensor::new(vec![n, h, w, c], images)?, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Image `i` as a unit-batch tensor.
+    pub fn image(&self, i: usize) -> Result<Tensor> {
+        self.images.select_batch(i)
+    }
+}
+
+/// Inter-arrival process for sensor-driven requests (paper §7.2: real-time
+/// means keeping up with the sensor sampling interval).
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// fixed-rate sampling, e.g. a 30 Hz camera
+    Periodic { hz: f64 },
+    /// Poisson arrivals with the given mean rate
+    Poisson { hz: f64, seed: u64 },
+}
+
+impl Arrival {
+    /// Generate `n` arrival timestamps (seconds from epoch 0).
+    pub fn timestamps(&self, n: usize) -> Vec<f64> {
+        match *self {
+            Arrival::Periodic { hz } => (0..n).map(|i| i as f64 / hz).collect(),
+            Arrival::Poisson { hz, seed } => {
+                let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        // xorshift64* -> uniform(0,1) -> exponential
+                        state ^= state >> 12;
+                        state ^= state << 25;
+                        state ^= state >> 27;
+                        let u = (state.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 11) as f64
+                            / (1u64 << 53) as f64;
+                        t += -(1.0 - u).ln() / hz;
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_testbin(path: &Path, n: usize) {
+        let (h, w, c) = (4, 4, 3);
+        let mut f = std::fs::File::create(path).unwrap();
+        for v in [MAGIC, n as u32, h as u32, w as u32, c as u32] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for i in 0..n * h * w * c {
+            f.write_all(&(i as f32 * 0.01).to_le_bytes()).unwrap();
+        }
+        for i in 0..n {
+            f.write_all(&(i as i32 % 10).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn loads_testbin_roundtrip() {
+        let dir = std::env::temp_dir().join("agilenn_testbin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.bin");
+        write_testbin(&path, 6);
+        let ts = TestSet::load(&path).unwrap();
+        assert_eq!(ts.len(), 6);
+        assert_eq!(ts.images.shape(), &[6, 4, 4, 3]);
+        assert_eq!(ts.labels[5], 5);
+        let img = ts.image(2).unwrap();
+        assert_eq!(img.shape(), &[1, 4, 4, 3]);
+        assert!((img.data()[0] - 0.96).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("agilenn_testbin2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, [0u8; 40]).unwrap();
+        assert!(TestSet::load(&path).is_err());
+    }
+
+    #[test]
+    fn periodic_arrivals_evenly_spaced() {
+        let ts = Arrival::Periodic { hz: 30.0 }.timestamps(4);
+        assert!((ts[1] - ts[0] - 1.0 / 30.0).abs() < 1e-12);
+        assert!((ts[3] - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_with_roughly_right_rate() {
+        let ts = Arrival::Poisson { hz: 100.0, seed: 7 }.timestamps(2000);
+        assert!(ts.windows(2).all(|w| w[1] > w[0]));
+        let mean_gap = ts.last().unwrap() / 2000.0;
+        assert!((mean_gap - 0.01).abs() < 0.002, "mean gap {mean_gap}");
+    }
+}

@@ -1,0 +1,81 @@
+//! Runtime-side XAI bookkeeping.
+//!
+//! At serving time the XAI tool itself is *unavailable* (the paper's whole
+//! point): the device just splits features by position, because training
+//! pinned the top-k important channels to the front. This module carries the
+//! importance statistics exported from training and recomputes the skewness
+//! metrics used by the Fig 4 / Fig 21 reports.
+
+/// Normalise an importance vector to unit L1 mass.
+pub fn normalize(imp: &[f64]) -> Vec<f64> {
+    let s: f64 = imp.iter().map(|v| v.abs()).sum();
+    if s <= 0.0 {
+        return vec![0.0; imp.len()];
+    }
+    imp.iter().map(|v| v.abs() / s).collect()
+}
+
+/// Position-agnostic skewness: total mass of the k largest entries
+/// (paper Fig 4's "normalized importance of the top 20% features").
+pub fn natural_skewness(imp: &[f64], k: usize) -> f64 {
+    let norm = normalize(imp);
+    let mut sorted = norm;
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    sorted.iter().take(k).sum()
+}
+
+/// Position-aware skewness: mass of the *first* k channels — what the
+/// runtime split actually gets (paper Fig 21a/d).
+pub fn achieved_skewness(imp: &[f64], k: usize) -> f64 {
+    let norm = normalize(imp);
+    norm.iter().take(k).sum()
+}
+
+/// True iff some channel >= k outranks a channel < k (a disorder case).
+pub fn is_disordered(imp: &[f64], k: usize) -> bool {
+    if k == 0 || k >= imp.len() {
+        return false;
+    }
+    let norm = normalize(imp);
+    let min_front = norm[..k].iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_back = norm[k..].iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    max_back > min_front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_unit_mass() {
+        let n = normalize(&[1.0, 3.0]);
+        assert!((n.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((n[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_zero_vector() {
+        assert_eq!(normalize(&[0.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn skewness_metrics_disagree_when_misordered() {
+        let imp = [0.05, 0.05, 0.5, 0.3, 0.1];
+        assert!((natural_skewness(&imp, 2) - 0.8).abs() < 1e-9);
+        assert!((achieved_skewness(&imp, 2) - 0.1).abs() < 1e-9);
+        assert!(is_disordered(&imp, 2));
+    }
+
+    #[test]
+    fn ordered_vector_not_disordered() {
+        let imp = [0.5, 0.3, 0.1, 0.07, 0.03];
+        assert!(!is_disordered(&imp, 2));
+        assert!((achieved_skewness(&imp, 2) - natural_skewness(&imp, 2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disorder_edge_cases() {
+        assert!(!is_disordered(&[1.0, 2.0], 0));
+        assert!(!is_disordered(&[1.0, 2.0], 2));
+    }
+}

@@ -1,0 +1,261 @@
+//! Randomized property tests (hand-rolled proptest substitute — the build
+//! environment vendors no proptest). A deterministic xorshift PRNG drives
+//! hundreds of cases per invariant; failures print the seed for replay.
+
+use agilenn::compression::quantizer::{bitpack, bitunpack, Codebook};
+use agilenn::compression::{lzw, RxDecoder, TxEncoder};
+use agilenn::coordinator::batcher::{pad_batch_size, BatchQueue, REMOTE_BATCH_SIZES};
+use agilenn::tensor::{argmax, softmax, Tensor};
+use agilenn::xai;
+use std::time::{Duration, Instant};
+
+/// xorshift64* — deterministic, seedable.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn usize(&mut self, bound: usize) -> usize {
+        (self.next() % bound.max(1) as u64) as usize
+    }
+
+    fn f32(&mut self) -> f32 {
+        (self.next() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    fn bytes(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| (self.next() >> 56) as u8).collect()
+    }
+
+    /// zero-heavy byte stream like quantized post-ReLU features
+    fn sparse_bytes(&mut self, n: usize, zero_pct: u64) -> Vec<u8> {
+        (0..n)
+            .map(|_| if self.next() % 100 < zero_pct { 0 } else { (self.next() % 16) as u8 })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LZW: roundtrip is identity for arbitrary byte streams
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lzw_roundtrip_random_streams() {
+    for seed in 1..=200u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.usize(5000);
+        let data = rng.bytes(n);
+        let back = lzw::decompress(&lzw::compress(&data)).unwrap();
+        assert_eq!(back, data, "seed {seed} len {n}");
+    }
+}
+
+#[test]
+fn prop_lzw_roundtrip_sparse_streams_and_compresses() {
+    for seed in 1..=100u64 {
+        let mut rng = Rng::new(seed);
+        let n = 500 + rng.usize(4000);
+        let data = rng.sparse_bytes(n, 85);
+        let c = lzw::compress(&data);
+        assert_eq!(lzw::decompress(&c).unwrap(), data, "seed {seed}");
+        assert!(c.len() < data.len(), "seed {seed}: sparse stream must shrink");
+    }
+}
+
+#[test]
+fn prop_lzw_handles_long_runs_and_dictionary_resets() {
+    for seed in 1..=20u64 {
+        let mut rng = Rng::new(seed);
+        // long run + noise tail forces dictionary growth and resets
+        let mut data = vec![(seed % 251) as u8; 30_000 + rng.usize(30_000)];
+        data.extend(rng.bytes(30_000));
+        assert_eq!(lzw::decompress(&lzw::compress(&data)).unwrap(), data, "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bitpack: roundtrip for every width
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_bitpack_roundtrip() {
+    for seed in 1..=100u64 {
+        let mut rng = Rng::new(seed);
+        let bits = 1 + (rng.usize(8)) as u32;
+        let n = rng.usize(2000);
+        let idx: Vec<u8> = (0..n).map(|_| (rng.next() % (1u64 << bits)) as u8).collect();
+        let back = bitunpack(&bitpack(&idx, bits), bits, n);
+        assert_eq!(back, idx, "seed {seed} bits {bits} n {n}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// quantizer: dequantized value is always the nearest codeword
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quantizer_nearest_codeword() {
+    for seed in 1..=60u64 {
+        let mut rng = Rng::new(seed);
+        let nlevels = 2 + rng.usize(63);
+        let levels: Vec<f32> = (0..nlevels).map(|_| rng.f32() * 4.0).collect();
+        let cb = match Codebook::new(levels) {
+            Ok(cb) => cb,
+            Err(_) => continue, // duplicate levels are fine to skip
+        };
+        for _ in 0..200 {
+            let v = rng.f32() * 5.0 - 0.5;
+            let q = cb.levels()[cb.index_of(v) as usize];
+            let best = cb
+                .levels()
+                .iter()
+                .cloned()
+                .min_by(|a, b| (a - v).abs().partial_cmp(&(b - v).abs()).unwrap())
+                .unwrap();
+            assert!(
+                (q - v).abs() <= (best - v).abs() + 1e-6,
+                "seed {seed}: {v} -> {q}, nearest {best}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tx_rx_roundtrip_through_wire_format() {
+    for seed in 1..=40u64 {
+        let mut rng = Rng::new(seed);
+        let levels: Vec<f32> = (0..16).map(|i| i as f32 * 0.13).collect();
+        let cb = Codebook::new(levels).unwrap();
+        let mut tx = TxEncoder::new(cb.clone());
+        let rx = RxDecoder::new(cb.clone());
+        let n = 1 + rng.usize(3000);
+        let vals: Vec<f32> =
+            (0..n).map(|_| if rng.next() % 4 == 0 { rng.f32() * 2.0 } else { 0.0 }).collect();
+        let frame = tx.encode(&vals);
+        let back = rx.decode(&frame).unwrap();
+        assert_eq!(back.len(), vals.len(), "seed {seed}");
+        for (v, b) in vals.iter().zip(&back) {
+            assert_eq!(*b, cb.levels()[cb.index_of(*v) as usize], "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batcher: conservation — every pushed request is dispatched exactly once
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    for seed in 1..=60u64 {
+        let mut rng = Rng::new(seed);
+        let max_batch = REMOTE_BATCH_SIZES[rng.usize(REMOTE_BATCH_SIZES.len())];
+        let mut q = BatchQueue::new(max_batch, Duration::from_millis(5));
+        let t0 = Instant::now();
+        let n = 1 + rng.usize(200);
+        let mut dispatched = Vec::new();
+        for id in 0..n as u64 {
+            if let Some(batch) = q.push(id, (), t0) {
+                assert!(batch.len() <= max_batch);
+                dispatched.extend(batch.into_iter().map(|p| p.id));
+            }
+            // random deadline polls
+            if rng.next() % 3 == 0 {
+                if let Some(batch) = q.poll_deadline(t0 + Duration::from_millis(6)) {
+                    dispatched.extend(batch.into_iter().map(|p| p.id));
+                }
+            }
+        }
+        dispatched.extend(q.flush().into_iter().map(|p| p.id));
+        dispatched.sort_unstable();
+        let expect: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(dispatched, expect, "seed {seed} max_batch {max_batch}");
+    }
+}
+
+#[test]
+fn prop_pad_batch_size_is_minimal_exported_cover() {
+    for n in 1..=8usize {
+        let p = pad_batch_size(n);
+        assert!(REMOTE_BATCH_SIZES.contains(&p));
+        assert!(p >= n);
+        // minimality: no smaller exported size covers n
+        for &b in REMOTE_BATCH_SIZES.iter() {
+            if b >= n {
+                assert!(p <= b);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensor ops
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_stack_padded_preserves_rows() {
+    for seed in 1..=60u64 {
+        let mut rng = Rng::new(seed);
+        let w = 1 + rng.usize(30);
+        let n = 1 + rng.usize(8);
+        let pad = pad_batch_size(n);
+        let items: Vec<Tensor> = (0..n)
+            .map(|_| Tensor::new(vec![1, w], (0..w).map(|_| rng.f32()).collect()).unwrap())
+            .collect();
+        let stacked = Tensor::stack_padded(&items, pad).unwrap();
+        assert_eq!(stacked.shape(), &[pad, w]);
+        for (i, item) in items.iter().enumerate() {
+            assert_eq!(stacked.row(i).unwrap(), item.data(), "seed {seed} row {i}");
+        }
+        // padding rows replicate the last real row
+        for i in n..pad {
+            assert_eq!(stacked.row(i).unwrap(), items[n - 1].data(), "seed {seed} pad {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_softmax_is_distribution_and_argmax_stable() {
+    for seed in 1..=100u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.usize(200);
+        let logits: Vec<f32> = (0..n).map(|_| rng.f32() * 20.0 - 10.0).collect();
+        let p = softmax(&logits);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "seed {seed} sum {sum}");
+        assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        assert_eq!(argmax(&logits), argmax(&p), "softmax must preserve argmax");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// xai metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_natural_skewness_bounds_achieved() {
+    for seed in 1..=100u64 {
+        let mut rng = Rng::new(seed);
+        let c = 4 + rng.usize(28);
+        let k = 1 + rng.usize(c - 1);
+        let imp: Vec<f64> = (0..c).map(|_| rng.f32() as f64).collect();
+        let nat = xai::natural_skewness(&imp, k);
+        let ach = xai::achieved_skewness(&imp, k);
+        assert!(nat >= ach - 1e-9, "seed {seed}: natural {nat} < achieved {ach}");
+        assert!((0.0..=1.0 + 1e-9).contains(&nat));
+        // equality iff not disordered
+        if !xai::is_disordered(&imp, k) {
+            assert!((nat - ach).abs() < 1e-9, "seed {seed}");
+        }
+    }
+}
