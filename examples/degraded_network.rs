@@ -1,49 +1,61 @@
 //! Degraded-network scenario (paper §7.6 + §9 "extreme network
 //! conditions"): sweep the link from 6 Mbps WiFi down to a 270 kbps
-//! BLE-class radio, then cut the link entirely and fall back to local-only
-//! prediction from the top-k important features.
+//! BLE-class radio via the serve builder's network profile, then cut the
+//! link entirely and fall back to local-only prediction from the top-k
+//! important features.
 //!
-//!     cargo run --release --example degraded_network
+//!     cargo run --release --example degraded_network [dataset]
 
-use agilenn::baselines::{AgileRunner, SchemeRunner};
+use agilenn::baselines::AgileRunner;
 use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
 use agilenn::runtime::Engine;
+use agilenn::serve::ServeBuilder;
 use agilenn::simulator::NetworkProfile;
 use agilenn::workload::TestSet;
 use anyhow::Result;
 
 fn main() -> Result<()> {
     let dataset = std::env::args().nth(1).unwrap_or_else(|| "svhns".into());
-    let base = RunConfig::new(default_artifacts_dir(), &dataset, Scheme::Agile);
-    let meta = Meta::load(&base.dataset_dir())?;
-    let testset = TestSet::load(&base.dataset_dir().join("test.bin"))?;
-    let engine = Engine::cpu()?;
-    let n = 64.min(testset.len());
+    let n = 64usize;
 
     println!("link degradation sweep on {dataset} ({n} requests each):");
     for kbps in [6000.0, 1000.0, 270.0] {
-        let mut cfg = base.clone();
-        cfg.network = if kbps <= 300.0 {
+        let profile = if kbps <= 300.0 {
             NetworkProfile::ble_270kbps()
         } else {
             NetworkProfile::wifi_6mbps().with_bandwidth(kbps * 1e3)
         };
-        let mut runner = AgileRunner::new(&engine, &cfg, &meta)?;
+        // stream the outcomes: the simulated breakdown carries the link
+        // model. max_batch 1 keeps the lone device's measured remote time
+        // free of batch-deadline queueing, matching the sweep's intent.
+        let mut outcomes = ServeBuilder::new(&dataset)
+            .scheme(Scheme::Agile)
+            .devices(1)
+            .requests(n)
+            .max_batch(1)
+            .network_profile(profile)
+            .build()?
+            .stream()?;
         let (mut total, mut correct) = (0.0f64, 0usize);
-        for i in 0..n {
-            let out = runner.process(&testset.image(i)?, testset.labels[i])?;
-            total += out.breakdown.total_s();
-            correct += out.correct as usize;
+        for out in outcomes.by_ref() {
+            total += out.outcome.breakdown.total_s();
+            correct += out.outcome.correct as usize;
         }
+        let rep = outcomes.finish()?;
         println!(
             "  {:>7.0} kbps: mean latency {:6.2} ms, accuracy {:.1}%",
             kbps,
-            total / n as f64 * 1e3,
-            100.0 * correct as f64 / n as f64
+            total / rep.requests as f64 * 1e3,
+            100.0 * correct as f64 / rep.requests as f64
         );
     }
 
     // link down: local-only fallback (§9) — most important features are local
+    let base = RunConfig::new(default_artifacts_dir(), &dataset, Scheme::Agile);
+    let meta = Meta::load(&base.dataset_dir())?;
+    let testset = TestSet::load(&base.dataset_dir().join("test.bin"))?;
+    let engine = Engine::cpu()?;
+    let n = n.min(testset.len());
     let mut runner = AgileRunner::new(&engine, &base, &meta)?;
     let (mut total, mut correct) = (0.0f64, 0usize);
     for i in 0..n {

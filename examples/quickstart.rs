@@ -1,45 +1,51 @@
-//! Quickstart: load the trained artifacts, run one AgileNN inference end to
-//! end, and print the full latency/energy breakdown.
+//! Quickstart: load the trained artifacts, serve a short AgileNN run
+//! through the batched pipeline, and print the per-request breakdown of
+//! the first streamed outcome plus the aggregate report.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! Requires `make artifacts` to have been run (or AGILENN_ARTIFACTS set).
 
-use agilenn::baselines::{make_runner, SchemeRunner};
-use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
-use agilenn::runtime::Engine;
-use agilenn::workload::TestSet;
+use agilenn::config::Scheme;
+use agilenn::serve::ServeBuilder;
 use anyhow::Result;
 
 fn main() -> Result<()> {
-    let cfg = RunConfig::new(default_artifacts_dir(), "svhns", Scheme::Agile);
-    let meta = Meta::load(&cfg.dataset_dir())?;
-    let testset = TestSet::load(&cfg.dataset_dir().join("test.bin"))?;
-    let engine = Engine::cpu()?;
-    println!("PJRT platform: {}", engine.platform());
+    // one device, batch of 1: the printed remote time is pure server work,
+    // with no batch-deadline queueing mixed in
+    let service = ServeBuilder::new("svhns")
+        .scheme(Scheme::Agile)
+        .devices(1)
+        .requests(16)
+        .max_batch(1)
+        .build()?;
+    let meta = service.meta();
     println!(
         "AgileNN[{}]: {} classes, k={} of {} channels local, alpha={:.3}",
         meta.dataset, meta.num_classes, meta.k, meta.feature[2], meta.alpha
     );
+    let raw_tx = meta.tx_elements(Scheme::Agile) * 4;
 
-    let mut runner = make_runner(&engine, &cfg, &meta)?;
-    let mut correct = 0;
-    let n = 16.min(testset.len());
-    for i in 0..n {
-        let out = runner.process(&testset.image(i)?, testset.labels[i])?;
-        correct += out.correct as usize;
-        if i == 0 {
+    let mut outcomes = service.stream()?;
+    for out in outcomes.by_ref() {
+        if out.id == 0 {
+            let b = &out.outcome.breakdown;
             println!("\nfirst request breakdown:");
-            println!("  local NN    : {:.2} ms", out.breakdown.local_nn_s * 1e3);
-            println!("  compression : {:.2} ms", out.breakdown.compression_s * 1e3);
-            println!("  network     : {:.2} ms", out.breakdown.network_s * 1e3);
-            println!("  remote NN   : {:.2} ms", out.breakdown.remote_s * 1e3);
-            println!("  total       : {:.2} ms", out.breakdown.total_s() * 1e3);
-            println!("  tx bytes    : {} (raw would be {})", out.tx_bytes,
-                     meta.tx_elements(Scheme::Agile) * 4);
-            println!("  energy      : {:.2} mJ", out.energy.total_mj());
+            println!("  local NN    : {:.2} ms", b.local_nn_s * 1e3);
+            println!("  compression : {:.2} ms", b.compression_s * 1e3);
+            println!("  network     : {:.2} ms", b.network_s * 1e3);
+            println!("  remote NN   : {:.2} ms", b.remote_s * 1e3);
+            println!("  total       : {:.2} ms", b.total_s() * 1e3);
+            println!("  tx bytes    : {} (raw would be {raw_tx})", out.outcome.tx_bytes);
+            println!("  energy      : {:.2} mJ", out.outcome.energy.total_mj());
         }
     }
-    println!("\naccuracy over {n} requests: {:.1}%", 100.0 * correct as f64 / n as f64);
+    let report = outcomes.finish()?;
+    println!(
+        "\naccuracy over {} requests: {:.1}% ({:.1} req/s through the pipeline)",
+        report.requests,
+        report.accuracy * 100.0,
+        report.throughput_rps
+    );
     Ok(())
 }

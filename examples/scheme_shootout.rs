@@ -1,11 +1,15 @@
 //! Scheme shootout: every serving scheme on every built dataset — a compact
-//! version of the paper's whole evaluation section in one run.
+//! version of the paper's whole evaluation section in one run. Prints the
+//! exact synchronous accounting first, then drives all five schemes
+//! through the batched multi-device serving pipeline (the redesign's
+//! point: the baselines batch too, not just AgileNN).
 //!
 //!     cargo run --release --example scheme_shootout [n_per_point]
 
 use agilenn::config::Scheme;
 use agilenn::experiments::{eval_scheme, EvalCtx};
 use agilenn::report::{mj, ms, pct, Table};
+use agilenn::serve::ServeBuilder;
 use anyhow::Result;
 
 fn main() -> Result<()> {
@@ -30,6 +34,31 @@ fn main() -> Result<()> {
             ]);
         }
         t.print();
+        println!();
+
+        let mut t2 = Table::new(
+            format!("served [{ds}] (4 devices, {n} requests/scheme, batched)"),
+            &["scheme", "throughput_rps", "mean_ms", "p95_ms", "mean_batch", "acc"],
+        );
+        for scheme in Scheme::all() {
+            let rep = ServeBuilder::new(&ds)
+                .artifacts_dir(ctx.artifacts_dir.clone())
+                .scheme(scheme)
+                .devices(4)
+                .requests(n)
+                .rate_hz(200.0)
+                .build()?
+                .run()?;
+            t2.row(vec![
+                scheme.name().into(),
+                format!("{:.1}", rep.throughput_rps),
+                ms(rep.mean_latency_s),
+                ms(rep.p95_latency_s),
+                format!("{:.2}", rep.mean_batch_size),
+                pct(rep.accuracy),
+            ]);
+        }
+        t2.print();
         println!();
     }
     Ok(())

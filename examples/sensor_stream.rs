@@ -5,29 +5,24 @@
 //!
 //!     cargo run --release --example sensor_stream [dataset]
 
-use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
-use agilenn::coordinator::run_pipeline;
-use agilenn::workload::{Arrival, TestSet};
+use agilenn::config::Scheme;
+use agilenn::serve::ServeBuilder;
+use agilenn::workload::Arrival;
 use anyhow::Result;
-use std::sync::Arc;
 
 fn main() -> Result<()> {
     let dataset = std::env::args().nth(1).unwrap_or_else(|| "svhns".into());
-    let mut cfg = RunConfig::new(default_artifacts_dir(), &dataset, Scheme::Agile);
-    cfg.max_batch = 8;
-    cfg.batch_deadline_us = 3000;
-    let meta = Meta::load(&cfg.dataset_dir())?;
-    let testset = Arc::new(TestSet::load(&cfg.dataset_dir().join("test.bin"))?);
 
     for devices in [1usize, 4, 8] {
-        let rep = run_pipeline(
-            &cfg,
-            &meta,
-            testset.clone(),
-            devices,
-            devices * 60,
-            Arrival::Periodic { hz: 30.0 },
-        )?;
+        let rep = ServeBuilder::new(&dataset)
+            .scheme(Scheme::Agile)
+            .devices(devices)
+            .requests(devices * 60)
+            .arrival(Arrival::Periodic { hz: 30.0 })
+            .max_batch(8)
+            .batch_deadline_us(3000)
+            .build()?
+            .run()?;
         println!(
             "{devices} sensors @30Hz: {:>6.1} req/s, mean {:.2} ms, p95 {:.2} ms, \
              acc {:.1}%, mean batch {:.2} ({} batches){}",

@@ -1,6 +1,7 @@
 //! All five serving schemes behind one trait, so every bench/figure sweeps
 //! them uniformly (paper §7's comparison set: AgileNN, DeepCOD, SPINN,
-//! MCUNet, edge-only).
+//! MCUNet, edge-only). Runners are thin synchronous compositions of the
+//! device/server halves in [`crate::serve`].
 //!
 //! Each runner produces, per request: the prediction, a latency breakdown
 //! priced by the device/network simulators (plus measured wall-clock for the
@@ -8,9 +9,7 @@
 
 mod runners;
 
-pub use runners::{
-    AgileRunner, DeepcodRunner, EdgeOnlyRunner, McunetRunner, SpinnRunner,
-};
+pub use runners::{AgileRunner, ComposedRunner};
 
 use crate::config::{Meta, RunConfig, Scheme};
 use crate::metrics::{EnergyLedger, LatencyBreakdown};
@@ -51,9 +50,6 @@ pub fn make_runner(
 ) -> Result<Box<dyn SchemeRunner>> {
     Ok(match cfg.scheme {
         Scheme::Agile => Box::new(AgileRunner::new(engine, cfg, meta)?),
-        Scheme::Deepcod => Box::new(DeepcodRunner::new(engine, cfg, meta)?),
-        Scheme::Spinn => Box::new(SpinnRunner::new(engine, cfg, meta)?),
-        Scheme::Mcunet => Box::new(McunetRunner::new(engine, cfg, meta)?),
-        Scheme::EdgeOnly => Box::new(EdgeOnlyRunner::new(engine, cfg, meta)?),
+        _ => Box::new(ComposedRunner::new(engine, cfg, meta)?),
     })
 }

@@ -1,108 +1,126 @@
-//! Concrete scheme runners. Shared conventions:
+//! Synchronous scheme runners, composed from the serve module's halves
+//! (`DeviceSide` -> optional `ServerSide` -> `Fuser`). Shared conventions:
 //!  * functional outputs come from the AOT PJRT artifacts (real numerics);
 //!  * device-side latency/energy are priced by the MCU cost model;
 //!  * server-side NN latency is measured wall-clock on the PJRT CPU client;
 //!  * network time comes from the link model over the real payload sizes.
+//!
+//! The per-figure benches use this path because its simulated-time
+//! accounting is exact; the threaded serving pipeline in `crate::serve`
+//! drives the very same halves concurrently.
 
 use super::{RequestOutcome, SchemeRunner};
-use crate::compression::{lzw, quantizer::Codebook, TxEncoder};
 use crate::config::{Meta, RunConfig, Scheme};
-use crate::coordinator::combiner::Combiner;
-use crate::coordinator::device_runtime::DeviceRuntime;
-use crate::coordinator::server::RemoteServer;
-use crate::metrics::{EnergyLedger, LatencyBreakdown};
-use crate::runtime::{Engine, Executable};
+use crate::runtime::Engine;
+use crate::serve::scheme::assemble_outcome;
+use crate::serve::{
+    make_device_side, make_fuser, make_server_side, AlphaFuser, DeviceSide, Fuser, ServerSide,
+};
 use crate::simulator::{DeviceSim, MemoryReport, NetworkSim};
-use crate::tensor::{argmax, max_confidence, Tensor};
-use anyhow::{ensure, Result};
-use std::sync::Arc;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, ensure, Result};
 use std::time::Instant;
 
-/// Downlink reply: logits (num_classes f32) + small header.
-fn reply_bytes(num_classes: usize) -> usize {
-    num_classes * 4 + 8
+/// Any serving scheme, synchronously: device half -> (optional) server
+/// half -> fuser, one request at a time.
+pub struct ComposedRunner {
+    scheme: Scheme,
+    device: Box<dyn DeviceSide>,
+    server: Option<Box<dyn ServerSide>>,
+    fuser: Box<dyn Fuser>,
+    dev: DeviceSim,
+    net: NetworkSim,
+    num_classes: usize,
 }
 
-/// Activation-peak estimate (int8 bytes at 32x32; the device sim's
-/// resolution_scale handles the 96x96 translation for SRAM the same way it
-/// does for MACs — activations scale with spatial area).
-fn activation_peak(scheme: Scheme) -> usize {
-    match scheme {
-        // conv1: 32*32*3 in + 16*16*16 out; conv2: 4096 + 8*8*24
-        Scheme::Agile => 3072 + 4096,
-        // encoder conv2: 16*16*32 + 16*16*32
-        Scheme::Deepcod => 8192 + 8192,
-        // conv1: 3072 + 16*16*24
-        Scheme::Spinn => 3072 + 6144,
-        // conv1: 3072 + 16*16*16
-        Scheme::Mcunet => 3072 + 4096,
-        // raw image buffer only
-        Scheme::EdgeOnly => 3072,
+impl ComposedRunner {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        Ok(Self {
+            scheme: cfg.scheme,
+            device: make_device_side(engine, cfg, meta)?,
+            server: make_server_side(engine, cfg, meta)?,
+            fuser: make_fuser(cfg, meta)?,
+            dev: DeviceSim::new(cfg.device.clone()),
+            net: NetworkSim::new(cfg.network.clone()),
+            num_classes: meta.num_classes,
+        })
+    }
+
+    /// `offload = false` models a downed link (paper §9): the device skips
+    /// the tx pipeline and the fuser falls back to the local head.
+    fn process_inner(&mut self, image: &Tensor, label: i32, offload: bool) -> Result<RequestOutcome> {
+        let mut local = self.device.encode(image)?;
+        if !offload {
+            local.frame = None;
+            local.timings.quantize_s = 0.0;
+            local.timings.compress_s = 0.0;
+            local.exited_early = true;
+        }
+        let tx_bytes = local.tx_bytes();
+
+        let mut remote: Option<Vec<f32>> = None;
+        let mut remote_wall = 0.0f64;
+        if let Some(frame) = local.frame.take() {
+            let server = self.server.as_mut().ok_or_else(|| {
+                anyhow!("{} produced an uplink frame but has no server half", self.scheme.name())
+            })?;
+            let t0 = Instant::now();
+            let feats = server.decode(&frame)?;
+            let rows = server.infer_batch(std::slice::from_ref(&feats))?;
+            remote_wall = t0.elapsed().as_secs_f64();
+            let row = rows.into_iter().next().ok_or_else(|| anyhow!("server returned no logits"))?;
+            remote = Some(row);
+        }
+
+        assemble_outcome(
+            self.fuser.as_ref(),
+            &local,
+            remote.as_deref(),
+            label,
+            tx_bytes,
+            remote_wall,
+            &self.dev,
+            &self.net,
+            self.num_classes,
+        )
     }
 }
 
-/// LZW dictionary SRAM for schemes that compress on-device.
-const LZW_DICT_SRAM: usize = 20 * 1024;
+impl SchemeRunner for ComposedRunner {
+    fn scheme(&self) -> Scheme {
+        self.scheme
+    }
 
-fn memory_report_for(cfg: &RunConfig, meta: &Meta, scheme: Scheme) -> MemoryReport {
-    let scale = cfg.device.resolution_scale as usize;
-    let compresses = !matches!(scheme, Scheme::Mcunet);
-    let act = activation_peak(scheme) * scale + if compresses { LZW_DICT_SRAM } else { 0 };
-    MemoryReport::new(&cfg.device, act, meta.device_param_bytes(scheme) as usize)
+    fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
+        self.process_inner(image, label, true)
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        self.device.memory_report()
+    }
 }
 
-// ---------------------------------------------------------------------------
-// AgileNN
-// ---------------------------------------------------------------------------
-
+/// AgileNN's runner, adding the paper's runtime knobs (§3.3 alpha
+/// re-weighting, §9 offline fallback) on top of [`ComposedRunner`].
 pub struct AgileRunner {
-    device: DeviceRuntime,
-    server: RemoteServer,
-    combiner: Combiner,
-    net: NetworkSim,
-    meta_mem: MemoryReport,
-    num_classes: usize,
+    inner: ComposedRunner,
 }
 
 impl AgileRunner {
     pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         ensure!(cfg.scheme == Scheme::Agile, "wrong scheme for AgileRunner");
-        let alpha = cfg.alpha_override.unwrap_or(meta.alpha);
-        Ok(Self {
-            device: DeviceRuntime::new(engine, cfg, meta)?,
-            server: RemoteServer::new(engine, cfg, meta)?,
-            combiner: Combiner::new(alpha)?,
-            net: NetworkSim::new(cfg.network.clone()),
-
-            meta_mem: memory_report_for(cfg, meta, Scheme::Agile),
-            num_classes: meta.num_classes,
-        })
+        Ok(Self { inner: ComposedRunner::new(engine, cfg, meta)? })
     }
 
+    /// Runtime re-weighting (paper §3.3 / Fig 18).
     pub fn set_alpha(&mut self, alpha: f64) -> Result<()> {
-        self.combiner = self.combiner.with_alpha(alpha)?;
+        self.inner.fuser = Box::new(AlphaFuser::new(alpha)?);
         Ok(())
     }
 
     /// Local-only operation for link-down conditions (paper §9).
     pub fn process_offline(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
-        let out = self.device.process(image)?;
-        let predicted = self.combiner.predict_local_only(&out.local_logits);
-        let sim = self.device.sim().clone();
-        Ok(RequestOutcome {
-            predicted,
-            correct: predicted as i32 == label,
-            breakdown: LatencyBreakdown {
-                local_nn_s: out.timings.nn_compute_s,
-                ..Default::default()
-            },
-            energy: EnergyLedger {
-                compute_j: sim.compute_energy_j(out.timings.nn_compute_s),
-                radio_j: 0.0,
-            },
-            tx_bytes: 0,
-            exited_early: true,
-        })
+        self.inner.process_inner(image, label, false)
     }
 }
 
@@ -112,340 +130,10 @@ impl SchemeRunner for AgileRunner {
     }
 
     fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
-        let out = self.device.process(image)?;
-        let tx_bytes = out.frame.wire_bytes();
-
-        let t0 = Instant::now();
-        let remote_logits = self.server.process_frame(&out.frame)?;
-        let remote_wall = t0.elapsed().as_secs_f64();
-
-        let predicted = self.combiner.predict(&out.local_logits, &remote_logits)?;
-
-        let uplink = self.net.transfer_s(tx_bytes);
-        let downlink = self.net.transfer_s(reply_bytes(self.num_classes));
-        let sim = self.device.sim();
-        let breakdown = LatencyBreakdown {
-            local_nn_s: out.timings.nn_compute_s,
-            compression_s: out.timings.quantize_s + out.timings.compress_s,
-            network_s: uplink + downlink,
-            remote_s: remote_wall,
-        };
-        let energy = EnergyLedger {
-            compute_j: sim.compute_energy_j(out.timings.total_s()),
-            radio_j: sim
-                .radio_energy_j(self.net.airtime_s(tx_bytes) + self.net.airtime_s(reply_bytes(self.num_classes))),
-        };
-        Ok(RequestOutcome {
-            predicted,
-            correct: predicted as i32 == label,
-            breakdown,
-            energy,
-            tx_bytes,
-            exited_early: false,
-        })
+        self.inner.process_inner(image, label, true)
     }
 
     fn memory_report(&self) -> MemoryReport {
-        self.meta_mem
-    }
-}
-
-// ---------------------------------------------------------------------------
-// DeepCOD [65]
-// ---------------------------------------------------------------------------
-
-pub struct DeepcodRunner {
-    encoder: Arc<Executable>,
-    server: RemoteServer,
-    tx: TxEncoder,
-    dev: DeviceSim,
-    net: NetworkSim,
-    device_macs: u64,
-    num_classes: usize,
-    mem: MemoryReport,
-}
-
-impl DeepcodRunner {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
-        ensure!(cfg.scheme == Scheme::Deepcod, "wrong scheme for DeepcodRunner");
-        let encoder = engine.load_artifact(&cfg.dataset_dir(), "deepcod_device_b1")?;
-        let codebook = Codebook::new(meta.codebook(Scheme::Deepcod, cfg.bits)?)?;
-        Ok(Self {
-            encoder,
-            server: RemoteServer::new(engine, cfg, meta)?,
-            tx: TxEncoder::new(codebook),
-            dev: DeviceSim::new(cfg.device.clone()),
-            net: NetworkSim::new(cfg.network.clone()),
-            device_macs: meta.macs.deepcod_device,
-            num_classes: meta.num_classes,
-            mem: memory_report_for(cfg, meta, Scheme::Deepcod),
-        })
-    }
-}
-
-impl SchemeRunner for DeepcodRunner {
-    fn scheme(&self) -> Scheme {
-        Scheme::Deepcod
-    }
-
-    fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
-        let outputs = self.encoder.run(std::slice::from_ref(image))?;
-        ensure!(outputs.len() == 1, "deepcod encoder yields (code,)");
-        let code = &outputs[0];
-        let frame = self.tx.encode(code.data());
-        let tx_bytes = frame.wire_bytes();
-
-        let t0 = Instant::now();
-        let logits = self.server.process_frame(&frame)?;
-        let remote_wall = t0.elapsed().as_secs_f64();
-        let predicted = argmax(&logits);
-
-        let nn_s = self.dev.nn_latency_s(self.device_macs);
-        let quant_s = self.dev.quantize_latency_s(code.len());
-        let lzw_s = self
-            .dev
-            .compress_latency_s((code.len() * self.tx.codebook().bits() as usize + 7) / 8);
-        let breakdown = LatencyBreakdown {
-            local_nn_s: nn_s,
-            compression_s: quant_s + lzw_s,
-            network_s: self.net.transfer_s(tx_bytes) + self.net.transfer_s(reply_bytes(self.num_classes)),
-            remote_s: remote_wall,
-        };
-        let energy = EnergyLedger {
-            compute_j: self.dev.compute_energy_j(nn_s + quant_s + lzw_s),
-            radio_j: self.dev.radio_energy_j(
-                self.net.airtime_s(tx_bytes) + self.net.airtime_s(reply_bytes(self.num_classes)),
-            ),
-        };
-        Ok(RequestOutcome {
-            predicted,
-            correct: predicted as i32 == label,
-            breakdown,
-            energy,
-            tx_bytes,
-            exited_early: false,
-        })
-    }
-
-    fn memory_report(&self) -> MemoryReport {
-        self.mem
-    }
-}
-
-// ---------------------------------------------------------------------------
-// SPINN [39]
-// ---------------------------------------------------------------------------
-
-pub struct SpinnRunner {
-    device_exe: Arc<Executable>,
-    server: RemoteServer,
-    tx: TxEncoder,
-    dev: DeviceSim,
-    net: NetworkSim,
-    device_macs: u64,
-    exit_threshold: f32,
-    num_classes: usize,
-    mem: MemoryReport,
-}
-
-impl SpinnRunner {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
-        ensure!(cfg.scheme == Scheme::Spinn, "wrong scheme for SpinnRunner");
-        let device_exe = engine.load_artifact(&cfg.dataset_dir(), "spinn_device_b1")?;
-        let codebook = Codebook::new(meta.codebook(Scheme::Spinn, cfg.bits)?)?;
-        Ok(Self {
-            device_exe,
-            server: RemoteServer::new(engine, cfg, meta)?,
-            tx: TxEncoder::new(codebook),
-            dev: DeviceSim::new(cfg.device.clone()),
-            net: NetworkSim::new(cfg.network.clone()),
-            device_macs: meta.macs.spinn_device,
-            exit_threshold: meta.spinn_exit.threshold as f32,
-            num_classes: meta.num_classes,
-            mem: memory_report_for(cfg, meta, Scheme::Spinn),
-        })
-    }
-}
-
-impl SchemeRunner for SpinnRunner {
-    fn scheme(&self) -> Scheme {
-        Scheme::Spinn
-    }
-
-    fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
-        let outputs = self.device_exe.run(std::slice::from_ref(image))?;
-        ensure!(outputs.len() == 2, "spinn device yields (feats, exit_logits)");
-        let feats = &outputs[0];
-        let exit_logits = outputs[1].data();
-        let nn_s = self.dev.nn_latency_s(self.device_macs);
-
-        // early exit: confident enough -> resolve on device, no transmission
-        if max_confidence(exit_logits) >= self.exit_threshold {
-            let predicted = argmax(exit_logits);
-            return Ok(RequestOutcome {
-                predicted,
-                correct: predicted as i32 == label,
-                breakdown: LatencyBreakdown { local_nn_s: nn_s, ..Default::default() },
-                energy: EnergyLedger { compute_j: self.dev.compute_energy_j(nn_s), radio_j: 0.0 },
-                tx_bytes: 0,
-                exited_early: true,
-            });
-        }
-
-        let frame = self.tx.encode(feats.data());
-        let tx_bytes = frame.wire_bytes();
-        let t0 = Instant::now();
-        let logits = self.server.process_frame(&frame)?;
-        let remote_wall = t0.elapsed().as_secs_f64();
-        let predicted = argmax(&logits);
-
-        let quant_s = self.dev.quantize_latency_s(feats.len());
-        let lzw_s = self
-            .dev
-            .compress_latency_s((feats.len() * self.tx.codebook().bits() as usize + 7) / 8);
-        let breakdown = LatencyBreakdown {
-            local_nn_s: nn_s,
-            compression_s: quant_s + lzw_s,
-            network_s: self.net.transfer_s(tx_bytes) + self.net.transfer_s(reply_bytes(self.num_classes)),
-            remote_s: remote_wall,
-        };
-        let energy = EnergyLedger {
-            compute_j: self.dev.compute_energy_j(nn_s + quant_s + lzw_s),
-            radio_j: self.dev.radio_energy_j(
-                self.net.airtime_s(tx_bytes) + self.net.airtime_s(reply_bytes(self.num_classes)),
-            ),
-        };
-        Ok(RequestOutcome {
-            predicted,
-            correct: predicted as i32 == label,
-            breakdown,
-            energy,
-            tx_bytes,
-            exited_early: false,
-        })
-    }
-
-    fn memory_report(&self) -> MemoryReport {
-        self.mem
-    }
-}
-
-// ---------------------------------------------------------------------------
-// MCUNet [44] — full local inference
-// ---------------------------------------------------------------------------
-
-pub struct McunetRunner {
-    exe: Arc<Executable>,
-    dev: DeviceSim,
-    device_macs: u64,
-    mem: MemoryReport,
-}
-
-impl McunetRunner {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
-        ensure!(cfg.scheme == Scheme::Mcunet, "wrong scheme for McunetRunner");
-        Ok(Self {
-            exe: engine.load_artifact(&cfg.dataset_dir(), "mcunet_local_b1")?,
-            dev: DeviceSim::new(cfg.device.clone()),
-            device_macs: meta.macs.mcunet_local,
-            mem: memory_report_for(cfg, meta, Scheme::Mcunet),
-        })
-    }
-}
-
-impl SchemeRunner for McunetRunner {
-    fn scheme(&self) -> Scheme {
-        Scheme::Mcunet
-    }
-
-    fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
-        let outputs = self.exe.run(std::slice::from_ref(image))?;
-        let predicted = argmax(outputs[0].data());
-        let nn_s = self.dev.nn_latency_s(self.device_macs);
-        Ok(RequestOutcome {
-            predicted,
-            correct: predicted as i32 == label,
-            breakdown: LatencyBreakdown { local_nn_s: nn_s, ..Default::default() },
-            energy: EnergyLedger { compute_j: self.dev.compute_energy_j(nn_s), radio_j: 0.0 },
-            tx_bytes: 0,
-            exited_early: false,
-        })
-    }
-
-    fn memory_report(&self) -> MemoryReport {
-        self.mem
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Edge-only: LZW-compressed raw image to the server
-// ---------------------------------------------------------------------------
-
-pub struct EdgeOnlyRunner {
-    exe: Arc<Executable>,
-    dev: DeviceSim,
-    net: NetworkSim,
-    num_classes: usize,
-    mem: MemoryReport,
-}
-
-impl EdgeOnlyRunner {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
-        ensure!(cfg.scheme == Scheme::EdgeOnly, "wrong scheme for EdgeOnlyRunner");
-        Ok(Self {
-            exe: engine.load_artifact(&cfg.dataset_dir(), "edge_remote_b1")?,
-            dev: DeviceSim::new(cfg.device.clone()),
-            net: NetworkSim::new(cfg.network.clone()),
-            num_classes: meta.num_classes,
-            mem: memory_report_for(cfg, meta, Scheme::EdgeOnly),
-        })
-    }
-}
-
-impl SchemeRunner for EdgeOnlyRunner {
-    fn scheme(&self) -> Scheme {
-        Scheme::EdgeOnly
-    }
-
-    fn process(&mut self, image: &Tensor, label: i32) -> Result<RequestOutcome> {
-        // device: quantize f32 [0,1] image to u8 and LZW it (no NN on device)
-        let raw: Vec<u8> = image.data().iter().map(|&v| (v * 255.0) as u8).collect();
-        let compressed = lzw::compress(&raw);
-        let tx_bytes = compressed.len() + 4;
-
-        // server: decompress, rebuild the image, full NN
-        let t0 = Instant::now();
-        let decompressed = lzw::decompress(&compressed)?;
-        let img: Vec<f32> = decompressed.iter().map(|&b| b as f32 / 255.0).collect();
-        let tensor = Tensor::new(image.shape().to_vec(), img)?;
-        let outputs = self.exe.run(std::slice::from_ref(&tensor))?;
-        let remote_wall = t0.elapsed().as_secs_f64();
-        let predicted = argmax(outputs[0].data());
-
-        let lzw_s = self.dev.compress_latency_s(raw.len());
-        let breakdown = LatencyBreakdown {
-            local_nn_s: 0.0,
-            compression_s: lzw_s,
-            network_s: self.net.transfer_s(tx_bytes) + self.net.transfer_s(reply_bytes(self.num_classes)),
-            remote_s: remote_wall,
-        };
-        let energy = EnergyLedger {
-            compute_j: self.dev.compute_energy_j(lzw_s),
-            radio_j: self.dev.radio_energy_j(
-                self.net.airtime_s(tx_bytes) + self.net.airtime_s(reply_bytes(self.num_classes)),
-            ),
-        };
-        Ok(RequestOutcome {
-            predicted,
-            correct: predicted as i32 == label,
-            breakdown,
-            energy,
-            tx_bytes,
-            exited_early: false,
-        })
-    }
-
-    fn memory_report(&self) -> MemoryReport {
-        self.mem
+        self.inner.memory_report()
     }
 }

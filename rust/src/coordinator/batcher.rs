@@ -140,6 +140,57 @@ mod tests {
     }
 
     #[test]
+    fn deadline_fires_partial_batch_with_everything_pending() {
+        // only the oldest request is past the deadline, but the whole
+        // partial batch rides along (dispatching it costs one padded exec)
+        let mut q = BatchQueue::new(8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        q.push(1, "a", t0);
+        q.push(2, "b", t0 + Duration::from_millis(4));
+        q.push(3, "c", t0 + Duration::from_millis(4));
+        let batch = q.poll_deadline(t0 + Duration::from_millis(6)).expect("deadline");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch[0].id, 1);
+        assert!(q.is_empty());
+        // a fresh push restarts the deadline clock from its own enqueue time
+        let t1 = t0 + Duration::from_millis(7);
+        q.push(4, "d", t1);
+        assert!(q.poll_deadline(t1 + Duration::from_millis(4)).is_none());
+        assert!(q.poll_deadline(t1 + Duration::from_millis(5)).is_some());
+    }
+
+    #[test]
+    fn size_trigger_leaves_overflow_for_the_next_batch() {
+        let mut q = BatchQueue::new(2, Duration::from_millis(50));
+        let t = Instant::now();
+        assert!(q.push(1, "a", t).is_none());
+        assert!(q.push(2, "b", t).is_some());
+        // the queue is empty again; a lone tail request sits until flush
+        assert!(q.push(3, "c", t).is_none());
+        assert_eq!(q.len(), 1);
+        let tail = q.flush();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].id, 3);
+    }
+
+    #[test]
+    fn flush_on_empty_queue_is_empty() {
+        let mut q = BatchQueue::<&str>::new(4, Duration::from_millis(1));
+        assert!(q.flush().is_empty());
+        // flush never fabricates deadlines either
+        assert!(q.next_deadline_in(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn expired_deadline_reports_zero_wait() {
+        let mut q = BatchQueue::new(8, Duration::from_millis(2));
+        let t0 = Instant::now();
+        q.push(1, "a", t0);
+        let d = q.next_deadline_in(t0 + Duration::from_millis(10)).unwrap();
+        assert_eq!(d, Duration::ZERO);
+    }
+
+    #[test]
     #[should_panic]
     fn non_exported_max_batch_panics() {
         let _ = BatchQueue::<u8>::new(3, Duration::from_millis(1));

@@ -1,11 +1,13 @@
 //! The AgileNN serving coordinator (the paper's system contribution, L3):
 //!
-//! * [`device_runtime`] — on-device phase: fused extractor+local-NN PJRT
-//!   call, positional feature split, learned quantization + LZW.
-//! * [`server`] — server phase: decode, fixed-shape batched remote NN.
+//! * [`device_runtime`] — AgileNN on-device phase: fused extractor+local-NN
+//!   PJRT call, positional feature split, learned quantization + LZW.
+//! * [`server`] — server phase for every offloading scheme: decode,
+//!   fixed-shape batched remote NN.
 //! * [`batcher`] — deadline-driven dynamic batching policy.
 //! * [`combiner`] — alpha-weighted local/remote prediction fusion (§3.3).
-//! * [`pipeline`] — the threaded multi-device serving loop.
+//! * [`pipeline`] — deprecated shims over [`crate::serve`], the
+//!   scheme-agnostic threaded multi-device serving loop.
 
 pub mod batcher;
 pub mod combiner;
@@ -16,5 +18,7 @@ pub mod server;
 pub use batcher::{BatchQueue, REMOTE_BATCH_SIZES};
 pub use combiner::Combiner;
 pub use device_runtime::{DeviceOutput, DeviceRuntime};
-pub use pipeline::{run_pipeline, run_single, PipelineReport};
+#[allow(deprecated)]
+pub use pipeline::{run_pipeline, run_single};
+pub use pipeline::PipelineReport;
 pub use server::RemoteServer;

@@ -1,107 +1,23 @@
-//! Multi-device serving pipeline: N simulated sensor devices stream
-//! requests through a shared remote server with deadline-driven dynamic
-//! batching (vLLM-router topology), built on std threads + channels — the
-//! build environment vendors no async runtime, and the server loop's
-//! recv_timeout + deadline poll is exactly the select it needs.
-//!
-//! This is the "serve" showcase proving the layers compose concurrently;
-//! the per-figure benches use the synchronous `SchemeRunner` path where the
-//! simulated-time accounting is exact.
+//! Deprecated shims over [`crate::serve`], kept so pre-redesign call sites
+//! keep compiling. The multi-device pipeline itself lives in
+//! `serve::service`; it now serves **every** scheme (not just AgileNN)
+//! with deadline-driven dynamic batching and streaming per-request
+//! outcomes. New code should use [`crate::serve::ServeBuilder`].
 
-use crate::baselines::AgileRunner;
-use crate::compression::Frame;
-use crate::config::{Meta, RunConfig, Scheme};
-use crate::coordinator::batcher::BatchQueue;
-use crate::coordinator::combiner::Combiner;
-use crate::coordinator::device_runtime::DeviceRuntime;
-use crate::coordinator::server::RemoteServer;
-use crate::metrics::{AccuracyCounter, LatencyStats};
-use crate::runtime::Engine;
-use crate::tensor::Tensor;
+use crate::baselines::{RequestOutcome, SchemeRunner};
+use crate::config::{Meta, RunConfig};
+use crate::serve::Service;
 use crate::workload::{Arrival, TestSet};
-use anyhow::{anyhow, ensure, Result};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use anyhow::Result;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
 
-/// One in-flight offload awaiting its remote logits.
-struct OffloadMsg {
-    id: u64,
-    frame: Frame,
-    reply: Sender<Vec<f32>>,
-}
+pub use crate::serve::PipelineReport;
 
-/// Aggregate report from a pipeline run.
-#[derive(Debug)]
-pub struct PipelineReport {
-    pub requests: usize,
-    pub wall_s: f64,
-    pub throughput_rps: f64,
-    pub accuracy: f64,
-    pub mean_latency_s: f64,
-    pub p95_latency_s: f64,
-    pub mean_batch_size: f64,
-    pub batches: usize,
-}
-
-fn server_loop(
-    mut server: RemoteServer,
-    rx: Receiver<OffloadMsg>,
-    max_batch: usize,
-    deadline: Duration,
-) -> (usize, usize) {
-    let mut queue: BatchQueue<(Tensor, Sender<Vec<f32>>)> = BatchQueue::new(max_batch, deadline);
-    let mut total_batched = 0usize;
-    let mut batches = 0usize;
-    let mut run_batch =
-        |batch: Vec<crate::coordinator::batcher::Pending<(Tensor, Sender<Vec<f32>>)>>,
-         server: &mut RemoteServer| {
-            let feats: Vec<_> = batch.iter().map(|p| p.payload.0.clone()).collect();
-            match server.infer(&feats) {
-                Ok(rows) => {
-                    total_batched += batch.len();
-                    batches += 1;
-                    for (p, row) in batch.into_iter().zip(rows) {
-                        let _ = p.payload.1.send(row);
-                    }
-                }
-                Err(e) => eprintln!("remote batch failed: {e:#}"),
-            }
-        };
-    loop {
-        let wait = queue.next_deadline_in(Instant::now()).unwrap_or(Duration::from_secs(3600));
-        match rx.recv_timeout(wait) {
-            Ok(m) => {
-                let feats = match server.decode(&m.frame) {
-                    Ok(f) => f,
-                    Err(e) => {
-                        eprintln!("decode {} failed: {e:#}", m.id);
-                        continue;
-                    }
-                };
-                if let Some(batch) = queue.push(m.id, (feats, m.reply), Instant::now()) {
-                    run_batch(batch, &mut server);
-                }
-            }
-            Err(RecvTimeoutError::Timeout) => {
-                if let Some(batch) = queue.poll_deadline(Instant::now()) {
-                    run_batch(batch, &mut server);
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    let tail = queue.flush();
-    if !tail.is_empty() {
-        run_batch(tail, &mut server);
-    }
-    (total_batched, batches)
-}
-
-/// Run the multi-device AgileNN pipeline over the test set.
+/// Run the multi-device serving pipeline over the test set.
 ///
 /// `n_devices` concurrent device threads share one batched remote server;
 /// requests are assigned round-robin and paced by `arrival` per device.
+#[deprecated(note = "use agilenn::serve::ServeBuilder (or Service::from_parts) instead")]
 pub fn run_pipeline(
     cfg: &RunConfig,
     meta: &Meta,
@@ -110,93 +26,19 @@ pub fn run_pipeline(
     n_requests: usize,
     arrival: Arrival,
 ) -> Result<PipelineReport> {
-    ensure!(cfg.scheme == Scheme::Agile, "the pipeline showcases the AgileNN scheme");
-    ensure!(n_devices >= 1, "need at least one device");
-    let engine = Arc::new(Engine::cpu()?);
-
-    let server = RemoteServer::new(&engine, cfg, meta)?;
-    let (tx_offload, rx_offload) = channel::<OffloadMsg>();
-    let max_batch = cfg.max_batch;
-    let deadline = Duration::from_micros(cfg.batch_deadline_us);
-    let server_handle = std::thread::spawn(move || server_loop(server, rx_offload, max_batch, deadline));
-
-    let (tx_done, rx_done) = channel::<(bool, f64)>();
-    let t_start = Instant::now();
-    let mut device_handles = Vec::new();
-    for d in 0..n_devices {
-        let cfg = cfg.clone();
-        let meta = meta.clone();
-        let engine = engine.clone();
-        let testset = testset.clone();
-        let tx_offload = tx_offload.clone();
-        let tx_done = tx_done.clone();
-        let ids: Vec<usize> = (0..n_requests).filter(|i| i % n_devices == d).collect();
-        let times = arrival.timestamps(ids.len());
-        device_handles.push(std::thread::spawn(move || -> Result<()> {
-            let mut device = DeviceRuntime::new(&engine, &cfg, &meta)?;
-            let combiner = Combiner::new(cfg.alpha_override.unwrap_or(meta.alpha))?;
-            let t0 = Instant::now();
-            for (j, &i) in ids.iter().enumerate() {
-                // pace to the arrival process
-                let due = Duration::from_secs_f64(times[j]);
-                if let Some(sleep_for) = due.checked_sub(t0.elapsed()) {
-                    std::thread::sleep(sleep_for);
-                }
-                let req_start = Instant::now();
-                let idx = i % testset.len();
-                let img = testset.image(idx)?;
-                let out = device.process(&img)?;
-                let (reply_tx, reply_rx) = channel();
-                tx_offload
-                    .send(OffloadMsg { id: i as u64, frame: out.frame, reply: reply_tx })
-                    .map_err(|_| anyhow!("server gone"))?;
-                let remote_logits =
-                    reply_rx.recv().map_err(|_| anyhow!("reply dropped"))?;
-                let pred = combiner.predict(&out.local_logits, &remote_logits)?;
-                let correct = pred as i32 == testset.labels[idx];
-                let _ = tx_done.send((correct, req_start.elapsed().as_secs_f64()));
-            }
-            Ok(())
-        }));
-    }
-    drop(tx_offload);
-    drop(tx_done);
-
-    // collect results as they stream in
-    let mut acc = AccuracyCounter::default();
-    let mut lat = LatencyStats::new();
-    while let Ok((correct, seconds)) = rx_done.recv() {
-        acc.record(correct);
-        lat.record(seconds);
-    }
-    for h in device_handles {
-        h.join().map_err(|_| anyhow!("device thread panicked"))??;
-    }
-    let (total_batched, batches) =
-        server_handle.join().map_err(|_| anyhow!("server thread panicked"))?;
-    let wall = t_start.elapsed().as_secs_f64();
-
-    Ok(PipelineReport {
-        requests: acc.total,
-        wall_s: wall,
-        throughput_rps: acc.total as f64 / wall,
-        accuracy: acc.accuracy(),
-        mean_latency_s: lat.mean_s(),
-        p95_latency_s: lat.p95(),
-        mean_batch_size: if batches == 0 { 0.0 } else { total_batched as f64 / batches as f64 },
-        batches,
-    })
+    Service::from_parts(cfg.clone(), meta.clone(), testset, n_devices, n_requests, arrival)?.run()
 }
 
-/// Synchronous single-request convenience used by examples and the CLI.
+/// Synchronous single-request convenience.
+#[deprecated(note = "use agilenn::baselines::make_runner instead")]
 pub fn run_single(
     cfg: &RunConfig,
     meta: &Meta,
     testset: &TestSet,
     index: usize,
-) -> Result<crate::baselines::RequestOutcome> {
-    let engine = Engine::cpu()?;
-    let mut runner = AgileRunner::new(&engine, cfg, meta)?;
+) -> Result<RequestOutcome> {
+    let engine = crate::runtime::Engine::cpu()?;
+    let mut runner = crate::baselines::make_runner(&engine, cfg, meta)?;
     let idx = index % testset.len();
-    crate::baselines::SchemeRunner::process(&mut runner, &testset.image(idx)?, testset.labels[idx])
+    runner.process(&testset.image(idx)?, testset.labels[idx])
 }

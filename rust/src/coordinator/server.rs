@@ -1,10 +1,15 @@
-//! Server-side runtime: decompress received frames, rebuild feature
-//! tensors, run the remote NN through the exported fixed-batch executables
-//! (padding up via the batcher policy), return per-request logits.
+//! Server-side runtime: decode received frames, rebuild model inputs, run
+//! the remote NN through the exported fixed-batch executables (padding up
+//! via the batcher policy), return per-request logits.
+//!
+//! Covers every offloading scheme: learned-codebook feature streams
+//! (AgileNN, DeepCOD, SPINN) and the edge-only raw-image path (LZW'd u8
+//! pixels, rebuilt to f32 server-side). MCUNet resolves on-device and has
+//! no server half.
 
-use crate::compression::{quantizer::Codebook, Frame, RxDecoder};
+use crate::compression::{lzw, quantizer::Codebook, Frame, RxDecoder};
 use crate::config::{Meta, RunConfig, Scheme};
-use crate::coordinator::batcher::pad_batch_size;
+use crate::coordinator::batcher::REMOTE_BATCH_SIZES;
 use crate::runtime::{Engine, Executable};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
@@ -12,10 +17,20 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// How uplink frames decode back into model inputs.
+enum FrameDecoder {
+    /// learned-codebook feature stream (AgileNN / DeepCOD / SPINN)
+    Features(RxDecoder),
+    /// LZW-compressed raw u8 image (edge-only)
+    RawImage,
+}
+
 pub struct RemoteServer {
     exes: HashMap<usize, Arc<Executable>>,
-    rx: RxDecoder,
-    feature_shape: Vec<usize>, // (1, h, w, c_remote)
+    /// exported batch sizes for this scheme's remote artifact, ascending
+    sizes: Vec<usize>,
+    decoder: FrameDecoder,
+    input_shape: Vec<usize>, // (1, h, w, c)
     num_classes: usize,
     /// wall-clock spent in remote NN execution (for perf accounting)
     pub exec_time: Duration,
@@ -24,45 +39,100 @@ pub struct RemoteServer {
 
 impl RemoteServer {
     pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
-        let (stem, ch) = match cfg.scheme {
-            Scheme::Agile => ("agile_remote", meta.feature[2] - meta.k),
-            Scheme::Deepcod => ("deepcod_remote", 12),
-            Scheme::Spinn => ("spinn_remote", 32),
-            _ => anyhow::bail!("{} has no feature-receiving server", cfg.scheme.name()),
+        let stem = match cfg.scheme {
+            Scheme::Agile => "agile_remote",
+            Scheme::Deepcod => "deepcod_remote",
+            Scheme::Spinn => "spinn_remote",
+            Scheme::EdgeOnly => "edge_remote",
+            Scheme::Mcunet => {
+                anyhow::bail!("{} resolves on-device; it has no server half", cfg.scheme.name())
+            }
+        };
+        let (input_shape, decoder) = match cfg.scheme {
+            Scheme::EdgeOnly => (
+                vec![1, meta.image[0], meta.image[1], meta.image[2]],
+                FrameDecoder::RawImage,
+            ),
+            _ => {
+                let ch = match cfg.scheme {
+                    Scheme::Agile => meta.feature[2] - meta.k,
+                    Scheme::Deepcod => 12,
+                    _ => 32, // Spinn
+                };
+                (
+                    vec![1, meta.feature[0], meta.feature[1], ch],
+                    FrameDecoder::Features(RxDecoder::new(Codebook::new(
+                        meta.codebook(cfg.scheme, cfg.bits)?,
+                    )?)),
+                )
+            }
+        };
+        // edge-only exports a reduced batch set (compile/aot.py: b in {1,4})
+        let sizes: Vec<usize> = match cfg.scheme {
+            Scheme::EdgeOnly => vec![1, 4],
+            _ => REMOTE_BATCH_SIZES.to_vec(),
         };
         let mut exes = HashMap::new();
-        for b in super::batcher::REMOTE_BATCH_SIZES {
+        for &b in &sizes {
             exes.insert(b, engine.load_artifact(&cfg.dataset_dir(), &format!("{stem}_b{b}"))?);
         }
-        let codebook = Codebook::new(meta.codebook(cfg.scheme, cfg.bits)?)?;
         Ok(Self {
             exes,
-            rx: RxDecoder::new(codebook),
-            feature_shape: vec![1, meta.feature[0], meta.feature[1], ch],
+            sizes,
+            decoder,
+            input_shape,
             num_classes: meta.num_classes,
             exec_time: Duration::ZERO,
             batches_run: 0,
         })
     }
 
-    /// Decode one frame back into a unit-batch feature tensor.
-    pub fn decode(&self, frame: &Frame) -> Result<Tensor> {
-        let values = self.rx.decode(frame)?;
-        ensure!(
-            values.len() == self.feature_shape.iter().product::<usize>(),
-            "frame decodes to {} values, expected shape {:?}",
-            values.len(),
-            self.feature_shape
-        );
-        Tensor::new(self.feature_shape.clone(), values)
+    /// Largest exported remote batch size for this scheme (the batcher's
+    /// dispatch cap must not exceed it).
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().expect("at least one exported batch size")
     }
 
-    /// Run the remote NN on a group of decoded feature tensors.
+    /// Decode one frame back into a unit-batch input tensor.
+    pub fn decode(&self, frame: &Frame) -> Result<Tensor> {
+        let values = match &self.decoder {
+            FrameDecoder::Features(rx) => rx.decode(frame)?,
+            FrameDecoder::RawImage => {
+                let bytes = lzw::decompress(&frame.payload)?;
+                ensure!(
+                    bytes.len() == frame.count,
+                    "raw image frame decodes to {} bytes, expected {}",
+                    bytes.len(),
+                    frame.count
+                );
+                bytes.iter().map(|&b| b as f32 / 255.0).collect()
+            }
+        };
+        ensure!(
+            values.len() == self.input_shape.iter().product::<usize>(),
+            "frame decodes to {} values, expected shape {:?}",
+            values.len(),
+            self.input_shape
+        );
+        Tensor::new(self.input_shape.clone(), values)
+    }
+
+    /// Run the remote NN on a group of decoded input tensors, padding up
+    /// to the smallest exported batch size that fits.
     /// Returns per-request logits (padding rows are dropped).
     pub fn infer(&mut self, feats: &[Tensor]) -> Result<Vec<Vec<f32>>> {
         ensure!(!feats.is_empty(), "empty batch");
-        let padded = pad_batch_size(feats.len());
-        ensure!(padded <= 8, "batch exceeds exported sizes");
+        let padded = *self
+            .sizes
+            .iter()
+            .find(|&&b| b >= feats.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "batch of {} exceeds the largest exported size {}",
+                    feats.len(),
+                    self.max_batch()
+                )
+            })?;
         let batch = Tensor::stack_padded(feats, padded)?;
         let exe = self.exes.get(&padded).expect("exported batch size");
         let t0 = Instant::now();

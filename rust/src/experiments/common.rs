@@ -4,7 +4,8 @@ use crate::baselines::{make_runner, SchemeRunner};
 use crate::config::{Manifest, Meta, RunConfig, Scheme};
 use crate::metrics::{AccuracyCounter, EnergyLedger, LatencyBreakdown};
 use crate::runtime::Engine;
-use crate::workload::TestSet;
+use crate::serve::{PipelineReport, Service};
+use crate::workload::{Arrival, TestSet};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -93,6 +94,21 @@ impl SchemeEval {
     pub fn total_latency_s(&self) -> f64 {
         self.mean.total_s()
     }
+}
+
+/// Serve a scheme through the batched multi-device pipeline — the serving
+/// counterpart of [`eval_scheme`]'s synchronous accounting. Reuses the
+/// context's cached meta/test set.
+pub fn serve_scheme(
+    ctx: &EvalCtx,
+    cfg: &RunConfig,
+    devices: usize,
+    n: usize,
+    arrival: Arrival,
+) -> Result<PipelineReport> {
+    let meta = ctx.meta(&cfg.dataset)?;
+    let testset = ctx.testset(&cfg.dataset)?;
+    Service::from_parts(cfg.clone(), meta, testset, devices, n, arrival)?.run()
 }
 
 /// Evaluate a scheme under `cfg` over the first `n` test samples.

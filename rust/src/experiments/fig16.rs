@@ -1,9 +1,12 @@
 //! Fig 16: end-to-end inference latency breakdown + accuracy, all datasets x
-//! all schemes (the paper's headline comparison).
+//! all schemes (the paper's headline comparison) — plus the same scheme set
+//! served under load through the batched multi-device pipeline, so the
+//! comparison also covers throughput/latency with concurrent devices.
 
-use super::common::{eval_n, eval_scheme, EvalCtx};
+use super::common::{eval_n, eval_scheme, serve_scheme, EvalCtx};
 use crate::config::Scheme;
 use crate::report::{ms, pct, Table};
+use crate::workload::Arrival;
 use anyhow::Result;
 
 pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
@@ -27,6 +30,24 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
             ]);
         }
         tables.push(t);
+
+        let mut t2 = Table::new(
+            format!("Fig 16 [{ds}]: served under load (4 devices, batched)"),
+            &["scheme", "throughput_rps", "p95_ms", "mean_batch", "accuracy"],
+        );
+        for scheme in Scheme::all() {
+            let cfg = ctx.run_config(ds, scheme);
+            let rep =
+                serve_scheme(ctx, &cfg, 4, eval_n(), Arrival::Poisson { hz: 100.0, seed: 16 })?;
+            t2.row(vec![
+                scheme.name().into(),
+                format!("{:.1}", rep.throughput_rps),
+                ms(rep.p95_latency_s),
+                format!("{:.2}", rep.mean_batch_size),
+                pct(rep.accuracy),
+            ]);
+        }
+        tables.push(t2);
     }
     Ok(tables)
 }

@@ -17,21 +17,36 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
-//! use agilenn::config::{RunConfig, Scheme, default_artifacts_dir, Meta};
-//! use agilenn::runtime::Engine;
-//! use agilenn::baselines::{make_runner, SchemeRunner};
-//! use agilenn::workload::TestSet;
+//! The serving surface is [`serve::ServeBuilder`]: pick a dataset, any of
+//! the five schemes (AgileNN, DeepCOD, SPINN, MCUNet, edge-only), a device
+//! count and an arrival process, and run the deadline-batched multi-device
+//! pipeline. Per-request outcomes stream out as they complete:
 //!
-//! let cfg = RunConfig::new(default_artifacts_dir(), "svhns", Scheme::Agile);
-//! let meta = Meta::load(&cfg.dataset_dir()).unwrap();
-//! let testset = TestSet::load(&cfg.dataset_dir().join("test.bin")).unwrap();
-//! let engine = Engine::cpu().unwrap();
-//! let mut runner = make_runner(&engine, &cfg, &meta).unwrap();
-//! let out = runner.process(&testset.image(0).unwrap(), testset.labels[0]).unwrap();
-//! println!("pred={} correct={} latency={:.2}ms",
-//!          out.predicted, out.correct, out.breakdown.total_s() * 1e3);
+//! ```no_run
+//! use agilenn::config::Scheme;
+//! use agilenn::serve::ServeBuilder;
+//!
+//! let service = ServeBuilder::new("svhns")
+//!     .scheme(Scheme::Agile)   // or Deepcod / Spinn / Mcunet / EdgeOnly
+//!     .devices(4)
+//!     .requests(256)
+//!     .rate_hz(30.0)           // Poisson arrivals per device
+//!     .build()
+//!     .unwrap();
+//!
+//! let mut outcomes = service.stream().unwrap();
+//! for out in outcomes.by_ref() {
+//!     println!("request {} -> class {} in {} ms (device {})",
+//!              out.id, out.outcome.predicted, out.wall_s * 1e3, out.device);
+//! }
+//! let report = outcomes.finish().unwrap();
+//! println!("{:.1} req/s at {:.1}% accuracy, mean batch {:.2}",
+//!          report.throughput_rps, report.accuracy * 100.0, report.mean_batch_size);
 //! ```
+//!
+//! For synchronous single-request evaluation with exact simulated-time
+//! accounting (the per-figure benches), use [`baselines::make_runner`],
+//! which composes the same device/server halves without the thread fabric.
 
 pub mod baselines;
 pub mod bench;
@@ -43,6 +58,7 @@ pub mod json;
 pub mod metrics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod tensor;
 pub mod workload;

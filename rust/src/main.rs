@@ -1,20 +1,23 @@
-//! AgileNN CLI: serve (multi-device pipeline), infer (single request,
-//! verbose), bench (regenerate a paper figure/table), report (summary).
+//! AgileNN CLI: serve (multi-device batched pipeline, any scheme), infer
+//! (single request, verbose), bench (regenerate a paper figure/table),
+//! report (summary).
 //!
-//! Argument parsing is hand-rolled (`cli` module below) — the build
-//! environment vendors only the xla dependency tree.
+//! Argument parsing is hand-rolled (`Args` below) — the build environment
+//! vendors only the xla dependency tree.
 
+use agilenn::baselines::SchemeRunner;
 use agilenn::config::{default_artifacts_dir, Manifest, Meta, RunConfig, Scheme};
-use agilenn::coordinator::run_pipeline;
 use agilenn::experiments::{all_ids, run_figure, EvalCtx};
 use agilenn::report::{ms, pct};
 use agilenn::runtime::Engine;
-use agilenn::workload::{Arrival, TestSet};
+use agilenn::serve::ServeBuilder;
+use agilenn::workload::TestSet;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
-use std::sync::Arc;
 
-/// Tiny `--flag value` parser.
+/// Tiny `--flag [value]` parser. A flag followed by another `--flag` (or by
+/// nothing) is valueless and stores `"true"`, so boolean switches like
+/// `--quiet` compose with later flags instead of swallowing them.
 struct Args {
     cmd: String,
     flags: std::collections::HashMap<String, String>,
@@ -22,7 +25,11 @@ struct Args {
 
 impl Args {
     fn parse() -> Result<Self> {
-        let mut it = std::env::args().skip(1);
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    fn from_iter(args: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
         let cmd = it.next().unwrap_or_else(|| "help".into());
         let mut flags = std::collections::HashMap::new();
         while let Some(a) = it.next() {
@@ -30,7 +37,10 @@ impl Args {
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow::anyhow!("expected --flag, got {a:?}"))?
                 .to_string();
-            let val = it.next().unwrap_or_else(|| "true".into());
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".into(),
+            };
             flags.insert(key, val);
         }
         Ok(Self { cmd, flags })
@@ -64,9 +74,11 @@ agilenn — AgileNN (MobiCom '22) serving coordinator
 USAGE: agilenn <command> [--flag value ...]
 
 COMMANDS:
-  serve    run the multi-device serving pipeline
-             --dataset svhns --devices 4 --requests 256 --rate-hz 30
-             --max-batch 8 --deadline-us 2000
+  serve    run the multi-device batched serving pipeline (any scheme)
+             --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
+             --devices 4 --requests 256 --rate-hz 30
+             --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
+             --quiet   (suppress streaming per-request progress)
   infer    process one request, print the full breakdown
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --index 0 --bits 4 [--alpha 0.3]
@@ -78,6 +90,9 @@ COMMANDS:
 GLOBAL:
   --artifacts DIR   artifacts directory (default ./artifacts or
                     $AGILENN_ARTIFACTS)
+
+The serve pipeline is built with agilenn::serve::ServeBuilder; library
+users get the same API plus a streaming per-request outcome iterator.
 ";
 
 fn main() -> Result<()> {
@@ -90,21 +105,37 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "serve" => {
             let dataset = args.get_str("dataset", "svhns");
+            let scheme: Scheme = args.get_str("scheme", "agile").parse()?;
             let devices: usize = args.get("devices", 4)?;
             let requests: usize = args.get("requests", 256)?;
-            let rate_hz: f64 = args.get("rate-hz", 30.0)?;
-            let mut cfg = RunConfig::new(artifacts, &dataset, Scheme::Agile);
-            cfg.max_batch = args.get("max-batch", 8)?;
-            cfg.batch_deadline_us = args.get("deadline-us", 2000)?;
-            let meta = Meta::load(&cfg.dataset_dir())?;
-            let testset = Arc::new(TestSet::load(&cfg.dataset_dir().join("test.bin"))?);
-            let arrival = if rate_hz > 0.0 {
-                Arrival::Poisson { hz: rate_hz, seed: 42 }
-            } else {
-                Arrival::Periodic { hz: 1e9 }
-            };
-            let rep = run_pipeline(&cfg, &meta, testset, devices, requests, arrival)?;
-            println!("pipeline: {} requests over {} devices", rep.requests, devices);
+            let quiet: bool = args.get("quiet", false)?;
+            let mut builder = ServeBuilder::new(&dataset)
+                .artifacts_dir(artifacts)
+                .scheme(scheme)
+                .devices(devices)
+                .requests(requests)
+                .rate_hz(args.get("rate-hz", 30.0)?)
+                .max_batch(args.get("max-batch", 8)?)
+                .batch_deadline_us(args.get("deadline-us", 2000)?)
+                .bits(args.get("bits", 4)?);
+            if let Some(alpha) = args.get_opt_f64("alpha")? {
+                builder = builder.alpha(alpha);
+            }
+            let mut stream = builder.build()?.stream()?;
+            let mut served = 0usize;
+            for out in stream.by_ref() {
+                served += 1;
+                if !quiet && (served % 32 == 0 || served == requests) {
+                    println!(
+                        "  .. {served}/{requests} served (request {} on device {}: {} ms)",
+                        out.id,
+                        out.device,
+                        ms(out.wall_s),
+                    );
+                }
+            }
+            let rep = stream.finish()?;
+            println!("{}: {} requests over {} devices", scheme.name(), rep.requests, devices);
             println!("  wall time      : {:.2} s", rep.wall_s);
             println!("  throughput     : {:.1} req/s", rep.throughput_rps);
             println!("  accuracy       : {}", pct(rep.accuracy));
@@ -176,4 +207,47 @@ fn main() -> Result<()> {
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::from_iter(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flag_value_pairs() {
+        let a = parse(&["serve", "--dataset", "svhns", "--devices", "4"]);
+        assert_eq!(a.cmd, "serve");
+        assert_eq!(a.get_str("dataset", "x"), "svhns");
+        assert_eq!(a.get::<usize>("devices", 0).unwrap(), 4);
+    }
+
+    #[test]
+    fn valueless_flag_does_not_swallow_the_next_flag() {
+        // regression: `--quiet --artifacts X` used to store quiet="--artifacts"
+        let a = parse(&["bench", "--figure", "16", "--quiet", "--artifacts", "X"]);
+        assert_eq!(a.get_str("figure", ""), "16");
+        assert!(a.get::<bool>("quiet", false).unwrap());
+        assert_eq!(a.get_str("artifacts", ""), "X");
+    }
+
+    #[test]
+    fn trailing_valueless_flag_is_true() {
+        let a = parse(&["serve", "--quiet"]);
+        assert!(a.get::<bool>("quiet", false).unwrap());
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["serve", "--alpha", "-0.5"]);
+        assert_eq!(a.get_opt_f64("alpha").unwrap(), Some(-0.5));
+    }
+
+    #[test]
+    fn non_flag_token_errors() {
+        assert!(Args::from_iter(["serve".into(), "oops".into()]).is_err());
+    }
 }

@@ -1,0 +1,38 @@
+//! Scheme-agnostic serving API (the redesign of the ad-hoc
+//! `run_pipeline` entry point).
+//!
+//! The paper's evaluation (§7) is a *comparison* across five serving
+//! schemes, so the serving surface must not privilege one of them. Here
+//! every scheme decomposes into a device half + optional server half + a
+//! fuser ([`scheme`]), and one threaded, deadline-batched pipeline
+//! ([`service`]) serves any of them:
+//!
+//! ```no_run
+//! use agilenn::config::Scheme;
+//! use agilenn::serve::ServeBuilder;
+//!
+//! let report = ServeBuilder::new("svhns")
+//!     .scheme(Scheme::Deepcod)   // any of the five schemes
+//!     .devices(4)
+//!     .requests(256)
+//!     .rate_hz(30.0)
+//!     .build().unwrap()
+//!     .run().unwrap();
+//! println!("{:.1} req/s", report.throughput_rps);
+//! ```
+//!
+//! For per-request observability, [`Service::stream`] returns an
+//! [`OutcomeStream`] — an iterator over [`ServedOutcome`]s as devices
+//! finish them — and `finish()` yields the same [`PipelineReport`].
+
+pub mod scheme;
+pub mod service;
+
+pub use scheme::{
+    make_device_side, make_fuser, make_server_side, reply_bytes, AgileDevice, AlphaFuser,
+    DeepcodDevice, DeviceSide, EdgeDevice, Fuser, LocalArgmaxFuser, LocalResult, McunetDevice,
+    RemoteArgmaxFuser, ServerSide, SpinnDevice,
+};
+pub use service::{
+    OutcomeStream, PipelineReport, RemoteFailure, ServeBuilder, ServedOutcome, Service,
+};

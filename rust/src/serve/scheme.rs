@@ -1,0 +1,577 @@
+//! The scheme-agnostic halves every serving scheme decomposes into:
+//!
+//! * [`DeviceSide`] — everything that would run on the MCU: the on-device
+//!   NN (if any), feature quantization/compression, and the decision
+//!   whether an uplink [`Frame`] is produced at all. Local-only schemes
+//!   (MCUNet, SPINN requests resolved at the early exit) return no frame
+//!   and never touch the server batcher.
+//! * [`ServerSide`] — decode uplink frames back into model inputs and run
+//!   the fixed-shape batched remote NN. Shared by the deadline-batched
+//!   server loop in [`super::service`] and the synchronous runners.
+//! * [`Fuser`] — turn local and (optional) remote logits into the final
+//!   class prediction (AgileNN's §3.3 alpha fusion, plain argmax for the
+//!   baselines).
+//!
+//! `make_device_side` / `make_server_side` / `make_fuser` wire a
+//! [`RunConfig`] to the right halves, which is the only scheme dispatch the
+//! serving pipeline needs.
+
+use crate::baselines::RequestOutcome;
+use crate::compression::{lzw, quantizer::Codebook, Frame, TxEncoder};
+use crate::config::{Meta, RunConfig, Scheme};
+use crate::coordinator::combiner::Combiner;
+use crate::coordinator::device_runtime::DeviceRuntime;
+use crate::coordinator::server::RemoteServer;
+use crate::metrics::{EnergyLedger, LatencyBreakdown};
+use crate::runtime::{Engine, Executable};
+use crate::simulator::{DeviceSim, DeviceTimings, MemoryReport, NetworkSim};
+use crate::tensor::{argmax, max_confidence, Tensor};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Downlink reply payload: logits (num_classes f32) + small header.
+pub fn reply_bytes(num_classes: usize) -> usize {
+    num_classes * 4 + 8
+}
+
+/// Result of the on-device phase for one request, scheme-agnostic.
+#[derive(Debug)]
+pub struct LocalResult {
+    /// On-device logits (empty when the scheme has no device-side head).
+    pub local_logits: Vec<f32>,
+    /// Compressed uplink payload; `None` means the request resolved
+    /// locally and bypasses the server batcher entirely.
+    pub frame: Option<Frame>,
+    /// Simulated device-side costs.
+    pub timings: DeviceTimings,
+    /// Resolved at an on-device early exit (SPINN) or offline fallback.
+    pub exited_early: bool,
+}
+
+impl LocalResult {
+    /// Application-layer uplink bytes (0 when nothing is transmitted).
+    pub fn tx_bytes(&self) -> usize {
+        self.frame.as_ref().map_or(0, |f| f.wire_bytes())
+    }
+}
+
+/// Device half of a serving scheme.
+pub trait DeviceSide: Send {
+    fn scheme(&self) -> Scheme;
+
+    /// Run the on-device phase for one sensor sample (unit batch).
+    fn encode(&mut self, image: &Tensor) -> Result<LocalResult>;
+
+    /// Static on-device memory accounting (Fig 20).
+    fn memory_report(&self) -> MemoryReport;
+}
+
+/// Server half of a serving scheme: frame decode + batched remote NN.
+pub trait ServerSide: Send {
+    /// Decode one uplink frame into the remote NN's input tensor.
+    fn decode(&self, frame: &Frame) -> Result<Tensor>;
+
+    /// Run the remote NN on a group of decoded inputs; one logits row per
+    /// request (padding rows are dropped by the implementation).
+    fn infer_batch(&mut self, feats: &[Tensor]) -> Result<Vec<Vec<f32>>>;
+
+    /// Largest batch this server can run (some schemes export fewer batch
+    /// sizes); the pipeline clamps its dispatch cap to this.
+    fn max_batch(&self) -> usize;
+}
+
+impl ServerSide for RemoteServer {
+    fn decode(&self, frame: &Frame) -> Result<Tensor> {
+        RemoteServer::decode(self, frame)
+    }
+
+    fn infer_batch(&mut self, feats: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        self.infer(feats)
+    }
+
+    fn max_batch(&self) -> usize {
+        RemoteServer::max_batch(self)
+    }
+}
+
+/// Prediction-fusion step: combine the device half's logits with the
+/// server half's (when the request was offloaded) into the final class.
+pub trait Fuser: Send {
+    fn fuse(&self, local: &LocalResult, remote: Option<&[f32]>) -> Result<usize>;
+}
+
+/// AgileNN §3.3: alpha-weighted local/remote sum; falls back to the local
+/// head alone when the request never reached the server (link down, §9).
+pub struct AlphaFuser {
+    combiner: Combiner,
+}
+
+impl AlphaFuser {
+    pub fn new(alpha: f64) -> Result<Self> {
+        Ok(Self { combiner: Combiner::new(alpha)? })
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.combiner.alpha()
+    }
+}
+
+impl Fuser for AlphaFuser {
+    fn fuse(&self, local: &LocalResult, remote: Option<&[f32]>) -> Result<usize> {
+        match remote {
+            Some(r) => self.combiner.predict(&local.local_logits, r),
+            None => Ok(self.combiner.predict_local_only(&local.local_logits)),
+        }
+    }
+}
+
+/// Offloaded schemes without a fusing head (DeepCOD, EdgeOnly, SPINN): the
+/// remote logits decide; early-exited requests use the device logits.
+pub struct RemoteArgmaxFuser;
+
+impl Fuser for RemoteArgmaxFuser {
+    fn fuse(&self, local: &LocalResult, remote: Option<&[f32]>) -> Result<usize> {
+        match remote {
+            Some(r) => Ok(argmax(r)),
+            None => {
+                ensure!(
+                    !local.local_logits.is_empty(),
+                    "request neither offloaded nor resolved on device"
+                );
+                Ok(argmax(&local.local_logits))
+            }
+        }
+    }
+}
+
+/// Local-only schemes (MCUNet): the device logits are the prediction.
+pub struct LocalArgmaxFuser;
+
+impl Fuser for LocalArgmaxFuser {
+    fn fuse(&self, local: &LocalResult, _remote: Option<&[f32]>) -> Result<usize> {
+        ensure!(!local.local_logits.is_empty(), "local-only scheme produced no logits");
+        Ok(argmax(&local.local_logits))
+    }
+}
+
+/// Fuse and price one request after the (optional) remote phase. Shared by
+/// the synchronous runners and the threaded pipeline so the simulated
+/// accounting (link model, energy ledger, breakdown fields) never
+/// diverges between the two paths. `remote_wall_s` is whatever the caller
+/// measured around the server phase (per-request for the sync path, queue
+/// + batch for the live pipeline).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assemble_outcome(
+    fuser: &dyn Fuser,
+    local: &LocalResult,
+    remote: Option<&[f32]>,
+    label: i32,
+    tx_bytes: usize,
+    remote_wall_s: f64,
+    dev: &DeviceSim,
+    net: &NetworkSim,
+    num_classes: usize,
+) -> Result<RequestOutcome> {
+    let (network_s, radio_j) = if remote.is_some() {
+        let reply = reply_bytes(num_classes);
+        (
+            net.transfer_s(tx_bytes) + net.transfer_s(reply),
+            dev.radio_energy_j(net.airtime_s(tx_bytes) + net.airtime_s(reply)),
+        )
+    } else {
+        (0.0, 0.0)
+    };
+    let predicted = fuser.fuse(local, remote)?;
+    Ok(RequestOutcome {
+        predicted,
+        correct: predicted as i32 == label,
+        breakdown: LatencyBreakdown {
+            local_nn_s: local.timings.nn_compute_s,
+            compression_s: local.timings.quantize_s + local.timings.compress_s,
+            network_s,
+            remote_s: remote_wall_s,
+        },
+        energy: EnergyLedger { compute_j: dev.compute_energy_j(local.timings.total_s()), radio_j },
+        tx_bytes,
+        exited_early: local.exited_early,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Memory accounting (Fig 20), shared by all device halves.
+// ---------------------------------------------------------------------------
+
+/// Activation-peak estimate (int8 bytes at 32x32; the device sim's
+/// resolution_scale handles the 96x96 translation for SRAM the same way it
+/// does for MACs — activations scale with spatial area).
+fn activation_peak(scheme: Scheme) -> usize {
+    match scheme {
+        // conv1: 32*32*3 in + 16*16*16 out; conv2: 4096 + 8*8*24
+        Scheme::Agile => 3072 + 4096,
+        // encoder conv2: 16*16*32 + 16*16*32
+        Scheme::Deepcod => 8192 + 8192,
+        // conv1: 3072 + 16*16*24
+        Scheme::Spinn => 3072 + 6144,
+        // conv1: 3072 + 16*16*16
+        Scheme::Mcunet => 3072 + 4096,
+        // raw image buffer only
+        Scheme::EdgeOnly => 3072,
+    }
+}
+
+/// LZW dictionary SRAM for schemes that compress on-device.
+const LZW_DICT_SRAM: usize = 20 * 1024;
+
+fn memory_report_for(cfg: &RunConfig, meta: &Meta, scheme: Scheme) -> MemoryReport {
+    let scale = cfg.device.resolution_scale as usize;
+    let compresses = !matches!(scheme, Scheme::Mcunet);
+    let act = activation_peak(scheme) * scale + if compresses { LZW_DICT_SRAM } else { 0 };
+    MemoryReport::new(&cfg.device, act, meta.device_param_bytes(scheme) as usize)
+}
+
+// ---------------------------------------------------------------------------
+// Device halves
+// ---------------------------------------------------------------------------
+
+/// AgileNN device half: fused extractor + local NN + learned tx pipeline.
+pub struct AgileDevice {
+    inner: DeviceRuntime,
+    mem: MemoryReport,
+}
+
+impl AgileDevice {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        Ok(Self {
+            inner: DeviceRuntime::new(engine, cfg, meta)?,
+            mem: memory_report_for(cfg, meta, Scheme::Agile),
+        })
+    }
+}
+
+impl DeviceSide for AgileDevice {
+    fn scheme(&self) -> Scheme {
+        Scheme::Agile
+    }
+
+    fn encode(&mut self, image: &Tensor) -> Result<LocalResult> {
+        let out = self.inner.process(image)?;
+        Ok(LocalResult {
+            local_logits: out.local_logits,
+            frame: Some(out.frame),
+            timings: out.timings,
+            exited_early: false,
+        })
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        self.mem
+    }
+}
+
+/// DeepCOD device half: learned encoder, everything classifies remotely.
+pub struct DeepcodDevice {
+    encoder: Arc<Executable>,
+    tx: TxEncoder,
+    sim: DeviceSim,
+    nn_macs: u64,
+    mem: MemoryReport,
+}
+
+impl DeepcodDevice {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        ensure!(cfg.scheme == Scheme::Deepcod, "wrong scheme for DeepcodDevice");
+        let encoder = engine.load_artifact(&cfg.dataset_dir(), "deepcod_device_b1")?;
+        let codebook = Codebook::new(meta.codebook(Scheme::Deepcod, cfg.bits)?)?;
+        Ok(Self {
+            encoder,
+            tx: TxEncoder::new(codebook),
+            sim: DeviceSim::new(cfg.device.clone()),
+            nn_macs: meta.macs.deepcod_device,
+            mem: memory_report_for(cfg, meta, Scheme::Deepcod),
+        })
+    }
+}
+
+impl DeviceSide for DeepcodDevice {
+    fn scheme(&self) -> Scheme {
+        Scheme::Deepcod
+    }
+
+    fn encode(&mut self, image: &Tensor) -> Result<LocalResult> {
+        let outputs = self.encoder.run(std::slice::from_ref(image))?;
+        ensure!(outputs.len() == 1, "deepcod encoder yields (code,)");
+        let code = &outputs[0];
+        let frame = self.tx.encode(code.data());
+        let timings = DeviceTimings {
+            nn_compute_s: self.sim.nn_latency_s(self.nn_macs),
+            quantize_s: self.sim.quantize_latency_s(code.len()),
+            compress_s: self
+                .sim
+                .compress_latency_s((code.len() * self.tx.codebook().bits() as usize + 7) / 8),
+        };
+        Ok(LocalResult {
+            local_logits: Vec::new(),
+            frame: Some(frame),
+            timings,
+            exited_early: false,
+        })
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        self.mem
+    }
+}
+
+/// SPINN device half: partitioned NN with an on-device early exit.
+pub struct SpinnDevice {
+    device_exe: Arc<Executable>,
+    tx: TxEncoder,
+    sim: DeviceSim,
+    nn_macs: u64,
+    exit_threshold: f32,
+    mem: MemoryReport,
+}
+
+impl SpinnDevice {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        ensure!(cfg.scheme == Scheme::Spinn, "wrong scheme for SpinnDevice");
+        let device_exe = engine.load_artifact(&cfg.dataset_dir(), "spinn_device_b1")?;
+        let codebook = Codebook::new(meta.codebook(Scheme::Spinn, cfg.bits)?)?;
+        Ok(Self {
+            device_exe,
+            tx: TxEncoder::new(codebook),
+            sim: DeviceSim::new(cfg.device.clone()),
+            nn_macs: meta.macs.spinn_device,
+            exit_threshold: meta.spinn_exit.threshold as f32,
+            mem: memory_report_for(cfg, meta, Scheme::Spinn),
+        })
+    }
+}
+
+impl DeviceSide for SpinnDevice {
+    fn scheme(&self) -> Scheme {
+        Scheme::Spinn
+    }
+
+    fn encode(&mut self, image: &Tensor) -> Result<LocalResult> {
+        let outputs = self.device_exe.run(std::slice::from_ref(image))?;
+        ensure!(outputs.len() == 2, "spinn device yields (feats, exit_logits)");
+        let feats = &outputs[0];
+        let exit_logits = outputs[1].data().to_vec();
+        let nn_s = self.sim.nn_latency_s(self.nn_macs);
+
+        // confident enough -> resolve on device, no transmission
+        if max_confidence(&exit_logits) >= self.exit_threshold {
+            return Ok(LocalResult {
+                local_logits: exit_logits,
+                frame: None,
+                timings: DeviceTimings { nn_compute_s: nn_s, ..Default::default() },
+                exited_early: true,
+            });
+        }
+
+        let frame = self.tx.encode(feats.data());
+        let timings = DeviceTimings {
+            nn_compute_s: nn_s,
+            quantize_s: self.sim.quantize_latency_s(feats.len()),
+            compress_s: self
+                .sim
+                .compress_latency_s((feats.len() * self.tx.codebook().bits() as usize + 7) / 8),
+        };
+        Ok(LocalResult {
+            local_logits: exit_logits,
+            frame: Some(frame),
+            timings,
+            exited_early: false,
+        })
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        self.mem
+    }
+}
+
+/// MCUNet device half: full local inference, never offloads.
+pub struct McunetDevice {
+    exe: Arc<Executable>,
+    sim: DeviceSim,
+    nn_macs: u64,
+    mem: MemoryReport,
+}
+
+impl McunetDevice {
+    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+        ensure!(cfg.scheme == Scheme::Mcunet, "wrong scheme for McunetDevice");
+        Ok(Self {
+            exe: engine.load_artifact(&cfg.dataset_dir(), "mcunet_local_b1")?,
+            sim: DeviceSim::new(cfg.device.clone()),
+            nn_macs: meta.macs.mcunet_local,
+            mem: memory_report_for(cfg, meta, Scheme::Mcunet),
+        })
+    }
+}
+
+impl DeviceSide for McunetDevice {
+    fn scheme(&self) -> Scheme {
+        Scheme::Mcunet
+    }
+
+    fn encode(&mut self, image: &Tensor) -> Result<LocalResult> {
+        let outputs = self.exe.run(std::slice::from_ref(image))?;
+        ensure!(!outputs.is_empty(), "mcunet artifact yields (logits,)");
+        Ok(LocalResult {
+            local_logits: outputs[0].data().to_vec(),
+            frame: None,
+            timings: DeviceTimings {
+                nn_compute_s: self.sim.nn_latency_s(self.nn_macs),
+                ..Default::default()
+            },
+            exited_early: false,
+        })
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        self.mem
+    }
+}
+
+/// Edge-only device half: no NN on device, LZW-compressed raw image uplink.
+pub struct EdgeDevice {
+    sim: DeviceSim,
+    mem: MemoryReport,
+}
+
+impl EdgeDevice {
+    pub fn new(cfg: &RunConfig, meta: &Meta) -> Self {
+        Self {
+            sim: DeviceSim::new(cfg.device.clone()),
+            mem: memory_report_for(cfg, meta, Scheme::EdgeOnly),
+        }
+    }
+}
+
+impl DeviceSide for EdgeDevice {
+    fn scheme(&self) -> Scheme {
+        Scheme::EdgeOnly
+    }
+
+    fn encode(&mut self, image: &Tensor) -> Result<LocalResult> {
+        // quantize f32 [0,1] image to u8 and LZW it; an 8-bit "codebook"
+        // frame whose count is the raw byte length
+        let raw: Vec<u8> = image.data().iter().map(|&v| (v * 255.0) as u8).collect();
+        let payload = lzw::compress(&raw);
+        let timings = DeviceTimings {
+            compress_s: self.sim.compress_latency_s(raw.len()),
+            ..Default::default()
+        };
+        Ok(LocalResult {
+            local_logits: Vec::new(),
+            frame: Some(Frame { payload, count: raw.len(), bits: 8 }),
+            timings,
+            exited_early: false,
+        })
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        self.mem
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheme dispatch
+// ---------------------------------------------------------------------------
+
+/// Device half for `cfg.scheme`.
+pub fn make_device_side(
+    engine: &Engine,
+    cfg: &RunConfig,
+    meta: &Meta,
+) -> Result<Box<dyn DeviceSide>> {
+    Ok(match cfg.scheme {
+        Scheme::Agile => Box::new(AgileDevice::new(engine, cfg, meta)?),
+        Scheme::Deepcod => Box::new(DeepcodDevice::new(engine, cfg, meta)?),
+        Scheme::Spinn => Box::new(SpinnDevice::new(engine, cfg, meta)?),
+        Scheme::Mcunet => Box::new(McunetDevice::new(engine, cfg, meta)?),
+        Scheme::EdgeOnly => Box::new(EdgeDevice::new(cfg, meta)),
+    })
+}
+
+/// Server half for `cfg.scheme`; `None` for fully-local schemes, which
+/// never enter the batcher.
+pub fn make_server_side(
+    engine: &Engine,
+    cfg: &RunConfig,
+    meta: &Meta,
+) -> Result<Option<Box<dyn ServerSide>>> {
+    Ok(match cfg.scheme {
+        Scheme::Mcunet => None,
+        _ => Some(Box::new(RemoteServer::new(engine, cfg, meta)?)),
+    })
+}
+
+/// Fusion step for `cfg.scheme` (honours `cfg.alpha_override` for AgileNN).
+pub fn make_fuser(cfg: &RunConfig, meta: &Meta) -> Result<Box<dyn Fuser>> {
+    Ok(match cfg.scheme {
+        Scheme::Agile => Box::new(AlphaFuser::new(cfg.alpha_override.unwrap_or(meta.alpha))?),
+        Scheme::Mcunet => Box::new(LocalArgmaxFuser),
+        Scheme::Deepcod | Scheme::Spinn | Scheme::EdgeOnly => Box::new(RemoteArgmaxFuser),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn local(logits: Vec<f32>, exited: bool) -> LocalResult {
+        LocalResult {
+            local_logits: logits,
+            frame: None,
+            timings: DeviceTimings::default(),
+            exited_early: exited,
+        }
+    }
+
+    #[test]
+    fn alpha_fuser_matches_combiner() {
+        let f = AlphaFuser::new(0.3).unwrap();
+        let l = local(vec![10.0, 0.0], false);
+        // 0.3*10 + 0.7*0 = 3 vs 0.3*0 + 0.7*10 = 7 -> class 1
+        assert_eq!(f.fuse(&l, Some(&[0.0, 10.0])).unwrap(), 1);
+        // no remote: local head alone
+        assert_eq!(f.fuse(&l, None).unwrap(), 0);
+    }
+
+    #[test]
+    fn remote_argmax_prefers_remote_then_local() {
+        let f = RemoteArgmaxFuser;
+        let l = local(vec![0.0, 5.0], true);
+        assert_eq!(f.fuse(&l, Some(&[9.0, 0.0, 1.0])).unwrap(), 0);
+        assert_eq!(f.fuse(&l, None).unwrap(), 1);
+        assert!(f.fuse(&local(Vec::new(), false), None).is_err());
+    }
+
+    #[test]
+    fn local_argmax_requires_logits() {
+        let f = LocalArgmaxFuser;
+        assert_eq!(f.fuse(&local(vec![1.0, 3.0, 2.0], false), None).unwrap(), 1);
+        assert!(f.fuse(&local(Vec::new(), false), None).is_err());
+    }
+
+    #[test]
+    fn tx_bytes_zero_without_frame() {
+        assert_eq!(local(vec![1.0], false).tx_bytes(), 0);
+        let with_frame = LocalResult {
+            local_logits: Vec::new(),
+            frame: Some(Frame { payload: vec![1, 2, 3], count: 3, bits: 8 }),
+            timings: DeviceTimings::default(),
+            exited_early: false,
+        };
+        assert_eq!(with_frame.tx_bytes(), 3 + 4);
+    }
+
+    #[test]
+    fn reply_bytes_scale_with_classes() {
+        assert_eq!(reply_bytes(10), 48);
+        assert!(reply_bytes(100) > reply_bytes(10));
+    }
+}

@@ -1,0 +1,560 @@
+//! `ServeBuilder` → [`Service`] → [`OutcomeStream`]: the scheme-agnostic
+//! multi-device serving pipeline.
+//!
+//! N simulated sensor devices stream requests through a shared remote
+//! server with deadline-driven dynamic batching (vLLM-router topology),
+//! built on std threads + channels — the build environment vendors no
+//! async runtime, and the server loop's recv_timeout + deadline poll is
+//! exactly the select it needs.
+//!
+//! Every scheme runs through the same loop: its [`DeviceSide`] decides per
+//! request whether an uplink frame exists (local-only schemes and SPINN
+//! early exits bypass the batcher entirely), offloaded frames share the
+//! deadline-batched [`ServerSide`] loop, and a [`Fuser`] produces the
+//! final prediction. Per-request [`ServedOutcome`]s stream out of the
+//! pipeline as they complete, so metrics sinks, CLI progress output, and
+//! figure sweeps all consume one source of truth.
+//!
+//! [`DeviceSide`]: super::scheme::DeviceSide
+//! [`ServerSide`]: super::scheme::ServerSide
+//! [`Fuser`]: super::scheme::Fuser
+
+use crate::baselines::RequestOutcome;
+use crate::compression::Frame;
+use crate::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
+use crate::coordinator::batcher::{BatchQueue, Pending};
+use crate::metrics::{AccuracyCounter, LatencyStats};
+use crate::runtime::Engine;
+use crate::serve::scheme::{
+    assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
+};
+use crate::simulator::{DeviceProfile, DeviceSim, NetworkProfile, NetworkSim};
+use crate::tensor::Tensor;
+use crate::workload::{Arrival, TestSet};
+use anyhow::{anyhow, ensure, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Aggregate report from a pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub accuracy: f64,
+    pub mean_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub mean_batch_size: f64,
+    pub batches: usize,
+}
+
+/// One per-request outcome as it streams out of the live pipeline.
+#[derive(Debug, Clone)]
+pub struct ServedOutcome {
+    /// Request id (global; assigned round-robin across devices).
+    pub id: u64,
+    /// Index of the simulated device that served it.
+    pub device: usize,
+    /// Live wall-clock latency through the threaded pipeline, including
+    /// batch queueing — as opposed to `outcome.breakdown`, which carries
+    /// the simulated device/network accounting.
+    pub wall_s: f64,
+    pub outcome: RequestOutcome,
+}
+
+/// Server-side failure delivered to the waiting device thread, so its
+/// error names the remote cause instead of a bare "reply dropped".
+#[derive(Debug, Clone)]
+pub struct RemoteFailure(pub String);
+
+type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
+
+/// One in-flight offload awaiting its remote logits.
+struct OffloadMsg {
+    id: u64,
+    frame: Frame,
+    reply: Sender<Reply>,
+}
+
+/// Builder for a scheme-agnostic serving [`Service`].
+///
+/// Replaces the pre-redesign pattern of hand-mutating [`RunConfig`] fields
+/// and calling `run_pipeline(cfg, meta, testset, n_devices, n_requests,
+/// arrival)`: every knob is a builder method, and `build()` loads the
+/// trained metadata and test set from the artifacts tree.
+#[derive(Debug, Clone)]
+pub struct ServeBuilder {
+    artifacts_dir: PathBuf,
+    dataset: String,
+    scheme: Scheme,
+    devices: usize,
+    requests: usize,
+    arrival: Arrival,
+    max_batch: usize,
+    batch_deadline_us: u64,
+    bits: u32,
+    alpha: Option<f64>,
+    device_profile: Option<DeviceProfile>,
+    network_profile: Option<NetworkProfile>,
+}
+
+impl ServeBuilder {
+    pub fn new(dataset: impl Into<String>) -> Self {
+        Self {
+            artifacts_dir: default_artifacts_dir(),
+            dataset: dataset.into(),
+            scheme: Scheme::Agile,
+            devices: 1,
+            requests: 64,
+            arrival: Arrival::Periodic { hz: 1e9 },
+            max_batch: 8,
+            batch_deadline_us: 2000,
+            bits: 4,
+            alpha: None,
+            device_profile: None,
+            network_profile: None,
+        }
+    }
+
+    /// Artifacts directory (default: `$AGILENN_ARTIFACTS` or `./artifacts`).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Serving scheme; every scheme runs through the same batched pipeline.
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Number of concurrent simulated sensor devices.
+    pub fn devices(mut self, n: usize) -> Self {
+        self.devices = n;
+        self
+    }
+
+    /// Total requests, assigned round-robin across devices.
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    /// Per-device inter-arrival process.
+    pub fn arrival(mut self, arrival: Arrival) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Convenience: Poisson arrivals at `hz` per device, or unpaced
+    /// (back-to-back) when `hz <= 0`.
+    pub fn rate_hz(mut self, hz: f64) -> Self {
+        self.arrival = if hz > 0.0 {
+            Arrival::Poisson { hz, seed: 42 }
+        } else {
+            Arrival::Periodic { hz: 1e9 }
+        };
+        self
+    }
+
+    /// Dynamic batcher: max batch (must be an exported remote batch size).
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.max_batch = b;
+        self
+    }
+
+    /// Dynamic batcher: max queueing delay before dispatch.
+    pub fn batch_deadline_us(mut self, us: u64) -> Self {
+        self.batch_deadline_us = us;
+        self
+    }
+
+    /// Quantizer bit width for transmitted features.
+    pub fn bits(mut self, bits: u32) -> Self {
+        self.bits = bits;
+        self
+    }
+
+    /// Override the trained alpha (AgileNN §3.3 runtime re-weighting).
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.alpha = Some(alpha);
+        self
+    }
+
+    /// Device cost-model profile (default: STM32F746).
+    pub fn device_profile(mut self, profile: DeviceProfile) -> Self {
+        self.device_profile = Some(profile);
+        self
+    }
+
+    /// Wireless-link profile (default: 6 Mbps WiFi).
+    pub fn network_profile(mut self, profile: NetworkProfile) -> Self {
+        self.network_profile = Some(profile);
+        self
+    }
+
+    /// The [`RunConfig`] this builder resolves to (without touching disk).
+    pub fn to_config(&self) -> RunConfig {
+        let mut cfg = RunConfig::new(self.artifacts_dir.clone(), &self.dataset, self.scheme);
+        cfg.bits = self.bits;
+        cfg.alpha_override = self.alpha;
+        cfg.max_batch = self.max_batch;
+        cfg.batch_deadline_us = self.batch_deadline_us;
+        if let Some(p) = &self.device_profile {
+            cfg.device = p.clone();
+        }
+        if let Some(p) = &self.network_profile {
+            cfg.network = p.clone();
+        }
+        cfg
+    }
+
+    /// Load the trained metadata + test set and assemble the [`Service`].
+    pub fn build(self) -> Result<Service> {
+        let cfg = self.to_config();
+        let meta = Meta::load(&cfg.dataset_dir())?;
+        let testset = Arc::new(TestSet::load(&cfg.dataset_dir().join("test.bin"))?);
+        Service::from_parts(cfg, meta, testset, self.devices, self.requests, self.arrival)
+    }
+}
+
+/// A fully-assembled serving setup, ready to run (or stream).
+pub struct Service {
+    cfg: RunConfig,
+    meta: Meta,
+    testset: Arc<TestSet>,
+    devices: usize,
+    requests: usize,
+    arrival: Arrival,
+}
+
+impl Service {
+    /// Assemble a service from already-loaded parts ([`ServeBuilder::build`]
+    /// loads them from the artifacts tree; sweeps that cache `Meta`/test
+    /// sets use this directly).
+    pub fn from_parts(
+        cfg: RunConfig,
+        meta: Meta,
+        testset: Arc<TestSet>,
+        devices: usize,
+        requests: usize,
+        arrival: Arrival,
+    ) -> Result<Self> {
+        ensure!(devices >= 1, "need at least one device");
+        ensure!(requests >= 1, "need at least one request");
+        ensure!(!testset.is_empty(), "empty test set");
+        Ok(Self { cfg, meta, testset, devices, requests, arrival })
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    pub fn meta(&self) -> &Meta {
+        &self.meta
+    }
+
+    /// Run to completion and return the aggregate report.
+    pub fn run(self) -> Result<PipelineReport> {
+        self.stream()?.finish()
+    }
+
+    /// Start the pipeline and return a streaming handle over per-request
+    /// outcomes. Dropping the stream without `finish()` is safe: device
+    /// threads stop producing once the receiver is gone and every worker
+    /// winds down.
+    pub fn stream(self) -> Result<OutcomeStream> {
+        let engine = Arc::new(Engine::cpu()?);
+        let server = make_server_side(&engine, &self.cfg, &self.meta)?;
+        // some schemes export fewer remote batch sizes (edge-only: max 4)
+        let max_batch = match &server {
+            Some(s) => self.cfg.max_batch.min(s.max_batch()),
+            None => self.cfg.max_batch,
+        };
+        let deadline = Duration::from_micros(self.cfg.batch_deadline_us);
+
+        let (tx_offload, server_handle) = match server {
+            Some(server) => {
+                let (tx, rx) = channel::<OffloadMsg>();
+                let handle =
+                    std::thread::spawn(move || server_loop(server, rx, max_batch, deadline));
+                (Some(tx), Some(handle))
+            }
+            None => (None, None),
+        };
+
+        let (tx_done, rx_done) = channel::<ServedOutcome>();
+        let t_start = Instant::now();
+        let mut device_handles = Vec::new();
+        for d in 0..self.devices {
+            let cfg = self.cfg.clone();
+            let meta = self.meta.clone();
+            let engine = engine.clone();
+            let testset = self.testset.clone();
+            let tx_offload = tx_offload.clone();
+            let tx_done = tx_done.clone();
+            let ids: Vec<usize> = (0..self.requests).filter(|i| i % self.devices == d).collect();
+            let times = self.arrival.timestamps(ids.len());
+            device_handles.push(std::thread::spawn(move || {
+                device_loop(d, &engine, &cfg, &meta, &testset, &ids, &times, tx_offload, tx_done)
+            }));
+        }
+        drop(tx_offload);
+        drop(tx_done);
+
+        Ok(OutcomeStream {
+            rx: rx_done,
+            device_handles,
+            server_handle,
+            t_start,
+            acc: AccuracyCounter::default(),
+            lat: LatencyStats::new(),
+        })
+    }
+}
+
+/// Streaming handle over a running [`Service`]: iterate per-request
+/// outcomes as devices finish them, then call [`OutcomeStream::finish`]
+/// for the aggregate [`PipelineReport`].
+pub struct OutcomeStream {
+    rx: Receiver<ServedOutcome>,
+    device_handles: Vec<JoinHandle<Result<()>>>,
+    server_handle: Option<JoinHandle<(usize, usize)>>,
+    t_start: Instant,
+    acc: AccuracyCounter,
+    lat: LatencyStats,
+}
+
+impl Iterator for OutcomeStream {
+    type Item = ServedOutcome;
+
+    fn next(&mut self) -> Option<ServedOutcome> {
+        match self.rx.recv() {
+            Ok(out) => {
+                self.acc.record(out.outcome.correct);
+                self.lat.record(out.wall_s);
+                Some(out)
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+impl OutcomeStream {
+    /// Drain any remaining outcomes, join the worker threads, and return
+    /// the aggregate report. Worker errors (device or server) surface here.
+    pub fn finish(mut self) -> Result<PipelineReport> {
+        while self.next().is_some() {}
+        for h in self.device_handles.drain(..) {
+            h.join().map_err(|_| anyhow!("device thread panicked"))??;
+        }
+        let (total_batched, batches) = match self.server_handle.take() {
+            Some(h) => h.join().map_err(|_| anyhow!("server thread panicked"))?,
+            None => (0, 0),
+        };
+        let wall = self.t_start.elapsed().as_secs_f64();
+        Ok(PipelineReport {
+            requests: self.acc.total,
+            wall_s: wall,
+            throughput_rps: self.acc.total as f64 / wall,
+            accuracy: self.acc.accuracy(),
+            mean_latency_s: self.lat.mean_s(),
+            p95_latency_s: self.lat.p95(),
+            mean_batch_size: if batches == 0 {
+                0.0
+            } else {
+                total_batched as f64 / batches as f64
+            },
+            batches,
+        })
+    }
+}
+
+/// The shared deadline-batched server loop. Decode failures and batch
+/// failures are propagated to the waiting device threads as explicit
+/// [`RemoteFailure`] replies, never silently dropped.
+fn server_loop(
+    mut server: Box<dyn ServerSide>,
+    rx: Receiver<OffloadMsg>,
+    max_batch: usize,
+    deadline: Duration,
+) -> (usize, usize) {
+    let mut queue: BatchQueue<(Tensor, Sender<Reply>)> = BatchQueue::new(max_batch, deadline);
+    let mut total_batched = 0usize;
+    let mut batches = 0usize;
+    let mut run_batch =
+        |batch: Vec<Pending<(Tensor, Sender<Reply>)>>, server: &mut dyn ServerSide| {
+            let feats: Vec<_> = batch.iter().map(|p| p.payload.0.clone()).collect();
+            match server.infer_batch(&feats) {
+                Ok(rows) => {
+                    total_batched += batch.len();
+                    batches += 1;
+                    for (p, row) in batch.into_iter().zip(rows) {
+                        let _ = p.payload.1.send(Ok(row));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("remote batch of {} failed: {e:#}", batch.len());
+                    eprintln!("{msg}");
+                    for p in batch {
+                        let _ = p.payload.1.send(Err(RemoteFailure(msg.clone())));
+                    }
+                }
+            }
+        };
+    loop {
+        let wait = queue.next_deadline_in(Instant::now()).unwrap_or(Duration::from_secs(3600));
+        match rx.recv_timeout(wait) {
+            Ok(m) => {
+                let feats = match server.decode(&m.frame) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        let _ = m
+                            .reply
+                            .send(Err(RemoteFailure(format!("decoding request {}: {e:#}", m.id))));
+                        continue;
+                    }
+                };
+                if let Some(batch) = queue.push(m.id, (feats, m.reply), Instant::now()) {
+                    run_batch(batch, server.as_mut());
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = queue.poll_deadline(Instant::now()) {
+                    run_batch(batch, server.as_mut());
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let tail = queue.flush();
+    if !tail.is_empty() {
+        run_batch(tail, server.as_mut());
+    }
+    (total_batched, batches)
+}
+
+/// One simulated device: build the scheme's device half + fuser, pace
+/// requests to the arrival process, offload frames when the scheme
+/// produces them, and stream each fused outcome.
+#[allow(clippy::too_many_arguments)]
+fn device_loop(
+    device_index: usize,
+    engine: &Engine,
+    cfg: &RunConfig,
+    meta: &Meta,
+    testset: &TestSet,
+    ids: &[usize],
+    times: &[f64],
+    tx_offload: Option<Sender<OffloadMsg>>,
+    tx_done: Sender<ServedOutcome>,
+) -> Result<()> {
+    let mut device = make_device_side(engine, cfg, meta)?;
+    let fuser = make_fuser(cfg, meta)?;
+    let dev_sim = DeviceSim::new(cfg.device.clone());
+    let net = NetworkSim::new(cfg.network.clone());
+    let t0 = Instant::now();
+    for (j, &i) in ids.iter().enumerate() {
+        // pace to the arrival process
+        let due = Duration::from_secs_f64(times[j]);
+        if let Some(sleep_for) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep_for);
+        }
+        let req_start = Instant::now();
+        let idx = i % testset.len();
+        let img = testset.image(idx)?;
+        let mut local = device.encode(&img)?;
+        let tx_bytes = local.tx_bytes();
+
+        let mut remote: Option<Vec<f32>> = None;
+        let mut remote_wall = 0.0f64;
+        if let Some(frame) = local.frame.take() {
+            let sender = tx_offload.as_ref().ok_or_else(|| {
+                anyhow!("{} produced an uplink frame but has no server half", cfg.scheme.name())
+            })?;
+            let (reply_tx, reply_rx) = channel();
+            let t_remote = Instant::now();
+            sender
+                .send(OffloadMsg { id: i as u64, frame, reply: reply_tx })
+                .map_err(|_| anyhow!("server thread gone"))?;
+            let row = reply_rx
+                .recv()
+                .map_err(|_| anyhow!("reply dropped for request {i}"))?
+                .map_err(|e| anyhow!("remote inference failed for request {i}: {}", e.0))?;
+            remote_wall = t_remote.elapsed().as_secs_f64();
+            remote = Some(row);
+        }
+        let outcome = assemble_outcome(
+            fuser.as_ref(),
+            &local,
+            remote.as_deref(),
+            testset.labels[idx],
+            tx_bytes,
+            remote_wall,
+            &dev_sim,
+            &net,
+            meta.num_classes,
+        )?;
+        let served = ServedOutcome {
+            id: i as u64,
+            device: device_index,
+            wall_s: req_start.elapsed().as_secs_f64(),
+            outcome,
+        };
+        if tx_done.send(served).is_err() {
+            break; // stream consumer gone; stop producing
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_maps_every_knob_onto_run_config() {
+        let cfg = ServeBuilder::new("svhns")
+            .artifacts_dir("/tmp/arts")
+            .scheme(Scheme::Deepcod)
+            .devices(4)
+            .requests(128)
+            .max_batch(4)
+            .batch_deadline_us(500)
+            .bits(2)
+            .alpha(0.7)
+            .network_profile(NetworkProfile::ble_270kbps())
+            .device_profile(DeviceProfile::stm32h743())
+            .to_config();
+        assert_eq!(cfg.dataset, "svhns");
+        assert_eq!(cfg.scheme, Scheme::Deepcod);
+        assert_eq!(cfg.max_batch, 4);
+        assert_eq!(cfg.batch_deadline_us, 500);
+        assert_eq!(cfg.bits, 2);
+        assert_eq!(cfg.alpha_override, Some(0.7));
+        assert_eq!(cfg.network.name, "BLE-270kbps");
+        assert_eq!(cfg.device.name, "STM32H743");
+        assert!(cfg.dataset_dir().ends_with("arts/svhns"));
+    }
+
+    #[test]
+    fn builder_defaults_match_run_config_defaults() {
+        let cfg = ServeBuilder::new("x").to_config();
+        let base = RunConfig::new(cfg.artifacts_dir.clone(), "x", Scheme::Agile);
+        assert_eq!(cfg.bits, base.bits);
+        assert_eq!(cfg.max_batch, base.max_batch);
+        assert_eq!(cfg.batch_deadline_us, base.batch_deadline_us);
+        assert_eq!(cfg.alpha_override, None);
+    }
+
+    #[test]
+    fn rate_hz_selects_arrival_process() {
+        let b = ServeBuilder::new("x").rate_hz(30.0);
+        assert!(matches!(b.arrival, Arrival::Poisson { hz, .. } if hz == 30.0));
+        let b = ServeBuilder::new("x").rate_hz(0.0);
+        assert!(matches!(b.arrival, Arrival::Periodic { .. }));
+    }
+}

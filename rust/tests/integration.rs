@@ -6,8 +6,9 @@
 
 use agilenn::baselines::{make_runner, AgileRunner, SchemeRunner};
 use agilenn::config::{default_artifacts_dir, Manifest, Meta, RunConfig, Scheme};
-use agilenn::coordinator::{run_pipeline, DeviceRuntime, RemoteServer};
+use agilenn::coordinator::{DeviceRuntime, RemoteServer};
 use agilenn::runtime::Engine;
+use agilenn::serve::{ServeBuilder, Service};
 use agilenn::workload::{Arrival, TestSet};
 use std::sync::Arc;
 
@@ -184,19 +185,97 @@ fn offline_fallback_runs_without_network() {
 #[test]
 fn pipeline_serves_all_requests() {
     let c = require_artifacts!();
-    let rep = run_pipeline(
-        &c.cfg,
-        &c.meta,
+    let rep = Service::from_parts(
+        c.cfg.clone(),
+        c.meta.clone(),
         Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
         3,
         24,
         Arrival::Poisson { hz: 200.0, seed: 7 },
     )
+    .unwrap()
+    .run()
     .unwrap();
     assert_eq!(rep.requests, 24);
     assert!(rep.throughput_rps > 0.0);
     assert!(rep.mean_batch_size >= 1.0);
     assert!(rep.batches >= 3); // at least one per device's first send
+}
+
+#[test]
+fn serve_runs_all_five_schemes_through_the_batched_pipeline() {
+    // the redesign's acceptance bar: every scheme (not just agile)
+    // completes N requests through the multi-device batched Service
+    let c = require_artifacts!();
+    let n = 12;
+    for scheme in Scheme::all() {
+        let rep = ServeBuilder::new(&c.cfg.dataset)
+            .artifacts_dir(c.cfg.artifacts_dir.clone())
+            .scheme(scheme)
+            .devices(2)
+            .requests(n)
+            .rate_hz(500.0)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(rep.requests, n, "{}", scheme.name());
+        assert!(rep.throughput_rps > 0.0, "{}", scheme.name());
+        assert!(rep.accuracy > 0.0, "{}", scheme.name());
+        match scheme {
+            // local-only requests never touch the batcher
+            Scheme::Mcunet => assert_eq!(rep.batches, 0, "{}", scheme.name()),
+            // offloading schemes must have batched something
+            Scheme::Agile | Scheme::Deepcod | Scheme::EdgeOnly => {
+                assert!(rep.batches > 0, "{}", scheme.name())
+            }
+            Scheme::Spinn => {} // batches depend on the early-exit rate
+        }
+    }
+}
+
+#[test]
+fn streaming_outcomes_are_observable_per_request() {
+    let c = require_artifacts!();
+    let n = 16;
+    let mut stream = ServeBuilder::new(&c.cfg.dataset)
+        .artifacts_dir(c.cfg.artifacts_dir.clone())
+        .scheme(Scheme::Agile)
+        .devices(2)
+        .requests(n)
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap();
+    let mut ids = std::collections::HashSet::new();
+    let mut count = 0;
+    for out in stream.by_ref() {
+        assert!(ids.insert(out.id), "duplicate outcome id {}", out.id);
+        assert!(out.device < 2);
+        assert!(out.wall_s > 0.0);
+        assert!(out.outcome.tx_bytes > 0); // agile always uplinks
+        assert!(out.outcome.predicted < c.meta.num_classes);
+        count += 1;
+    }
+    assert_eq!(count, n);
+    let rep = stream.finish().unwrap();
+    assert_eq!(rep.requests, n);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_run_pipeline_shim_still_serves() {
+    let c = require_artifacts!();
+    let rep = agilenn::coordinator::run_pipeline(
+        &c.cfg,
+        &c.meta,
+        Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
+        2,
+        8,
+        Arrival::Periodic { hz: 1e9 },
+    )
+    .unwrap();
+    assert_eq!(rep.requests, 8);
 }
 
 #[test]
