@@ -1,13 +1,18 @@
-//! Degraded-network scenario (paper §7.6 + §9 "extreme network
-//! conditions"): sweep the link from 6 Mbps WiFi down to a 270 kbps
-//! BLE-class radio via the serve builder's network profile, then cut the
-//! link entirely and fall back to local-only prediction from the top-k
-//! important features.
+//! Degraded-network scenarios (paper §7.6 + §9 "extreme network
+//! conditions"), end to end through the `agilenn::net` channel subsystem:
+//!
+//! 1. bandwidth sweep — 6 Mbps WiFi down to a 270 kbps BLE-class radio;
+//! 2. loss sweep — Gilbert–Elliott bursty packet loss at 0/10/30/50%,
+//!    comparing ARQ (retransmit until complete: latency pays) against the
+//!    deadline-bounded anytime transport with importance-ordered vs naive
+//!    packets (accuracy pays, gracefully);
+//! 3. link down — local-only fallback from the top-k important features.
 //!
 //!     cargo run --release --example degraded_network [dataset]
 
 use agilenn::baselines::AgileRunner;
 use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
+use agilenn::net::{DeliveryPolicy, GilbertElliott, PacketOrder};
 use agilenn::runtime::Engine;
 use agilenn::serve::ServeBuilder;
 use agilenn::simulator::NetworkProfile;
@@ -50,6 +55,44 @@ fn main() -> Result<()> {
         );
     }
 
+    // lossy link: ARQ pays latency, anytime pays (a little) accuracy —
+    // least when the most important features ship first. Same seed across
+    // configurations: the comparison is paired packet for packet.
+    println!("\npacket-loss sweep (bursty, mean burst 4 pkts; anytime deadline 3 ms):");
+    for loss in [0.0, 0.1, 0.3, 0.5] {
+        for (label, delivery, order) in [
+            ("arq        ", DeliveryPolicy::Arq, PacketOrder::Importance),
+            (
+                "anytime/imp",
+                DeliveryPolicy::Anytime { deadline_s: 3e-3 },
+                PacketOrder::Importance,
+            ),
+            ("anytime/idx", DeliveryPolicy::Anytime { deadline_s: 3e-3 }, PacketOrder::Index),
+        ] {
+            let rep = ServeBuilder::new(&dataset)
+                .scheme(Scheme::Agile)
+                .devices(1)
+                .requests(n)
+                .max_batch(1)
+                .loss(GilbertElliott::bursty(loss, 4.0))
+                .delivery(delivery)
+                .packet_order(order)
+                .packet_payload(64)
+                .net_seed(42)
+                .build()?
+                .run()?;
+            println!(
+                "  loss {:>3.0}% {label}: accuracy {:>5.1}%, link p99 {:>6.2} ms, \
+                 features {:>5.1}%, {} retx rounds",
+                loss * 100.0,
+                rep.accuracy * 100.0,
+                rep.p99_net_s * 1e3,
+                rep.delivered_feature_rate * 100.0,
+                rep.retransmit_rounds
+            );
+        }
+    }
+
     // link down: local-only fallback (§9) — most important features are local
     let base = RunConfig::new(default_artifacts_dir(), &dataset, Scheme::Agile);
     let meta = Meta::load(&base.dataset_dir())?;
@@ -64,7 +107,7 @@ fn main() -> Result<()> {
         correct += out.correct as usize;
     }
     println!(
-        "  link DOWN    : mean latency {:6.2} ms, accuracy {:.1}% (local top-k only)",
+        "\n  link DOWN    : mean latency {:6.2} ms, accuracy {:.1}% (local top-k only)",
         total / n as f64 * 1e3,
         100.0 * correct as f64 / n as f64
     );

@@ -6,6 +6,8 @@ hypothesis sweeps shapes; tolerances are f32-accumulation-order level.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dev-dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import extractor_conv as ek

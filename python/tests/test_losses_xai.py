@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev-dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from compile import losses, models, xai

@@ -1,6 +1,9 @@
 """Quantizer + synthetic-dataset tests."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev-dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from compile import data, quantize

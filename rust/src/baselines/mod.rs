@@ -13,6 +13,7 @@ pub use runners::{AgileRunner, ComposedRunner};
 
 use crate::config::{Meta, RunConfig, Scheme};
 use crate::metrics::{EnergyLedger, LatencyBreakdown};
+use crate::net::NetStats;
 use crate::runtime::Engine;
 use crate::simulator::MemoryReport;
 use crate::tensor::Tensor;
@@ -27,6 +28,9 @@ pub struct RequestOutcome {
     pub energy: EnergyLedger,
     /// application-layer uplink payload bytes (0 for local-only schemes)
     pub tx_bytes: usize,
+    /// transport accounting over the simulated channel (zeroed for
+    /// local-only requests; `complete` on the ideal synchronous path)
+    pub net: NetStats,
     /// SPINN: request resolved at the on-device early exit
     pub exited_early: bool,
 }

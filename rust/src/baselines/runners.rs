@@ -52,6 +52,7 @@ impl ComposedRunner {
         let mut local = self.device.encode(image)?;
         if !offload {
             local.frame = None;
+            local.symbols = None;
             local.timings.quantize_s = 0.0;
             local.timings.compress_s = 0.0;
             local.exited_early = true;
@@ -81,6 +82,7 @@ impl ComposedRunner {
             remote_wall,
             &self.dev,
             &self.net,
+            None, // synchronous benches stay on the exact ideal-link pricing
             self.num_classes,
         )
     }

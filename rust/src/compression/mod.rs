@@ -49,6 +49,13 @@ impl TxEncoder {
         let packed = quantizer::bitpack(&self.idx_scratch, bits);
         Frame { payload: lzw::compress(&packed), count: values.len(), bits }
     }
+
+    /// Quantized symbol indices of the last [`TxEncoder::encode`] call —
+    /// the per-packet transport (`crate::net`) re-chunks these so each
+    /// packet decodes independently.
+    pub fn symbols(&self) -> &[u8] {
+        &self.idx_scratch
+    }
 }
 
 /// Server-side receive path: LZW -> bitunpack -> dequantize.
@@ -59,6 +66,18 @@ pub struct RxDecoder {
 impl RxDecoder {
     pub fn new(codebook: Codebook) -> Self {
         Self { codebook }
+    }
+
+    pub fn codebook(&self) -> &Codebook {
+        &self.codebook
+    }
+
+    /// Dequantize an already-reassembled symbol stream (the partial-frame
+    /// receive path, where unpacking happened per packet).
+    pub fn dequantize_symbols(&self, symbols: &[u8]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.codebook.dequantize(symbols, &mut out);
+        out
     }
 
     pub fn decode(&self, frame: &Frame) -> Result<Vec<f32>> {

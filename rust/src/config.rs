@@ -3,6 +3,7 @@
 //! CLI flags.
 
 use crate::json::Value;
+use crate::net::NetConfig;
 use crate::simulator::{DeviceProfile, NetworkProfile};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -323,6 +324,9 @@ pub struct RunConfig {
     pub scheme: Scheme,
     pub device: DeviceProfile,
     pub network: NetworkProfile,
+    /// channel-facing knobs: loss model, bandwidth trace, delivery policy,
+    /// packet ordering, seed (defaults = the ideal pre-channel link)
+    pub net: NetConfig,
     /// quantizer bit width for transmitted features
     pub bits: u32,
     /// override the trained alpha (paper §3.3 runtime re-weighting)
@@ -341,6 +345,7 @@ impl RunConfig {
             scheme,
             device: DeviceProfile::stm32f746(),
             network: NetworkProfile::wifi_6mbps(),
+            net: NetConfig::default(),
             bits: 4,
             alpha_override: None,
             max_batch: 8,
@@ -361,7 +366,7 @@ pub fn default_artifacts_dir() -> PathBuf {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
 
     #[test]

@@ -5,6 +5,7 @@
 
 use crate::compression::{quantizer::Codebook, Frame, TxEncoder};
 use crate::config::{Meta, RunConfig, Scheme};
+use crate::net::DeliveryPolicy;
 use crate::runtime::{Engine, Executable};
 use crate::simulator::{DeviceSim, DeviceTimings};
 use crate::tensor::Tensor;
@@ -18,6 +19,11 @@ pub struct DeviceOutput {
     pub local_logits: Vec<f32>,
     /// Compressed less-important features, ready for the uplink.
     pub frame: Frame,
+    /// Quantized symbol stream behind `frame` (the packetized transport
+    /// re-chunks these so each packet decodes independently); captured
+    /// only when the delivery policy needs it — the copy stays off the
+    /// ARQ/bench hot path.
+    pub symbols: Option<Vec<u8>>,
     /// Raw remote-feature tensor shape (needed server-side to rebuild).
     pub remote_shape: Vec<usize>,
     /// Simulated device timings.
@@ -30,6 +36,8 @@ pub struct DeviceRuntime {
     sim: DeviceSim,
     nn_macs: u64,
     num_classes: usize,
+    /// anytime transport re-chunks the symbol stream; ARQ never reads it
+    capture_symbols: bool,
 }
 
 impl DeviceRuntime {
@@ -43,6 +51,7 @@ impl DeviceRuntime {
             sim: DeviceSim::new(cfg.device.clone()),
             nn_macs: meta.macs.agile_device,
             num_classes: meta.num_classes,
+            capture_symbols: matches!(cfg.net.delivery, DeliveryPolicy::Anytime { .. }),
         })
     }
 
@@ -56,6 +65,7 @@ impl DeviceRuntime {
         let remote_feats = &outputs[1];
 
         let frame = self.tx.encode(remote_feats.data());
+        let symbols = self.capture_symbols.then(|| self.tx.symbols().to_vec());
         let timings = DeviceTimings {
             nn_compute_s: self.sim.nn_latency_s(self.nn_macs),
             quantize_s: self.sim.quantize_latency_s(remote_feats.len()),
@@ -66,6 +76,7 @@ impl DeviceRuntime {
         Ok(DeviceOutput {
             local_logits,
             frame,
+            symbols,
             remote_shape: remote_feats.shape().to_vec(),
             timings,
         })

@@ -10,6 +10,7 @@
 use crate::compression::{lzw, quantizer::Codebook, Frame, RxDecoder};
 use crate::config::{Meta, RunConfig, Scheme};
 use crate::coordinator::batcher::REMOTE_BATCH_SIZES;
+use crate::net::{importance_order, reassemble_symbols, Packet, PacketOrder};
 use crate::runtime::{Engine, Executable};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
@@ -32,6 +33,13 @@ pub struct RemoteServer {
     decoder: FrameDecoder,
     input_shape: Vec<usize>, // (1, h, w, c)
     num_classes: usize,
+    /// shared transmit-order permutation for packetized frames (must match
+    /// the device's packetizer) — `None` = index order
+    tx_order: Option<Vec<u32>>,
+    /// imputation symbol for features missing from a partial frame: the
+    /// codeword nearest the stored reference activation (0.0 post-ReLU),
+    /// or black pixels for the raw-image path
+    fill_symbol: u8,
     /// wall-clock spent in remote NN execution (for perf accounting)
     pub exec_time: Duration,
     pub batches_run: usize,
@@ -76,12 +84,22 @@ impl RemoteServer {
         for &b in &sizes {
             exes.insert(b, engine.load_artifact(&cfg.dataset_dir(), &format!("{stem}_b{b}"))?);
         }
+        let tx_order = match cfg.net.order {
+            PacketOrder::Importance => importance_order(meta, cfg.scheme),
+            PacketOrder::Index => None,
+        };
+        let fill_symbol = match &decoder {
+            FrameDecoder::Features(rx) => rx.codebook().index_of(0.0),
+            FrameDecoder::RawImage => 0,
+        };
         Ok(Self {
             exes,
             sizes,
             decoder,
             input_shape,
             num_classes: meta.num_classes,
+            tx_order,
+            fill_symbol,
             exec_time: Duration::ZERO,
             batches_run: 0,
         })
@@ -111,6 +129,26 @@ impl RemoteServer {
         ensure!(
             values.len() == self.input_shape.iter().product::<usize>(),
             "frame decodes to {} values, expected shape {:?}",
+            values.len(),
+            self.input_shape
+        );
+        Tensor::new(self.input_shape.clone(), values)
+    }
+
+    /// Decode a (possibly partial) packetized frame into a unit-batch
+    /// input tensor: delivered packets are unpacked into place through the
+    /// shared transmit-order permutation, everything missing is imputed
+    /// with the stored reference symbol.
+    pub fn decode_packets(&self, packets: &[Packet], count: usize, bits: u32) -> Result<Tensor> {
+        let (symbols, _delivered) =
+            reassemble_symbols(packets, count, bits, self.fill_symbol, self.tx_order.as_deref())?;
+        let values: Vec<f32> = match &self.decoder {
+            FrameDecoder::Features(rx) => rx.dequantize_symbols(&symbols),
+            FrameDecoder::RawImage => symbols.iter().map(|&b| b as f32 / 255.0).collect(),
+        };
+        ensure!(
+            values.len() == self.input_shape.iter().product::<usize>(),
+            "packetized frame decodes to {} values, expected shape {:?}",
             values.len(),
             self.input_shape
         );

@@ -1,0 +1,137 @@
+//! Loss sweep (channel subsystem): AgileNN accuracy, p99 link latency and
+//! delivered-feature rate vs packet-loss rate, comparing the anytime
+//! transport with importance-ordered vs naive (index-ordered) packets and
+//! the ARQ whole-frame baseline.
+//!
+//! The anytime deadline is set *below* the one-pass serialization time, so
+//! the least-prioritized tail of every frame never ships: importance
+//! ordering then degrades gracefully (the dropped features are the ones
+//! XAI ranked least important, whose reference imputation is cheapest)
+//! while naive ordering drops an arbitrary index range. ARQ retransmits
+//! until complete — accuracy holds, latency pays. All three share the same
+//! channel seed, so the comparison is paired packet for packet.
+
+use super::common::{eval_n, serve_scheme, EvalCtx};
+use crate::config::Scheme;
+use crate::net::{DeliveryPolicy, GilbertElliott, PacketOrder, PACKET_HEADER_BYTES};
+use crate::report::{ms, pct, Table};
+use crate::serve::PipelineReport;
+use crate::workload::Arrival;
+use anyhow::Result;
+
+pub const LOSS_SWEEP: [f64; 4] = [0.0, 0.1, 0.3, 0.5];
+
+/// Anytime packet payload cap (app bytes, header included): small enough
+/// that an AgileNN frame spans ~a dozen packets, so ordering matters.
+const PAYLOAD_CAP: usize = 64;
+
+/// Fraction of the clean one-pass serialization time the anytime deadline
+/// allows: < 1.0 forces the transport to choose what ships.
+const DEADLINE_FRACTION: f64 = 0.75;
+
+struct TransportRow {
+    label: &'static str,
+    delivery: fn(deadline_s: f64) -> DeliveryPolicy,
+    order: PacketOrder,
+}
+
+fn anytime(deadline_s: f64) -> DeliveryPolicy {
+    DeliveryPolicy::Anytime { deadline_s }
+}
+
+fn arq(_deadline_s: f64) -> DeliveryPolicy {
+    DeliveryPolicy::Arq
+}
+
+const ROWS: [TransportRow; 3] = [
+    TransportRow { label: "anytime/importance", delivery: anytime, order: PacketOrder::Importance },
+    TransportRow { label: "anytime/naive", delivery: anytime, order: PacketOrder::Index },
+    TransportRow { label: "arq/whole-frame", delivery: arq, order: PacketOrder::Importance },
+];
+
+/// One-pass serialization time (+ one-way latency) for a packetized
+/// AgileNN uplink on `cfg`'s link: the anytime deadline anchors to this.
+fn packetized_uplink_s(cfg: &crate::config::RunConfig, tx_elements: usize) -> f64 {
+    let bits = cfg.bits.clamp(1, 8) as usize;
+    let syms_per_packet = ((PAYLOAD_CAP - PACKET_HEADER_BYTES) * 8 / bits).max(1);
+    let packets = tx_elements.div_ceil(syms_per_packet).max(1);
+    let payload_bytes = (tx_elements * bits).div_ceil(8) + packets * PACKET_HEADER_BYTES;
+    let wire_bytes = payload_bytes + packets * cfg.network.per_packet_overhead;
+    wire_bytes as f64 * 8.0 / cfg.network.bandwidth_bps + cfg.network.one_way_latency_s
+}
+
+fn run_point(
+    ctx: &EvalCtx,
+    ds: &str,
+    row: &TransportRow,
+    loss_rate: f64,
+    n: usize,
+) -> Result<PipelineReport> {
+    let meta = ctx.meta(ds)?;
+    let mut cfg = ctx.run_config(ds, Scheme::Agile);
+    cfg.max_batch = 1; // b1 executable everywhere: bitwise-stable logits
+    let deadline = DEADLINE_FRACTION * packetized_uplink_s(&cfg, meta.tx_elements(Scheme::Agile));
+    cfg.net.loss = if loss_rate > 0.0 {
+        GilbertElliott::bursty(loss_rate, 4.0)
+    } else {
+        GilbertElliott::lossless()
+    };
+    cfg.net.delivery = (row.delivery)(deadline);
+    cfg.net.order = row.order;
+    cfg.net.packet_payload = Some(PAYLOAD_CAP);
+    cfg.net.seed = 42; // shared across rows: paired loss patterns
+    serve_scheme(ctx, &cfg, 1, n, Arrival::Periodic { hz: 1e9 })
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    let Some(ds) = ctx.datasets.first() else {
+        return Ok(tables);
+    };
+    let n = eval_n();
+    let headers = ["transport", "0%", "10%", "30%", "50%"];
+    let mut acc = Table::new(
+        format!("Loss sweep [{ds}]: AgileNN accuracy vs packet loss ({n} reqs)"),
+        &headers,
+    );
+    let mut lat = Table::new(
+        format!("Loss sweep [{ds}]: p99 simulated link latency (ms)"),
+        &headers,
+    );
+    let mut feat = Table::new(
+        format!("Loss sweep [{ds}]: delivered-feature rate"),
+        &headers,
+    );
+    for row in &ROWS {
+        let mut acc_cells = vec![row.label.to_string()];
+        let mut lat_cells = vec![row.label.to_string()];
+        let mut feat_cells = vec![row.label.to_string()];
+        for loss_rate in LOSS_SWEEP {
+            let rep = run_point(ctx, ds, row, loss_rate, n)?;
+            acc_cells.push(pct(rep.accuracy));
+            lat_cells.push(ms(rep.p99_net_s));
+            feat_cells.push(format!("{:.3}", rep.delivered_feature_rate));
+        }
+        acc.row(acc_cells);
+        lat.row(lat_cells);
+        feat.row(feat_cells);
+    }
+    tables.push(acc);
+    tables.push(lat);
+    tables.push(feat);
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn deadline_anchor_is_below_the_whole_frame_arq_time_scale() {
+        let cfg = RunConfig::new("artifacts", "svhns", Scheme::Agile);
+        let t = packetized_uplink_s(&cfg, 1216);
+        // 1216 4-bit symbols in 64-byte packets on 6 Mbps WiFi: ~2-4 ms
+        assert!(t > 1e-3 && t < 1e-2, "uplink anchor {t}");
+    }
+}

@@ -10,10 +10,12 @@
 //!   with skewness manipulation (`python/compile/`), AOT-lowered to HLO
 //!   text.
 //! * **L3 (this crate, run time)** — the serving coordinator: device
-//!   runtime simulator, learned quantization + LZW transmit path, dynamic
-//!   remote batching, alpha-weighted prediction fusion, baseline schemes,
-//!   and the bench harness regenerating every figure/table in the paper's
-//!   evaluation. Python is never on the request path.
+//!   runtime simulator, learned quantization + LZW transmit path, a lossy
+//!   trace-driven channel with importance-ordered anytime transport
+//!   ([`net`]), dynamic remote batching, alpha-weighted prediction fusion,
+//!   baseline schemes, and the bench harness regenerating every
+//!   figure/table in the paper's evaluation. Python is never on the
+//!   request path.
 //!
 //! ## Quick start
 //!
@@ -56,6 +58,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod json;
 pub mod metrics;
+pub mod net;
 pub mod report;
 pub mod runtime;
 pub mod serve;

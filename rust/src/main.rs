@@ -8,6 +8,7 @@
 use agilenn::baselines::SchemeRunner;
 use agilenn::config::{default_artifacts_dir, Manifest, Meta, RunConfig, Scheme};
 use agilenn::experiments::{all_ids, run_figure, EvalCtx};
+use agilenn::net::{BandwidthTrace, DeliveryPolicy, GilbertElliott, PacketOrder};
 use agilenn::report::{ms, pct};
 use agilenn::runtime::Engine;
 use agilenn::serve::ServeBuilder;
@@ -79,6 +80,16 @@ COMMANDS:
              --devices 4 --requests 256 --rate-hz 30
              --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
              --quiet   (suppress streaming per-request progress)
+           channel (default: ideal link; all stochastic behavior is
+           deterministic in --net-seed):
+             --loss 0.3          packet-loss rate
+             --burst 4           mean loss-burst length (Gilbert-Elliott)
+             --delivery arq|anytime   uplink transport policy
+             --net-deadline-ms 5 anytime decode deadline
+             --order importance|index anytime packet ordering
+             --packet-payload N  anytime packet payload cap, bytes
+             --trace FILE        bandwidth trace (lines: duration_s bps)
+             --net-seed 42       channel loss-process seed
   infer    process one request, print the full breakdown
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --index 0 --bits 4 [--alpha 0.3]
@@ -121,6 +132,33 @@ fn main() -> Result<()> {
             if let Some(alpha) = args.get_opt_f64("alpha")? {
                 builder = builder.alpha(alpha);
             }
+            if let Some(loss) = args.get_opt_f64("loss")? {
+                let burst: f64 = args.get("burst", 1.0)?;
+                builder = builder.loss(if burst > 1.0 {
+                    GilbertElliott::bursty(loss, burst)
+                } else {
+                    GilbertElliott::uniform(loss)
+                });
+            }
+            let delivery = args.get_str("delivery", "arq");
+            match delivery.as_str() {
+                "arq" => builder = builder.delivery(DeliveryPolicy::Arq),
+                "anytime" => {
+                    let deadline_ms: f64 = args.get("net-deadline-ms", 5.0)?;
+                    builder = builder
+                        .delivery(DeliveryPolicy::Anytime { deadline_s: deadline_ms * 1e-3 });
+                }
+                other => bail!("unknown --delivery {other:?} (arq|anytime)"),
+            }
+            let order: PacketOrder = args.get("order", PacketOrder::Importance)?;
+            builder = builder.packet_order(order).net_seed(args.get("net-seed", 42u64)?);
+            if let Some(payload) = args.flags.get("packet-payload") {
+                builder = builder.packet_payload(payload.parse()?);
+            }
+            if let Some(path) = args.flags.get("trace") {
+                let trace = BandwidthTrace::from_file(std::path::Path::new(path))?;
+                builder = builder.bandwidth_trace(trace);
+            }
             let mut stream = builder.build()?.stream()?;
             let mut served = 0usize;
             for out in stream.by_ref() {
@@ -142,6 +180,18 @@ fn main() -> Result<()> {
             println!("  latency mean   : {} ms", ms(rep.mean_latency_s));
             println!("  latency p95    : {} ms", ms(rep.p95_latency_s));
             println!("  batches        : {} (mean size {:.2})", rep.batches, rep.mean_batch_size);
+            println!(
+                "  link           : {} pkts sent, {} lost, {} retx rounds",
+                rep.packets_sent, rep.packets_lost, rep.retransmit_rounds
+            );
+            println!(
+                "  link           : p99 {} ms, goodput {:.1} kbps, \
+                 features delivered {:.1}%, {} partial frames",
+                ms(rep.p99_net_s),
+                rep.goodput_bps / 1e3,
+                rep.delivered_feature_rate * 100.0,
+                rep.incomplete_frames
+            );
         }
         "infer" => {
             let dataset = args.get_str("dataset", "svhns");

@@ -1,0 +1,430 @@
+//! Lossy, trace-driven wireless channel: Gilbert–Elliott bursty packet
+//! loss + time-varying bandwidth from a replayable trace, with per-packet
+//! delivery timestamps.
+//!
+//! The zero-loss, constant-bandwidth special case ([`Channel::ideal`])
+//! reproduces the closed-form timing of the original `NetworkSim` exactly
+//! — `simulator::network` is reimplemented on top of this type so the two
+//! link models cannot drift. All randomness comes from a seeded xorshift64*
+//! generator: the same seed always yields the same loss pattern.
+
+use crate::simulator::NetworkProfile;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Deterministic xorshift64* PRNG (same family as `workload::Arrival`).
+#[derive(Debug, Clone)]
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1).
+    fn f64(&mut self) -> f64 {
+        (self.next() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// Two-state Gilbert–Elliott packet-loss model: a Good state with low loss
+/// and a Bad (burst) state with high loss, with per-packet state
+/// transitions. Captures the bursty losses of real wireless links that a
+/// single Bernoulli rate cannot.
+#[derive(Debug, Clone)]
+pub struct GilbertElliott {
+    /// P(Good -> Bad) after each packet
+    pub p_good_to_bad: f64,
+    /// P(Bad -> Good) after each packet
+    pub p_bad_to_good: f64,
+    /// per-packet loss probability while Good
+    pub loss_good: f64,
+    /// per-packet loss probability while Bad
+    pub loss_bad: f64,
+}
+
+impl GilbertElliott {
+    /// No loss at all (the ideal-link special case).
+    pub fn lossless() -> Self {
+        Self { p_good_to_bad: 0.0, p_bad_to_good: 1.0, loss_good: 0.0, loss_bad: 0.0 }
+    }
+
+    /// Independent (Bernoulli) loss at `rate` — no burstiness.
+    pub fn uniform(rate: f64) -> Self {
+        let rate = rate.clamp(0.0, 1.0);
+        Self { p_good_to_bad: 0.0, p_bad_to_good: 1.0, loss_good: rate, loss_bad: rate }
+    }
+
+    /// Bursty loss with stationary loss `rate` (clamped to 0.95) and mean
+    /// burst length `mean_burst` packets: the Bad state drops everything
+    /// and lasts `mean_burst` packets on average; `p_good_to_bad` is
+    /// solved so the stationary Bad-state probability equals `rate`. When
+    /// the requested burst length cannot reach `rate` (the solved
+    /// transition probability would exceed 1), the burst is stretched
+    /// instead, so the stationary loss rate is always honoured.
+    pub fn bursty(rate: f64, mean_burst: f64) -> Self {
+        let rate = rate.clamp(0.0, 0.95);
+        let mean_burst = mean_burst.max(1.0);
+        let mut p_bad_to_good = 1.0 / mean_burst;
+        let mut p_good_to_bad =
+            if rate <= 0.0 { 0.0 } else { rate * p_bad_to_good / (1.0 - rate) };
+        if p_good_to_bad > 1.0 {
+            p_good_to_bad = 1.0;
+            p_bad_to_good = (1.0 - rate) / rate;
+        }
+        Self { p_good_to_bad, p_bad_to_good, loss_good: 0.0, loss_bad: 1.0 }
+    }
+
+    /// True when this model can never drop a packet.
+    pub fn is_lossless(&self) -> bool {
+        self.loss_good <= 0.0 && (self.loss_bad <= 0.0 || self.p_good_to_bad <= 0.0)
+    }
+
+    /// Stationary expected packet-loss rate.
+    pub fn expected_loss_rate(&self) -> f64 {
+        let denom = self.p_good_to_bad + self.p_bad_to_good;
+        if denom <= 0.0 {
+            return self.loss_good;
+        }
+        let pi_bad = self.p_good_to_bad / denom;
+        (1.0 - pi_bad) * self.loss_good + pi_bad * self.loss_bad
+    }
+}
+
+/// Piecewise-constant bandwidth over time, replayed in a loop — e.g. a
+/// measured walk-through-a-building trace. Timestamps are seconds from the
+/// start of the run; the trace wraps at its total duration.
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// (duration_s, bandwidth_bps) segments, in order
+    segments: Vec<(f64, f64)>,
+    period_s: f64,
+}
+
+impl BandwidthTrace {
+    pub fn new(segments: Vec<(f64, f64)>) -> Result<Self> {
+        ensure!(!segments.is_empty(), "empty bandwidth trace");
+        for &(dur, bps) in &segments {
+            ensure!(dur > 0.0 && dur.is_finite(), "trace segment duration must be positive");
+            ensure!(bps > 0.0 && bps.is_finite(), "trace segment bandwidth must be positive");
+        }
+        let period_s = segments.iter().map(|s| s.0).sum();
+        Ok(Self { segments, period_s })
+    }
+
+    /// Single-segment constant-bandwidth trace.
+    pub fn constant(bps: f64) -> Self {
+        Self { segments: vec![(f64::INFINITY, bps)], period_s: f64::INFINITY }
+    }
+
+    /// Parse the trace text format: one `<duration_s> <bandwidth_bps>` pair
+    /// per line; blank lines and `#` comments are ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut segments = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let dur: f64 = it
+                .next()
+                .with_context(|| format!("trace line {}: missing duration", lineno + 1))?
+                .parse()
+                .with_context(|| format!("trace line {}: bad duration", lineno + 1))?;
+            let bps: f64 = it
+                .next()
+                .with_context(|| format!("trace line {}: missing bandwidth", lineno + 1))?
+                .parse()
+                .with_context(|| format!("trace line {}: bad bandwidth", lineno + 1))?;
+            ensure!(it.next().is_none(), "trace line {}: trailing tokens", lineno + 1);
+            segments.push((dur, bps));
+        }
+        Self::new(segments)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bandwidth trace {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Bandwidth in effect at absolute time `t` (trace wraps).
+    pub fn bandwidth_at(&self, t: f64) -> f64 {
+        let mut phase = if self.period_s.is_finite() { t.rem_euclid(self.period_s) } else { t };
+        for &(dur, bps) in &self.segments {
+            if phase < dur {
+                return bps;
+            }
+            phase -= dur;
+        }
+        self.segments.last().expect("non-empty trace").1
+    }
+
+    /// Time to serialize `bits` starting at absolute time `t0`, integrating
+    /// the piecewise-constant rate across segment boundaries and wraps.
+    pub fn transmit_s(&self, t0: f64, bits: f64) -> f64 {
+        if bits <= 0.0 {
+            return 0.0;
+        }
+        if !self.period_s.is_finite() {
+            return bits / self.segments[0].1; // constant-bandwidth trace
+        }
+        // locate the segment containing t0's phase
+        let mut seg = 0usize;
+        let mut off = t0.rem_euclid(self.period_s);
+        while seg < self.segments.len() && off >= self.segments[seg].0 {
+            off -= self.segments[seg].0;
+            seg += 1;
+        }
+        if seg == self.segments.len() {
+            // fp edge: phase rounded up to the period; wrap to the start
+            seg = 0;
+            off = 0.0;
+        }
+        let mut remaining = bits;
+        let mut elapsed = 0.0;
+        loop {
+            let (dur, bps) = self.segments[seg];
+            let seg_left = dur - off;
+            let can_send = bps * seg_left;
+            if can_send >= remaining {
+                return elapsed + remaining / bps;
+            }
+            remaining -= can_send;
+            elapsed += seg_left;
+            seg = (seg + 1) % self.segments.len();
+            off = 0.0;
+        }
+    }
+}
+
+/// Outcome of pushing one packet into the channel.
+#[derive(Debug, Clone, Copy)]
+pub struct PacketTx {
+    /// absolute time serialization finished (the radio frees up)
+    pub t_end: f64,
+    /// absolute arrival time at the receiver, `None` if the packet was lost
+    pub arrival_s: Option<f64>,
+}
+
+/// A seeded, deterministic lossy link: packetized serialization over a
+/// bandwidth trace, Gilbert–Elliott loss, and a fixed one-way latency.
+///
+/// Pure-timing queries (`transfer_s`, `airtime_s`) take `&self` and never
+/// touch the RNG; only `send_packet` advances the loss process.
+#[derive(Debug, Clone)]
+pub struct Channel {
+    mtu: usize,
+    per_packet_overhead: usize,
+    one_way_latency_s: f64,
+    loss: GilbertElliott,
+    trace: BandwidthTrace,
+    rng: Rng,
+    in_bad: bool,
+    /// lifetime counters (packets offered / lost / wire bytes serialized)
+    pub packets_offered: u64,
+    pub packets_dropped: u64,
+    pub wire_bytes_sent: u64,
+}
+
+impl Channel {
+    /// Channel with explicit loss model and optional bandwidth trace
+    /// (`None` = constant bandwidth from the profile).
+    pub fn new(
+        profile: &NetworkProfile,
+        loss: GilbertElliott,
+        trace: Option<BandwidthTrace>,
+        seed: u64,
+    ) -> Self {
+        Self {
+            mtu: profile.mtu,
+            per_packet_overhead: profile.per_packet_overhead,
+            one_way_latency_s: profile.one_way_latency_s,
+            loss,
+            trace: trace.unwrap_or_else(|| BandwidthTrace::constant(profile.bandwidth_bps)),
+            rng: Rng::new(seed),
+            in_bad: false,
+            packets_offered: 0,
+            packets_dropped: 0,
+            wire_bytes_sent: 0,
+        }
+    }
+
+    /// The zero-loss, constant-bandwidth special case: behaviorally
+    /// identical to the closed-form `NetworkSim` this subsystem replaces.
+    pub fn ideal(profile: &NetworkProfile) -> Self {
+        Self::new(profile, GilbertElliott::lossless(), None, 1)
+    }
+
+    pub fn mtu(&self) -> usize {
+        self.mtu
+    }
+
+    /// Number of packets for `bytes` of application payload.
+    pub fn packets(&self, bytes: usize) -> usize {
+        if bytes == 0 {
+            0
+        } else {
+            bytes.div_ceil(self.mtu)
+        }
+    }
+
+    /// On-air bytes including per-packet overhead.
+    pub fn wire_bytes(&self, bytes: usize) -> usize {
+        bytes + self.packets(bytes) * self.per_packet_overhead
+    }
+
+    /// One-way transfer time for `bytes` of application payload starting at
+    /// absolute time `t0`, seconds. Pure timing — loss does not apply.
+    pub fn transfer_s(&self, t0: f64, bytes: usize) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.trace.transmit_s(t0, self.wire_bytes(bytes) as f64 * 8.0) + self.one_way_latency_s
+    }
+
+    /// Radio-active airtime (serialization only, for the energy model).
+    pub fn airtime_s(&self, t0: f64, bytes: usize) -> f64 {
+        self.trace.transmit_s(t0, self.wire_bytes(bytes) as f64 * 8.0)
+    }
+
+    /// Round-trip time (feedback delay for ARQ retransmission rounds).
+    pub fn rtt_s(&self) -> f64 {
+        2.0 * self.one_way_latency_s
+    }
+
+    /// Serialize one packet of `app_bytes` application payload starting at
+    /// absolute time `t`: returns when the radio frees up and whether/when
+    /// the packet arrives. Advances the Gilbert–Elliott chain.
+    pub fn send_packet(&mut self, t: f64, app_bytes: usize) -> PacketTx {
+        let wire = app_bytes + self.per_packet_overhead;
+        let t_end = t + self.trace.transmit_s(t, wire as f64 * 8.0);
+        let loss_p = if self.in_bad { self.loss.loss_bad } else { self.loss.loss_good };
+        let delivered = loss_p <= 0.0 || self.rng.f64() >= loss_p;
+        let flip_p = if self.in_bad { self.loss.p_bad_to_good } else { self.loss.p_good_to_bad };
+        if flip_p > 0.0 && self.rng.f64() < flip_p {
+            self.in_bad = !self.in_bad;
+        }
+        self.packets_offered += 1;
+        self.wire_bytes_sent += wire as u64;
+        if !delivered {
+            self.packets_dropped += 1;
+        }
+        PacketTx { t_end, arrival_s: delivered.then_some(t_end + self.one_way_latency_s) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_channel_matches_closed_form() {
+        let p = NetworkProfile::wifi_6mbps();
+        let ch = Channel::ideal(&p);
+        for bytes in [0usize, 1, 244, 1400, 1401, 10_000] {
+            let wire = if bytes == 0 {
+                0
+            } else {
+                bytes + bytes.div_ceil(p.mtu) * p.per_packet_overhead
+            };
+            let expect = if bytes == 0 {
+                0.0
+            } else {
+                wire as f64 * 8.0 / p.bandwidth_bps + p.one_way_latency_s
+            };
+            assert!((ch.transfer_s(0.0, bytes) - expect).abs() < 1e-12, "{bytes} bytes");
+            // constant trace: start time does not matter
+            assert!((ch.transfer_s(123.4, bytes) - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn lossless_channel_never_drops() {
+        let mut ch = Channel::ideal(&NetworkProfile::ble_270kbps());
+        let mut t = 0.0;
+        for _ in 0..500 {
+            let tx = ch.send_packet(t, 100);
+            assert!(tx.arrival_s.is_some());
+            t = tx.t_end;
+        }
+        assert_eq!(ch.packets_dropped, 0);
+        assert_eq!(ch.packets_offered, 500);
+    }
+
+    #[test]
+    fn uniform_loss_rate_close_to_nominal_and_seed_deterministic() {
+        let p = NetworkProfile::wifi_6mbps();
+        let run = |seed| {
+            let mut ch = Channel::new(&p, GilbertElliott::uniform(0.3), None, seed);
+            let mut t = 0.0;
+            let mut pattern = Vec::new();
+            for _ in 0..2000 {
+                let tx = ch.send_packet(t, 500);
+                pattern.push(tx.arrival_s.is_some());
+                t = tx.t_end;
+            }
+            (pattern, ch.packets_dropped)
+        };
+        let (a, dropped) = run(7);
+        let (b, _) = run(7);
+        assert_eq!(a, b, "same seed must reproduce the same loss pattern");
+        let rate = dropped as f64 / 2000.0;
+        assert!((rate - 0.3).abs() < 0.05, "observed loss {rate}");
+        let (c, _) = run(8);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn bursty_model_hits_stationary_rate() {
+        let ge = GilbertElliott::bursty(0.3, 4.0);
+        assert!((ge.expected_loss_rate() - 0.3).abs() < 1e-9);
+        let mut ch = Channel::new(&NetworkProfile::wifi_6mbps(), ge, None, 11);
+        let (mut t, mut lost) = (0.0, 0usize);
+        for _ in 0..20_000 {
+            let tx = ch.send_packet(t, 500);
+            lost += tx.arrival_s.is_none() as usize;
+            t = tx.t_end;
+        }
+        let rate = lost as f64 / 20_000.0;
+        assert!((rate - 0.3).abs() < 0.05, "observed bursty loss {rate}");
+    }
+
+    #[test]
+    fn trace_varies_bandwidth_over_time() {
+        // 1 s at 1 Mbps, then 1 s at 125 kbps, looping
+        let trace = BandwidthTrace::new(vec![(1.0, 1e6), (1.0, 125e3)]).unwrap();
+        assert_eq!(trace.bandwidth_at(0.5), 1e6);
+        assert_eq!(trace.bandwidth_at(1.5), 125e3);
+        assert_eq!(trace.bandwidth_at(2.5), 1e6); // wraps
+        // 1 Mbit starting at t=0 fits exactly in the first segment
+        assert!((trace.transmit_s(0.0, 1e6) - 1.0).abs() < 1e-9);
+        // starting in the slow segment takes longer than in the fast one
+        assert!(trace.transmit_s(1.0, 1e5) > trace.transmit_s(0.0, 1e5));
+        // spans segments and wraps: 0.5 s fast (500 kbit) + 1 s slow
+        // (125 kbit) + 125 kbit more in the next fast segment
+        let t = trace.transmit_s(0.5, 750e3);
+        assert!((t - (0.5 + 1.0 + 125e3 / 1e6)).abs() < 1e-9, "got {t}");
+    }
+
+    #[test]
+    fn trace_parses_text_format() {
+        let text = "# walk trace\n1.0 6e6\n\n0.5 270e3 # doorway\n";
+        let trace = BandwidthTrace::parse(text).unwrap();
+        assert_eq!(trace.bandwidth_at(0.0), 6e6);
+        assert_eq!(trace.bandwidth_at(1.2), 270e3);
+        assert!(BandwidthTrace::parse("1.0\n").is_err());
+        assert!(BandwidthTrace::parse("1.0 -5\n").is_err());
+        assert!(BandwidthTrace::parse("").is_err());
+    }
+}

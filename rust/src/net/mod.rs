@@ -1,0 +1,116 @@
+//! `agilenn::net` — the lossy, trace-driven channel subsystem.
+//!
+//! The original link model (`simulator::NetworkSim`) was a closed-form
+//! transfer-time formula: no loss, no time variation, no notion of *which*
+//! bytes matter. This subsystem replaces the wire underneath serving with:
+//!
+//! * [`Channel`] — a seeded, deterministic link: Gilbert–Elliott bursty
+//!   packet loss ([`GilbertElliott`]), time-varying bandwidth replayed
+//!   from a [`BandwidthTrace`], and per-packet delivery timestamps. The
+//!   zero-loss constant-bandwidth special case ([`Channel::ideal`])
+//!   reproduces the old `NetworkSim` exactly — which is now implemented on
+//!   top of it, so the two models cannot drift.
+//! * [`Packetizer`] — uplink frames split into payload-capped packets
+//!   *ordered by XAI importance rank* ([`importance_order`]), each
+//!   independently decodable via a small header (frame id, order-space
+//!   feature range, seq), so the server can reconstruct from any subset.
+//! * [`DeliveryPolicy`] — ARQ (retransmit until complete; latency pays)
+//!   vs. deadline-bounded anytime (the server decodes whatever arrived by
+//!   the deadline, imputing missing features; accuracy degrades
+//!   gracefully — and *most* gracefully when the most important features
+//!   were sent first). Selected via `ServeBuilder::delivery`.
+//!
+//! All stochastic behavior is seed-deterministic: the same
+//! [`NetConfig::seed`] yields the same loss pattern, byte for byte.
+
+pub mod channel;
+pub mod delivery;
+pub mod packetizer;
+
+pub use channel::{BandwidthTrace, Channel, GilbertElliott, PacketTx};
+pub use delivery::{
+    transmit_frame, transmit_packets, DeliveryPolicy, LinkOutcome, NetStats, MAX_ARQ_ROUNDS,
+};
+pub use packetizer::{
+    importance_order, reassemble_symbols, Packet, PacketOrder, Packetizer, PACKET_HEADER_BYTES,
+};
+
+/// Channel-facing knobs of one serving run (lives in `RunConfig.net`; the
+/// defaults are the ideal link, making the pre-channel behavior the
+/// zero-loss special case).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// packet-loss process (default: lossless)
+    pub loss: GilbertElliott,
+    /// replayable bandwidth trace (default: constant profile bandwidth)
+    pub trace: Option<BandwidthTrace>,
+    /// uplink delivery policy (default: ARQ)
+    pub delivery: DeliveryPolicy,
+    /// packet ordering under the anytime policy (default: importance)
+    pub order: PacketOrder,
+    /// max application bytes per anytime packet, header included
+    /// (default: link MTU)
+    pub packet_payload: Option<usize>,
+    /// seed for the loss process (per-device streams are derived from it)
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            loss: GilbertElliott::lossless(),
+            trace: None,
+            delivery: DeliveryPolicy::Arq,
+            order: PacketOrder::Importance,
+            packet_payload: None,
+            seed: 42,
+        }
+    }
+}
+
+impl NetConfig {
+    /// True when the channel is behaviorally identical to the pre-channel
+    /// closed-form link model (no loss, no bandwidth variation).
+    pub fn is_ideal(&self) -> bool {
+        self.loss.is_lossless() && self.trace.is_none()
+    }
+
+    /// Resolved per-packet payload cap for a link MTU.
+    pub fn payload_cap(&self, mtu: usize) -> usize {
+        self.packet_payload.unwrap_or(mtu).min(mtu).max(PACKET_HEADER_BYTES + 1)
+    }
+
+    /// Per-device channel seed: decorrelates device loss streams while
+    /// keeping the whole run reproducible from one seed.
+    pub fn device_seed(&self, device_index: usize) -> u64 {
+        self.seed ^ (device_index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_ideal() {
+        let c = NetConfig::default();
+        assert!(c.is_ideal());
+        assert_eq!(c.payload_cap(1400), 1400);
+        assert_eq!(c.payload_cap(8), PACKET_HEADER_BYTES + 1);
+    }
+
+    #[test]
+    fn lossy_or_traced_config_is_not_ideal() {
+        let c = NetConfig { loss: GilbertElliott::uniform(0.1), ..NetConfig::default() };
+        assert!(!c.is_ideal());
+        let c = NetConfig { trace: Some(BandwidthTrace::constant(1e6)), ..NetConfig::default() };
+        assert!(!c.is_ideal());
+    }
+
+    #[test]
+    fn device_seeds_differ_but_are_stable() {
+        let c = NetConfig::default();
+        assert_ne!(c.device_seed(0), c.device_seed(1));
+        assert_eq!(c.device_seed(3), c.device_seed(3));
+    }
+}

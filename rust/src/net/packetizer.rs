@@ -1,0 +1,293 @@
+//! Importance-ordered packetization of uplink feature frames.
+//!
+//! The anytime delivery policy needs every packet to be *independently*
+//! decodable, so instead of one whole-frame LZW stream the quantized
+//! symbol stream is split into bit-packed chunks, each carried in a packet
+//! whose header names the range of the (shared) transmit-order permutation
+//! it covers. The server can then rebuild a valid feature tensor from any
+//! subset of packets, imputing the missing symbols — and when packets are
+//! sent most-important-features-first, whatever arrives by the deadline is
+//! the best possible subset. This trades the whole-stream LZW entropy win
+//! for independent decodability, which is exactly the trade-off a lossy
+//! link forces.
+
+use crate::compression::quantizer::{bitpack, bitunpack};
+use crate::config::{Meta, Scheme};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Packet header: frame id (u64) + seq/total (u16 each) + order-space
+/// range start/len (u32 each) = 16 bytes on the wire.
+pub const PACKET_HEADER_BYTES: usize = 16;
+
+/// How uplink packets are ordered on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketOrder {
+    /// XAI importance rank: most important feature channels first
+    /// (AgileNN; schemes without importance info fall back to index order).
+    Importance,
+    /// naive flat index order (the ablation baseline)
+    Index,
+}
+
+impl std::str::FromStr for PacketOrder {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "importance" | "xai" => Ok(PacketOrder::Importance),
+            "index" | "naive" => Ok(PacketOrder::Index),
+            other => anyhow::bail!("unknown packet order {other:?} (importance|index)"),
+        }
+    }
+}
+
+/// One uplink packet: an independently decodable bit-packed chunk of the
+/// quantized symbol stream, covering `range_start..range_start+range_len`
+/// of the transmit-order permutation.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub frame_id: u64,
+    pub seq: u16,
+    pub total: u16,
+    pub range_start: u32,
+    pub range_len: u32,
+    /// bit-packed symbols for this range (no entropy coding — packets must
+    /// decode independently)
+    pub payload: Vec<u8>,
+}
+
+impl Packet {
+    /// Application-layer bytes this packet puts on the wire.
+    pub fn app_bytes(&self) -> usize {
+        self.payload.len() + PACKET_HEADER_BYTES
+    }
+}
+
+/// Splits a quantized symbol stream into packets along a transmit-order
+/// permutation (importance rank), sized to a payload cap.
+#[derive(Debug, Clone)]
+pub struct Packetizer {
+    /// max application bytes per packet, header included
+    payload_cap: usize,
+    /// permutation of symbol indices in transmit-priority order
+    /// (`None` = identity / index order); shared with the receiver
+    order: Option<Arc<Vec<u32>>>,
+}
+
+impl Packetizer {
+    pub fn new(payload_cap: usize, order: Option<Vec<u32>>) -> Self {
+        Self {
+            payload_cap: payload_cap.max(PACKET_HEADER_BYTES + 1),
+            order: order.map(Arc::new),
+        }
+    }
+
+    pub fn order(&self) -> Option<&[u32]> {
+        self.order.as_deref().map(|v| v.as_slice())
+    }
+
+    /// Symbols carried per packet at `bits` per symbol.
+    pub fn symbols_per_packet(&self, bits: u32) -> usize {
+        (((self.payload_cap - PACKET_HEADER_BYTES) * 8) / bits.clamp(1, 8) as usize).max(1)
+    }
+
+    /// Split `symbols` into independently decodable packets in transmit
+    /// order. The permutation, when present, must cover `symbols` exactly.
+    pub fn packetize(&self, frame_id: u64, symbols: &[u8], bits: u32) -> Result<Vec<Packet>> {
+        if let Some(order) = self.order.as_deref() {
+            ensure!(
+                order.len() == symbols.len(),
+                "tx order covers {} symbols, frame has {}",
+                order.len(),
+                symbols.len()
+            );
+        }
+        let per = self.symbols_per_packet(bits);
+        let total = symbols.len().div_ceil(per).max(1);
+        ensure!(total <= u16::MAX as usize, "frame needs {total} packets (> u16 seq space)");
+        let mut packets = Vec::with_capacity(total);
+        let mut chunk = Vec::with_capacity(per);
+        for (seq, start) in (0..symbols.len()).step_by(per).enumerate() {
+            let len = per.min(symbols.len() - start);
+            chunk.clear();
+            match self.order.as_deref() {
+                Some(order) => {
+                    chunk.extend(order[start..start + len].iter().map(|&i| symbols[i as usize]))
+                }
+                None => chunk.extend_from_slice(&symbols[start..start + len]),
+            }
+            packets.push(Packet {
+                frame_id,
+                seq: seq as u16,
+                total: total as u16,
+                range_start: start as u32,
+                range_len: len as u32,
+                payload: bitpack(&chunk, bits),
+            });
+        }
+        if packets.is_empty() {
+            // zero-symbol frame still announces itself with an empty packet
+            packets.push(Packet {
+                frame_id,
+                seq: 0,
+                total: 1,
+                range_start: 0,
+                range_len: 0,
+                payload: Vec::new(),
+            });
+        }
+        Ok(packets)
+    }
+}
+
+/// Rebuild the symbol stream from any subset of packets: delivered ranges
+/// are unpacked into place (through the shared permutation), everything
+/// else is imputed with `fill`. Returns the symbols and how many were
+/// actually delivered.
+pub fn reassemble_symbols(
+    packets: &[Packet],
+    count: usize,
+    bits: u32,
+    fill: u8,
+    order: Option<&[u32]>,
+) -> Result<(Vec<u8>, usize)> {
+    if let Some(order) = order {
+        ensure!(order.len() == count, "tx order covers {} symbols, frame has {count}", order.len());
+    }
+    let mut symbols = vec![fill; count];
+    let mut delivered = 0usize;
+    for p in packets {
+        let (start, len) = (p.range_start as usize, p.range_len as usize);
+        ensure!(
+            start + len <= count,
+            "packet {} covers {}..{} of a {count}-symbol frame",
+            p.seq,
+            start,
+            start + len
+        );
+        let chunk = bitunpack(&p.payload, bits, len);
+        for (k, &sym) in chunk.iter().enumerate() {
+            let idx = match order {
+                Some(order) => order[start + k] as usize,
+                None => start + k,
+            };
+            symbols[idx] = sym;
+        }
+        delivered += len;
+    }
+    Ok((symbols, delivered))
+}
+
+/// XAI-importance transmit order for a scheme's uplink feature stream:
+/// feature elements ranked by their channel's mean Integrated-Gradients
+/// importance, most important first (spatial order preserved within a
+/// channel). Only AgileNN exports per-channel importance for the remote
+/// (non-top-k) features; other schemes get `None` (index order).
+pub fn importance_order(meta: &Meta, scheme: Scheme) -> Option<Vec<u32>> {
+    if scheme != Scheme::Agile {
+        return None;
+    }
+    let [h, w, c_all] = meta.feature;
+    let imp = &meta.importance.mean_importance_per_channel;
+    if imp.len() != c_all {
+        return None;
+    }
+    let selected: std::collections::HashSet<usize> =
+        meta.selected_channels.iter().copied().collect();
+    // remote channels keep their original ascending order in the feature
+    // tensor (the artifact splits the top-k out positionally)
+    let remote: Vec<usize> = (0..c_all).filter(|c| !selected.contains(c)).collect();
+    let c_rem = remote.len();
+    if c_rem == 0 || meta.tx_elements.agile != h * w * c_rem {
+        return None;
+    }
+    let mut rank: Vec<usize> = (0..c_rem).collect();
+    rank.sort_by(|&a, &b| {
+        imp[remote[b]].partial_cmp(&imp[remote[a]]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    // layout (h, w, c_rem) row-major: element (spatial s, channel c) = s*c_rem + c
+    let mut order = Vec::with_capacity(h * w * c_rem);
+    for &c in &rank {
+        for s in 0..h * w {
+            order.push((s * c_rem + c) as u32);
+        }
+    }
+    Some(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_identity_order() {
+        let pz = Packetizer::new(16 + PACKET_HEADER_BYTES, None); // 16 payload bytes
+        let symbols: Vec<u8> = (0..100u8).map(|i| i % 16).collect();
+        let packets = pz.packetize(7, &symbols, 4).unwrap();
+        assert!(packets.len() > 1);
+        assert!(packets.iter().all(|p| p.app_bytes() <= 16 + PACKET_HEADER_BYTES));
+        let (back, delivered) = reassemble_symbols(&packets, 100, 4, 0, None).unwrap();
+        assert_eq!(back, symbols);
+        assert_eq!(delivered, 100);
+    }
+
+    #[test]
+    fn roundtrip_with_permutation() {
+        let n = 60usize;
+        let order: Vec<u32> = (0..n as u32).rev().collect();
+        let pz = Packetizer::new(8 + PACKET_HEADER_BYTES, Some(order.clone()));
+        let symbols: Vec<u8> = (0..n as u8).map(|i| i % 8).collect();
+        let packets = pz.packetize(1, &symbols, 3).unwrap();
+        let (back, _) = reassemble_symbols(&packets, n, 3, 0, Some(&order)).unwrap();
+        assert_eq!(back, symbols);
+    }
+
+    #[test]
+    fn partial_subset_imputes_fill() {
+        let pz = Packetizer::new(8 + PACKET_HEADER_BYTES, None);
+        let symbols: Vec<u8> = (0..64u8).map(|i| 1 + i % 3).collect();
+        let packets = pz.packetize(2, &symbols, 2).unwrap();
+        let kept: Vec<Packet> = packets.into_iter().skip(1).collect(); // drop the first
+        let (back, delivered) = reassemble_symbols(&kept, 64, 2, 0, None).unwrap();
+        assert!(delivered < 64);
+        let first_len = 64 - delivered;
+        assert!(back[..first_len].iter().all(|&s| s == 0), "missing range imputed");
+        assert_eq!(&back[first_len..], &symbols[first_len..]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_packet() {
+        let p = Packet {
+            frame_id: 0,
+            seq: 0,
+            total: 1,
+            range_start: 10,
+            range_len: 10,
+            payload: vec![0; 10],
+        };
+        assert!(reassemble_symbols(&[p], 15, 8, 0, None).is_err());
+    }
+
+    #[test]
+    fn importance_order_is_a_permutation_grouped_by_channel_rank() {
+        use crate::json::Value;
+        let mut meta =
+            Meta::from_json(&Value::parse(crate::config::tests::MINIMAL_META).unwrap()).unwrap();
+        // 24 feature channels, top-5 selected, 19 remote => 8*8*19 = 1216
+        meta.importance.mean_importance_per_channel =
+            (0..24).map(|c| 1.0 / (1.0 + c as f64)).collect();
+        let order = importance_order(&meta, Scheme::Agile).expect("agile order");
+        assert_eq!(order.len(), 1216);
+        let mut seen = vec![false; 1216];
+        for &i in &order {
+            assert!(!seen[i as usize], "duplicate index {i}");
+            seen[i as usize] = true;
+        }
+        // channels 1..5 are selected; channel 0 is the most important remote
+        // channel, so the first 64 entries are its spatial positions
+        let c_rem = 19;
+        assert!(order[..64].iter().enumerate().all(|(s, &i)| i as usize == s * c_rem));
+        assert!(importance_order(&meta, Scheme::Deepcod).is_none());
+    }
+}

@@ -24,6 +24,12 @@
 //! For per-request observability, [`Service::stream`] returns an
 //! [`OutcomeStream`] — an iterator over [`ServedOutcome`]s as devices
 //! finish them — and `finish()` yields the same [`PipelineReport`].
+//!
+//! Uplink frames cross a simulated lossy channel ([`crate::net`]):
+//! `ServeBuilder::loss` / `bandwidth_trace` / `delivery` / `packet_order`
+//! select the loss process, a replayable bandwidth trace, and ARQ vs.
+//! deadline-bounded anytime transport (importance-ordered packets, server
+//! decodes whatever arrived). The defaults reproduce the ideal link.
 
 pub mod scheme;
 pub mod service;

@@ -23,6 +23,7 @@ use crate::coordinator::combiner::Combiner;
 use crate::coordinator::device_runtime::DeviceRuntime;
 use crate::coordinator::server::RemoteServer;
 use crate::metrics::{EnergyLedger, LatencyBreakdown};
+use crate::net::{LinkOutcome, NetStats, Packet};
 use crate::runtime::{Engine, Executable};
 use crate::simulator::{DeviceSim, DeviceTimings, MemoryReport, NetworkSim};
 use crate::tensor::{argmax, max_confidence, Tensor};
@@ -42,6 +43,9 @@ pub struct LocalResult {
     /// Compressed uplink payload; `None` means the request resolved
     /// locally and bypasses the server batcher entirely.
     pub frame: Option<Frame>,
+    /// Quantized symbol stream behind `frame`, for the packetized
+    /// (anytime) transport; `None` when there is no uplink.
+    pub symbols: Option<Vec<u8>>,
     /// Simulated device-side costs.
     pub timings: DeviceTimings,
     /// Resolved at an on-device early exit (SPINN) or offline fallback.
@@ -71,6 +75,11 @@ pub trait ServerSide: Send {
     /// Decode one uplink frame into the remote NN's input tensor.
     fn decode(&self, frame: &Frame) -> Result<Tensor>;
 
+    /// Decode a (possibly partial) packetized frame: reconstruct from
+    /// whatever packets arrived, imputing missing features from the stored
+    /// reference. `count`/`bits` describe the full symbol stream.
+    fn decode_packets(&self, packets: &[Packet], count: usize, bits: u32) -> Result<Tensor>;
+
     /// Run the remote NN on a group of decoded inputs; one logits row per
     /// request (padding rows are dropped by the implementation).
     fn infer_batch(&mut self, feats: &[Tensor]) -> Result<Vec<Vec<f32>>>;
@@ -83,6 +92,10 @@ pub trait ServerSide: Send {
 impl ServerSide for RemoteServer {
     fn decode(&self, frame: &Frame) -> Result<Tensor> {
         RemoteServer::decode(self, frame)
+    }
+
+    fn decode_packets(&self, packets: &[Packet], count: usize, bits: u32) -> Result<Tensor> {
+        RemoteServer::decode_packets(self, packets, count, bits)
     }
 
     fn infer_batch(&mut self, feats: &[Tensor]) -> Result<Vec<Vec<f32>>> {
@@ -159,7 +172,10 @@ impl Fuser for LocalArgmaxFuser {
 /// accounting (link model, energy ledger, breakdown fields) never
 /// diverges between the two paths. `remote_wall_s` is whatever the caller
 /// measured around the server phase (per-request for the sync path, queue
-/// + batch for the live pipeline).
+/// + batch for the live pipeline). When the request crossed a simulated
+/// lossy channel, `link` carries the measured transport outcome and
+/// overrides the closed-form `net` pricing (which remains the ideal-link
+/// fallback for the synchronous runners).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn assemble_outcome(
     fuser: &dyn Fuser,
@@ -170,16 +186,29 @@ pub(crate) fn assemble_outcome(
     remote_wall_s: f64,
     dev: &DeviceSim,
     net: &NetworkSim,
+    link: Option<&LinkOutcome>,
     num_classes: usize,
 ) -> Result<RequestOutcome> {
-    let (network_s, radio_j) = if remote.is_some() {
-        let reply = reply_bytes(num_classes);
-        (
-            net.transfer_s(tx_bytes) + net.transfer_s(reply),
-            dev.radio_energy_j(net.airtime_s(tx_bytes) + net.airtime_s(reply)),
-        )
-    } else {
-        (0.0, 0.0)
+    let (network_s, radio_j, net_stats) = match (remote.is_some(), link) {
+        (true, Some(l)) => (l.network_s, dev.radio_energy_j(l.airtime_s), l.stats),
+        (true, None) => {
+            let reply = reply_bytes(num_classes);
+            let stats = NetStats {
+                packets_sent: net.packets(tx_bytes),
+                app_bytes_offered: tx_bytes,
+                app_bytes_delivered: tx_bytes,
+                complete: true,
+                uplink_s: net.transfer_s(tx_bytes),
+                airtime_s: net.airtime_s(tx_bytes),
+                ..NetStats::default()
+            };
+            (
+                net.transfer_s(tx_bytes) + net.transfer_s(reply),
+                dev.radio_energy_j(net.airtime_s(tx_bytes) + net.airtime_s(reply)),
+                stats,
+            )
+        }
+        (false, _) => (0.0, 0.0, NetStats::default()),
     };
     let predicted = fuser.fuse(local, remote)?;
     Ok(RequestOutcome {
@@ -193,6 +222,7 @@ pub(crate) fn assemble_outcome(
         },
         energy: EnergyLedger { compute_j: dev.compute_energy_j(local.timings.total_s()), radio_j },
         tx_bytes,
+        net: net_stats,
         exited_early: local.exited_early,
     })
 }
@@ -221,6 +251,13 @@ fn activation_peak(scheme: Scheme) -> usize {
 
 /// LZW dictionary SRAM for schemes that compress on-device.
 const LZW_DICT_SRAM: usize = 20 * 1024;
+
+/// Only the anytime transport re-chunks the quantized symbol stream;
+/// skipping the capture keeps the per-request copy off the ARQ/bench hot
+/// path.
+fn capture_symbols(cfg: &RunConfig) -> bool {
+    matches!(cfg.net.delivery, crate::net::DeliveryPolicy::Anytime { .. })
+}
 
 fn memory_report_for(cfg: &RunConfig, meta: &Meta, scheme: Scheme) -> MemoryReport {
     let scale = cfg.device.resolution_scale as usize;
@@ -258,6 +295,7 @@ impl DeviceSide for AgileDevice {
         Ok(LocalResult {
             local_logits: out.local_logits,
             frame: Some(out.frame),
+            symbols: out.symbols,
             timings: out.timings,
             exited_early: false,
         })
@@ -275,6 +313,7 @@ pub struct DeepcodDevice {
     sim: DeviceSim,
     nn_macs: u64,
     mem: MemoryReport,
+    capture_symbols: bool,
 }
 
 impl DeepcodDevice {
@@ -288,6 +327,7 @@ impl DeepcodDevice {
             sim: DeviceSim::new(cfg.device.clone()),
             nn_macs: meta.macs.deepcod_device,
             mem: memory_report_for(cfg, meta, Scheme::Deepcod),
+            capture_symbols: capture_symbols(cfg),
         })
     }
 }
@@ -302,6 +342,7 @@ impl DeviceSide for DeepcodDevice {
         ensure!(outputs.len() == 1, "deepcod encoder yields (code,)");
         let code = &outputs[0];
         let frame = self.tx.encode(code.data());
+        let symbols = self.capture_symbols.then(|| self.tx.symbols().to_vec());
         let timings = DeviceTimings {
             nn_compute_s: self.sim.nn_latency_s(self.nn_macs),
             quantize_s: self.sim.quantize_latency_s(code.len()),
@@ -312,6 +353,7 @@ impl DeviceSide for DeepcodDevice {
         Ok(LocalResult {
             local_logits: Vec::new(),
             frame: Some(frame),
+            symbols,
             timings,
             exited_early: false,
         })
@@ -330,6 +372,7 @@ pub struct SpinnDevice {
     nn_macs: u64,
     exit_threshold: f32,
     mem: MemoryReport,
+    capture_symbols: bool,
 }
 
 impl SpinnDevice {
@@ -344,6 +387,7 @@ impl SpinnDevice {
             nn_macs: meta.macs.spinn_device,
             exit_threshold: meta.spinn_exit.threshold as f32,
             mem: memory_report_for(cfg, meta, Scheme::Spinn),
+            capture_symbols: capture_symbols(cfg),
         })
     }
 }
@@ -365,12 +409,14 @@ impl DeviceSide for SpinnDevice {
             return Ok(LocalResult {
                 local_logits: exit_logits,
                 frame: None,
+                symbols: None,
                 timings: DeviceTimings { nn_compute_s: nn_s, ..Default::default() },
                 exited_early: true,
             });
         }
 
         let frame = self.tx.encode(feats.data());
+        let symbols = self.capture_symbols.then(|| self.tx.symbols().to_vec());
         let timings = DeviceTimings {
             nn_compute_s: nn_s,
             quantize_s: self.sim.quantize_latency_s(feats.len()),
@@ -381,6 +427,7 @@ impl DeviceSide for SpinnDevice {
         Ok(LocalResult {
             local_logits: exit_logits,
             frame: Some(frame),
+            symbols,
             timings,
             exited_early: false,
         })
@@ -422,6 +469,7 @@ impl DeviceSide for McunetDevice {
         Ok(LocalResult {
             local_logits: outputs[0].data().to_vec(),
             frame: None,
+            symbols: None,
             timings: DeviceTimings {
                 nn_compute_s: self.sim.nn_latency_s(self.nn_macs),
                 ..Default::default()
@@ -467,6 +515,7 @@ impl DeviceSide for EdgeDevice {
         Ok(LocalResult {
             local_logits: Vec::new(),
             frame: Some(Frame { payload, count: raw.len(), bits: 8 }),
+            symbols: Some(raw),
             timings,
             exited_early: false,
         })
@@ -526,6 +575,7 @@ mod tests {
         LocalResult {
             local_logits: logits,
             frame: None,
+            symbols: None,
             timings: DeviceTimings::default(),
             exited_early: exited,
         }
@@ -563,6 +613,7 @@ mod tests {
         let with_frame = LocalResult {
             local_logits: Vec::new(),
             frame: Some(Frame { payload: vec![1, 2, 3], count: 3, bits: 8 }),
+            symbols: Some(vec![1, 2, 3]),
             timings: DeviceTimings::default(),
             exited_early: false,
         };

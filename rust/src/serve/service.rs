@@ -24,6 +24,10 @@ use crate::compression::Frame;
 use crate::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
 use crate::coordinator::batcher::{BatchQueue, Pending};
 use crate::metrics::{AccuracyCounter, LatencyStats};
+use crate::net::{
+    importance_order, transmit_frame, transmit_packets, BandwidthTrace, Channel, DeliveryPolicy,
+    GilbertElliott, LinkOutcome, Packet, PacketOrder, Packetizer,
+};
 use crate::runtime::Engine;
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
@@ -39,6 +43,12 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Aggregate report from a pipeline run.
+///
+/// `accuracy` and every `net`-derived field (packet counters, simulated
+/// link quantiles, delivered-feature rate) are **seed-deterministic**: two
+/// runs with the same `ServeBuilder` configuration and seed produce the
+/// same values. The wall-clock fields (`wall_s`, `throughput_rps`, the
+/// live latency quantiles) measure the host pipeline and are not.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub requests: usize,
@@ -49,6 +59,25 @@ pub struct PipelineReport {
     pub p95_latency_s: f64,
     pub mean_batch_size: f64,
     pub batches: usize,
+    /// packets pushed into the simulated channel, retransmissions included
+    pub packets_sent: u64,
+    /// packets the channel dropped
+    pub packets_lost: u64,
+    /// retransmission rounds beyond each first pass
+    pub retransmit_rounds: u64,
+    /// offloaded requests whose frame was decoded from a partial packet set
+    pub incomplete_frames: usize,
+    /// delivered / offered feature elements across packetized uplinks
+    /// (1.0 when every frame completed or nothing was packetized)
+    pub delivered_feature_rate: f64,
+    /// application-layer goodput over the run: delivered uplink bytes * 8 /
+    /// simulated link-busy time (0 when nothing was transmitted)
+    pub goodput_bps: f64,
+    /// mean simulated link time per request (deterministic; excludes the
+    /// wall-clock server phase)
+    pub mean_net_s: f64,
+    /// p99 simulated link time per request (deterministic)
+    pub p99_net_s: f64,
 }
 
 /// One per-request outcome as it streams out of the live pipeline.
@@ -72,10 +101,19 @@ pub struct RemoteFailure(pub String);
 
 type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
 
+/// What actually crossed the (simulated) wire for one offload.
+enum UplinkBody {
+    /// intact LZW frame (ARQ transport: only decodable when complete)
+    Whole(Frame),
+    /// whatever packets arrived in time (anytime transport: the server
+    /// reconstructs and imputes the rest)
+    Packets { packets: Vec<Packet>, count: usize, bits: u32 },
+}
+
 /// One in-flight offload awaiting its remote logits.
 struct OffloadMsg {
     id: u64,
-    frame: Frame,
+    body: UplinkBody,
     reply: Sender<Reply>,
 }
 
@@ -99,6 +137,7 @@ pub struct ServeBuilder {
     alpha: Option<f64>,
     device_profile: Option<DeviceProfile>,
     network_profile: Option<NetworkProfile>,
+    net: crate::net::NetConfig,
 }
 
 impl ServeBuilder {
@@ -116,6 +155,7 @@ impl ServeBuilder {
             alpha: None,
             device_profile: None,
             network_profile: None,
+            net: crate::net::NetConfig::default(),
         }
     }
 
@@ -196,6 +236,51 @@ impl ServeBuilder {
         self
     }
 
+    /// Packet-loss process on the uplink channel (default: lossless).
+    pub fn loss(mut self, loss: GilbertElliott) -> Self {
+        self.net.loss = loss;
+        self
+    }
+
+    /// Convenience: independent (Bernoulli) packet loss at `rate`.
+    pub fn loss_rate(mut self, rate: f64) -> Self {
+        self.net.loss = GilbertElliott::uniform(rate);
+        self
+    }
+
+    /// Replayable time-varying bandwidth trace (default: constant profile
+    /// bandwidth).
+    pub fn bandwidth_trace(mut self, trace: BandwidthTrace) -> Self {
+        self.net.trace = Some(trace);
+        self
+    }
+
+    /// Uplink delivery policy: ARQ (default) or deadline-bounded anytime.
+    pub fn delivery(mut self, policy: DeliveryPolicy) -> Self {
+        self.net.delivery = policy;
+        self
+    }
+
+    /// Packet ordering for the anytime transport (default: importance).
+    pub fn packet_order(mut self, order: PacketOrder) -> Self {
+        self.net.order = order;
+        self
+    }
+
+    /// Max application bytes per anytime packet, header included
+    /// (default: link MTU).
+    pub fn packet_payload(mut self, bytes: usize) -> Self {
+        self.net.packet_payload = Some(bytes);
+        self
+    }
+
+    /// Seed for the channel's loss process; all stochastic link behavior
+    /// is deterministic given this seed.
+    pub fn net_seed(mut self, seed: u64) -> Self {
+        self.net.seed = seed;
+        self
+    }
+
     /// The [`RunConfig`] this builder resolves to (without touching disk).
     pub fn to_config(&self) -> RunConfig {
         let mut cfg = RunConfig::new(self.artifacts_dir.clone(), &self.dataset, self.scheme);
@@ -209,6 +294,7 @@ impl ServeBuilder {
         if let Some(p) = &self.network_profile {
             cfg.network = p.clone();
         }
+        cfg.net = self.net.clone();
         cfg
     }
 
@@ -312,7 +398,52 @@ impl Service {
             t_start,
             acc: AccuracyCounter::default(),
             lat: LatencyStats::new(),
+            net_lat: LatencyStats::new(),
+            net: NetAgg::default(),
         })
+    }
+}
+
+/// Aggregated transport counters across a run.
+#[derive(Debug, Default)]
+struct NetAgg {
+    packets_sent: u64,
+    packets_lost: u64,
+    retransmit_rounds: u64,
+    incomplete_frames: usize,
+    features_total: u64,
+    features_delivered: u64,
+    bytes_delivered: u64,
+    airtime_s: f64,
+}
+
+impl NetAgg {
+    fn record(&mut self, out: &RequestOutcome) {
+        let s = &out.net;
+        self.packets_sent += s.packets_sent as u64;
+        self.packets_lost += s.packets_lost as u64;
+        self.retransmit_rounds += s.retransmit_rounds as u64;
+        self.incomplete_frames += (out.tx_bytes > 0 && !s.complete) as usize;
+        self.features_total += s.features_total as u64;
+        self.features_delivered += s.features_delivered as u64;
+        self.bytes_delivered += s.app_bytes_delivered as u64;
+        self.airtime_s += s.airtime_s;
+    }
+
+    fn delivered_feature_rate(&self) -> f64 {
+        if self.features_total == 0 {
+            1.0
+        } else {
+            self.features_delivered as f64 / self.features_total as f64
+        }
+    }
+
+    fn goodput_bps(&self) -> f64 {
+        if self.airtime_s <= 0.0 {
+            0.0
+        } else {
+            self.bytes_delivered as f64 * 8.0 / self.airtime_s
+        }
     }
 }
 
@@ -326,6 +457,8 @@ pub struct OutcomeStream {
     t_start: Instant,
     acc: AccuracyCounter,
     lat: LatencyStats,
+    net_lat: LatencyStats,
+    net: NetAgg,
 }
 
 impl Iterator for OutcomeStream {
@@ -336,6 +469,8 @@ impl Iterator for OutcomeStream {
             Ok(out) => {
                 self.acc.record(out.outcome.correct);
                 self.lat.record(out.wall_s);
+                self.net_lat.record(out.outcome.breakdown.network_s);
+                self.net.record(&out.outcome);
                 Some(out)
             }
             Err(_) => None,
@@ -369,6 +504,14 @@ impl OutcomeStream {
                 total_batched as f64 / batches as f64
             },
             batches,
+            packets_sent: self.net.packets_sent,
+            packets_lost: self.net.packets_lost,
+            retransmit_rounds: self.net.retransmit_rounds,
+            incomplete_frames: self.net.incomplete_frames,
+            delivered_feature_rate: self.net.delivered_feature_rate(),
+            goodput_bps: self.net.goodput_bps(),
+            mean_net_s: self.net_lat.mean_s(),
+            p99_net_s: self.net_lat.p99(),
         })
     }
 }
@@ -409,7 +552,13 @@ fn server_loop(
         let wait = queue.next_deadline_in(Instant::now()).unwrap_or(Duration::from_secs(3600));
         match rx.recv_timeout(wait) {
             Ok(m) => {
-                let feats = match server.decode(&m.frame) {
+                let decoded = match &m.body {
+                    UplinkBody::Whole(frame) => server.decode(frame),
+                    UplinkBody::Packets { packets, count, bits } => {
+                        server.decode_packets(packets, *count, *bits)
+                    }
+                };
+                let feats = match decoded {
                     Ok(f) => f,
                     Err(e) => {
                         let _ = m
@@ -438,8 +587,9 @@ fn server_loop(
 }
 
 /// One simulated device: build the scheme's device half + fuser, pace
-/// requests to the arrival process, offload frames when the scheme
-/// produces them, and stream each fused outcome.
+/// requests to the arrival process, push uplink frames through the
+/// simulated channel under the configured delivery policy, and stream
+/// each fused outcome.
 #[allow(clippy::too_many_arguments)]
 fn device_loop(
     device_index: usize,
@@ -456,6 +606,17 @@ fn device_loop(
     let fuser = make_fuser(cfg, meta)?;
     let dev_sim = DeviceSim::new(cfg.device.clone());
     let net = NetworkSim::new(cfg.network.clone());
+    let mut chan = Channel::new(
+        &cfg.network,
+        cfg.net.loss.clone(),
+        cfg.net.trace.clone(),
+        cfg.net.device_seed(device_index),
+    );
+    let order = match cfg.net.order {
+        PacketOrder::Importance => importance_order(meta, cfg.scheme),
+        PacketOrder::Index => None,
+    };
+    let packetizer = Packetizer::new(cfg.net.payload_cap(cfg.network.mtu), order);
     let t0 = Instant::now();
     for (j, &i) in ids.iter().enumerate() {
         // pace to the arrival process
@@ -467,18 +628,45 @@ fn device_loop(
         let idx = i % testset.len();
         let img = testset.image(idx)?;
         let mut local = device.encode(&img)?;
-        let tx_bytes = local.tx_bytes();
 
         let mut remote: Option<Vec<f32>> = None;
         let mut remote_wall = 0.0f64;
+        let mut link: Option<LinkOutcome> = None;
+        let mut tx_bytes = local.tx_bytes();
         if let Some(frame) = local.frame.take() {
             let sender = tx_offload.as_ref().ok_or_else(|| {
                 anyhow!("{} produced an uplink frame but has no server half", cfg.scheme.name())
             })?;
+            // run the uplink through the simulated channel at the
+            // request's simulated transmit start (arrival + device phase)
+            let tx_start = times[j] + local.timings.total_s();
+            let (body, stats) = match (&cfg.net.delivery, local.symbols.take()) {
+                (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
+                    let bits = frame.bits;
+                    let pkts = packetizer.packetize(i as u64, &symbols, bits)?;
+                    let (arrived, stats) =
+                        transmit_packets(&mut chan, &cfg.net.delivery, &pkts, tx_start);
+                    (UplinkBody::Packets { packets: arrived, count: symbols.len(), bits }, stats)
+                }
+                _ => {
+                    let stats = transmit_frame(&mut chan, frame.wire_bytes(), tx_start);
+                    (UplinkBody::Whole(frame), stats)
+                }
+            };
+            tx_bytes = stats.app_bytes_offered;
+            // downlink reply (assumed reliable: server radios are not the
+            // constrained end) priced on the same channel timing
+            let reply = crate::serve::scheme::reply_bytes(meta.num_classes);
+            let t_reply = tx_start + stats.uplink_s;
+            link = Some(LinkOutcome {
+                network_s: stats.uplink_s + chan.transfer_s(t_reply, reply),
+                airtime_s: stats.airtime_s + chan.airtime_s(t_reply, reply),
+                stats,
+            });
             let (reply_tx, reply_rx) = channel();
             let t_remote = Instant::now();
             sender
-                .send(OffloadMsg { id: i as u64, frame, reply: reply_tx })
+                .send(OffloadMsg { id: i as u64, body, reply: reply_tx })
                 .map_err(|_| anyhow!("server thread gone"))?;
             let row = reply_rx
                 .recv()
@@ -496,6 +684,7 @@ fn device_loop(
             remote_wall,
             &dev_sim,
             &net,
+            link.as_ref(),
             meta.num_classes,
         )?;
         let served = ServedOutcome {
@@ -548,6 +737,27 @@ mod tests {
         assert_eq!(cfg.max_batch, base.max_batch);
         assert_eq!(cfg.batch_deadline_us, base.batch_deadline_us);
         assert_eq!(cfg.alpha_override, None);
+    }
+
+    #[test]
+    fn builder_maps_net_knobs_onto_run_config() {
+        let cfg = ServeBuilder::new("svhns")
+            .loss(GilbertElliott::bursty(0.3, 4.0))
+            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.05 })
+            .packet_order(PacketOrder::Index)
+            .packet_payload(64)
+            .net_seed(7)
+            .bandwidth_trace(BandwidthTrace::constant(1e6))
+            .to_config();
+        assert!(!cfg.net.is_ideal());
+        assert!((cfg.net.loss.expected_loss_rate() - 0.3).abs() < 1e-9);
+        assert_eq!(cfg.net.delivery, DeliveryPolicy::Anytime { deadline_s: 0.05 });
+        assert_eq!(cfg.net.order, PacketOrder::Index);
+        assert_eq!(cfg.net.packet_payload, Some(64));
+        assert_eq!(cfg.net.seed, 7);
+        assert!(cfg.net.trace.is_some());
+        // defaults stay on the ideal pre-channel link
+        assert!(ServeBuilder::new("x").to_config().net.is_ideal());
     }
 
     #[test]

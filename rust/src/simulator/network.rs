@@ -4,45 +4,45 @@
 //! Packetization matters: small payloads on a 244-byte-MTU BLE link pay a
 //! much larger relative overhead than on WiFi, which is exactly the regime
 //! Fig 23 sweeps.
+//!
+//! Since the `net` channel subsystem landed, this type is a thin façade
+//! over [`Channel::ideal`] — the zero-loss, constant-bandwidth fast path —
+//! so the closed-form timing used by the synchronous benches and the lossy
+//! channel used by serving share one implementation and cannot drift.
 
 use super::profiles::NetworkProfile;
+use crate::net::Channel;
 
 #[derive(Debug, Clone)]
 pub struct NetworkSim {
     pub profile: NetworkProfile,
+    chan: Channel,
 }
 
 impl NetworkSim {
     pub fn new(profile: NetworkProfile) -> Self {
-        Self { profile }
+        let chan = Channel::ideal(&profile);
+        Self { profile, chan }
     }
 
     /// Number of packets for `bytes` of application payload.
     pub fn packets(&self, bytes: usize) -> usize {
-        if bytes == 0 {
-            0
-        } else {
-            bytes.div_ceil(self.profile.mtu)
-        }
+        self.chan.packets(bytes)
     }
 
     /// On-air bytes including per-packet overhead.
     pub fn wire_bytes(&self, bytes: usize) -> usize {
-        bytes + self.packets(bytes) * self.profile.per_packet_overhead
+        self.chan.wire_bytes(bytes)
     }
 
     /// One-way transfer time for `bytes` of application payload, seconds.
     pub fn transfer_s(&self, bytes: usize) -> f64 {
-        if bytes == 0 {
-            return 0.0;
-        }
-        self.wire_bytes(bytes) as f64 * 8.0 / self.profile.bandwidth_bps
-            + self.profile.one_way_latency_s
+        self.chan.transfer_s(0.0, bytes)
     }
 
     /// Radio-active airtime (serialization only, for the energy model).
     pub fn airtime_s(&self, bytes: usize) -> f64 {
-        self.wire_bytes(bytes) as f64 * 8.0 / self.profile.bandwidth_bps
+        self.chan.airtime_s(0.0, bytes)
     }
 }
 
@@ -86,5 +86,19 @@ mod tests {
         let full = NetworkSim::new(base);
         let b = 10_000;
         assert!(half.airtime_s(b) / full.airtime_s(b) > 1.99);
+    }
+
+    #[test]
+    fn matches_the_pre_channel_closed_form() {
+        // the formula NetworkSim shipped with before the net subsystem:
+        // wire_bytes * 8 / bandwidth + one_way_latency
+        for p in [NetworkProfile::wifi_6mbps(), NetworkProfile::ble_270kbps()] {
+            let net = NetworkSim::new(p.clone());
+            for bytes in [1usize, 100, 244, 1400, 1401, 9999] {
+                let wire = bytes + bytes.div_ceil(p.mtu) * p.per_packet_overhead;
+                let expect = wire as f64 * 8.0 / p.bandwidth_bps + p.one_way_latency_s;
+                assert!((net.transfer_s(bytes) - expect).abs() < 1e-12, "{bytes} on {}", p.name);
+            }
+        }
     }
 }

@@ -287,3 +287,93 @@ fn engine_caches_executables() {
     let _b = c.engine.load_artifact(&dir, "agile_device_b1").unwrap();
     assert_eq!(c.engine.cached_count(), before + 1, "second load must hit the cache");
 }
+
+#[test]
+fn lossy_serve_is_seed_deterministic() {
+    // acceptance: two runs with the same ServeBuilder seed produce the same
+    // accuracy and transport counters (wall-clock fields excepted)
+    let c = require_artifacts!();
+    let run = || {
+        use agilenn::net::DeliveryPolicy;
+        ServeBuilder::new(&c.cfg.dataset)
+            .artifacts_dir(c.cfg.artifacts_dir.clone())
+            .scheme(Scheme::Agile)
+            .devices(2)
+            .requests(24)
+            .max_batch(1) // b1 executable everywhere: bitwise-stable logits
+            .loss(agilenn::net::GilbertElliott::bursty(0.3, 4.0))
+            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.01 })
+            .packet_payload(64)
+            .net_seed(9)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.accuracy, b.accuracy);
+    assert_eq!(a.packets_sent, b.packets_sent);
+    assert_eq!(a.packets_lost, b.packets_lost);
+    assert_eq!(a.retransmit_rounds, b.retransmit_rounds);
+    assert_eq!(a.incomplete_frames, b.incomplete_frames);
+    assert_eq!(a.delivered_feature_rate, b.delivered_feature_rate);
+    assert_eq!(a.mean_net_s, b.mean_net_s);
+    assert!(a.packets_lost > 0, "30% loss over 24 uplinks must drop something");
+}
+
+#[test]
+fn anytime_transport_decodes_partial_frames_under_heavy_loss() {
+    let c = require_artifacts!();
+    use agilenn::net::{DeliveryPolicy, GilbertElliott};
+    let rep = ServeBuilder::new(&c.cfg.dataset)
+        .artifacts_dir(c.cfg.artifacts_dir.clone())
+        .scheme(Scheme::Agile)
+        .devices(1)
+        .requests(16)
+        .max_batch(1)
+        .loss(GilbertElliott::uniform(0.5))
+        // tight deadline: one pass, no time for full recovery
+        .delivery(DeliveryPolicy::Anytime { deadline_s: 0.004 })
+        .packet_payload(64)
+        .net_seed(3)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rep.requests, 16);
+    assert!(rep.incomplete_frames > 0, "50% loss must leave partial frames");
+    assert!(rep.delivered_feature_rate < 1.0);
+    assert!(rep.delivered_feature_rate > 0.0);
+    // every request still produced a prediction (graceful degradation)
+    assert!(rep.accuracy > 0.0);
+    // the deadline bounds the simulated link time
+    assert!(rep.p99_net_s <= 0.004 + 0.01, "p99 net {}", rep.p99_net_s);
+}
+
+#[test]
+fn zero_loss_channel_reproduces_the_ideal_link_numbers() {
+    // acceptance: at 0% loss the default (ARQ, whole-frame) path is
+    // behaviorally identical to the pre-channel NetworkSim pricing
+    let c = require_artifacts!();
+    use agilenn::simulator::NetworkSim;
+    let mut stream = ServeBuilder::new(&c.cfg.dataset)
+        .artifacts_dir(c.cfg.artifacts_dir.clone())
+        .scheme(Scheme::Agile)
+        .devices(1)
+        .requests(8)
+        .max_batch(1)
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap();
+    let net = NetworkSim::new(c.cfg.network.clone());
+    let reply = agilenn::serve::reply_bytes(c.meta.num_classes);
+    for out in stream.by_ref() {
+        let expect = net.transfer_s(out.outcome.tx_bytes) + net.transfer_s(reply);
+        let got = out.outcome.breakdown.network_s;
+        assert!((got - expect).abs() < 1e-9, "network_s {got} != closed form {expect}");
+        assert!(out.outcome.net.complete);
+        assert_eq!(out.outcome.net.packets_lost, 0);
+    }
+    stream.finish().unwrap();
+}

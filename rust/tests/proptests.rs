@@ -5,6 +5,10 @@
 use agilenn::compression::quantizer::{bitpack, bitunpack, Codebook};
 use agilenn::compression::{lzw, RxDecoder, TxEncoder};
 use agilenn::coordinator::batcher::{pad_batch_size, BatchQueue, REMOTE_BATCH_SIZES};
+use agilenn::net::{
+    reassemble_symbols, Channel, GilbertElliott, Packetizer, PACKET_HEADER_BYTES,
+};
+use agilenn::simulator::{NetworkProfile, NetworkSim};
 use agilenn::tensor::{argmax, softmax, Tensor};
 use agilenn::xai;
 use std::time::{Duration, Instant};
@@ -235,6 +239,130 @@ fn prop_softmax_is_distribution_and_argmax_stable() {
         assert!((sum - 1.0).abs() < 1e-4, "seed {seed} sum {sum}");
         assert!(p.iter().all(|&x| (0.0..=1.0).contains(&x)));
         assert_eq!(argmax(&logits), argmax(&p), "softmax must preserve argmax");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// net: packetizer round-trip and partial decode
+// ---------------------------------------------------------------------------
+
+/// Random permutation of 0..n via Fisher–Yates over the test PRNG.
+fn random_order(rng: &mut Rng, n: usize) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    for i in (1..n).rev() {
+        order.swap(i, rng.usize(i + 1));
+    }
+    order
+}
+
+#[test]
+fn prop_packetizer_lossless_roundtrip_is_bit_exact() {
+    for seed in 1..=60u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.usize(3000);
+        let bits = 1 + rng.usize(8) as u32;
+        let symbols: Vec<u8> = (0..n).map(|_| (rng.next() % (1u64 << bits)) as u8).collect();
+        let cap = PACKET_HEADER_BYTES + 1 + rng.usize(200);
+        let order = if rng.next() % 2 == 0 { Some(random_order(&mut rng, n)) } else { None };
+        let pz = Packetizer::new(cap, order.clone());
+        let packets = pz.packetize(seed, &symbols, bits).unwrap();
+        // every packet respects the payload cap
+        assert!(packets.iter().all(|p| p.app_bytes() <= cap), "seed {seed}");
+        let (back, delivered) =
+            reassemble_symbols(&packets, n, bits, 0xFF, order.as_deref()).unwrap();
+        assert_eq!(back, symbols, "seed {seed} n {n} bits {bits} cap {cap}");
+        assert_eq!(delivered, n, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_packetizer_any_subset_decodes_with_correct_feature_indices() {
+    for seed in 1..=60u64 {
+        let mut rng = Rng::new(seed);
+        let n = 50 + rng.usize(2000);
+        let bits = 1 + rng.usize(8) as u32;
+        // fill-distinguishable symbols: never equal to the fill value below
+        let fill = ((1u64 << bits) - 1) as u8;
+        let symbols: Vec<u8> =
+            (0..n).map(|_| (rng.next() % ((1u64 << bits) - 1)) as u8).collect();
+        let order = if rng.next() % 2 == 0 { Some(random_order(&mut rng, n)) } else { None };
+        let pz = Packetizer::new(PACKET_HEADER_BYTES + 1 + rng.usize(64), order.clone());
+        let packets = pz.packetize(0, &symbols, bits).unwrap();
+        // keep a random subset of packets
+        let kept: Vec<_> = packets.into_iter().filter(|_| rng.next() % 2 == 0).collect();
+        let (back, delivered) =
+            reassemble_symbols(&kept, n, bits, fill, order.as_deref()).unwrap();
+        assert_eq!(delivered, kept.iter().map(|p| p.range_len as usize).sum::<usize>());
+        // delivered order-space ranges land on the right original indices
+        let mut covered = vec![false; n];
+        for p in &kept {
+            for k in 0..p.range_len as usize {
+                let pos = p.range_start as usize + k;
+                let idx = order.as_ref().map_or(pos, |o| o[pos] as usize);
+                covered[idx] = true;
+            }
+        }
+        for i in 0..n {
+            if covered[i] {
+                assert_eq!(back[i], symbols[i], "seed {seed} idx {i}");
+            } else {
+                assert_eq!(back[i], fill, "seed {seed} idx {i} must be imputed");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// net: channel determinism and the zero-loss special case
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_channel_same_seed_same_loss_pattern() {
+    for seed in 1..=30u64 {
+        let profile = NetworkProfile::wifi_6mbps();
+        let run = |s: u64| {
+            let mut ch = Channel::new(&profile, GilbertElliott::bursty(0.25, 3.0), None, s);
+            let mut t = 0.0;
+            let mut pattern = Vec::new();
+            for k in 0..400usize {
+                let tx = ch.send_packet(t, 100 + (k % 7) * 50);
+                pattern.push((tx.arrival_s.is_some(), tx.t_end.to_bits()));
+                t = tx.t_end;
+            }
+            pattern
+        };
+        assert_eq!(run(seed), run(seed), "seed {seed} must replay identically");
+    }
+}
+
+#[test]
+fn prop_zero_loss_channel_matches_network_sim_closed_form() {
+    for seed in 1..=40u64 {
+        let mut rng = Rng::new(seed);
+        let profile = if rng.next() % 2 == 0 {
+            NetworkProfile::wifi_6mbps()
+        } else {
+            NetworkProfile::ble_270kbps()
+        };
+        let sim = NetworkSim::new(profile.clone());
+        let ch = Channel::ideal(&profile);
+        for _ in 0..50 {
+            let bytes = rng.usize(20_000);
+            let t0 = rng.f32() as f64 * 100.0;
+            let wire = if bytes == 0 {
+                0
+            } else {
+                bytes + bytes.div_ceil(profile.mtu) * profile.per_packet_overhead
+            };
+            let closed_form = if bytes == 0 {
+                0.0
+            } else {
+                wire as f64 * 8.0 / profile.bandwidth_bps + profile.one_way_latency_s
+            };
+            assert!((sim.transfer_s(bytes) - closed_form).abs() < 1e-12, "seed {seed}");
+            assert!((ch.transfer_s(t0, bytes) - closed_form).abs() < 1e-12, "seed {seed}");
+            assert_eq!(sim.wire_bytes(bytes), wire, "seed {seed}");
+        }
     }
 }
 
