@@ -14,10 +14,14 @@ use agilenn::baselines::AgileRunner;
 use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
 use agilenn::net::{DeliveryPolicy, GilbertElliott, PacketOrder};
 use agilenn::runtime::Engine;
-use agilenn::serve::ServeBuilder;
+use agilenn::serve::{ClockKind, ServeBuilder};
 use agilenn::simulator::NetworkProfile;
-use agilenn::workload::TestSet;
+use agilenn::workload::{Arrival, TestSet};
 use anyhow::Result;
+
+/// Sweep pacing: 30 Hz keeps the radio uncontended (the sweeps isolate
+/// transport behavior, not queueing) and the sim clock makes it free.
+const SWEEP_ARRIVAL: Arrival = Arrival::Periodic { hz: 30.0 };
 
 fn main() -> Result<()> {
     let dataset = std::env::args().nth(1).unwrap_or_else(|| "svhns".into());
@@ -38,6 +42,8 @@ fn main() -> Result<()> {
             .devices(1)
             .requests(n)
             .max_batch(1)
+            .arrival(SWEEP_ARRIVAL)
+            .clock(ClockKind::Sim)
             .network_profile(profile)
             .build()?
             .stream()?;
@@ -74,6 +80,8 @@ fn main() -> Result<()> {
                 .devices(1)
                 .requests(n)
                 .max_batch(1)
+                .arrival(SWEEP_ARRIVAL)
+                .clock(ClockKind::Sim)
                 .loss(GilbertElliott::bursty(loss, 4.0))
                 .delivery(delivery)
                 .packet_order(order)

@@ -4,8 +4,10 @@
 //! the batcher accumulates decoded feature tensors until either the largest
 //! batch fills or the oldest request's deadline expires, then dispatches and
 //! pads to the smallest exported batch size that fits.
-
-use std::time::{Duration, Instant};
+//!
+//! Timestamps are **clock seconds** (`serve::clock::Clock::now`), not raw
+//! `Instant`s, so the same policy runs unchanged on the wall clock and on
+//! the discrete-event sim clock.
 
 /// Exported remote batch sizes (must match compile/aot.py REMOTE_BATCHES).
 pub const REMOTE_BATCH_SIZES: [usize; 4] = [1, 2, 4, 8];
@@ -25,22 +27,27 @@ pub fn pad_batch_size(n: usize) -> usize {
 pub struct Pending<T> {
     pub id: u64,
     pub payload: T,
-    pub enqueued: Instant,
+    /// clock timestamp (seconds) when the request entered the queue
+    pub enqueued: f64,
 }
 
 /// Deadline-driven batch queue. Pure data structure (no async) so the policy
-/// is unit-testable; `pipeline.rs` drives it from the pipeline thread.
+/// is unit-testable; the serve loop drives it from the server thread.
 #[derive(Debug)]
 pub struct BatchQueue<T> {
     pending: Vec<Pending<T>>,
     max_batch: usize,
-    deadline: Duration,
+    deadline_s: f64,
 }
 
 impl<T> BatchQueue<T> {
-    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+    pub fn new(max_batch: usize, deadline_s: f64) -> Self {
         assert!(REMOTE_BATCH_SIZES.contains(&max_batch), "max_batch must be exported");
-        Self { pending: Vec::new(), max_batch, deadline }
+        assert!(
+            deadline_s.is_finite() && deadline_s >= 0.0,
+            "deadline must be finite and non-negative"
+        );
+        Self { pending: Vec::new(), max_batch, deadline_s }
     }
 
     pub fn len(&self) -> usize {
@@ -52,31 +59,34 @@ impl<T> BatchQueue<T> {
     }
 
     /// Enqueue; returns a full batch if the size trigger fired.
-    pub fn push(&mut self, id: u64, payload: T, now: Instant) -> Option<Vec<Pending<T>>> {
-        self.pending.push(Pending { id, payload, enqueued: now });
+    pub fn push(&mut self, id: u64, payload: T, now_s: f64) -> Option<Vec<Pending<T>>> {
+        self.pending.push(Pending { id, payload, enqueued: now_s });
         if self.pending.len() >= self.max_batch {
             return Some(std::mem::take(&mut self.pending));
         }
         None
     }
 
-    /// Dispatch if the oldest request has waited past the deadline.
-    pub fn poll_deadline(&mut self, now: Instant) -> Option<Vec<Pending<T>>> {
-        match self.pending.first() {
-            Some(oldest) if now.duration_since(oldest.enqueued) >= self.deadline => {
-                Some(std::mem::take(&mut self.pending))
-            }
+    /// Absolute clock time the oldest queued request must dispatch by
+    /// (None if the queue is empty). The deadline poll uses the *same*
+    /// arithmetic, so a sim clock advanced exactly to this timestamp is
+    /// guaranteed to fire it.
+    pub fn next_deadline_at(&self) -> Option<f64> {
+        self.pending.first().map(|oldest| oldest.enqueued + self.deadline_s)
+    }
+
+    /// Dispatch if the oldest request's deadline has expired.
+    pub fn poll_deadline(&mut self, now_s: f64) -> Option<Vec<Pending<T>>> {
+        match self.next_deadline_at() {
+            Some(at) if now_s >= at => Some(std::mem::take(&mut self.pending)),
             _ => None,
         }
     }
 
-    /// Time until the current deadline fires (None if queue empty).
-    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
-        self.pending.first().map(|oldest| {
-            self.deadline
-                .checked_sub(now.duration_since(oldest.enqueued))
-                .unwrap_or(Duration::ZERO)
-        })
+    /// Seconds until the current deadline fires (None if queue empty,
+    /// clamped at zero once expired).
+    pub fn next_deadline_in(&self, now_s: f64) -> Option<f64> {
+        self.next_deadline_at().map(|at| (at - now_s).max(0.0))
     }
 
     /// Drain whatever is queued (shutdown path).
@@ -100,41 +110,49 @@ mod tests {
 
     #[test]
     fn size_trigger_dispatches_full_batch() {
-        let mut q = BatchQueue::new(2, Duration::from_millis(10));
-        let t = Instant::now();
-        assert!(q.push(1, "a", t).is_none());
-        let batch = q.push(2, "b", t).expect("size trigger");
+        let mut q = BatchQueue::new(2, 0.010);
+        assert!(q.push(1, "a", 0.0).is_none());
+        let batch = q.push(2, "b", 0.0).expect("size trigger");
         assert_eq!(batch.len(), 2);
         assert!(q.is_empty());
     }
 
     #[test]
     fn deadline_trigger() {
-        let mut q = BatchQueue::new(8, Duration::from_millis(5));
-        let t0 = Instant::now();
-        q.push(1, "a", t0);
-        assert!(q.poll_deadline(t0).is_none());
-        let later = t0 + Duration::from_millis(6);
-        let batch = q.poll_deadline(later).expect("deadline trigger");
+        let mut q = BatchQueue::new(8, 0.005);
+        q.push(1, "a", 0.0);
+        assert!(q.poll_deadline(0.0).is_none());
+        let batch = q.poll_deadline(0.006).expect("deadline trigger");
         assert_eq!(batch.len(), 1);
         assert_eq!(batch[0].id, 1);
     }
 
     #[test]
+    fn deadline_fires_at_exactly_the_advertised_timestamp() {
+        // the sim clock advances to next_deadline_at() bit for bit; the
+        // poll must fire there even when fp rounding makes
+        // (enqueued + d) - enqueued < d
+        let mut q = BatchQueue::new(8, 2e-3);
+        let enq = 0.300000000000000044;
+        q.push(1, "a", enq);
+        let at = q.next_deadline_at().unwrap();
+        assert!(q.poll_deadline(at).is_some());
+    }
+
+    #[test]
     fn next_deadline_counts_down() {
-        let mut q = BatchQueue::new(8, Duration::from_millis(10));
-        let t0 = Instant::now();
-        assert!(q.next_deadline_in(t0).is_none());
-        q.push(1, "a", t0);
-        let d = q.next_deadline_in(t0 + Duration::from_millis(4)).unwrap();
-        assert!(d <= Duration::from_millis(6));
+        let mut q = BatchQueue::new(8, 0.010);
+        assert!(q.next_deadline_in(0.0).is_none());
+        q.push(1, "a", 0.0);
+        let d = q.next_deadline_in(0.004).unwrap();
+        assert!((d - 0.006).abs() < 1e-12);
     }
 
     #[test]
     fn flush_drains() {
-        let mut q = BatchQueue::new(8, Duration::from_millis(10));
-        q.push(1, "a", Instant::now());
-        q.push(2, "b", Instant::now());
+        let mut q = BatchQueue::new(8, 0.010);
+        q.push(1, "a", 0.0);
+        q.push(2, "b", 0.0);
         assert_eq!(q.flush().len(), 2);
         assert!(q.is_empty());
     }
@@ -143,30 +161,27 @@ mod tests {
     fn deadline_fires_partial_batch_with_everything_pending() {
         // only the oldest request is past the deadline, but the whole
         // partial batch rides along (dispatching it costs one padded exec)
-        let mut q = BatchQueue::new(8, Duration::from_millis(5));
-        let t0 = Instant::now();
-        q.push(1, "a", t0);
-        q.push(2, "b", t0 + Duration::from_millis(4));
-        q.push(3, "c", t0 + Duration::from_millis(4));
-        let batch = q.poll_deadline(t0 + Duration::from_millis(6)).expect("deadline");
+        let mut q = BatchQueue::new(8, 0.005);
+        q.push(1, "a", 0.0);
+        q.push(2, "b", 0.004);
+        q.push(3, "c", 0.004);
+        let batch = q.poll_deadline(0.006).expect("deadline");
         assert_eq!(batch.len(), 3);
         assert_eq!(batch[0].id, 1);
         assert!(q.is_empty());
         // a fresh push restarts the deadline clock from its own enqueue time
-        let t1 = t0 + Duration::from_millis(7);
-        q.push(4, "d", t1);
-        assert!(q.poll_deadline(t1 + Duration::from_millis(4)).is_none());
-        assert!(q.poll_deadline(t1 + Duration::from_millis(5)).is_some());
+        q.push(4, "d", 0.007);
+        assert!(q.poll_deadline(0.0119).is_none());
+        assert!(q.poll_deadline(0.012).is_some());
     }
 
     #[test]
     fn size_trigger_leaves_overflow_for_the_next_batch() {
-        let mut q = BatchQueue::new(2, Duration::from_millis(50));
-        let t = Instant::now();
-        assert!(q.push(1, "a", t).is_none());
-        assert!(q.push(2, "b", t).is_some());
+        let mut q = BatchQueue::new(2, 0.050);
+        assert!(q.push(1, "a", 0.0).is_none());
+        assert!(q.push(2, "b", 0.0).is_some());
         // the queue is empty again; a lone tail request sits until flush
-        assert!(q.push(3, "c", t).is_none());
+        assert!(q.push(3, "c", 0.0).is_none());
         assert_eq!(q.len(), 1);
         let tail = q.flush();
         assert_eq!(tail.len(), 1);
@@ -175,24 +190,29 @@ mod tests {
 
     #[test]
     fn flush_on_empty_queue_is_empty() {
-        let mut q = BatchQueue::<&str>::new(4, Duration::from_millis(1));
+        let mut q = BatchQueue::<&str>::new(4, 0.001);
         assert!(q.flush().is_empty());
         // flush never fabricates deadlines either
-        assert!(q.next_deadline_in(Instant::now()).is_none());
+        assert!(q.next_deadline_in(0.0).is_none());
+        assert!(q.next_deadline_at().is_none());
     }
 
     #[test]
     fn expired_deadline_reports_zero_wait() {
-        let mut q = BatchQueue::new(8, Duration::from_millis(2));
-        let t0 = Instant::now();
-        q.push(1, "a", t0);
-        let d = q.next_deadline_in(t0 + Duration::from_millis(10)).unwrap();
-        assert_eq!(d, Duration::ZERO);
+        let mut q = BatchQueue::new(8, 0.002);
+        q.push(1, "a", 0.0);
+        assert_eq!(q.next_deadline_in(0.010), Some(0.0));
     }
 
     #[test]
     #[should_panic]
     fn non_exported_max_batch_panics() {
-        let _ = BatchQueue::<u8>::new(3, Duration::from_millis(1));
+        let _ = BatchQueue::<u8>::new(3, 0.001);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_finite_deadline_panics() {
+        let _ = BatchQueue::<u8>::new(4, f64::NAN);
     }
 }

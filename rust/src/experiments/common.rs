@@ -4,7 +4,7 @@ use crate::baselines::{make_runner, SchemeRunner};
 use crate::config::{Manifest, Meta, RunConfig, Scheme};
 use crate::metrics::{AccuracyCounter, EnergyLedger, LatencyBreakdown};
 use crate::runtime::Engine;
-use crate::serve::{PipelineReport, Service};
+use crate::serve::{ClockKind, PipelineReport, Service};
 use crate::workload::{Arrival, TestSet};
 use anyhow::Result;
 use std::collections::HashMap;
@@ -98,17 +98,22 @@ impl SchemeEval {
 
 /// Serve a scheme through the batched multi-device pipeline — the serving
 /// counterpart of [`eval_scheme`]'s synchronous accounting. Reuses the
-/// context's cached meta/test set.
+/// context's cached meta/test set. The figure sweeps run on
+/// [`ClockKind::Sim`] so `cargo run -- bench` never sleeps through
+/// arrival pacing and the reported quantiles are seed-deterministic.
 pub fn serve_scheme(
     ctx: &EvalCtx,
     cfg: &RunConfig,
     devices: usize,
     n: usize,
     arrival: Arrival,
+    clock: ClockKind,
 ) -> Result<PipelineReport> {
     let meta = ctx.meta(&cfg.dataset)?;
     let testset = ctx.testset(&cfg.dataset)?;
-    Service::from_parts(cfg.clone(), meta, testset, devices, n, arrival)?.run()
+    Service::from_parts(cfg.clone(), meta, testset, devices, n, arrival)?
+        .with_clock(clock)
+        .run()
 }
 
 /// Evaluate a scheme under `cfg` over the first `n` test samples.

@@ -15,9 +15,14 @@ use super::common::{eval_n, serve_scheme, EvalCtx};
 use crate::config::Scheme;
 use crate::net::{DeliveryPolicy, GilbertElliott, PacketOrder, PACKET_HEADER_BYTES};
 use crate::report::{ms, pct, Table};
-use crate::serve::PipelineReport;
+use crate::serve::{ClockKind, PipelineReport};
 use crate::workload::Arrival;
 use anyhow::Result;
+
+/// Per-device arrival rate for the sweep: slow enough that the radio is
+/// never contended (the table isolates *transport* latency, not queueing)
+/// — and free under the sim clock, which never sleeps through the pacing.
+const SWEEP_RATE_HZ: f64 = 30.0;
 
 pub const LOSS_SWEEP: [f64; 4] = [0.0, 0.1, 0.3, 0.5];
 
@@ -80,7 +85,7 @@ fn run_point(
     cfg.net.order = row.order;
     cfg.net.packet_payload = Some(PAYLOAD_CAP);
     cfg.net.seed = 42; // shared across rows: paired loss patterns
-    serve_scheme(ctx, &cfg, 1, n, Arrival::Periodic { hz: 1e9 })
+    serve_scheme(ctx, &cfg, 1, n, Arrival::Periodic { hz: SWEEP_RATE_HZ }, ClockKind::Sim)
 }
 
 pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {

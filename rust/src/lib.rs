@@ -13,9 +13,10 @@
 //!   runtime simulator, learned quantization + LZW transmit path, a lossy
 //!   trace-driven channel with importance-ordered anytime transport
 //!   ([`net`]), dynamic remote batching, alpha-weighted prediction fusion,
-//!   baseline schemes, and the bench harness regenerating every
-//!   figure/table in the paper's evaluation. Python is never on the
-//!   request path.
+//!   baseline schemes, a pluggable serving clock ([`serve::clock`]: wall
+//!   time or seed-deterministic discrete-event virtual time), and the
+//!   bench harness regenerating every figure/table in the paper's
+//!   evaluation. Python is never on the request path.
 //!
 //! ## Quick start
 //!

@@ -11,7 +11,7 @@ use agilenn::experiments::{all_ids, run_figure, EvalCtx};
 use agilenn::net::{BandwidthTrace, DeliveryPolicy, GilbertElliott, PacketOrder};
 use agilenn::report::{ms, pct};
 use agilenn::runtime::Engine;
-use agilenn::serve::ServeBuilder;
+use agilenn::serve::{ClockKind, ServeBuilder};
 use agilenn::workload::TestSet;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -78,6 +78,10 @@ COMMANDS:
   serve    run the multi-device batched serving pipeline (any scheme)
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --devices 4 --requests 256 --rate-hz 30
+             --clock wall|sim    (sim: discrete-event virtual time — no
+                                 sleeps, seed-deterministic latencies,
+                                 100k+-request sweeps in seconds)
+             --arrival-seed 42   base seed for per-device Poisson arrivals
              --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
              --quiet   (suppress streaming per-request progress)
            channel (default: ideal link; all stochastic behavior is
@@ -126,11 +130,15 @@ fn main() -> Result<()> {
                 .devices(devices)
                 .requests(requests)
                 .rate_hz(args.get("rate-hz", 30.0)?)
+                .clock(args.get("clock", ClockKind::Wall)?)
                 .max_batch(args.get("max-batch", 8)?)
                 .batch_deadline_us(args.get("deadline-us", 2000)?)
                 .bits(args.get("bits", 4)?);
             if let Some(alpha) = args.get_opt_f64("alpha")? {
                 builder = builder.alpha(alpha);
+            }
+            if args.flags.contains_key("arrival-seed") {
+                builder = builder.arrival_seed(args.get("arrival-seed", 42u64)?);
             }
             if let Some(loss) = args.get_opt_f64("loss")? {
                 let burst: f64 = args.get("burst", 1.0)?;
@@ -173,8 +181,16 @@ fn main() -> Result<()> {
                 }
             }
             let rep = stream.finish()?;
-            println!("{}: {} requests over {} devices", scheme.name(), rep.requests, devices);
-            println!("  wall time      : {:.2} s", rep.wall_s);
+            println!(
+                "{}: {} requests over {} devices ({} clock)",
+                scheme.name(),
+                rep.requests,
+                devices,
+                rep.clock.name()
+            );
+            let elapsed_label =
+                if rep.clock == ClockKind::Sim { "virtual time" } else { "wall time" };
+            println!("  {elapsed_label:<15}: {:.2} s", rep.wall_s);
             println!("  throughput     : {:.1} req/s", rep.throughput_rps);
             println!("  accuracy       : {}", pct(rep.accuracy));
             println!("  latency mean   : {} ms", ms(rep.mean_latency_s));
@@ -192,6 +208,7 @@ fn main() -> Result<()> {
                 rep.delivered_feature_rate * 100.0,
                 rep.incomplete_frames
             );
+            println!("  radio queueing : mean {} ms", ms(rep.mean_radio_wait_s));
         }
         "infer" => {
             let dataset = args.get_str("dataset", "svhns");
@@ -294,6 +311,17 @@ mod tests {
     fn negative_numbers_are_values_not_flags() {
         let a = parse(&["serve", "--alpha", "-0.5"]);
         assert_eq!(a.get_opt_f64("alpha").unwrap(), Some(-0.5));
+    }
+
+    #[test]
+    fn clock_flag_parses_through_args() {
+        use agilenn::serve::ClockKind;
+        let a = parse(&["serve", "--clock", "sim"]);
+        assert_eq!(a.get("clock", ClockKind::Wall).unwrap(), ClockKind::Sim);
+        let a = parse(&["serve"]);
+        assert_eq!(a.get("clock", ClockKind::Wall).unwrap(), ClockKind::Wall);
+        let a = parse(&["serve", "--clock", "sundial"]);
+        assert!(a.get("clock", ClockKind::Wall).is_err());
     }
 
     #[test]

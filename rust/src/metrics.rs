@@ -23,6 +23,10 @@ fn bucket_index(seconds: f64) -> usize {
 /// Streaming latency statistics with bounded memory: exact quantiles for
 /// small runs (the benches), fixed log-scale buckets once the sample count
 /// spills past [`EXACT_MAX_SAMPLES`] (million-request serving runs).
+///
+/// Non-finite samples (NaN, ±inf) are never folded into the quantiles:
+/// they are counted separately ([`LatencyStats::non_finite`]) so a single
+/// poisoned measurement can neither panic the sort nor skew the stats.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyStats {
     samples_s: Vec<f64>,
@@ -30,6 +34,7 @@ pub struct LatencyStats {
     /// engaged lazily on spill; `N_BUCKETS` counters, log-scale
     buckets: Option<Vec<u64>>,
     count: usize,
+    non_finite: usize,
     sum_s: f64,
     min_s: f64,
     max_s: f64,
@@ -41,6 +46,10 @@ impl LatencyStats {
     }
 
     pub fn record(&mut self, seconds: f64) {
+        if !seconds.is_finite() {
+            self.non_finite += 1;
+            return;
+        }
         if self.count == 0 {
             self.min_s = seconds;
             self.max_s = seconds;
@@ -71,6 +80,12 @@ impl LatencyStats {
         self.count
     }
 
+    /// Samples rejected by [`LatencyStats::record`] for being NaN or
+    /// infinite (0 in a healthy run).
+    pub fn non_finite(&self) -> usize {
+        self.non_finite
+    }
+
     pub fn mean_s(&self) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -80,7 +95,9 @@ impl LatencyStats {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: NaN-safe total order (record filters non-finite
+            // samples already; this can never panic regardless)
+            self.samples_s.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -130,9 +147,11 @@ pub struct LatencyBreakdown {
     pub local_nn_s: f64,
     /// device-side quantize + LZW compress
     pub compression_s: f64,
-    /// uplink + downlink transfer
+    /// uplink + downlink transfer (+ simulated radio queueing under load)
     pub network_s: f64,
-    /// server decompress + remote NN (+ batch queueing)
+    /// server decompress + remote NN (+ batch queueing). Wall-measured
+    /// under the wall clock; pure virtual queueing time — and therefore
+    /// seed-deterministic — under the sim clock.
     pub remote_s: f64,
 }
 
@@ -209,6 +228,22 @@ mod tests {
         let mut s = LatencyStats::new();
         assert_eq!(s.mean_s(), 0.0);
         assert_eq!(s.p95(), 0.0);
+    }
+
+    #[test]
+    fn non_finite_samples_are_flagged_not_fatal() {
+        let mut s = LatencyStats::new();
+        s.record(f64::NAN);
+        s.record(1.0);
+        s.record(f64::INFINITY);
+        s.record(f64::NEG_INFINITY);
+        s.record(3.0);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.non_finite(), 3);
+        assert!((s.mean_s() - 2.0).abs() < 1e-12);
+        // the sort that used to panic on partial_cmp(NaN) is now safe
+        assert_eq!(s.quantile(1.0), 3.0);
+        assert_eq!(s.quantile(0.0), 1.0);
     }
 
     #[test]

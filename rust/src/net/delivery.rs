@@ -53,6 +53,11 @@ pub struct NetStats {
     pub app_bytes_delivered: usize,
     /// the server decoded the full frame
     pub complete: bool,
+    /// time the uplink waited for the device's (half-duplex) radio to
+    /// finish the previous request's exchange before serialization could
+    /// begin — simulated queueing under load, seconds. Filled in by the
+    /// device loop; the transmit functions themselves start at `t0`.
+    pub radio_wait_s: f64,
     /// transmit start -> frame usable at the server, seconds
     pub uplink_s: f64,
     /// radio-on serialization time, retransmissions included, seconds

@@ -81,9 +81,10 @@ impl NetConfig {
     }
 
     /// Per-device channel seed: decorrelates device loss streams while
-    /// keeping the whole run reproducible from one seed.
+    /// keeping the whole run reproducible from one seed (shared derivation
+    /// with the per-device arrival streams).
     pub fn device_seed(&self, device_index: usize) -> u64 {
-        self.seed ^ (device_index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        crate::workload::derive_device_seed(self.seed, device_index)
     }
 }
 

@@ -1,0 +1,496 @@
+//! Serving clocks: real time vs a shared, conservative virtual clock.
+//!
+//! The pipeline's timeline used to be wall time only: device threads paced
+//! arrivals with `thread::sleep`, the batcher keyed deadlines on raw
+//! `Instant`s, and `LatencyBreakdown.remote_s` mixed wall-clock queueing
+//! into an otherwise simulated latency budget. That makes sustained-load
+//! runs (30 Hz × 100k+ requests) take hours of real time and leaves every
+//! latency quantile nondeterministic.
+//!
+//! [`Clock`] abstracts the timeline:
+//!
+//! * [`ClockKind::Wall`] — the pre-existing behavior: `now()` is seconds
+//!   since the pipeline started, `sleep_until` really sleeps, and the
+//!   batcher's deadline waits ride on `recv_timeout`.
+//! * [`ClockKind::Sim`] — a discrete-event virtual clock shared by every
+//!   pipeline thread. Threads *register* as participants; when they block
+//!   (arrival pacing, batch-deadline waits, waiting for a remote reply)
+//!   they tell the clock what they are waiting for, and once **all**
+//!   participants are blocked with no message in flight, virtual time
+//!   jumps to the earliest pending wake-up. Nothing ever sleeps, so a
+//!   conservative (no-lookahead) schedule of 100k+ requests plays out in
+//!   the time the real compute takes — and every timestamp, batch
+//!   composition trigger, and queueing delay is a pure function of the
+//!   run's seeds.
+//!
+//! The coordination protocol for channel messages (offloads and replies)
+//! avoids lost wake-ups with an epoch counter: a receiver snapshots
+//! [`Clock::epoch`] *before* polling its channel, and [`Clock::wait`]
+//! returns immediately if the epoch moved in between. Senders bump the
+//! in-flight count *before* pushing into the channel ([`Clock::msg_sent`])
+//! so virtual time can never advance past an unprocessed message, and
+//! notify after ([`Clock::notify`]).
+
+use std::str::FromStr;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which timeline drives the serving pipeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClockKind {
+    /// Real time: arrival pacing sleeps, latency quantiles measure the
+    /// host pipeline (the pre-virtual-clock behavior, and the default).
+    #[default]
+    Wall,
+    /// Discrete-event virtual time: no sleeps, seed-deterministic
+    /// latencies, load sweeps run at CPU speed.
+    Sim,
+}
+
+impl ClockKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClockKind::Wall => "wall",
+            ClockKind::Sim => "sim",
+        }
+    }
+}
+
+impl FromStr for ClockKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "wall" | "real" => Ok(ClockKind::Wall),
+            "sim" | "virtual" => Ok(ClockKind::Sim),
+            other => anyhow::bail!("unknown clock {other:?} (wall|sim)"),
+        }
+    }
+}
+
+/// A handle on the pipeline's timeline; cheap to clone into every thread.
+#[derive(Debug, Clone)]
+pub struct Clock {
+    inner: Inner,
+}
+
+#[derive(Debug, Clone)]
+enum Inner {
+    Wall { t0: Instant },
+    Sim(Arc<SimClock>),
+}
+
+impl Clock {
+    /// Wall clock anchored at creation: `now()` is seconds since then.
+    pub fn wall() -> Self {
+        Clock { inner: Inner::Wall { t0: Instant::now() } }
+    }
+
+    /// Virtual clock starting at 0.0 with `participants` registered
+    /// threads. Every participant must eventually take a
+    /// [`Clock::participant`] guard; virtual time only advances while all
+    /// of them are blocked in a clock wait.
+    pub fn sim(participants: usize) -> Self {
+        Clock {
+            inner: Inner::Sim(Arc::new(SimClock {
+                state: Mutex::new(SimState {
+                    now: 0.0,
+                    participants,
+                    blocked: 0,
+                    inflight: 0,
+                    epoch: 0,
+                    wake: Vec::new(),
+                }),
+                cv: Condvar::new(),
+            })),
+        }
+    }
+
+    pub fn kind(&self) -> ClockKind {
+        match self.inner {
+            Inner::Wall { .. } => ClockKind::Wall,
+            Inner::Sim(_) => ClockKind::Sim,
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self.inner, Inner::Sim(_))
+    }
+
+    /// Seconds since the pipeline started (virtual seconds in sim mode).
+    pub fn now(&self) -> f64 {
+        match &self.inner {
+            Inner::Wall { t0 } => t0.elapsed().as_secs_f64(),
+            Inner::Sim(sim) => sim.state.lock().unwrap().now,
+        }
+    }
+
+    /// Block until the clock reaches `t` (no-op if already past). Wall:
+    /// a real sleep. Sim: a virtual wait that lets time advance.
+    pub fn sleep_until(&self, t: f64) {
+        match &self.inner {
+            Inner::Wall { t0 } => {
+                let now = t0.elapsed().as_secs_f64();
+                if t > now && (t - now).is_finite() {
+                    std::thread::sleep(Duration::from_secs_f64(t - now));
+                }
+            }
+            Inner::Sim(sim) => sim.sleep_until(t),
+        }
+    }
+
+    /// RAII registration guard for one pipeline thread; dropping it
+    /// (normal exit or error unwind) deregisters, so a sim run can never
+    /// end up waiting on a thread that is gone.
+    pub fn participant(&self) -> ClockParticipant {
+        ClockParticipant {
+            sim: match &self.inner {
+                Inner::Wall { .. } => None,
+                Inner::Sim(sim) => Some(sim.clone()),
+            },
+        }
+    }
+
+    /// Event-counter snapshot; take it *before* polling a channel and pass
+    /// it to [`Clock::wait`] so a send landing in between is never missed.
+    pub fn epoch(&self) -> u64 {
+        match &self.inner {
+            Inner::Wall { .. } => 0,
+            Inner::Sim(sim) => sim.state.lock().unwrap().epoch,
+        }
+    }
+
+    /// Sim: block until virtual time reaches `deadline` (`None` = only an
+    /// event can wake us) or the epoch moves past `epoch0`; returns true
+    /// iff the deadline was reached.
+    ///
+    /// # Panics
+    /// On a wall clock: the wall pipeline waits on its channels
+    /// (`recv_timeout` / `recv`) and must never call this — failing fast
+    /// in every build profile beats silently sleeping to a virtual
+    /// timestamp.
+    pub fn wait(&self, deadline: Option<f64>, epoch0: u64) -> bool {
+        match &self.inner {
+            Inner::Wall { .. } => {
+                panic!("Clock::wait is a sim-clock primitive; wall pipelines wait on channels")
+            }
+            Inner::Sim(sim) => sim.wait(deadline, epoch0),
+        }
+    }
+
+    /// A message is about to enter a channel: virtual time must not
+    /// advance until the receiver has taken it ([`Clock::msg_received`]).
+    /// No-op on the wall clock.
+    pub fn msg_sent(&self) {
+        if let Inner::Sim(sim) = &self.inner {
+            sim.state.lock().unwrap().inflight += 1;
+        }
+    }
+
+    /// The send failed (receiver gone): undo [`Clock::msg_sent`].
+    pub fn msg_cancelled(&self) {
+        if let Inner::Sim(sim) = &self.inner {
+            let mut st = sim.state.lock().unwrap();
+            st.inflight = st.inflight.saturating_sub(1);
+        }
+    }
+
+    /// A message was taken off a channel.
+    pub fn msg_received(&self) {
+        if let Inner::Sim(sim) = &self.inner {
+            let mut st = sim.state.lock().unwrap();
+            st.inflight = st.inflight.saturating_sub(1);
+        }
+    }
+
+    /// Wake every clock waiter to re-check its channels (call after a
+    /// channel send). No-op on the wall clock.
+    pub fn notify(&self) {
+        if let Inner::Sim(sim) = &self.inner {
+            let mut st = sim.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            sim.cv.notify_all();
+        }
+    }
+}
+
+/// See [`Clock::participant`].
+#[derive(Debug)]
+pub struct ClockParticipant {
+    sim: Option<Arc<SimClock>>,
+}
+
+impl Drop for ClockParticipant {
+    fn drop(&mut self) {
+        if let Some(sim) = &self.sim {
+            let mut st = sim.state.lock().unwrap();
+            st.participants = st.participants.saturating_sub(1);
+            st.epoch = st.epoch.wrapping_add(1);
+            sim.advance_if_quiescent(&mut st);
+            sim.cv.notify_all();
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SimState {
+    now: f64,
+    /// registered pipeline threads (devices + server)
+    participants: usize,
+    /// how many of them are currently blocked in a clock wait
+    blocked: usize,
+    /// messages pushed into a channel but not yet taken by their receiver
+    inflight: usize,
+    /// bumped on every advance and every notify; lets waiters detect
+    /// events without holding channel and clock locks together
+    epoch: u64,
+    /// wake deadlines of the blocked threads (INFINITY = event-only)
+    wake: Vec<f64>,
+}
+
+/// The shared conservative virtual clock behind [`ClockKind::Sim`].
+#[derive(Debug)]
+struct SimClock {
+    state: Mutex<SimState>,
+    cv: Condvar,
+}
+
+impl SimClock {
+    fn sleep_until(&self, t: f64) {
+        let mut st = self.state.lock().unwrap();
+        // non-finite targets are a no-op (matching the wall clock's
+        // is_finite guard): an INFINITY wake would otherwise pin the
+        // advance forever and silently deadlock the whole pipeline
+        if !t.is_finite() || t <= st.now {
+            return;
+        }
+        st.blocked += 1;
+        st.wake.push(t);
+        self.advance_if_quiescent(&mut st);
+        while st.now < t {
+            st = self.cv.wait(st).unwrap();
+        }
+        Self::remove_wake(&mut st, t);
+        st.blocked -= 1;
+    }
+
+    fn wait(&self, deadline: Option<f64>, epoch0: u64) -> bool {
+        let wake_at = deadline.unwrap_or(f64::INFINITY);
+        let mut st = self.state.lock().unwrap();
+        if st.now >= wake_at {
+            return true;
+        }
+        if st.epoch != epoch0 {
+            return false;
+        }
+        st.blocked += 1;
+        st.wake.push(wake_at);
+        self.advance_if_quiescent(&mut st);
+        let fired = loop {
+            if st.now >= wake_at {
+                break true;
+            }
+            if st.epoch != epoch0 {
+                break false;
+            }
+            st = self.cv.wait(st).unwrap();
+        };
+        Self::remove_wake(&mut st, wake_at);
+        st.blocked -= 1;
+        fired
+    }
+
+    /// The conservative advance: when every participant is blocked and no
+    /// message is in flight, jump to the earliest pending wake-up. If all
+    /// waits are event-only (INFINITY), stay put — only an external event
+    /// (send, thread exit) can unblock the pipeline then.
+    fn advance_if_quiescent(&self, st: &mut SimState) {
+        if st.participants == 0 || st.blocked < st.participants || st.inflight > 0 {
+            return;
+        }
+        let min = st.wake.iter().copied().fold(f64::INFINITY, f64::min);
+        if min.is_finite() && min > st.now {
+            st.now = min;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.cv.notify_all();
+        }
+    }
+
+    fn remove_wake(st: &mut SimState, t: f64) {
+        if let Some(i) = st.wake.iter().position(|&w| w == t) {
+            st.wake.swap_remove(i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, TryRecvError};
+
+    #[test]
+    fn kind_parses_and_names() {
+        assert_eq!("wall".parse::<ClockKind>().unwrap(), ClockKind::Wall);
+        assert_eq!("SIM".parse::<ClockKind>().unwrap(), ClockKind::Sim);
+        assert!("lamport".parse::<ClockKind>().is_err());
+        assert_eq!(ClockKind::Sim.name(), "sim");
+        assert_eq!(ClockKind::default(), ClockKind::Wall);
+    }
+
+    #[test]
+    fn wall_clock_advances_and_sleeps() {
+        let c = Clock::wall();
+        assert!(!c.is_sim());
+        let a = c.now();
+        c.sleep_until(a + 0.005);
+        assert!(c.now() >= a + 0.005);
+        // already-past deadlines return immediately
+        c.sleep_until(0.0);
+    }
+
+    #[test]
+    fn sim_sleep_advances_virtual_time_without_real_sleeping() {
+        let c = Clock::sim(1);
+        let _p = c.participant();
+        let wall = Instant::now();
+        c.sleep_until(3600.0); // one virtual hour
+        assert_eq!(c.now(), 3600.0);
+        assert!(wall.elapsed() < Duration::from_secs(5), "must not really sleep");
+    }
+
+    #[test]
+    fn sim_interleaves_two_sleepers_in_timestamp_order() {
+        let c = Clock::sim(2);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let spawn = |name: &'static str, ts: Vec<f64>| {
+            let c = c.clone();
+            let log = log.clone();
+            std::thread::spawn(move || {
+                let _p = c.participant();
+                for t in ts {
+                    c.sleep_until(t);
+                    log.lock().unwrap().push((name, c.now()));
+                }
+            })
+        };
+        let a = spawn("a", vec![1.0, 3.0]);
+        let b = spawn("b", vec![2.0, 4.0]);
+        a.join().unwrap();
+        b.join().unwrap();
+        assert_eq!(
+            *log.lock().unwrap(),
+            vec![("a", 1.0), ("b", 2.0), ("a", 3.0), ("b", 4.0)]
+        );
+    }
+
+    #[test]
+    fn sim_message_wakes_event_only_waiter() {
+        let c = Clock::sim(2);
+        let (tx, rx) = channel::<u32>();
+        let consumer = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let _p = c.participant();
+                loop {
+                    let epoch = c.epoch();
+                    match rx.try_recv() {
+                        Ok(v) => {
+                            c.msg_received();
+                            return (v, c.now());
+                        }
+                        Err(TryRecvError::Empty) => {
+                            c.wait(None, epoch);
+                        }
+                        Err(TryRecvError::Disconnected) => panic!("producer gone"),
+                    }
+                }
+            })
+        };
+        let producer = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let _p = c.participant();
+                c.sleep_until(5.0);
+                c.msg_sent();
+                tx.send(7).unwrap();
+                c.notify();
+            })
+        };
+        producer.join().unwrap();
+        let (v, at) = consumer.join().unwrap();
+        assert_eq!(v, 7);
+        // the consumer received at the producer's virtual send time: time
+        // advanced to 5.0 despite the consumer waiting without a deadline
+        assert_eq!(at, 5.0);
+    }
+
+    #[test]
+    fn sim_deadline_wait_fires_at_the_deadline() {
+        let c = Clock::sim(1);
+        let _p = c.participant();
+        let epoch = c.epoch();
+        assert!(c.wait(Some(0.25), epoch), "deadline must fire");
+        assert_eq!(c.now(), 0.25);
+        // an already-expired deadline returns true immediately
+        assert!(c.wait(Some(0.1), c.epoch()));
+        assert_eq!(c.now(), 0.25);
+    }
+
+    #[test]
+    fn sim_deregistration_wakes_waiters_for_shutdown() {
+        let c = Clock::sim(2);
+        let (tx, rx) = channel::<u32>();
+        let consumer = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let _p = c.participant();
+                loop {
+                    let epoch = c.epoch();
+                    match rx.try_recv() {
+                        Ok(_) => {
+                            c.msg_received();
+                        }
+                        Err(TryRecvError::Empty) => {
+                            c.wait(None, epoch);
+                        }
+                        Err(TryRecvError::Disconnected) => return true,
+                    }
+                }
+            })
+        };
+        {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let _p = c.participant();
+                c.sleep_until(1.0);
+                drop(tx); // exit without ever sending
+            })
+            .join()
+            .unwrap();
+        }
+        assert!(consumer.join().unwrap(), "consumer must see the disconnect");
+    }
+
+    #[test]
+    fn sim_inflight_message_blocks_the_advance() {
+        // one registered thread sends itself a message, then takes a
+        // deadline wait: the deadline must NOT fire while the message is
+        // in flight (epoch path returns first after msg_received+notify).
+        let c = Clock::sim(1);
+        let _p = c.participant();
+        let (tx, rx) = channel::<u32>();
+        c.msg_sent();
+        tx.send(1).unwrap();
+        let epoch = c.epoch();
+        c.notify();
+        // the notify bumped the epoch, so the wait must return `false`
+        // (event) rather than advancing to the deadline
+        assert!(!c.wait(Some(9.0), epoch));
+        assert_eq!(c.now(), 0.0);
+        assert_eq!(rx.try_recv().unwrap(), 1);
+        c.msg_received();
+        // with the message drained, the deadline path works again
+        assert!(c.wait(Some(9.0), c.epoch()));
+        assert_eq!(c.now(), 9.0);
+    }
+}

@@ -30,10 +30,19 @@
 //! select the loss process, a replayable bandwidth trace, and ARQ vs.
 //! deadline-bounded anytime transport (importance-ordered packets, server
 //! decodes whatever arrived). The defaults reproduce the ideal link.
+//!
+//! The pipeline's timeline is pluggable ([`clock`]):
+//! `ServeBuilder::clock(ClockKind::Sim)` swaps the wall clock for a
+//! shared discrete-event virtual clock — arrival pacing, batch deadlines
+//! and reply waits play out in virtual time without ever sleeping, so
+//! 100k+-request load sweeps run at CPU speed and every latency quantile
+//! in the [`PipelineReport`] becomes seed-deterministic.
 
+pub mod clock;
 pub mod scheme;
 pub mod service;
 
+pub use clock::{Clock, ClockKind};
 pub use scheme::{
     make_device_side, make_fuser, make_server_side, reply_bytes, AgileDevice, AlphaFuser,
     DeepcodDevice, DeviceSide, EdgeDevice, Fuser, LocalArgmaxFuser, LocalResult, McunetDevice,

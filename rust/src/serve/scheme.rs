@@ -172,10 +172,13 @@ impl Fuser for LocalArgmaxFuser {
 /// accounting (link model, energy ledger, breakdown fields) never
 /// diverges between the two paths. `remote_wall_s` is whatever the caller
 /// measured around the server phase (per-request for the sync path, queue
-/// + batch for the live pipeline). When the request crossed a simulated
-/// lossy channel, `link` carries the measured transport outcome and
-/// overrides the closed-form `net` pricing (which remains the ideal-link
-/// fallback for the synchronous runners).
+/// + batch for the live pipeline — wall-measured or virtual depending on
+/// the serving clock). When the request crossed a simulated lossy channel,
+/// `link` carries the measured transport outcome and overrides the
+/// closed-form `net` pricing (which remains the ideal-link fallback for
+/// the synchronous runners); its `radio_wait_s` — time queued behind the
+/// device radio under load — is charged to the network component of the
+/// breakdown, but not to the radio energy (an idle wait is not airtime).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn assemble_outcome(
     fuser: &dyn Fuser,
@@ -190,7 +193,9 @@ pub(crate) fn assemble_outcome(
     num_classes: usize,
 ) -> Result<RequestOutcome> {
     let (network_s, radio_j, net_stats) = match (remote.is_some(), link) {
-        (true, Some(l)) => (l.network_s, dev.radio_energy_j(l.airtime_s), l.stats),
+        (true, Some(l)) => {
+            (l.network_s + l.stats.radio_wait_s, dev.radio_energy_j(l.airtime_s), l.stats)
+        }
         (true, None) => {
             let reply = reply_bytes(num_classes);
             let stats = NetStats {

@@ -5,7 +5,10 @@
 //! server with deadline-driven dynamic batching (vLLM-router topology),
 //! built on std threads + channels — the build environment vendors no
 //! async runtime, and the server loop's recv_timeout + deadline poll is
-//! exactly the select it needs.
+//! exactly the select it needs. The timeline is pluggable
+//! ([`super::clock`]): the wall clock really sleeps and really waits,
+//! while the sim clock replays the same event structure in discrete
+//! virtual time, making sustained-load runs fast and bit-reproducible.
 //!
 //! Every scheme runs through the same loop: its [`DeviceSide`] decides per
 //! request whether an uplink frame exists (local-only schemes and SPINN
@@ -29,6 +32,7 @@ use crate::net::{
     GilbertElliott, LinkOutcome, Packet, PacketOrder, Packetizer,
 };
 use crate::runtime::Engine;
+use crate::serve::clock::{Clock, ClockKind};
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
 };
@@ -37,21 +41,32 @@ use crate::tensor::Tensor;
 use crate::workload::{Arrival, TestSet};
 use anyhow::{anyhow, ensure, Result};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Aggregate report from a pipeline run.
 ///
-/// `accuracy` and every `net`-derived field (packet counters, simulated
-/// link quantiles, delivered-feature rate) are **seed-deterministic**: two
-/// runs with the same `ServeBuilder` configuration and seed produce the
-/// same values. The wall-clock fields (`wall_s`, `throughput_rps`, the
-/// live latency quantiles) measure the host pipeline and are not.
+/// `accuracy`, the transport counters (`packets_*`, `retransmit_rounds`,
+/// `incomplete_frames`, `delivered_feature_rate`) and the sort-based link
+/// quantile `p99_net_s` are **seed-deterministic** in both clock modes:
+/// two runs with the same `ServeBuilder` configuration and seeds produce
+/// bit-identical values. `mean_net_s`, `mean_radio_wait_s` and
+/// `goodput_bps` (whose airtime denominator is an f64 sum) are
+/// deterministic up to f64 summation order (outcomes are accumulated in
+/// stream-arrival order, which thread scheduling can permute). The
+/// remaining fields depend on the clock
+/// ([`ServeBuilder::clock`]): under the wall clock (the default) `wall_s`,
+/// `throughput_rps`, the latency quantiles, and the batch counters measure
+/// the live host pipeline and vary run to run; under the sim clock they
+/// are virtual-time quantities and reproduce run to run.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
     pub requests: usize,
+    /// which clock produced the run (and which fields are deterministic)
+    pub clock: ClockKind,
+    /// elapsed clock time: host seconds (wall) or virtual seconds (sim)
     pub wall_s: f64,
     pub throughput_rps: f64,
     pub accuracy: f64,
@@ -73,11 +88,16 @@ pub struct PipelineReport {
     /// application-layer goodput over the run: delivered uplink bytes * 8 /
     /// simulated link-busy time (0 when nothing was transmitted)
     pub goodput_bps: f64,
-    /// mean simulated link time per request (deterministic; excludes the
-    /// wall-clock server phase)
+    /// mean simulated link time per request, radio queueing included
+    /// (deterministic; excludes the server phase)
     pub mean_net_s: f64,
-    /// p99 simulated link time per request (deterministic)
+    /// p99 simulated link time per request, radio queueing included
+    /// (deterministic)
     pub p99_net_s: f64,
+    /// mean time per *uplink* spent queued behind the device radio
+    /// (deterministic; 0 when the offered load never contends the link or
+    /// nothing offloaded)
+    pub mean_radio_wait_s: f64,
 }
 
 /// One per-request outcome as it streams out of the live pipeline.
@@ -87,9 +107,13 @@ pub struct ServedOutcome {
     pub id: u64,
     /// Index of the simulated device that served it.
     pub device: usize,
-    /// Live wall-clock latency through the threaded pipeline, including
-    /// batch queueing — as opposed to `outcome.breakdown`, which carries
-    /// the simulated device/network accounting.
+    /// Request latency through the threaded pipeline, including batch
+    /// queueing — as opposed to `outcome.breakdown`, which carries the
+    /// simulated device/network accounting. Under the wall clock: live
+    /// host seconds from when the device started processing. Under the
+    /// sim clock: virtual (seed-deterministic) sojourn seconds from the
+    /// request's *scheduled* arrival, so device backlog under saturation
+    /// is included.
     pub wall_s: f64,
     pub outcome: RequestOutcome,
 }
@@ -100,6 +124,10 @@ pub struct ServedOutcome {
 pub struct RemoteFailure(pub String);
 
 type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
+
+/// What the batcher queues per offloaded request: the decoded features and
+/// the waiting device's reply channel.
+type BatchItem = (Tensor, Sender<Reply>);
 
 /// What actually crossed the (simulated) wire for one offload.
 enum UplinkBody {
@@ -138,6 +166,8 @@ pub struct ServeBuilder {
     device_profile: Option<DeviceProfile>,
     network_profile: Option<NetworkProfile>,
     net: crate::net::NetConfig,
+    clock: ClockKind,
+    arrival_seed: Option<u64>,
 }
 
 impl ServeBuilder {
@@ -156,6 +186,8 @@ impl ServeBuilder {
             device_profile: None,
             network_profile: None,
             net: crate::net::NetConfig::default(),
+            clock: ClockKind::Wall,
+            arrival_seed: None,
         }
     }
 
@@ -190,13 +222,32 @@ impl ServeBuilder {
     }
 
     /// Convenience: Poisson arrivals at `hz` per device, or unpaced
-    /// (back-to-back) when `hz <= 0`.
+    /// (back-to-back) when `hz <= 0`. The base seed (42 unless
+    /// [`ServeBuilder::arrival_seed`] overrides it) is decorrelated per
+    /// device at stream time via [`Arrival::for_device`].
     pub fn rate_hz(mut self, hz: f64) -> Self {
         self.arrival = if hz > 0.0 {
             Arrival::Poisson { hz, seed: 42 }
         } else {
             Arrival::Periodic { hz: 1e9 }
         };
+        self
+    }
+
+    /// Base seed for the per-device Poisson arrival streams (overrides the
+    /// seed carried by [`ServeBuilder::arrival`] / [`ServeBuilder::rate_hz`];
+    /// no-op for periodic arrivals).
+    pub fn arrival_seed(mut self, seed: u64) -> Self {
+        self.arrival_seed = Some(seed);
+        self
+    }
+
+    /// Which clock drives the pipeline: [`ClockKind::Wall`] (default,
+    /// real sleeps and live latencies) or [`ClockKind::Sim`] (discrete-
+    /// event virtual time — no sleeps, seed-deterministic latencies, load
+    /// sweeps at CPU speed).
+    pub fn clock(mut self, clock: ClockKind) -> Self {
+        self.clock = clock;
         self
     }
 
@@ -303,7 +354,12 @@ impl ServeBuilder {
         let cfg = self.to_config();
         let meta = Meta::load(&cfg.dataset_dir())?;
         let testset = Arc::new(TestSet::load(&cfg.dataset_dir().join("test.bin"))?);
-        Service::from_parts(cfg, meta, testset, self.devices, self.requests, self.arrival)
+        let arrival = match self.arrival_seed {
+            Some(seed) => self.arrival.with_seed(seed),
+            None => self.arrival,
+        };
+        Ok(Service::from_parts(cfg, meta, testset, self.devices, self.requests, arrival)?
+            .with_clock(self.clock))
     }
 }
 
@@ -315,12 +371,14 @@ pub struct Service {
     devices: usize,
     requests: usize,
     arrival: Arrival,
+    clock: ClockKind,
 }
 
 impl Service {
     /// Assemble a service from already-loaded parts ([`ServeBuilder::build`]
     /// loads them from the artifacts tree; sweeps that cache `Meta`/test
-    /// sets use this directly).
+    /// sets use this directly). Runs on the wall clock unless
+    /// [`Service::with_clock`] says otherwise.
     pub fn from_parts(
         cfg: RunConfig,
         meta: Meta,
@@ -332,7 +390,13 @@ impl Service {
         ensure!(devices >= 1, "need at least one device");
         ensure!(requests >= 1, "need at least one request");
         ensure!(!testset.is_empty(), "empty test set");
-        Ok(Self { cfg, meta, testset, devices, requests, arrival })
+        Ok(Self { cfg, meta, testset, devices, requests, arrival, clock: ClockKind::Wall })
+    }
+
+    /// Select the clock driving the run (default: wall).
+    pub fn with_clock(mut self, clock: ClockKind) -> Self {
+        self.clock = clock;
+        self
     }
 
     pub fn config(&self) -> &RunConfig {
@@ -360,20 +424,27 @@ impl Service {
             Some(s) => self.cfg.max_batch.min(s.max_batch()),
             None => self.cfg.max_batch,
         };
-        let deadline = Duration::from_micros(self.cfg.batch_deadline_us);
+        let deadline_s = self.cfg.batch_deadline_us as f64 * 1e-6;
+        // the sim clock must know every participant up front — a thread
+        // that registers late could otherwise watch time advance past it
+        let clock = match self.clock {
+            ClockKind::Wall => Clock::wall(),
+            ClockKind::Sim => Clock::sim(self.devices + server.is_some() as usize),
+        };
 
         let (tx_offload, server_handle) = match server {
             Some(server) => {
                 let (tx, rx) = channel::<OffloadMsg>();
-                let handle =
-                    std::thread::spawn(move || server_loop(server, rx, max_batch, deadline));
+                let clock = clock.clone();
+                let handle = std::thread::spawn(move || {
+                    server_loop(server, rx, max_batch, deadline_s, clock)
+                });
                 (Some(tx), Some(handle))
             }
             None => (None, None),
         };
 
         let (tx_done, rx_done) = channel::<ServedOutcome>();
-        let t_start = Instant::now();
         let mut device_handles = Vec::new();
         for d in 0..self.devices {
             let cfg = self.cfg.clone();
@@ -382,10 +453,38 @@ impl Service {
             let testset = self.testset.clone();
             let tx_offload = tx_offload.clone();
             let tx_done = tx_done.clone();
+            let clock = clock.clone();
             let ids: Vec<usize> = (0..self.requests).filter(|i| i % self.devices == d).collect();
-            let times = self.arrival.timestamps(ids.len());
+            let mut times = self.arrival.for_device(d).timestamps(ids.len());
+            // break exact cross-device event-time ties deterministically:
+            // lockstep periodic sensors get a vanishing per-device phase
+            // of (device index) ppm of the period, so the server never
+            // has to race two offloads sent at the bit-identical virtual
+            // instant. Scaling by the period keeps the phase off the
+            // arrival grid at every rate (a fixed offset would collide
+            // with the unpaced 1e9 Hz grid); Poisson streams are already
+            // decorrelated by for_device.
+            if let Arrival::Periodic { hz } = self.arrival {
+                if hz > 0.0 {
+                    let phase = d as f64 * 1e-6 / hz;
+                    for t in &mut times {
+                        *t += phase;
+                    }
+                }
+            }
             device_handles.push(std::thread::spawn(move || {
-                device_loop(d, &engine, &cfg, &meta, &testset, &ids, &times, tx_offload, tx_done)
+                device_loop(
+                    d,
+                    &engine,
+                    &cfg,
+                    &meta,
+                    &testset,
+                    &ids,
+                    &times,
+                    tx_offload,
+                    tx_done,
+                    clock,
+                )
             }));
         }
         drop(tx_offload);
@@ -395,7 +494,7 @@ impl Service {
             rx: rx_done,
             device_handles,
             server_handle,
-            t_start,
+            clock,
             acc: AccuracyCounter::default(),
             lat: LatencyStats::new(),
             net_lat: LatencyStats::new(),
@@ -415,11 +514,16 @@ struct NetAgg {
     features_delivered: u64,
     bytes_delivered: u64,
     airtime_s: f64,
+    radio_wait_s: f64,
+    /// requests that actually produced an uplink (denominator for the
+    /// per-uplink radio-wait mean)
+    uplinks: usize,
 }
 
 impl NetAgg {
     fn record(&mut self, out: &RequestOutcome) {
         let s = &out.net;
+        self.uplinks += (out.tx_bytes > 0) as usize;
         self.packets_sent += s.packets_sent as u64;
         self.packets_lost += s.packets_lost as u64;
         self.retransmit_rounds += s.retransmit_rounds as u64;
@@ -428,6 +532,7 @@ impl NetAgg {
         self.features_delivered += s.features_delivered as u64;
         self.bytes_delivered += s.app_bytes_delivered as u64;
         self.airtime_s += s.airtime_s;
+        self.radio_wait_s += s.radio_wait_s;
     }
 
     fn delivered_feature_rate(&self) -> f64 {
@@ -454,7 +559,7 @@ pub struct OutcomeStream {
     rx: Receiver<ServedOutcome>,
     device_handles: Vec<JoinHandle<Result<()>>>,
     server_handle: Option<JoinHandle<(usize, usize)>>,
-    t_start: Instant,
+    clock: Clock,
     acc: AccuracyCounter,
     lat: LatencyStats,
     net_lat: LatencyStats,
@@ -490,11 +595,15 @@ impl OutcomeStream {
             Some(h) => h.join().map_err(|_| anyhow!("server thread panicked"))?,
             None => (0, 0),
         };
-        let wall = self.t_start.elapsed().as_secs_f64();
+        // host seconds on the wall clock; final virtual time on the sim
+        // clock (all participants have deregistered by now, so this is
+        // the timestamp of the last simulated event)
+        let wall = self.clock.now();
         Ok(PipelineReport {
             requests: self.acc.total,
+            clock: self.clock.kind(),
             wall_s: wall,
-            throughput_rps: self.acc.total as f64 / wall,
+            throughput_rps: if wall > 0.0 { self.acc.total as f64 / wall } else { 0.0 },
             accuracy: self.acc.accuracy(),
             mean_latency_s: self.lat.mean_s(),
             p95_latency_s: self.lat.p95(),
@@ -512,71 +621,134 @@ impl OutcomeStream {
             goodput_bps: self.net.goodput_bps(),
             mean_net_s: self.net_lat.mean_s(),
             p99_net_s: self.net_lat.p99(),
+            mean_radio_wait_s: if self.net.uplinks == 0 {
+                0.0
+            } else {
+                self.net.radio_wait_s / self.net.uplinks as f64
+            },
         })
+    }
+}
+
+/// Reply to one waiting device thread, keeping the sim clock's in-flight
+/// accounting balanced even if the device is already gone.
+fn send_reply(clock: &Clock, tx: &Sender<Reply>, reply: Reply) {
+    clock.msg_sent();
+    if tx.send(reply).is_err() {
+        clock.msg_cancelled();
+    }
+}
+
+/// Decode one uplink and enqueue it for batching (timestamped with the
+/// serving clock); decode failures reply to the device immediately.
+fn decode_and_enqueue(
+    m: OffloadMsg,
+    server: &mut dyn ServerSide,
+    queue: &mut BatchQueue<BatchItem>,
+    clock: &Clock,
+) -> Option<Vec<Pending<BatchItem>>> {
+    let decoded = match &m.body {
+        UplinkBody::Whole(frame) => server.decode(frame),
+        UplinkBody::Packets { packets, count, bits } => {
+            server.decode_packets(packets, *count, *bits)
+        }
+    };
+    match decoded {
+        Ok(feats) => queue.push(m.id, (feats, m.reply), clock.now()),
+        Err(e) => {
+            send_reply(
+                clock,
+                &m.reply,
+                Err(RemoteFailure(format!("decoding request {}: {e:#}", m.id))),
+            );
+            clock.notify();
+            None
+        }
     }
 }
 
 /// The shared deadline-batched server loop. Decode failures and batch
 /// failures are propagated to the waiting device threads as explicit
 /// [`RemoteFailure`] replies, never silently dropped.
+///
+/// Batch deadlines key on [`Clock::now`] timestamps: on the wall clock the
+/// loop blocks in `recv_timeout` exactly as before; on the sim clock it
+/// registers its next deadline with the virtual clock, which advances to
+/// it once every device is likewise blocked.
 fn server_loop(
     mut server: Box<dyn ServerSide>,
     rx: Receiver<OffloadMsg>,
     max_batch: usize,
-    deadline: Duration,
+    deadline_s: f64,
+    clock: Clock,
 ) -> (usize, usize) {
-    let mut queue: BatchQueue<(Tensor, Sender<Reply>)> = BatchQueue::new(max_batch, deadline);
+    let _participant = clock.participant();
+    let mut queue: BatchQueue<BatchItem> = BatchQueue::new(max_batch, deadline_s);
     let mut total_batched = 0usize;
     let mut batches = 0usize;
-    let mut run_batch =
-        |batch: Vec<Pending<(Tensor, Sender<Reply>)>>, server: &mut dyn ServerSide| {
-            let feats: Vec<_> = batch.iter().map(|p| p.payload.0.clone()).collect();
-            match server.infer_batch(&feats) {
-                Ok(rows) => {
-                    total_batched += batch.len();
-                    batches += 1;
-                    for (p, row) in batch.into_iter().zip(rows) {
-                        let _ = p.payload.1.send(Ok(row));
-                    }
-                }
-                Err(e) => {
-                    let msg = format!("remote batch of {} failed: {e:#}", batch.len());
-                    eprintln!("{msg}");
-                    for p in batch {
-                        let _ = p.payload.1.send(Err(RemoteFailure(msg.clone())));
-                    }
+    let mut run_batch = |batch: Vec<Pending<BatchItem>>, server: &mut dyn ServerSide| {
+        let feats: Vec<_> = batch.iter().map(|p| p.payload.0.clone()).collect();
+        match server.infer_batch(&feats) {
+            Ok(rows) => {
+                total_batched += batch.len();
+                batches += 1;
+                for (p, row) in batch.into_iter().zip(rows) {
+                    send_reply(&clock, &p.payload.1, Ok(row));
                 }
             }
-        };
-    loop {
-        let wait = queue.next_deadline_in(Instant::now()).unwrap_or(Duration::from_secs(3600));
-        match rx.recv_timeout(wait) {
-            Ok(m) => {
-                let decoded = match &m.body {
-                    UplinkBody::Whole(frame) => server.decode(frame),
-                    UplinkBody::Packets { packets, count, bits } => {
-                        server.decode_packets(packets, *count, *bits)
+            Err(e) => {
+                let msg = format!("remote batch of {} failed: {e:#}", batch.len());
+                eprintln!("{msg}");
+                for p in batch {
+                    send_reply(&clock, &p.payload.1, Err(RemoteFailure(msg.clone())));
+                }
+            }
+        }
+        clock.notify();
+    };
+    if clock.is_sim() {
+        loop {
+            // snapshot the event counter *before* polling the channel so a
+            // send landing in between cannot be slept through
+            let epoch = clock.epoch();
+            match rx.try_recv() {
+                Ok(m) => {
+                    clock.msg_received();
+                    if let Some(batch) = decode_and_enqueue(m, server.as_mut(), &mut queue, &clock)
+                    {
+                        run_batch(batch, server.as_mut());
                     }
-                };
-                let feats = match decoded {
-                    Ok(f) => f,
-                    Err(e) => {
-                        let _ = m
-                            .reply
-                            .send(Err(RemoteFailure(format!("decoding request {}: {e:#}", m.id))));
+                }
+                Err(TryRecvError::Empty) => {
+                    if let Some(batch) = queue.poll_deadline(clock.now()) {
+                        run_batch(batch, server.as_mut());
                         continue;
                     }
-                };
-                if let Some(batch) = queue.push(m.id, (feats, m.reply), Instant::now()) {
-                    run_batch(batch, server.as_mut());
+                    clock.wait(queue.next_deadline_at(), epoch);
                 }
+                Err(TryRecvError::Disconnected) => break,
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if let Some(batch) = queue.poll_deadline(Instant::now()) {
-                    run_batch(batch, server.as_mut());
+        }
+    } else {
+        loop {
+            let wait = queue
+                .next_deadline_in(clock.now())
+                .map(Duration::from_secs_f64)
+                .unwrap_or(Duration::from_secs(3600));
+            match rx.recv_timeout(wait) {
+                Ok(m) => {
+                    if let Some(batch) = decode_and_enqueue(m, server.as_mut(), &mut queue, &clock)
+                    {
+                        run_batch(batch, server.as_mut());
+                    }
                 }
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(batch) = queue.poll_deadline(clock.now()) {
+                        run_batch(batch, server.as_mut());
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
             }
-            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     let tail = queue.flush();
@@ -586,10 +758,39 @@ fn server_loop(
     (total_batched, batches)
 }
 
+/// Receive the server reply: a plain blocking `recv` under the wall clock,
+/// a virtual-time wait (woken by the server's notify) under the sim clock.
+fn recv_reply(clock: &Clock, rx: &Receiver<Reply>) -> Option<Reply> {
+    if !clock.is_sim() {
+        return rx.recv().ok();
+    }
+    loop {
+        let epoch = clock.epoch();
+        match rx.try_recv() {
+            Ok(r) => {
+                clock.msg_received();
+                return Some(r);
+            }
+            Err(TryRecvError::Empty) => {
+                clock.wait(None, epoch);
+            }
+            Err(TryRecvError::Disconnected) => return None,
+        }
+    }
+}
+
 /// One simulated device: build the scheme's device half + fuser, pace
 /// requests to the arrival process, push uplink frames through the
 /// simulated channel under the configured delivery policy, and stream
 /// each fused outcome.
+///
+/// The simulated timeline is identical under both clocks: the uplink
+/// starts when the device compute is done *and* the half-duplex radio has
+/// finished the previous request's exchange (`radio_free`), so one
+/// device's transmissions never overlap on the air and queueing shows up
+/// as `NetStats::radio_wait_s`. Under the sim clock the thread
+/// additionally waits in virtual time, so the server sees each offload at
+/// its simulated arrival and batch queueing becomes deterministic.
 #[allow(clippy::too_many_arguments)]
 fn device_loop(
     device_index: usize,
@@ -599,9 +800,20 @@ fn device_loop(
     testset: &TestSet,
     ids: &[usize],
     times: &[f64],
-    tx_offload: Option<Sender<OffloadMsg>>,
-    tx_done: Sender<ServedOutcome>,
+    offload_tx: Option<Sender<OffloadMsg>>,
+    done_tx: Sender<ServedOutcome>,
+    clock: Clock,
 ) -> Result<()> {
+    let _participant = clock.participant();
+    // Rebind the channel ends as locals *after* the participant guard:
+    // locals drop in reverse declaration order (and parameters only after
+    // all locals), so on any exit path the senders disconnect BEFORE the
+    // guard deregisters. The deregistration's epoch bump is the only
+    // thing that wakes a sim server blocked in a clock wait — if the
+    // guard dropped first, the server could re-block in the tiny window
+    // while the sender was still live and then sleep forever.
+    let tx_offload = offload_tx;
+    let tx_done = done_tx;
     let mut device = make_device_side(engine, cfg, meta)?;
     let fuser = make_fuser(cfg, meta)?;
     let dev_sim = DeviceSim::new(cfg.device.clone());
@@ -617,30 +829,47 @@ fn device_loop(
         PacketOrder::Index => None,
     };
     let packetizer = Packetizer::new(cfg.net.payload_cap(cfg.network.mtu), order);
+    // wall mode paces against a per-device anchor taken *after* model
+    // loading (the pre-clock behavior: a slow init must not turn the
+    // first arrivals into a past-due burst); sim mode waits in virtual
+    // time on the shared clock
     let t0 = Instant::now();
+    // simulated time this device's radio frees up after the previous
+    // request's uplink + downlink exchange
+    let mut radio_free = 0.0f64;
     for (j, &i) in ids.iter().enumerate() {
-        // pace to the arrival process
-        let due = Duration::from_secs_f64(times[j]);
-        if let Some(sleep_for) = due.checked_sub(t0.elapsed()) {
-            std::thread::sleep(sleep_for);
+        // pace to the arrival process (real sleep or virtual wait)
+        if clock.is_sim() {
+            clock.sleep_until(times[j]);
+        } else {
+            let due = Duration::from_secs_f64(times[j]);
+            if let Some(sleep_for) = due.checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep_for);
+            }
         }
         let req_start = Instant::now();
+        let t_start = clock.now();
         let idx = i % testset.len();
         let img = testset.image(idx)?;
         let mut local = device.encode(&img)?;
 
         let mut remote: Option<Vec<f32>> = None;
-        let mut remote_wall = 0.0f64;
+        let mut remote_s = 0.0f64;
         let mut link: Option<LinkOutcome> = None;
         let mut tx_bytes = local.tx_bytes();
+        // virtual completion time: arrival + device compute, extended by
+        // the remote exchange below when the request offloads
+        let mut t_done = t_start + local.timings.total_s();
         if let Some(frame) = local.frame.take() {
             let sender = tx_offload.as_ref().ok_or_else(|| {
                 anyhow!("{} produced an uplink frame but has no server half", cfg.scheme.name())
             })?;
-            // run the uplink through the simulated channel at the
-            // request's simulated transmit start (arrival + device phase)
-            let tx_start = times[j] + local.timings.total_s();
-            let (body, stats) = match (&cfg.net.delivery, local.symbols.take()) {
+            // the uplink starts when the device phase is done AND the
+            // radio has finished the previous exchange — under high rates
+            // requests queue for the radio instead of overlapping on air
+            let compute_done = times[j] + local.timings.total_s();
+            let tx_start = compute_done.max(radio_free);
+            let (body, mut stats) = match (&cfg.net.delivery, local.symbols.take()) {
                 (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
                     let bits = frame.bits;
                     let pkts = packetizer.packetize(i as u64, &symbols, bits)?;
@@ -653,27 +882,59 @@ fn device_loop(
                     (UplinkBody::Whole(frame), stats)
                 }
             };
+            stats.radio_wait_s = tx_start - compute_done;
             tx_bytes = stats.app_bytes_offered;
             // downlink reply (assumed reliable: server radios are not the
             // constrained end) priced on the same channel timing
             let reply = crate::serve::scheme::reply_bytes(meta.num_classes);
             let t_reply = tx_start + stats.uplink_s;
+            let downlink_s = chan.transfer_s(t_reply, reply);
+            // the radio frees up on the *priced* timeline (downlink at
+            // t_reply, server queueing excluded) — the same convention
+            // assemble_outcome uses for network_s, and the only anchoring
+            // both clocks can compute identically, which keeps every
+            // channel timestamp (and so every deterministic report field)
+            // bit-equal between wall and sim runs
+            radio_free = t_reply + downlink_s;
             link = Some(LinkOutcome {
-                network_s: stats.uplink_s + chan.transfer_s(t_reply, reply),
+                network_s: stats.uplink_s + downlink_s,
                 airtime_s: stats.airtime_s + chan.airtime_s(t_reply, reply),
                 stats,
             });
+            // sim clock only: hold the offload until its simulated arrival
+            // at the server, so batching dynamics play out in virtual time
+            // (the wall pipeline sends immediately, as it always has)
+            if clock.is_sim() {
+                clock.sleep_until(t_reply);
+            }
             let (reply_tx, reply_rx) = channel();
-            let t_remote = Instant::now();
-            sender
-                .send(OffloadMsg { id: i as u64, body, reply: reply_tx })
-                .map_err(|_| anyhow!("server thread gone"))?;
-            let row = reply_rx
-                .recv()
-                .map_err(|_| anyhow!("reply dropped for request {i}"))?
+            let t_remote_wall = Instant::now();
+            let t_remote = clock.now();
+            clock.msg_sent();
+            if sender.send(OffloadMsg { id: i as u64, body, reply: reply_tx }).is_err() {
+                clock.msg_cancelled();
+                return Err(anyhow!("server thread gone"));
+            }
+            clock.notify();
+            let row = recv_reply(&clock, &reply_rx)
+                .ok_or_else(|| anyhow!("reply dropped for request {i}"))?
                 .map_err(|e| anyhow!("remote inference failed for request {i}: {}", e.0))?;
-            remote_wall = t_remote.elapsed().as_secs_f64();
+            remote_s = if clock.is_sim() {
+                clock.now() - t_remote
+            } else {
+                t_remote_wall.elapsed().as_secs_f64()
+            };
             remote = Some(row);
+            t_done = clock.now() + downlink_s;
+        }
+        // sim only: the device stays busy (MCU compute + radio exchange)
+        // until t_done, serializing its virtual timeline so a saturated
+        // device accumulates visible backlog — mirroring the wall loop,
+        // which also finishes each request before starting the next. The
+        // channel timestamps above are schedule-anchored, so this wait
+        // never moves a deterministic field.
+        if clock.is_sim() {
+            clock.sleep_until(t_done);
         }
         let outcome = assemble_outcome(
             fuser.as_ref(),
@@ -681,7 +942,7 @@ fn device_loop(
             remote.as_deref(),
             testset.labels[idx],
             tx_bytes,
-            remote_wall,
+            remote_s,
             &dev_sim,
             &net,
             link.as_ref(),
@@ -690,7 +951,15 @@ fn device_loop(
         let served = ServedOutcome {
             id: i as u64,
             device: device_index,
-            wall_s: req_start.elapsed().as_secs_f64(),
+            // sim latency is the sojourn time from the *scheduled* arrival,
+            // so a backlogged device's accumulated delay shows up in the
+            // quantiles instead of silently vanishing when the priced
+            // timeline falls behind the execution clock
+            wall_s: if clock.is_sim() {
+                t_done - times[j]
+            } else {
+                req_start.elapsed().as_secs_f64()
+            },
             outcome,
         };
         if tx_done.send(served).is_err() {
@@ -766,5 +1035,17 @@ mod tests {
         assert!(matches!(b.arrival, Arrival::Poisson { hz, .. } if hz == 30.0));
         let b = ServeBuilder::new("x").rate_hz(0.0);
         assert!(matches!(b.arrival, Arrival::Periodic { .. }));
+    }
+
+    #[test]
+    fn builder_clock_and_arrival_seed_knobs() {
+        let b = ServeBuilder::new("x").clock(ClockKind::Sim).rate_hz(30.0).arrival_seed(7);
+        assert_eq!(b.clock, ClockKind::Sim);
+        let seeded = b.arrival.with_seed(b.arrival_seed.unwrap());
+        assert!(matches!(seeded, Arrival::Poisson { seed: 7, .. }));
+        // defaults: wall clock, no arrival-seed override
+        let d = ServeBuilder::new("x");
+        assert_eq!(d.clock, ClockKind::Wall);
+        assert!(d.arrival_seed.is_none());
     }
 }

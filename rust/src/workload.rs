@@ -54,6 +54,14 @@ impl TestSet {
     }
 }
 
+/// Golden-ratio device-seed derivation shared by every per-device
+/// stochastic stream (arrival processes here, channel loss streams via
+/// `NetConfig::device_seed`): decorrelates devices while keeping the whole
+/// run reproducible from one base seed.
+pub fn derive_device_seed(base: u64, device_index: usize) -> u64 {
+    base ^ (device_index as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 /// Inter-arrival process for sensor-driven requests (paper §7.2: real-time
 /// means keeping up with the sensor sampling interval).
 #[derive(Debug, Clone, Copy)]
@@ -65,6 +73,30 @@ pub enum Arrival {
 }
 
 impl Arrival {
+    /// Per-device variant of this process: Poisson streams get a
+    /// [`derive_device_seed`]-derived seed (the same derivation
+    /// `NetConfig::device_seed` uses for channel loss) so concurrent
+    /// devices do not produce lockstep-identical timestamps, while the
+    /// whole run stays reproducible from one base seed. Periodic
+    /// processes are untouched — a fixed-rate sensor is deterministic by
+    /// definition.
+    pub fn for_device(&self, device_index: usize) -> Arrival {
+        match *self {
+            Arrival::Periodic { hz } => Arrival::Periodic { hz },
+            Arrival::Poisson { hz, seed } => {
+                Arrival::Poisson { hz, seed: derive_device_seed(seed, device_index) }
+            }
+        }
+    }
+
+    /// Replace the base seed of a seeded process (no-op for Periodic).
+    pub fn with_seed(&self, seed: u64) -> Arrival {
+        match *self {
+            Arrival::Periodic { hz } => Arrival::Periodic { hz },
+            Arrival::Poisson { hz, .. } => Arrival::Poisson { hz, seed },
+        }
+    }
+
     /// Generate `n` arrival timestamps (seconds from epoch 0).
     pub fn timestamps(&self, n: usize) -> Vec<f64> {
         match *self {
@@ -137,6 +169,35 @@ mod tests {
         let ts = Arrival::Periodic { hz: 30.0 }.timestamps(4);
         assert!((ts[1] - ts[0] - 1.0 / 30.0).abs() < 1e-12);
         assert!((ts[3] - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_device_poisson_streams_are_decorrelated_but_stable() {
+        // regression: every device thread used to draw the same Arrival,
+        // so all devices hit the batcher in perfectly synchronized bursts
+        let base = Arrival::Poisson { hz: 30.0, seed: 42 };
+        let t0 = base.for_device(0).timestamps(256);
+        let t1 = base.for_device(1).timestamps(256);
+        assert_ne!(t0, t1, "device streams must differ");
+        assert_eq!(t0, base.for_device(0).timestamps(256), "but stay reproducible");
+        // same mean rate on every derived stream
+        for ts in [&t0, &t1] {
+            let mean_gap = ts.last().unwrap() / 256.0;
+            assert!((mean_gap - 1.0 / 30.0).abs() < 0.01, "mean gap {mean_gap}");
+        }
+        // periodic sensors are untouched by device derivation
+        let p = Arrival::Periodic { hz: 30.0 };
+        assert_eq!(p.for_device(0).timestamps(8), p.for_device(3).timestamps(8));
+    }
+
+    #[test]
+    fn with_seed_overrides_only_seeded_processes() {
+        let a = Arrival::Poisson { hz: 10.0, seed: 1 }.with_seed(9);
+        assert!(matches!(a, Arrival::Poisson { seed: 9, .. }));
+        assert!(matches!(
+            Arrival::Periodic { hz: 10.0 }.with_seed(9),
+            Arrival::Periodic { .. }
+        ));
     }
 
     #[test]

@@ -11,7 +11,6 @@ use agilenn::net::{
 use agilenn::simulator::{NetworkProfile, NetworkSim};
 use agilenn::tensor::{argmax, softmax, Tensor};
 use agilenn::xai;
-use std::time::{Duration, Instant};
 
 /// xorshift64* — deterministic, seedable.
 struct Rng(u64);
@@ -164,18 +163,17 @@ fn prop_batcher_conserves_requests() {
     for seed in 1..=60u64 {
         let mut rng = Rng::new(seed);
         let max_batch = REMOTE_BATCH_SIZES[rng.usize(REMOTE_BATCH_SIZES.len())];
-        let mut q = BatchQueue::new(max_batch, Duration::from_millis(5));
-        let t0 = Instant::now();
+        let mut q = BatchQueue::new(max_batch, 0.005);
         let n = 1 + rng.usize(200);
         let mut dispatched = Vec::new();
         for id in 0..n as u64 {
-            if let Some(batch) = q.push(id, (), t0) {
+            if let Some(batch) = q.push(id, (), 0.0) {
                 assert!(batch.len() <= max_batch);
                 dispatched.extend(batch.into_iter().map(|p| p.id));
             }
             // random deadline polls
             if rng.next() % 3 == 0 {
-                if let Some(batch) = q.poll_deadline(t0 + Duration::from_millis(6)) {
+                if let Some(batch) = q.poll_deadline(0.006) {
                     dispatched.extend(batch.into_iter().map(|p| p.id));
                 }
             }
