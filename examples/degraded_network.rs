@@ -8,15 +8,19 @@
 //!    packets (accuracy pays, gracefully);
 //! 3. link down — local-only fallback from the top-k important features.
 //!
-//!     cargo run --release --example degraded_network [dataset]
+//!     cargo run --release --example degraded_network [dataset] [backend]
+//!
+//! `backend` is `pjrt` (default; needs `make artifacts` and a
+//! pjrt-enabled build) or `reference` (pure-Rust deterministic model
+//! family + synthetic dataset — runs anywhere, no artifacts).
 
 use agilenn::baselines::AgileRunner;
-use agilenn::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
+use agilenn::config::{default_artifacts_dir, BackendKind, RunConfig, Scheme};
 use agilenn::net::{DeliveryPolicy, GilbertElliott, PacketOrder};
-use agilenn::runtime::Engine;
+use agilenn::runtime::make_backend;
 use agilenn::serve::{ClockKind, ServeBuilder};
 use agilenn::simulator::NetworkProfile;
-use agilenn::workload::{Arrival, TestSet};
+use agilenn::workload::Arrival;
 use anyhow::Result;
 
 /// Sweep pacing: 30 Hz keeps the radio uncontended (the sweeps isolate
@@ -25,9 +29,10 @@ const SWEEP_ARRIVAL: Arrival = Arrival::Periodic { hz: 30.0 };
 
 fn main() -> Result<()> {
     let dataset = std::env::args().nth(1).unwrap_or_else(|| "svhns".into());
+    let backend: BackendKind = std::env::args().nth(2).as_deref().unwrap_or("pjrt").parse()?;
     let n = 64usize;
 
-    println!("link degradation sweep on {dataset} ({n} requests each):");
+    println!("link degradation sweep on {dataset} [{}] ({n} requests each):", backend.name());
     for kbps in [6000.0, 1000.0, 270.0] {
         let profile = if kbps <= 300.0 {
             NetworkProfile::ble_270kbps()
@@ -39,6 +44,7 @@ fn main() -> Result<()> {
         // free of batch-deadline queueing, matching the sweep's intent.
         let mut outcomes = ServeBuilder::new(&dataset)
             .scheme(Scheme::Agile)
+            .backend(backend)
             .devices(1)
             .requests(n)
             .max_batch(1)
@@ -77,6 +83,7 @@ fn main() -> Result<()> {
         ] {
             let rep = ServeBuilder::new(&dataset)
                 .scheme(Scheme::Agile)
+                .backend(backend)
                 .devices(1)
                 .requests(n)
                 .max_batch(1)
@@ -102,12 +109,12 @@ fn main() -> Result<()> {
     }
 
     // link down: local-only fallback (§9) — most important features are local
-    let base = RunConfig::new(default_artifacts_dir(), &dataset, Scheme::Agile);
-    let meta = Meta::load(&base.dataset_dir())?;
-    let testset = TestSet::load(&base.dataset_dir().join("test.bin"))?;
-    let engine = Engine::cpu()?;
+    let mut base = RunConfig::new(default_artifacts_dir(), &dataset, Scheme::Agile);
+    base.backend = backend;
+    let (meta, testset) = agilenn::fixtures::load_world(&base)?;
+    let backend_impl = make_backend(&base, &meta)?;
     let n = n.min(testset.len());
-    let mut runner = AgileRunner::new(&engine, &base, &meta)?;
+    let mut runner = AgileRunner::new(backend_impl.as_ref(), &base, &meta)?;
     let (mut total, mut correct) = (0.0f64, 0usize);
     for i in 0..n {
         let out = runner.process_offline(&testset.image(i)?, testset.labels[i])?;

@@ -19,7 +19,7 @@ fn main() {
     let b = Bench::new();
     for scheme in [Scheme::Agile, Scheme::Deepcod] {
         let cfg = ctx.run_config(&ds, scheme);
-        let mut runner = make_runner(&ctx.engine, &cfg, &meta).unwrap();
+        let mut runner = make_runner(ctx.backend.as_ref(), &cfg, &meta).unwrap();
         b.run(&format!("fig16_request_path/{}", scheme.name()), || {
             runner.process(&img, testset.labels[0]).unwrap()
         });

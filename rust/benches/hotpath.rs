@@ -20,11 +20,11 @@ fn main() {
     let b = Bench::new();
 
     // device phase (PJRT extractor+local + quantize + LZW)
-    let mut device = DeviceRuntime::new(&ctx.engine, &cfg, &meta).unwrap();
+    let mut device = DeviceRuntime::new(ctx.backend.as_ref(), &cfg, &meta).unwrap();
     b.run("hot_device_phase", || device.process(&img).unwrap());
 
     // remote phase per batch size
-    let mut server = RemoteServer::new(&ctx.engine, &cfg, &meta).unwrap();
+    let mut server = RemoteServer::new(ctx.backend.as_ref(), &cfg, &meta).unwrap();
     let out = device.process(&img).unwrap();
     let feat = server.decode(&out.frame).unwrap();
     for bsz in [1usize, 4, 8] {
@@ -43,6 +43,6 @@ fn main() {
     b.run("hot_lzw_decompress", || lzw::decompress(&frame.payload).unwrap());
 
     // end-to-end request
-    let mut runner = make_runner(&ctx.engine, &cfg, &meta).unwrap();
+    let mut runner = make_runner(ctx.backend.as_ref(), &cfg, &meta).unwrap();
     b.run("hot_e2e_agile_request", || runner.process(&img, testset.labels[0]).unwrap());
 }

@@ -14,7 +14,7 @@ pub use runners::{AgileRunner, ComposedRunner};
 use crate::config::{Meta, RunConfig, Scheme};
 use crate::metrics::{EnergyLedger, LatencyBreakdown};
 use crate::net::NetStats;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::simulator::MemoryReport;
 use crate::tensor::Tensor;
 use anyhow::Result;
@@ -48,12 +48,12 @@ pub trait SchemeRunner {
 
 /// Instantiate a runner for any scheme.
 pub fn make_runner(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &RunConfig,
     meta: &Meta,
 ) -> Result<Box<dyn SchemeRunner>> {
     Ok(match cfg.scheme {
-        Scheme::Agile => Box::new(AgileRunner::new(engine, cfg, meta)?),
-        _ => Box::new(ComposedRunner::new(engine, cfg, meta)?),
+        Scheme::Agile => Box::new(AgileRunner::new(backend, cfg, meta)?),
+        _ => Box::new(ComposedRunner::new(backend, cfg, meta)?),
     })
 }

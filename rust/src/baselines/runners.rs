@@ -1,6 +1,8 @@
 //! Synchronous scheme runners, composed from the serve module's halves
 //! (`DeviceSide` -> optional `ServerSide` -> `Fuser`). Shared conventions:
-//!  * functional outputs come from the AOT PJRT artifacts (real numerics);
+//!  * functional outputs come from the selected inference backend (AOT
+//!    PJRT artifacts for real numerics, or the deterministic pure-Rust
+//!    reference family);
 //!  * device-side latency/energy are priced by the MCU cost model;
 //!  * server-side NN latency is measured wall-clock on the PJRT CPU client;
 //!  * network time comes from the link model over the real payload sizes.
@@ -11,7 +13,7 @@
 
 use super::{RequestOutcome, SchemeRunner};
 use crate::config::{Meta, RunConfig, Scheme};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::serve::scheme::assemble_outcome;
 use crate::serve::{
     make_device_side, make_fuser, make_server_side, AlphaFuser, DeviceSide, Fuser, ServerSide,
@@ -34,11 +36,11 @@ pub struct ComposedRunner {
 }
 
 impl ComposedRunner {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         Ok(Self {
             scheme: cfg.scheme,
-            device: make_device_side(engine, cfg, meta)?,
-            server: make_server_side(engine, cfg, meta)?,
+            device: make_device_side(backend, cfg, meta)?,
+            server: make_server_side(backend, cfg, meta)?,
             fuser: make_fuser(cfg, meta)?,
             dev: DeviceSim::new(cfg.device.clone()),
             net: NetworkSim::new(cfg.network.clone()),
@@ -109,9 +111,9 @@ pub struct AgileRunner {
 }
 
 impl AgileRunner {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         ensure!(cfg.scheme == Scheme::Agile, "wrong scheme for AgileRunner");
-        Ok(Self { inner: ComposedRunner::new(engine, cfg, meta)? })
+        Ok(Self { inner: ComposedRunner::new(backend, cfg, meta)? })
     }
 
     /// Runtime re-weighting (paper §3.3 / Fig 18).

@@ -56,6 +56,46 @@ impl FromStr for Scheme {
     }
 }
 
+/// Which inference backend executes the exported model components
+/// (`crate::runtime::Backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// AOT-compiled HLO artifacts on the PJRT CPU client (cargo feature
+    /// `pjrt`; needs `make artifacts`). The default: real numerics.
+    #[default]
+    Pjrt,
+    /// Pure-Rust deterministic reference model family
+    /// (`crate::runtime::ReferenceBackend`): no artifacts, no native
+    /// deps, synthetic fixtures (`crate::fixtures`) stand in for the
+    /// trained metadata and test set.
+    Reference,
+}
+
+impl BackendKind {
+    pub fn all() -> [BackendKind; 2] {
+        [BackendKind::Pjrt, BackendKind::Reference]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Reference => "reference",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            "reference" | "ref" => Ok(BackendKind::Reference),
+            other => bail!("unknown backend {other:?} (pjrt|reference)"),
+        }
+    }
+}
+
 /// MAC counts per component (exported by python, 32x32 models).
 #[derive(Debug, Clone)]
 pub struct MacCounts {
@@ -322,6 +362,10 @@ pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     pub dataset: String,
     pub scheme: Scheme,
+    /// which inference backend executes the model components (default:
+    /// PJRT over the artifacts tree; `Reference` needs neither artifacts
+    /// nor the `pjrt` cargo feature)
+    pub backend: BackendKind,
     pub device: DeviceProfile,
     pub network: NetworkProfile,
     /// channel-facing knobs: loss model, bandwidth trace, delivery policy,
@@ -343,6 +387,7 @@ impl RunConfig {
             artifacts_dir: artifacts_dir.into(),
             dataset: dataset.to_string(),
             scheme,
+            backend: BackendKind::default(),
             device: DeviceProfile::stm32f746(),
             network: NetworkProfile::wifi_6mbps(),
             net: NetConfig::default(),
@@ -383,7 +428,19 @@ pub(crate) mod tests {
         let c = RunConfig::new("artifacts", "svhns", Scheme::Agile);
         assert_eq!(c.bits, 4);
         assert_eq!(c.max_batch, 8);
+        assert_eq!(c.backend, BackendKind::Pjrt);
         assert!(c.dataset_dir().ends_with("artifacts/svhns"));
+    }
+
+    #[test]
+    fn backend_kind_names_parse_back() {
+        for kind in BackendKind::all() {
+            assert_eq!(kind.name().parse::<BackendKind>().unwrap(), kind);
+        }
+        assert_eq!("ref".parse::<BackendKind>().unwrap(), BackendKind::Reference);
+        assert_eq!("XLA".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("tpu".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Pjrt);
     }
 
     pub(crate) const MINIMAL_META: &str = r#"{

@@ -12,6 +12,12 @@
 /// Exported remote batch sizes (must match compile/aot.py REMOTE_BATCHES).
 pub const REMOTE_BATCH_SIZES: [usize; 4] = [1, 2, 4, 8];
 
+/// Batch sizes the edge-only remote artifact exports — compile/aot.py
+/// compiles the raw-image server model for a reduced set. Shared by the
+/// PJRT server half and the reference backend's stem validation so the
+/// two cannot drift.
+pub const EDGE_BATCH_SIZES: [usize; 2] = [1, 4];
+
 /// Smallest exported batch size >= n.
 pub fn pad_batch_size(n: usize) -> usize {
     for &b in REMOTE_BATCH_SIZES.iter() {

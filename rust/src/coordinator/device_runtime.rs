@@ -1,12 +1,13 @@
-//! Device-side runtime (what would run on the MCU): one PJRT call for the
-//! fused extractor+local-NN artifact, positional feature split (already done
-//! inside the artifact), learned quantization + LZW of the transmitted
-//! features, and cost-model pricing of every step.
+//! Device-side runtime (what would run on the MCU): one backend call for
+//! the fused extractor+local-NN module (PJRT artifact or reference model),
+//! positional feature split (already done inside the module), learned
+//! quantization + LZW of the transmitted features, and cost-model pricing
+//! of every step.
 
 use crate::compression::{quantizer::Codebook, Frame, TxEncoder};
 use crate::config::{Meta, RunConfig, Scheme};
 use crate::net::DeliveryPolicy;
-use crate::runtime::{Engine, Executable};
+use crate::runtime::{Backend, Module};
 use crate::simulator::{DeviceSim, DeviceTimings};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
@@ -31,7 +32,7 @@ pub struct DeviceOutput {
 }
 
 pub struct DeviceRuntime {
-    device_exe: Arc<Executable>,
+    device_exe: Arc<dyn Module>,
     tx: TxEncoder,
     sim: DeviceSim,
     nn_macs: u64,
@@ -41,9 +42,9 @@ pub struct DeviceRuntime {
 }
 
 impl DeviceRuntime {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         ensure!(cfg.scheme == Scheme::Agile, "DeviceRuntime is the AgileNN device path");
-        let device_exe = engine.load_artifact(&cfg.dataset_dir(), "agile_device_b1")?;
+        let device_exe = backend.load_module(&cfg.dataset_dir(), "agile_device_b1")?;
         let codebook = Codebook::new(meta.codebook(Scheme::Agile, cfg.bits)?)?;
         Ok(Self {
             device_exe,

@@ -15,7 +15,7 @@ pub mod device_runtime;
 pub mod pipeline;
 pub mod server;
 
-pub use batcher::{BatchQueue, REMOTE_BATCH_SIZES};
+pub use batcher::{BatchQueue, EDGE_BATCH_SIZES, REMOTE_BATCH_SIZES};
 pub use combiner::Combiner;
 pub use device_runtime::{DeviceOutput, DeviceRuntime};
 #[allow(deprecated)]

@@ -37,8 +37,8 @@ pub fn run_single(
     testset: &TestSet,
     index: usize,
 ) -> Result<RequestOutcome> {
-    let engine = crate::runtime::Engine::cpu()?;
-    let mut runner = crate::baselines::make_runner(&engine, cfg, meta)?;
+    let backend = crate::runtime::make_backend(cfg, meta)?;
+    let mut runner = crate::baselines::make_runner(backend.as_ref(), cfg, meta)?;
     let idx = index % testset.len();
     runner.process(&testset.image(idx)?, testset.labels[idx])
 }

@@ -9,9 +9,9 @@
 
 use crate::compression::{lzw, quantizer::Codebook, Frame, RxDecoder};
 use crate::config::{Meta, RunConfig, Scheme};
-use crate::coordinator::batcher::REMOTE_BATCH_SIZES;
+use crate::coordinator::batcher::{EDGE_BATCH_SIZES, REMOTE_BATCH_SIZES};
 use crate::net::{importance_order, reassemble_symbols, Packet, PacketOrder};
-use crate::runtime::{Engine, Executable};
+use crate::runtime::{Backend, Module};
 use crate::tensor::Tensor;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
@@ -27,7 +27,7 @@ enum FrameDecoder {
 }
 
 pub struct RemoteServer {
-    exes: HashMap<usize, Arc<Executable>>,
+    exes: HashMap<usize, Arc<dyn Module>>,
     /// exported batch sizes for this scheme's remote artifact, ascending
     sizes: Vec<usize>,
     decoder: FrameDecoder,
@@ -46,7 +46,7 @@ pub struct RemoteServer {
 }
 
 impl RemoteServer {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         let stem = match cfg.scheme {
             Scheme::Agile => "agile_remote",
             Scheme::Deepcod => "deepcod_remote",
@@ -75,14 +75,14 @@ impl RemoteServer {
                 )
             }
         };
-        // edge-only exports a reduced batch set (compile/aot.py: b in {1,4})
+        // edge-only exports a reduced batch set (compile/aot.py)
         let sizes: Vec<usize> = match cfg.scheme {
-            Scheme::EdgeOnly => vec![1, 4],
+            Scheme::EdgeOnly => EDGE_BATCH_SIZES.to_vec(),
             _ => REMOTE_BATCH_SIZES.to_vec(),
         };
-        let mut exes = HashMap::new();
+        let mut exes: HashMap<usize, Arc<dyn Module>> = HashMap::new();
         for &b in &sizes {
-            exes.insert(b, engine.load_artifact(&cfg.dataset_dir(), &format!("{stem}_b{b}"))?);
+            exes.insert(b, backend.load_module(&cfg.dataset_dir(), &format!("{stem}_b{b}"))?);
         }
         let tx_order = match cfg.net.order {
             PacketOrder::Importance => importance_order(meta, cfg.scheme),

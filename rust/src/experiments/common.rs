@@ -1,15 +1,16 @@
 //! Shared evaluation context and the per-scheme evaluation loop.
 
 use crate::baselines::{make_runner, SchemeRunner};
-use crate::config::{Manifest, Meta, RunConfig, Scheme};
+use crate::config::{BackendKind, Manifest, Meta, RunConfig, Scheme};
+use crate::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
 use crate::metrics::{AccuracyCounter, EnergyLedger, LatencyBreakdown};
-use crate::runtime::Engine;
+use crate::runtime::{pjrt_backend, Backend, ReferenceBackend};
 use crate::serve::{ClockKind, PipelineReport, Service};
 use crate::workload::{Arrival, TestSet};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Number of test samples per evaluation sweep point (env-overridable:
 /// AGILENN_EVAL_N). Figures sweep many points; 128 keeps a full `cargo
@@ -22,22 +23,40 @@ pub fn eval_n() -> usize {
         .unwrap_or(128)
 }
 
-/// Shared state for figure regeneration: PJRT engine + cached metas/testsets.
+/// Shared state for figure regeneration: the inference backend + cached
+/// metas/testsets. On [`BackendKind::Pjrt`] (the default) everything is
+/// loaded from the artifacts tree; on [`BackendKind::Reference`] the
+/// synthetic world ([`SyntheticSpec`]) stands in, so every figure sweep
+/// runs with no artifacts and no XLA compile cost.
 pub struct EvalCtx {
-    pub engine: Engine,
+    pub backend: Arc<dyn Backend>,
+    pub backend_kind: BackendKind,
     pub artifacts_dir: PathBuf,
     pub datasets: Vec<String>,
     metas: Mutex<HashMap<String, Meta>>,
-    testsets: Mutex<HashMap<String, std::sync::Arc<TestSet>>>,
+    testsets: Mutex<HashMap<String, Arc<TestSet>>>,
 }
 
 impl EvalCtx {
     pub fn new(artifacts_dir: PathBuf) -> Result<Self> {
-        let manifest = Manifest::load(&artifacts_dir)?;
+        Self::with_backend(artifacts_dir, BackendKind::Pjrt)
+    }
+
+    pub fn with_backend(artifacts_dir: PathBuf, kind: BackendKind) -> Result<Self> {
+        let (datasets, backend): (Vec<String>, Arc<dyn Backend>) = match kind {
+            BackendKind::Pjrt => (Manifest::load(&artifacts_dir)?.datasets, pjrt_backend()?),
+            BackendKind::Reference => {
+                let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+                let backend: Arc<dyn Backend> =
+                    Arc::new(ReferenceBackend::from_meta(&spec.meta()));
+                (spec.manifest().datasets, backend)
+            }
+        };
         Ok(Self {
-            engine: Engine::cpu()?,
+            backend,
+            backend_kind: kind,
             artifacts_dir,
-            datasets: manifest.datasets,
+            datasets,
             metas: Mutex::new(HashMap::new()),
             testsets: Mutex::new(HashMap::new()),
         })
@@ -52,25 +71,35 @@ impl EvalCtx {
         if let Some(m) = metas.get(dataset) {
             return Ok(m.clone());
         }
-        let m = Meta::load(&self.artifacts_dir.join(dataset))?;
+        let m = match self.backend_kind {
+            BackendKind::Pjrt => Meta::load(&self.artifacts_dir.join(dataset))?,
+            BackendKind::Reference => SyntheticSpec::new(dataset).meta(),
+        };
         metas.insert(dataset.to_string(), m.clone());
         Ok(m)
     }
 
-    pub fn testset(&self, dataset: &str) -> Result<std::sync::Arc<TestSet>> {
+    pub fn testset(&self, dataset: &str) -> Result<Arc<TestSet>> {
         let mut sets = self.testsets.lock().unwrap();
         if let Some(t) = sets.get(dataset) {
             return Ok(t.clone());
         }
-        let t = std::sync::Arc::new(TestSet::load(
-            &self.artifacts_dir.join(dataset).join("test.bin"),
-        )?);
+        let t = Arc::new(match self.backend_kind {
+            BackendKind::Pjrt => {
+                TestSet::load(&self.artifacts_dir.join(dataset).join("test.bin"))?
+            }
+            BackendKind::Reference => {
+                SyntheticSpec::new(dataset).testset(crate::fixtures::DEFAULT_TEST_SAMPLES)?
+            }
+        });
         sets.insert(dataset.to_string(), t.clone());
         Ok(t)
     }
 
     pub fn run_config(&self, dataset: &str, scheme: Scheme) -> RunConfig {
-        RunConfig::new(self.artifacts_dir.clone(), dataset, scheme)
+        let mut cfg = RunConfig::new(self.artifacts_dir.clone(), dataset, scheme);
+        cfg.backend = self.backend_kind;
+        cfg
     }
 }
 
@@ -120,7 +149,7 @@ pub fn serve_scheme(
 pub fn eval_scheme(ctx: &EvalCtx, cfg: &RunConfig, n: usize) -> Result<SchemeEval> {
     let meta = ctx.meta(&cfg.dataset)?;
     let testset = ctx.testset(&cfg.dataset)?;
-    let mut runner = make_runner(&ctx.engine, cfg, &meta)?;
+    let mut runner = make_runner(ctx.backend.as_ref(), cfg, &meta)?;
     eval_with_runner(runner.as_mut(), &testset, &cfg.dataset, n)
 }
 

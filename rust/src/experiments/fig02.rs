@@ -25,7 +25,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
         .clone();
     let testset = ctx.testset(&ds)?;
     let cfg = ctx.run_config(&ds, Scheme::EdgeOnly);
-    let exe = ctx.engine.load_artifact(&cfg.dataset_dir(), "edge_remote_b1")?;
+    let exe = ctx.backend.load_module(&cfg.dataset_dir(), "edge_remote_b1")?;
     let n = eval_n().min(testset.len());
     let [h, w, c] = [32usize, 32, 3];
 

@@ -16,7 +16,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
         let meta = ctx.meta(ds)?;
         let testset = ctx.testset(ds)?;
         let cfg = ctx.run_config(ds, Scheme::Agile);
-        let mut runner = AgileRunner::new(&ctx.engine, &cfg, &meta)?;
+        let mut runner = AgileRunner::new(ctx.backend.as_ref(), &cfg, &meta)?;
         let mut t = Table::new(
             format!("Fig 18 [{ds}]: accuracy vs alpha (trained alpha={:.2})", meta.alpha),
             &["alpha", "accuracy"],

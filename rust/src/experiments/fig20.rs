@@ -16,7 +16,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
         let meta = ctx.meta(ds)?;
         for scheme in Scheme::all() {
             let cfg = ctx.run_config(ds, scheme);
-            let runner = make_runner(&ctx.engine, &cfg, &meta)?;
+            let runner = make_runner(ctx.backend.as_ref(), &cfg, &meta)?;
             let m = runner.memory_report();
             t.row(vec![
                 ds.clone(),

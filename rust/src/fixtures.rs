@@ -1,0 +1,312 @@
+//! Synthetic fixtures: a fabricated [`Meta`] / [`Manifest`] and an
+//! in-memory [`TestSet`] so a [`RunConfig`](crate::config::RunConfig) on
+//! the reference backend works with **no artifacts directory at all**.
+//!
+//! One [`SyntheticSpec`] pins everything the python export would have
+//! written — class count, image/feature geometry, the top-k importance
+//! split, per-bit-width codebooks — plus the seed of the deterministic
+//! sample generator. The generated images and the
+//! [`ReferenceBackend`](crate::runtime::ReferenceBackend) model family
+//! agree by construction: both derive the per-class Walsh patterns from
+//! [`walsh_sign`], so the family's heads recover each sample's class
+//! exactly on a clean link, and the loss/imputation paths have a known
+//! oracle to degrade from.
+//!
+//! Samples alternate between a strong ([`EXIT_AMPLITUDE`]) and a weak
+//! ([`STAY_AMPLITUDE`]) pattern amplitude; SPINN's exit head crosses its
+//! exported 0.9 confidence threshold exactly for the strong half, so the
+//! synthetic early-exit rate is a deterministic ~50%.
+
+use crate::config::{
+    BackendKind, ImportanceStats, MacCounts, Manifest, Meta, ParamBytes, PyAccuracy, RunConfig,
+    SkewQuantiles, SpinnExit, TxElements,
+};
+use crate::runtime::{walsh_sign, DEEPCOD_CODE_CHANNELS, SPINN_FEATURE_CHANNELS};
+use crate::tensor::Tensor;
+use crate::workload::TestSet;
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+
+/// Dataset name used wherever a synthetic world stands in for a trained
+/// artifacts tree.
+pub const SYNTHETIC_DATASET: &str = "synthetic";
+
+/// Samples a [`SyntheticSpec::testset`] holds by default (serving indexes
+/// requests modulo the set length, so any request count works).
+pub const DEFAULT_TEST_SAMPLES: usize = 256;
+
+/// Pattern amplitude of even-indexed samples: strong enough that SPINN's
+/// exit confidence clears the exported 0.9 threshold.
+pub const EXIT_AMPLITUDE: f32 = 0.36;
+/// Pattern amplitude of odd-indexed samples: SPINN stays below threshold
+/// and offloads.
+pub const STAY_AMPLITUDE: f32 = 0.18;
+/// Uniform per-pixel jitter half-width. Block means average ~48 pixels,
+/// so the recovered per-cell signal moves by well under the amplitude
+/// gap — predictions stay deterministic.
+pub const JITTER: f32 = 0.05;
+
+/// Everything the synthetic world is derived from.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub dataset: String,
+    pub num_classes: usize,
+    pub image: [usize; 3],
+    pub feature: [usize; 3],
+    /// top-k important feature channels kept local (AgileNN split)
+    pub k: usize,
+    /// importance mass carried by the top-k split (meta bookkeeping)
+    pub rho: f64,
+    /// trained local/remote fusion weight
+    pub alpha: f64,
+    /// seed of the sample generator (images are a pure function of
+    /// `(seed, sample index)`)
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// The default geometry — mirrors the real 32x32 exports: 10 classes,
+    /// 8x8x24 features, top-5 split.
+    pub fn new(dataset: impl Into<String>) -> Self {
+        Self {
+            dataset: dataset.into(),
+            num_classes: 10,
+            image: [32, 32, 3],
+            feature: [8, 8, 24],
+            k: 5,
+            rho: 0.8,
+            alpha: 0.5,
+            seed: 0xA61E,
+        }
+    }
+
+    fn cells(&self) -> usize {
+        self.feature[0] * self.feature[1]
+    }
+
+    /// Uniform codebook over [0, 1] with `2^bits` levels — the reference
+    /// family's feature range, with `index_of(0.0) == 0` so the
+    /// imputation reference symbol decodes to a feature's true resting
+    /// value.
+    fn codebook(bits: u32) -> Vec<f32> {
+        let n = 1usize << bits;
+        (0..n).map(|i| i as f32 / (n - 1) as f32).collect()
+    }
+
+    fn codebooks() -> HashMap<String, Vec<f32>> {
+        (1..=6).map(|b| (b.to_string(), Self::codebook(b))).collect()
+    }
+
+    /// Fabricate the metadata the python build would have exported.
+    /// Accuracy fields carry the family's nominal (clean-link) values;
+    /// MAC/param counts are plausible constants that keep every scheme
+    /// inside the STM32F746 memory budgets.
+    pub fn meta(&self) -> Meta {
+        let [h, w, c] = self.image;
+        let remote_channels = self.feature[2] - self.k;
+        // selected (local) channels carry rho of the importance mass;
+        // remote channels share the rest with distinct, scrambled weights
+        // so the anytime transport's importance order is a non-trivial
+        // permutation
+        let per_selected = self.rho / self.k as f64;
+        let remote_base = (1.0 - self.rho) / remote_channels as f64;
+        let mean_importance: Vec<f64> = (0..self.feature[2])
+            .map(|ch| {
+                if ch < self.k {
+                    per_selected
+                } else {
+                    let r = ch - self.k;
+                    remote_base * (0.5 + (r * 7 % remote_channels) as f64 / remote_channels as f64)
+                }
+            })
+            .collect();
+        Meta {
+            dataset: self.dataset.clone(),
+            num_classes: self.num_classes,
+            image: self.image,
+            feature: self.feature,
+            k: self.k,
+            rho: self.rho,
+            alpha: self.alpha,
+            xai_tool: "reference".into(),
+            selected_channels: (0..self.k).collect(),
+            codebooks: Self::codebooks(),
+            code_entropy_bits: (1..=6u32).map(|b| (b.to_string(), b as f64 * 0.6)).collect(),
+            deepcod_codebooks: Self::codebooks(),
+            spinn_codebooks: Self::codebooks(),
+            macs: MacCounts {
+                agile_device: 480_000,
+                agile_extractor: 400_000,
+                agile_local: 80_000,
+                agile_remote: 3_000_000,
+                deepcod_device: 620_000,
+                spinn_device: 700_000,
+                mcunet_local: 1_600_000,
+            },
+            param_bytes_int8: ParamBytes {
+                agile_device: 60_000,
+                deepcod_device: 90_000,
+                spinn_device: 80_000,
+                mcunet_local: 250_000,
+            },
+            tx_elements: TxElements {
+                agile: self.cells() * remote_channels,
+                deepcod: self.cells() * DEEPCOD_CODE_CHANNELS,
+                spinn: self.cells() * SPINN_FEATURE_CHANNELS,
+                edge_raw_bytes: h * w * c,
+            },
+            accuracy: PyAccuracy {
+                agile: 1.0,
+                agile_quant4: 1.0,
+                agile_local_only: 1.0,
+                deepcod: 1.0,
+                spinn_final: 1.0,
+                mcunet: 1.0,
+                edge_only: 1.0,
+            },
+            spinn_exit: SpinnExit { threshold: 0.9, rate: 0.5, accuracy: 1.0 },
+            importance: ImportanceStats {
+                natural_skewness_quantiles: SkewQuantiles { p10: 0.62, p50: 0.71, p90: 0.84 },
+                achieved_skewness_mean: self.rho,
+                disorder_rate: 0.02,
+                mean_importance_per_channel: mean_importance,
+            },
+        }
+    }
+
+    /// Fabricate the manifest `make artifacts` would have written.
+    pub fn manifest(&self) -> Manifest {
+        Manifest { datasets: vec![self.dataset.clone()], quick: false }
+    }
+
+    /// Generate `n` deterministic samples. Sample `i` has label
+    /// `i % num_classes`; its image paints the label's Walsh pattern at
+    /// the alternating strong/weak amplitude, plus seeded per-pixel
+    /// jitter. Pure function of `(spec, n)` — bit-identical across runs
+    /// and machines.
+    pub fn testset(&self, n: usize) -> Result<TestSet> {
+        let [h, w, c] = self.image;
+        let [fh, fw, _] = self.feature;
+        ensure!(n > 0, "need at least one synthetic sample");
+        ensure!(
+            h % fh == 0 && w % fw == 0,
+            "image {h}x{w} not divisible into the {fh}x{fw} feature grid"
+        );
+        let (bh, bw) = (h / fh, w / fw);
+        let mut data = Vec::with_capacity(n * h * w * c);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let label = i % self.num_classes;
+            labels.push(label as i32);
+            let amp = if i % 2 == 0 { EXIT_AMPLITUDE } else { STAY_AMPLITUDE };
+            let mut rng = self.seed ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            for yy in 0..h {
+                for xx in 0..w {
+                    let cell = (yy / bh) * fw + xx / bw;
+                    let base = 0.5 + amp * walsh_sign(label, cell);
+                    for _ch in 0..c {
+                        let noise = (unit_f32(splitmix64(&mut rng)) - 0.5) * 2.0 * JITTER;
+                        data.push((base + noise).clamp(0.0, 1.0));
+                    }
+                }
+            }
+        }
+        Ok(TestSet { images: Tensor::new(vec![n, h, w, c], data)?, labels })
+    }
+}
+
+/// The trained metadata + test set a [`RunConfig`] resolves to: the
+/// synthetic world on the reference backend, the artifacts tree on PJRT.
+/// The single source of truth for this dispatch — the serve builder, the
+/// CLI and the examples all go through it.
+pub fn load_world(cfg: &RunConfig) -> Result<(Meta, TestSet)> {
+    match cfg.backend {
+        BackendKind::Reference => {
+            let spec = SyntheticSpec::new(cfg.dataset.as_str());
+            Ok((spec.meta(), spec.testset(DEFAULT_TEST_SAMPLES)?))
+        }
+        BackendKind::Pjrt => Ok((
+            Meta::load(&cfg.dataset_dir())?,
+            TestSet::load(&cfg.dataset_dir().join("test.bin"))?,
+        )),
+    }
+}
+
+/// splitmix64 step — the standard seeded stream behind the jitter.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Top 24 bits -> uniform f32 in [0, 1).
+fn unit_f32(bits: u64) -> f32 {
+    (bits >> 40) as f32 / (1u64 << 24) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+
+    #[test]
+    fn meta_is_internally_consistent() {
+        let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+        let m = spec.meta();
+        assert_eq!(m.tx_elements(Scheme::Agile), 8 * 8 * 19);
+        assert_eq!(m.tx_elements(Scheme::Deepcod), 8 * 8 * 12);
+        assert_eq!(m.tx_elements(Scheme::Spinn), 8 * 8 * 32);
+        assert_eq!(m.importance.mean_importance_per_channel.len(), m.feature[2]);
+        assert_eq!(m.selected_channels.len(), m.k);
+        for bits in 1..=6 {
+            let cb = m.codebook(Scheme::Agile, bits).unwrap();
+            assert_eq!(cb.len(), 1 << bits);
+            assert_eq!(cb[0], 0.0);
+            assert_eq!(*cb.last().unwrap(), 1.0);
+        }
+        // selected channels must rank above every remote channel
+        let imp = &m.importance.mean_importance_per_channel;
+        let min_selected =
+            m.selected_channels.iter().map(|&c| imp[c]).fold(f64::INFINITY, f64::min);
+        let max_remote = (m.k..m.feature[2]).map(|c| imp[c]).fold(0.0, f64::max);
+        assert!(min_selected > max_remote);
+    }
+
+    #[test]
+    fn importance_order_is_available_for_the_anytime_transport() {
+        let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+        let m = spec.meta();
+        let order = crate::net::importance_order(&m, Scheme::Agile).expect("synthetic order");
+        assert_eq!(order.len(), m.tx_elements(Scheme::Agile));
+        // remote importance weights are scrambled, so the ranked order is
+        // not just the identity over channels
+        assert!(order.windows(2).any(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn testset_is_deterministic_and_labeled() {
+        let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+        let a = spec.testset(16).unwrap();
+        let b = spec.testset(16).unwrap();
+        assert_eq!(a.images.data(), b.images.data(), "samples must be a pure function of the spec");
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a.labels[13], 3);
+        assert_eq!(a.image(7).unwrap().shape(), &[1, 32, 32, 3]);
+        // pixels stay inside the unit range the u8 edge path assumes
+        assert!(a.images.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // a different seed moves the jitter
+        let mut other = spec.clone();
+        other.seed ^= 1;
+        assert_ne!(a.images.data(), other.testset(16).unwrap().images.data());
+    }
+
+    #[test]
+    fn manifest_lists_the_synthetic_dataset() {
+        let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+        let m = spec.manifest();
+        assert_eq!(m.datasets, vec![SYNTHETIC_DATASET.to_string()]);
+    }
+}

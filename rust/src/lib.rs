@@ -18,6 +18,13 @@
 //!   bench harness regenerating every figure/table in the paper's
 //!   evaluation. Python is never on the request path.
 //!
+//! Inference is pluggable ([`runtime::Backend`]): the PJRT backend (cargo
+//! feature `pjrt`) executes the real AOT artifacts, while the pure-Rust
+//! [`runtime::ReferenceBackend`] plus the synthetic world in [`fixtures`]
+//! run the identical serving stack with no artifacts and no native
+//! dependencies — `ServeBuilder::backend(BackendKind::Reference)` or
+//! `agilenn serve --backend reference`. See `docs/backends.md`.
+//!
 //! ## Quick start
 //!
 //! The serving surface is [`serve::ServeBuilder`]: pick a dataset, any of
@@ -57,6 +64,7 @@ pub mod compression;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;
+pub mod fixtures;
 pub mod json;
 pub mod metrics;
 pub mod net;

@@ -6,13 +6,12 @@
 //! vendors only the xla dependency tree.
 
 use agilenn::baselines::SchemeRunner;
-use agilenn::config::{default_artifacts_dir, Manifest, Meta, RunConfig, Scheme};
+use agilenn::config::{default_artifacts_dir, BackendKind, Manifest, Meta, RunConfig, Scheme};
 use agilenn::experiments::{all_ids, run_figure, EvalCtx};
 use agilenn::net::{BandwidthTrace, DeliveryPolicy, GilbertElliott, PacketOrder};
 use agilenn::report::{ms, pct};
-use agilenn::runtime::Engine;
+use agilenn::runtime::make_backend;
 use agilenn::serve::{ClockKind, ServeBuilder};
-use agilenn::workload::TestSet;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
@@ -77,6 +76,12 @@ USAGE: agilenn <command> [--flag value ...]
 COMMANDS:
   serve    run the multi-device batched serving pipeline (any scheme)
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
+             --backend pjrt|reference
+                                 (pjrt: AOT artifacts, needs `make
+                                 artifacts` and a pjrt-enabled build;
+                                 reference: pure-Rust deterministic model
+                                 family + synthetic dataset — no
+                                 artifacts needed at all)
              --devices 4 --requests 256 --rate-hz 30
              --clock wall|sim    (sim: discrete-event virtual time — no
                                  sleeps, seed-deterministic latencies,
@@ -96,9 +101,11 @@ COMMANDS:
              --net-seed 42       channel loss-process seed
   infer    process one request, print the full breakdown
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
-             --index 0 --bits 4 [--alpha 0.3]
+             --backend pjrt|reference --index 0 --bits 4 [--alpha 0.3]
   bench    regenerate a paper figure/table
              --figure 2|16|t2|17|18|19|20|21|22|23|24|all
+             --backend pjrt|reference  (reference: artifact-free sweeps
+                                 on the synthetic model family)
   report   print what was trained/exported per dataset
   help     this text
 
@@ -127,6 +134,7 @@ fn main() -> Result<()> {
             let mut builder = ServeBuilder::new(&dataset)
                 .artifacts_dir(artifacts)
                 .scheme(scheme)
+                .backend(args.get("backend", BackendKind::Pjrt)?)
                 .devices(devices)
                 .requests(requests)
                 .rate_hz(args.get("rate-hz", 30.0)?)
@@ -215,12 +223,12 @@ fn main() -> Result<()> {
             let scheme: Scheme = args.get_str("scheme", "agile").parse()?;
             let index: usize = args.get("index", 0)?;
             let mut cfg = RunConfig::new(artifacts, &dataset, scheme);
+            cfg.backend = args.get("backend", BackendKind::Pjrt)?;
             cfg.bits = args.get("bits", 4)?;
             cfg.alpha_override = args.get_opt_f64("alpha")?;
-            let meta = Meta::load(&cfg.dataset_dir())?;
-            let testset = TestSet::load(&cfg.dataset_dir().join("test.bin"))?;
-            let engine = Engine::cpu()?;
-            let mut runner = agilenn::baselines::make_runner(&engine, &cfg, &meta)?;
+            let (meta, testset) = agilenn::fixtures::load_world(&cfg)?;
+            let backend = make_backend(&cfg, &meta)?;
+            let mut runner = agilenn::baselines::make_runner(backend.as_ref(), &cfg, &meta)?;
             let idx = index % testset.len();
             let out = runner.process(&testset.image(idx)?, testset.labels[idx])?;
             println!("{} on {dataset}[{index}]:", scheme.name());
@@ -239,7 +247,7 @@ fn main() -> Result<()> {
         }
         "bench" => {
             let figure = args.get_str("figure", "16");
-            let ctx = EvalCtx::new(artifacts)?;
+            let ctx = EvalCtx::with_backend(artifacts, args.get("backend", BackendKind::Pjrt)?)?;
             let ids: Vec<&str> =
                 if figure == "all" { all_ids().to_vec() } else { vec![figure.as_str()] };
             for id in ids {
@@ -322,6 +330,17 @@ mod tests {
         assert_eq!(a.get("clock", ClockKind::Wall).unwrap(), ClockKind::Wall);
         let a = parse(&["serve", "--clock", "sundial"]);
         assert!(a.get("clock", ClockKind::Wall).is_err());
+    }
+
+    #[test]
+    fn backend_flag_parses_through_args() {
+        use agilenn::config::BackendKind;
+        let a = parse(&["serve", "--backend", "reference"]);
+        assert_eq!(a.get("backend", BackendKind::Pjrt).unwrap(), BackendKind::Reference);
+        let a = parse(&["serve"]);
+        assert_eq!(a.get("backend", BackendKind::Pjrt).unwrap(), BackendKind::Pjrt);
+        let a = parse(&["serve", "--backend", "gpu"]);
+        assert!(a.get("backend", BackendKind::Pjrt).is_err());
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! The pluggable inference-backend abstraction.
+//!
+//! Everything the serving stack needs from "a compiled NN" is captured by
+//! two object-safe traits:
+//!
+//! * [`Module`] — one loaded model component (a fixed-shape compiled
+//!   function): run it on f32 [`Tensor`] inputs, get the decomposed output
+//!   tuple back. Mirrors the AOT export contract exactly (unit-batch
+//!   device modules, fixed-batch remote heads).
+//! * [`Backend`] — a factory of modules, addressed the way the artifact
+//!   tree is: a dataset directory plus a file stem like `agile_device_b1`
+//!   or `deepcod_remote_b4`.
+//!
+//! Two implementations exist:
+//!
+//! * [`PjrtBackend`](super::PjrtBackend) (feature `pjrt`) wraps the PJRT
+//!   [`Engine`](super::Engine): real AOT-compiled HLO artifacts, real
+//!   numerics, needs `make artifacts` and the vendored xla toolchain.
+//! * [`ReferenceBackend`](super::ReferenceBackend) — a pure-Rust, seeded,
+//!   deterministic model family honoring the same export contract
+//!   (stems, shapes, batch sizes, skewed feature split, SPINN early-exit
+//!   logits). No artifacts, no native deps: the whole serving pipeline is
+//!   testable on any machine. See `docs/backends.md`.
+//!
+//! [`make_backend`] is the only dispatch point: it maps
+//! [`RunConfig::backend`] to a shared backend instance.
+
+use crate::config::{BackendKind, Meta, RunConfig};
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::Arc;
+
+/// One loaded model component (the unit the serving stack executes).
+pub trait Module: Send + Sync {
+    /// Identity for error messages: the artifact stem (PJRT) or the
+    /// reference family name.
+    fn name(&self) -> &str;
+
+    /// Execute on f32 tensors; returns the decomposed output tuple.
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// A factory of [`Module`]s, addressed like the artifact tree.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Load the model component exported as `<stem>` for the dataset
+    /// rooted at `dir`. Backends may cache internally; loads of the same
+    /// `(dir, stem)` must return behaviorally identical modules.
+    fn load_module(&self, dir: &Path, stem: &str) -> Result<Arc<dyn Module>>;
+}
+
+/// Instantiate the backend a [`RunConfig`] asks for. `meta` parameterizes
+/// the reference model family (class count, feature geometry, top-k
+/// split); the PJRT backend ignores it.
+pub fn make_backend(cfg: &RunConfig, meta: &Meta) -> Result<Arc<dyn Backend>> {
+    match cfg.backend {
+        BackendKind::Reference => {
+            Ok(Arc::new(super::ReferenceBackend::from_meta(meta)) as Arc<dyn Backend>)
+        }
+        BackendKind::Pjrt => pjrt_backend(),
+    }
+}
+
+/// The PJRT backend on the CPU client (or a clear error when this build
+/// carries no PJRT support).
+#[cfg(feature = "pjrt")]
+pub fn pjrt_backend() -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(super::PjrtBackend::cpu()?) as Arc<dyn Backend>)
+}
+
+/// The PJRT backend on the CPU client (or a clear error when this build
+/// carries no PJRT support).
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_backend() -> Result<Arc<dyn Backend>> {
+    anyhow::bail!(
+        "PJRT backend unavailable: this binary was built without the `pjrt` cargo \
+         feature (which needs the vendored xla toolchain). Use the reference \
+         backend instead (`--backend reference` / `BackendKind::Reference`), or \
+         rebuild with `cargo build --features pjrt`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::json::Value;
+
+    fn minimal_meta() -> Meta {
+        Meta::from_json(&Value::parse(crate::config::tests::MINIMAL_META).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn reference_kind_resolves_without_artifacts_or_pjrt() {
+        let mut cfg = RunConfig::new("/nonexistent", "t", Scheme::Agile);
+        cfg.backend = BackendKind::Reference;
+        let b = make_backend(&cfg, &minimal_meta()).unwrap();
+        assert_eq!(b.name(), "reference");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_kind_errors_clearly_without_the_feature() {
+        let cfg = RunConfig::new("/nonexistent", "t", Scheme::Agile);
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        let err = make_backend(&cfg, &minimal_meta()).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

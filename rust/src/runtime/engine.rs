@@ -1,10 +1,12 @@
 //! PJRT engine: executable cache + tensor <-> literal marshalling.
+//! Compiled only with the `pjrt` cargo feature (the vendored xla tree).
 
+use super::backend::{Backend, Module};
+use super::once_map::OnceMap;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, ensure, Context, Result};
-use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 /// A compiled HLO module ready to execute.
 pub struct Executable {
@@ -40,6 +42,16 @@ impl Executable {
     }
 }
 
+impl Module for Executable {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Executable::run(self, inputs)
+    }
+}
+
 fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
     let dims: Vec<usize> = t.shape().to_vec();
     let bytes: &[u8] = unsafe {
@@ -59,37 +71,38 @@ fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
 /// PJRT client + compiled-executable cache, shared across the coordinator.
 ///
 /// Compilation happens once per artifact at startup/first use (AOT spirit:
-/// the request path only executes). The cache is keyed by file stem.
+/// the request path only executes). The cache is keyed by file stem and is
+/// single-flight ([`OnceMap`]): two threads that miss on the same key no
+/// longer both compile it — one compiles while the other waits, and
+/// different keys still compile concurrently.
 pub struct Engine {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    cache: OnceMap<Arc<Executable>>,
 }
 
 impl Engine {
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Self { client, cache: OnceMap::new() })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached by `key`).
+    /// Load + compile an HLO-text artifact (cached by `key`; compiled at
+    /// most once per key even under concurrent first loads).
     pub fn load(&self, key: &str, path: &Path) -> Result<Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(key) {
-            return Ok(exe.clone());
-        }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-        let exe = Arc::new(Executable { exe, name: key.to_string() });
-        self.cache.lock().unwrap().insert(key.to_string(), exe.clone());
-        Ok(exe)
+        self.cache.get_or_try_init(key, || {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+            Ok(Arc::new(Executable { exe, name: key.to_string() }))
+        })
     }
 
     /// Convenience: load `<dir>/<stem>.hlo.txt`, keyed by the full path so
@@ -102,7 +115,34 @@ impl Engine {
     }
 
     pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.filled()
+    }
+}
+
+/// The PJRT [`Backend`]: real AOT artifacts on the CPU PJRT client.
+pub struct PjrtBackend {
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { engine: Engine::cpu()? })
+    }
+
+    /// The wrapped engine (platform queries, cache introspection).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load_module(&self, dir: &Path, stem: &str) -> Result<Arc<dyn Module>> {
+        let exe: Arc<dyn Module> = self.engine.load_artifact(dir, stem)?;
+        Ok(exe)
     }
 }
 

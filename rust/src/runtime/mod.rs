@@ -1,11 +1,35 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them on
-//! the CPU PJRT client. This is the only place the `xla` crate is touched.
+//! Inference runtime: pluggable [`Backend`]s executing the exported model
+//! components on [`crate::tensor::Tensor`] batches.
 //!
-//! Pattern (from /opt/xla-example/load_hlo): HLO text ->
-//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
-//! `client.compile` -> `execute`. Text is the interchange format because
-//! xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos.
+//! * [`Backend`] / [`Module`] — the abstraction every serving layer codes
+//!   against: load a component by artifact stem, run it. See
+//!   `docs/backends.md` for the contract.
+//! * [`ReferenceBackend`] — pure-Rust, seeded, deterministic model family
+//!   honoring the full export contract. No artifacts, no native deps:
+//!   the entire serving pipeline is testable anywhere.
+//! * [`PjrtBackend`] / [`Engine`] (cargo feature `pjrt`) — loads
+//!   AOT-compiled HLO-text artifacts and executes them on the CPU PJRT
+//!   client; the only place the `xla` crate is touched. Pattern (from
+//!   /opt/xla-example/load_hlo): HLO text ->
+//!   `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//!   `client.compile` -> `execute`. Text is the interchange format
+//!   because xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id serialized
+//!   protos.
+//!
+//! [`make_backend`] maps a [`crate::config::RunConfig`]'s
+//! [`BackendKind`](crate::config::BackendKind) onto an instance.
 
+mod backend;
+#[cfg(feature = "pjrt")]
 mod engine;
+pub mod once_map;
+mod reference;
 
-pub use engine::{Engine, Executable};
+pub use backend::{make_backend, pjrt_backend, Backend, Module};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Executable, PjrtBackend};
+pub use once_map::OnceMap;
+pub use reference::{
+    channel_sign, walsh_sign, ReferenceBackend, DEEPCOD_CODE_CHANNELS, FEATURE_GAIN, LOGIT_GAIN,
+    SPINN_EXIT_LOGIT_GAIN, SPINN_FEATURE_CHANNELS,
+};

@@ -1,0 +1,168 @@
+//! Single-flight keyed cache: at most one caller runs the initializer for
+//! any key; concurrent callers for the *same* key block on that one
+//! computation, callers for *other* keys proceed independently.
+//!
+//! This is the executable-cache substrate for [`super::Engine`]
+//! (feature `pjrt`): the old double-checked `Mutex<HashMap>` pattern let
+//! two threads that both missed the cache each compile the same HLO
+//! artifact — wasted work and, for large modules, seconds of duplicated
+//! XLA compilation at startup. Here a per-key slot mutex is held across
+//! the initializer, so compilation happens exactly once per key while
+//! different artifacts still compile concurrently.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+type Slot<V> = Arc<Mutex<Option<V>>>;
+
+/// Single-flight map from string keys to clonable values.
+#[derive(Debug, Default)]
+pub struct OnceMap<V> {
+    slots: Mutex<HashMap<String, Slot<V>>>,
+}
+
+impl<V: Clone> OnceMap<V> {
+    pub fn new() -> Self {
+        Self { slots: Mutex::new(HashMap::new()) }
+    }
+
+    /// Get the cached value for `key`, or run `init` to produce it.
+    ///
+    /// Exactly one caller runs `init` per key; others block until it
+    /// finishes and then clone the result. If `init` fails the slot stays
+    /// empty and the error is returned — the next caller retries.
+    pub fn get_or_try_init<E>(
+        &self,
+        key: &str,
+        init: impl FnOnce() -> Result<V, E>,
+    ) -> Result<V, E> {
+        // take (or create) this key's slot under the map lock, then drop
+        // the map lock before initializing: other keys stay unblocked
+        let slot: Slot<V> = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.entry(key.to_string()).or_default().clone()
+        };
+        // recover from poisoning: a panicking initializer leaves the slot
+        // at None (the value is only written after init succeeds), so the
+        // next caller must retry, not inherit the panic
+        let mut guard = slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if let Some(v) = guard.as_ref() {
+            return Ok(v.clone());
+        }
+        // the slot lock is held across init: single flight per key
+        let v = init()?;
+        *guard = Some(v.clone());
+        Ok(v)
+    }
+
+    /// Number of keys whose value has been successfully initialized.
+    /// Keys whose initializer is still in flight (or failed) don't count.
+    pub fn filled(&self) -> usize {
+        self.slots
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| match s.try_lock() {
+                Ok(g) => g.is_some(),
+                Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner().is_some(),
+                Err(std::sync::TryLockError::WouldBlock) => false,
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn caches_and_returns_the_first_value() {
+        let m: OnceMap<u32> = OnceMap::new();
+        let v = m.get_or_try_init("a", || Ok::<_, ()>(7)).unwrap();
+        assert_eq!(v, 7);
+        // the second initializer never runs
+        let v = m.get_or_try_init("a", || Ok::<_, ()>(99)).unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(m.filled(), 1);
+    }
+
+    #[test]
+    fn failed_init_leaves_the_slot_retryable() {
+        let m: OnceMap<u32> = OnceMap::new();
+        assert!(m.get_or_try_init("a", || Err::<u32, &str>("boom")).is_err());
+        assert_eq!(m.filled(), 0);
+        let v = m.get_or_try_init("a", || Ok::<_, &str>(3)).unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(m.filled(), 1);
+    }
+
+    #[test]
+    fn panicking_init_leaves_the_slot_retryable() {
+        // the pre-OnceMap cache compiled outside any lock, so a panicking
+        // first load left it clean; a poisoned slot must not regress that
+        let m = Arc::new(OnceMap::<u32>::new());
+        let mc = m.clone();
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            mc.get_or_try_init("a", || -> Result<u32, ()> { panic!("init blew up") })
+        }));
+        assert!(panicked.is_err());
+        assert_eq!(m.filled(), 0);
+        let v = m.get_or_try_init("a", || Ok::<_, ()>(5)).unwrap();
+        assert_eq!(v, 5);
+        assert_eq!(m.filled(), 1);
+    }
+
+    #[test]
+    fn concurrent_same_key_initializes_exactly_once() {
+        // regression for the Engine::load duplicate-compilation race: N
+        // threads race the same key; the initializer must run once
+        let m = Arc::new(OnceMap::<u32>::new());
+        let calls = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(std::sync::Barrier::new(8));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (m, calls, barrier) = (m.clone(), calls.clone(), barrier.clone());
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    m.get_or_try_init("shared", || {
+                        calls.fetch_add(1, Ordering::SeqCst);
+                        // widen the race window the old code lost in
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        Ok::<_, ()>(42)
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 42);
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "initializer must run once per key");
+        assert_eq!(m.filled(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_serialize() {
+        // a slow init on one key must not block another key: thread B
+        // finishes while thread A's initializer is still sleeping
+        let m = Arc::new(OnceMap::<u32>::new());
+        let entered = Arc::new(std::sync::Barrier::new(2));
+        let ma = m.clone();
+        let ea = entered.clone();
+        let a = std::thread::spawn(move || {
+            ma.get_or_try_init("slow", || {
+                ea.wait(); // b is about to start
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                Ok::<_, ()>(1)
+            })
+            .unwrap()
+        });
+        entered.wait();
+        let t0 = std::time::Instant::now();
+        let v = m.get_or_try_init("fast", || Ok::<_, ()>(2)).unwrap();
+        assert_eq!(v, 2);
+        assert!(t0.elapsed() < std::time::Duration::from_millis(40), "fast key blocked on slow key");
+        assert_eq!(a.join().unwrap(), 1);
+    }
+}

@@ -1,0 +1,535 @@
+//! `ReferenceBackend` — a pure-Rust, deterministic model family honoring
+//! the full AOT export contract, so the entire serving stack (device
+//! halves, quantize/LZW transmit path, lossy channel, batched server,
+//! fusion) runs and is testable with **no artifacts and no PJRT**.
+//!
+//! ## The reference family
+//!
+//! Inputs come from [`crate::fixtures`]: a synthetic image of class `y` is
+//! a block-constant brightness pattern `0.5 + amp * P_y[cell]` (plus small
+//! per-sample jitter), where `P_y ∈ {±1}^{fh·fw}` is the class's Walsh
+//! pattern ([`walsh_sign`]). Distinct classes have exactly orthogonal
+//! patterns over a power-of-two cell grid, so every head below recovers
+//! the class with a wide, deterministic margin — and degrades gracefully
+//! (never catastrophically) as transmitted features are quantized, lost,
+//! or imputed.
+//!
+//! Every module first recovers the per-cell signal `d[cell] =
+//! block_mean - 0.5 ≈ amp * P_y[cell]`, then:
+//!
+//! * **classifier heads** (`agile_device` logits, `mcunet_local`,
+//!   `edge_remote`, SPINN's exit head) score class `c` as
+//!   `gain · ⟨P_c, d⟩ / cells` — maximal at `c = y`;
+//! * **feature extractors** (`agile_device` remote features,
+//!   `deepcod_device` code, `spinn_device` features) emit the post-ReLU
+//!   map `F[cell, j] = relu(d[cell] · s_j) · FEATURE_GAIN` with
+//!   alternating channel signs `s_j` — mirroring the paper's skew: about
+//!   half the transmitted values are exactly zero (maximally
+//!   LZW-compressible), and the imputation reference symbol (codeword
+//!   nearest 0.0) *is* the true resting value of a missing feature;
+//! * **remote heads** (`agile_remote_b*`, `deepcod_remote_b*`,
+//!   `spinn_remote_b*`) invert the extractor per row —
+//!   `w[cell] = Σ_j s_j · F[cell, j]` has the sign of `d[cell]` — and
+//!   score classes from `w`. Rows are computed independently, so padded
+//!   batches are bitwise consistent with batch-1 execution at every
+//!   exported size.
+//!
+//! SPINN's early exit: fixture samples alternate between a strong
+//! (`EXIT_AMPLITUDE`) and a weak (`STAY_AMPLITUDE`) pattern amplitude;
+//! the exit head's confidence crosses the exported 0.9 threshold exactly
+//! for the strong half, giving a deterministic ~50% exit rate.
+//!
+//! The family accepts exactly the stems the python export writes
+//! (`{agile,deepcod,spinn}_device_b1`, `mcunet_local_b1`,
+//! `{agile,deepcod,spinn}_remote_b{1,2,4,8}`, `edge_remote_b{1,4}`) and
+//! rejects everything else, so backend wiring bugs surface as errors, not
+//! silently-wrong numerics.
+
+use super::backend::{Backend, Module};
+use crate::config::Meta;
+use crate::coordinator::batcher::{EDGE_BATCH_SIZES, REMOTE_BATCH_SIZES};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, ensure, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// DeepCOD's learned-code channel count (matches the export contract the
+/// server half assumes).
+pub const DEEPCOD_CODE_CHANNELS: usize = 12;
+/// SPINN's split-point feature channel count (ditto).
+pub const SPINN_FEATURE_CHANNELS: usize = 32;
+
+/// Scale of active (post-ReLU) feature values. With fixture amplitudes in
+/// [0.18, 0.36], active features land in ~[0.3, 0.8]: well inside the
+/// [0, 1] codebooks, distinguishable from the 0.0 resting level even at
+/// 1-bit quantization of strong samples.
+pub const FEATURE_GAIN: f32 = 2.0;
+/// Classifier logit scale: true-class logits of `gain * amp` (≈ 1.4–2.9)
+/// against near-zero off-class logits — confident but not saturating.
+pub const LOGIT_GAIN: f32 = 8.0;
+/// SPINN exit-head logit scale, tuned so max softmax confidence clears
+/// 0.9 at `EXIT_AMPLITUDE` (logit 7.2 → conf ≈ 0.99) and stays below it
+/// at `STAY_AMPLITUDE` (logit 3.6 → conf ≈ 0.80).
+pub const SPINN_EXIT_LOGIT_GAIN: f32 = 20.0;
+
+/// Class pattern bit: the Walsh function with mask `class + 1` evaluated
+/// at `cell`. Over a power-of-two number of cells, distinct classes give
+/// exactly orthogonal ±1 patterns. Shared with [`crate::fixtures`], which
+/// paints these patterns into the synthetic images.
+pub fn walsh_sign(class: usize, cell: usize) -> f32 {
+    if ((cell as u64) & (class as u64 + 1)).count_ones() % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Alternating per-channel sign of the reference feature extractors.
+pub fn channel_sign(j: usize) -> f32 {
+    if j % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Geometry shared by every module of one reference model instance.
+#[derive(Debug, Clone)]
+pub(crate) struct ReferenceModel {
+    num_classes: usize,
+    image: [usize; 3],
+    feature: [usize; 3],
+    k: usize,
+}
+
+impl ReferenceModel {
+    /// Per-cell signal `d[cell] = block_mean - 0.5` of one `[1,h,w,c]`
+    /// image, block-averaged down to the `fh × fw` feature grid.
+    fn block_signal(&self, img: &[f32]) -> Result<Vec<f32>> {
+        let [h, w, c] = self.image;
+        let [fh, fw, _] = self.feature;
+        ensure!(
+            h % fh == 0 && w % fw == 0,
+            "image {h}x{w} not divisible into the {fh}x{fw} feature grid"
+        );
+        let (bh, bw) = (h / fh, w / fw);
+        let mut sums = vec![0.0f64; fh * fw];
+        for yy in 0..h {
+            for xx in 0..w {
+                let cell = (yy / bh) * fw + xx / bw;
+                for ch in 0..c {
+                    sums[cell] += img[(yy * w + xx) * c + ch] as f64;
+                }
+            }
+        }
+        let per = (bh * bw * c) as f64;
+        Ok(sums.iter().map(|s| (s / per - 0.5) as f32).collect())
+    }
+
+    /// Score every class against the recovered signal: `gain · ⟨P_c, d⟩ /
+    /// cells`.
+    fn class_scores(&self, d: &[f32], gain: f32) -> Vec<f32> {
+        let cells = d.len() as f32;
+        (0..self.num_classes)
+            .map(|cl| {
+                let mut s = 0.0f32;
+                for (cell, &dv) in d.iter().enumerate() {
+                    s += walsh_sign(cl, cell) * dv;
+                }
+                gain * s / cells
+            })
+            .collect()
+    }
+
+    /// Post-ReLU feature map `F[cell, j] = relu(d[cell]·s_j) ·
+    /// FEATURE_GAIN`, laid out `(h, w, channels)` row-major like the real
+    /// artifacts.
+    fn feature_map(&self, d: &[f32], channels: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(d.len() * channels);
+        for &dv in d {
+            for j in 0..channels {
+                out.push((dv * channel_sign(j)).max(0.0) * FEATURE_GAIN);
+            }
+        }
+        out
+    }
+
+    /// Invert [`ReferenceModel::feature_map`] per cell: `w[cell] = Σ_j
+    /// s_j · F[cell, j]` carries the sign (and scale) of `d[cell]`.
+    fn recovered_signal(feats: &[f32], channels: usize) -> Vec<f32> {
+        feats
+            .chunks_exact(channels)
+            .map(|cell| {
+                let mut s = 0.0f32;
+                for (j, &f) in cell.iter().enumerate() {
+                    s += channel_sign(j) * f;
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn remote_channels(&self) -> Result<usize> {
+        ensure!(
+            self.k < self.feature[2],
+            "top-k split k={} must leave remote channels of {} total",
+            self.k,
+            self.feature[2]
+        );
+        Ok(self.feature[2] - self.k)
+    }
+}
+
+/// Which exported component a stem names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    AgileDevice,
+    AgileRemote,
+    DeepcodDevice,
+    DeepcodRemote,
+    SpinnDevice,
+    SpinnRemote,
+    McunetLocal,
+    EdgeRemote,
+}
+
+impl Family {
+    fn parse(name: &str) -> Option<Family> {
+        Some(match name {
+            "agile_device" => Family::AgileDevice,
+            "agile_remote" => Family::AgileRemote,
+            "deepcod_device" => Family::DeepcodDevice,
+            "deepcod_remote" => Family::DeepcodRemote,
+            "spinn_device" => Family::SpinnDevice,
+            "spinn_remote" => Family::SpinnRemote,
+            "mcunet_local" => Family::McunetLocal,
+            "edge_remote" => Family::EdgeRemote,
+            _ => return None,
+        })
+    }
+
+    /// Batch sizes the python export compiles for this component.
+    fn exported_batches(&self) -> &'static [usize] {
+        match self {
+            Family::AgileDevice
+            | Family::DeepcodDevice
+            | Family::SpinnDevice
+            | Family::McunetLocal => &[1],
+            Family::EdgeRemote => &EDGE_BATCH_SIZES,
+            Family::AgileRemote | Family::DeepcodRemote | Family::SpinnRemote => {
+                &REMOTE_BATCH_SIZES
+            }
+        }
+    }
+}
+
+/// `<family>_b<batch>` — the artifact stem grammar.
+fn parse_stem(stem: &str) -> Option<(Family, usize)> {
+    let (name, b) = stem.rsplit_once("_b")?;
+    let batch: usize = b.parse().ok()?;
+    Some((Family::parse(name)?, batch))
+}
+
+/// The pure-Rust reference backend. Cheap to construct; modules share the
+/// geometry through an [`Arc`], so cloning across device threads is free.
+pub struct ReferenceBackend {
+    model: Arc<ReferenceModel>,
+}
+
+impl ReferenceBackend {
+    /// Parameterize the family from trained (or synthetic) metadata: only
+    /// the geometry — class count, image/feature dims, top-k split — is
+    /// read, so any [`Meta`] works, artifacts or not.
+    pub fn from_meta(meta: &Meta) -> Self {
+        Self {
+            model: Arc::new(ReferenceModel {
+                num_classes: meta.num_classes,
+                image: meta.image,
+                feature: meta.feature,
+                k: meta.k,
+            }),
+        }
+    }
+}
+
+impl Backend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load_module(&self, _dir: &Path, stem: &str) -> Result<Arc<dyn Module>> {
+        let (family, batch) = parse_stem(stem).ok_or_else(|| {
+            anyhow!("reference backend has no model family for artifact stem {stem:?}")
+        })?;
+        ensure!(
+            family.exported_batches().contains(&batch),
+            "{stem:?}: batch size {batch} is not exported for this component \
+             (exported: {:?})",
+            family.exported_batches()
+        );
+        Ok(Arc::new(ReferenceModule {
+            model: self.model.clone(),
+            family,
+            batch,
+            stem: stem.to_string(),
+        }) as Arc<dyn Module>)
+    }
+}
+
+/// One loaded reference component.
+struct ReferenceModule {
+    model: Arc<ReferenceModel>,
+    family: Family,
+    batch: usize,
+    stem: String,
+}
+
+impl ReferenceModule {
+    fn check_input<'a>(&self, inputs: &'a [Tensor], shape: &[usize]) -> Result<&'a Tensor> {
+        ensure!(
+            inputs.len() == 1,
+            "{}: expected 1 input tensor, got {}",
+            self.stem,
+            inputs.len()
+        );
+        ensure!(
+            inputs[0].shape() == shape,
+            "{}: input shape {:?} does not match compiled shape {:?}",
+            self.stem,
+            inputs[0].shape(),
+            shape
+        );
+        Ok(&inputs[0])
+    }
+
+    /// Run a per-row remote head: features `[b, fh, fw, ch]` → logits
+    /// `[b, num_classes]`.
+    fn remote_head(&self, inputs: &[Tensor], channels: usize) -> Result<Vec<Tensor>> {
+        let m = &self.model;
+        let [fh, fw, _] = m.feature;
+        let input = self.check_input(inputs, &[self.batch, fh, fw, channels])?;
+        let per_row = fh * fw * channels;
+        let mut logits = Vec::with_capacity(self.batch * m.num_classes);
+        for row in input.data().chunks_exact(per_row) {
+            let w = ReferenceModel::recovered_signal(row, channels);
+            logits.extend(m.class_scores(&w, 1.0));
+        }
+        Ok(vec![Tensor::new(vec![self.batch, m.num_classes], logits)?])
+    }
+}
+
+impl Module for ReferenceModule {
+    fn name(&self) -> &str {
+        &self.stem
+    }
+
+    fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let m = &self.model;
+        let [h, w, c] = m.image;
+        let [fh, fw, _] = m.feature;
+        match self.family {
+            Family::AgileDevice => {
+                let img = self.check_input(inputs, &[1, h, w, c])?;
+                let d = m.block_signal(img.data())?;
+                let rem = m.remote_channels()?;
+                let logits = Tensor::new(vec![1, m.num_classes], m.class_scores(&d, LOGIT_GAIN))?;
+                let feats = Tensor::new(vec![1, fh, fw, rem], m.feature_map(&d, rem))?;
+                Ok(vec![logits, feats])
+            }
+            Family::DeepcodDevice => {
+                let img = self.check_input(inputs, &[1, h, w, c])?;
+                let d = m.block_signal(img.data())?;
+                let code = m.feature_map(&d, DEEPCOD_CODE_CHANNELS);
+                Ok(vec![Tensor::new(vec![1, fh, fw, DEEPCOD_CODE_CHANNELS], code)?])
+            }
+            Family::SpinnDevice => {
+                let img = self.check_input(inputs, &[1, h, w, c])?;
+                let d = m.block_signal(img.data())?;
+                let feats = Tensor::new(
+                    vec![1, fh, fw, SPINN_FEATURE_CHANNELS],
+                    m.feature_map(&d, SPINN_FEATURE_CHANNELS),
+                )?;
+                let exit = Tensor::new(
+                    vec![1, m.num_classes],
+                    m.class_scores(&d, SPINN_EXIT_LOGIT_GAIN),
+                )?;
+                Ok(vec![feats, exit])
+            }
+            Family::McunetLocal => {
+                let img = self.check_input(inputs, &[1, h, w, c])?;
+                let d = m.block_signal(img.data())?;
+                Ok(vec![Tensor::new(vec![1, m.num_classes], m.class_scores(&d, LOGIT_GAIN))?])
+            }
+            Family::EdgeRemote => {
+                let input = self.check_input(inputs, &[self.batch, h, w, c])?;
+                let mut logits = Vec::with_capacity(self.batch * m.num_classes);
+                for row in input.data().chunks_exact(h * w * c) {
+                    let d = m.block_signal(row)?;
+                    logits.extend(m.class_scores(&d, LOGIT_GAIN));
+                }
+                Ok(vec![Tensor::new(vec![self.batch, m.num_classes], logits)?])
+            }
+            Family::AgileRemote => self.remote_head(inputs, m.remote_channels()?),
+            Family::DeepcodRemote => self.remote_head(inputs, DEEPCOD_CODE_CHANNELS),
+            Family::SpinnRemote => self.remote_head(inputs, SPINN_FEATURE_CHANNELS),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+    use std::path::PathBuf;
+
+    fn backend() -> ReferenceBackend {
+        let meta =
+            Meta::from_json(&Value::parse(crate::config::tests::MINIMAL_META).unwrap()).unwrap();
+        ReferenceBackend::from_meta(&meta)
+    }
+
+    fn pattern_image(class: usize, amp: f32) -> Tensor {
+        // block-constant 32x32x3 image of the class pattern on an 8x8 grid
+        let (h, w, c, fw, bh, bw) = (32, 32, 3, 8, 4, 4);
+        let mut data = Vec::with_capacity(h * w * c);
+        for yy in 0..h {
+            for xx in 0..w {
+                let cell = (yy / bh) * fw + xx / bw;
+                for _ in 0..c {
+                    data.push(0.5 + amp * walsh_sign(class, cell));
+                }
+            }
+        }
+        Tensor::new(vec![1, h, w, c], data).unwrap()
+    }
+
+    #[test]
+    fn walsh_patterns_are_orthogonal_and_distinct() {
+        let cells = 64;
+        for a in 0..10 {
+            for b in 0..10 {
+                let dot: f32 = (0..cells).map(|uv| walsh_sign(a, uv) * walsh_sign(b, uv)).sum();
+                if a == b {
+                    assert_eq!(dot, cells as f32);
+                } else {
+                    assert_eq!(dot, 0.0, "classes {a},{b} not orthogonal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stem_grammar_accepts_the_export_contract_only() {
+        let b = backend();
+        let dir = PathBuf::from("/nonexistent");
+        for stem in [
+            "agile_device_b1",
+            "deepcod_device_b1",
+            "spinn_device_b1",
+            "mcunet_local_b1",
+            "agile_remote_b1",
+            "agile_remote_b2",
+            "agile_remote_b4",
+            "agile_remote_b8",
+            "deepcod_remote_b8",
+            "spinn_remote_b4",
+            "edge_remote_b1",
+            "edge_remote_b4",
+        ] {
+            assert!(b.load_module(&dir, stem).is_ok(), "{stem} must load");
+        }
+        for stem in [
+            "agile_device_b2",  // device halves export batch 1 only
+            "edge_remote_b8",   // edge exports {1,4} only
+            "agile_remote_b3",  // not an exported batch size
+            "agile_remote",     // no batch suffix
+            "unknown_thing_b1", // unknown family
+        ] {
+            assert!(b.load_module(&dir, stem).is_err(), "{stem} must be rejected");
+        }
+    }
+
+    #[test]
+    fn device_head_recovers_the_class_with_margin() {
+        let b = backend();
+        let module = b.load_module(&PathBuf::from("/x"), "agile_device_b1").unwrap();
+        for class in 0..10 {
+            let out = module.run(&[pattern_image(class, 0.3)]).unwrap();
+            assert_eq!(out.len(), 2);
+            assert_eq!(out[0].shape(), &[1, 10]);
+            assert_eq!(out[1].shape(), &[1, 8, 8, 19]);
+            assert_eq!(crate::tensor::argmax(out[0].data()), class);
+            // orthogonal patterns: off-class logits vanish (up to f32
+            // accumulation error)
+            for (cl, &v) in out[0].data().iter().enumerate() {
+                if cl != class {
+                    assert!(v.abs() < 1e-4, "off-class logit {v} for class {cl}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn remote_head_inverts_the_extractor() {
+        let b = backend();
+        let dev = b.load_module(&PathBuf::from("/x"), "agile_device_b1").unwrap();
+        let rem = b.load_module(&PathBuf::from("/x"), "agile_remote_b1").unwrap();
+        let class = 7;
+        let feats = dev.run(&[pattern_image(class, 0.3)]).unwrap().remove(1);
+        let logits = rem.run(&[feats]).unwrap().remove(0);
+        assert_eq!(logits.shape(), &[1, 10]);
+        assert_eq!(crate::tensor::argmax(logits.data()), class);
+    }
+
+    #[test]
+    fn batched_rows_match_batch1_bitwise() {
+        let b = backend();
+        let dev = b.load_module(&PathBuf::from("/x"), "agile_device_b1").unwrap();
+        let r1 = b.load_module(&PathBuf::from("/x"), "agile_remote_b1").unwrap();
+        let r4 = b.load_module(&PathBuf::from("/x"), "agile_remote_b4").unwrap();
+        let feats: Vec<Tensor> = (0..3)
+            .map(|cl| dev.run(&[pattern_image(cl, 0.3)]).unwrap().remove(1))
+            .collect();
+        let singles: Vec<Vec<f32>> =
+            feats.iter().map(|f| r1.run(std::slice::from_ref(f)).unwrap()[0].data().to_vec()).collect();
+        let batch = Tensor::stack_padded(&feats, 4).unwrap();
+        let batched = r4.run(&[batch]).unwrap().remove(0);
+        for (i, single) in singles.iter().enumerate() {
+            assert_eq!(batched.row(i).unwrap(), single.as_slice(), "row {i} diverged");
+        }
+    }
+
+    #[test]
+    fn spinn_exit_confidence_splits_on_amplitude() {
+        let b = backend();
+        let spinn = b.load_module(&PathBuf::from("/x"), "spinn_device_b1").unwrap();
+        let strong = spinn.run(&[pattern_image(3, 0.36)]).unwrap();
+        let weak = spinn.run(&[pattern_image(3, 0.18)]).unwrap();
+        assert_eq!(strong[0].shape(), &[1, 8, 8, 32]);
+        let conf_strong = crate::tensor::max_confidence(strong[1].data());
+        let conf_weak = crate::tensor::max_confidence(weak[1].data());
+        assert!(conf_strong >= 0.9, "strong sample must exit: conf {conf_strong}");
+        assert!(conf_weak < 0.9, "weak sample must offload: conf {conf_weak}");
+        assert_eq!(crate::tensor::argmax(weak[1].data()), 3);
+    }
+
+    #[test]
+    fn features_are_skewed_toward_zero() {
+        // the paper's skew manipulation: roughly half the transmitted
+        // feature values sit exactly at the 0.0 reference level
+        let b = backend();
+        let dev = b.load_module(&PathBuf::from("/x"), "agile_device_b1").unwrap();
+        let feats = dev.run(&[pattern_image(2, 0.3)]).unwrap().remove(1);
+        let zeros = feats.data().iter().filter(|&&v| v == 0.0).count();
+        let frac = zeros as f64 / feats.len() as f64;
+        assert!(frac > 0.3 && frac < 0.7, "zero fraction {frac}");
+    }
+
+    #[test]
+    fn wrong_shape_is_rejected() {
+        let b = backend();
+        let dev = b.load_module(&PathBuf::from("/x"), "agile_device_b1").unwrap();
+        let bad = Tensor::zeros(vec![1, 16, 16, 3]);
+        assert!(dev.run(&[bad]).is_err());
+    }
+}

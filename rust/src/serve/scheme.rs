@@ -24,7 +24,7 @@ use crate::coordinator::device_runtime::DeviceRuntime;
 use crate::coordinator::server::RemoteServer;
 use crate::metrics::{EnergyLedger, LatencyBreakdown};
 use crate::net::{LinkOutcome, NetStats, Packet};
-use crate::runtime::{Engine, Executable};
+use crate::runtime::{Backend, Module};
 use crate::simulator::{DeviceSim, DeviceTimings, MemoryReport, NetworkSim};
 use crate::tensor::{argmax, max_confidence, Tensor};
 use anyhow::{ensure, Result};
@@ -282,9 +282,9 @@ pub struct AgileDevice {
 }
 
 impl AgileDevice {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         Ok(Self {
-            inner: DeviceRuntime::new(engine, cfg, meta)?,
+            inner: DeviceRuntime::new(backend, cfg, meta)?,
             mem: memory_report_for(cfg, meta, Scheme::Agile),
         })
     }
@@ -313,7 +313,7 @@ impl DeviceSide for AgileDevice {
 
 /// DeepCOD device half: learned encoder, everything classifies remotely.
 pub struct DeepcodDevice {
-    encoder: Arc<Executable>,
+    encoder: Arc<dyn Module>,
     tx: TxEncoder,
     sim: DeviceSim,
     nn_macs: u64,
@@ -322,9 +322,9 @@ pub struct DeepcodDevice {
 }
 
 impl DeepcodDevice {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         ensure!(cfg.scheme == Scheme::Deepcod, "wrong scheme for DeepcodDevice");
-        let encoder = engine.load_artifact(&cfg.dataset_dir(), "deepcod_device_b1")?;
+        let encoder = backend.load_module(&cfg.dataset_dir(), "deepcod_device_b1")?;
         let codebook = Codebook::new(meta.codebook(Scheme::Deepcod, cfg.bits)?)?;
         Ok(Self {
             encoder,
@@ -371,7 +371,7 @@ impl DeviceSide for DeepcodDevice {
 
 /// SPINN device half: partitioned NN with an on-device early exit.
 pub struct SpinnDevice {
-    device_exe: Arc<Executable>,
+    device_exe: Arc<dyn Module>,
     tx: TxEncoder,
     sim: DeviceSim,
     nn_macs: u64,
@@ -381,9 +381,9 @@ pub struct SpinnDevice {
 }
 
 impl SpinnDevice {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         ensure!(cfg.scheme == Scheme::Spinn, "wrong scheme for SpinnDevice");
-        let device_exe = engine.load_artifact(&cfg.dataset_dir(), "spinn_device_b1")?;
+        let device_exe = backend.load_module(&cfg.dataset_dir(), "spinn_device_b1")?;
         let codebook = Codebook::new(meta.codebook(Scheme::Spinn, cfg.bits)?)?;
         Ok(Self {
             device_exe,
@@ -445,17 +445,17 @@ impl DeviceSide for SpinnDevice {
 
 /// MCUNet device half: full local inference, never offloads.
 pub struct McunetDevice {
-    exe: Arc<Executable>,
+    exe: Arc<dyn Module>,
     sim: DeviceSim,
     nn_macs: u64,
     mem: MemoryReport,
 }
 
 impl McunetDevice {
-    pub fn new(engine: &Engine, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
+    pub fn new(backend: &dyn Backend, cfg: &RunConfig, meta: &Meta) -> Result<Self> {
         ensure!(cfg.scheme == Scheme::Mcunet, "wrong scheme for McunetDevice");
         Ok(Self {
-            exe: engine.load_artifact(&cfg.dataset_dir(), "mcunet_local_b1")?,
+            exe: backend.load_module(&cfg.dataset_dir(), "mcunet_local_b1")?,
             sim: DeviceSim::new(cfg.device.clone()),
             nn_macs: meta.macs.mcunet_local,
             mem: memory_report_for(cfg, meta, Scheme::Mcunet),
@@ -537,15 +537,15 @@ impl DeviceSide for EdgeDevice {
 
 /// Device half for `cfg.scheme`.
 pub fn make_device_side(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &RunConfig,
     meta: &Meta,
 ) -> Result<Box<dyn DeviceSide>> {
     Ok(match cfg.scheme {
-        Scheme::Agile => Box::new(AgileDevice::new(engine, cfg, meta)?),
-        Scheme::Deepcod => Box::new(DeepcodDevice::new(engine, cfg, meta)?),
-        Scheme::Spinn => Box::new(SpinnDevice::new(engine, cfg, meta)?),
-        Scheme::Mcunet => Box::new(McunetDevice::new(engine, cfg, meta)?),
+        Scheme::Agile => Box::new(AgileDevice::new(backend, cfg, meta)?),
+        Scheme::Deepcod => Box::new(DeepcodDevice::new(backend, cfg, meta)?),
+        Scheme::Spinn => Box::new(SpinnDevice::new(backend, cfg, meta)?),
+        Scheme::Mcunet => Box::new(McunetDevice::new(backend, cfg, meta)?),
         Scheme::EdgeOnly => Box::new(EdgeDevice::new(cfg, meta)),
     })
 }
@@ -553,13 +553,13 @@ pub fn make_device_side(
 /// Server half for `cfg.scheme`; `None` for fully-local schemes, which
 /// never enter the batcher.
 pub fn make_server_side(
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &RunConfig,
     meta: &Meta,
 ) -> Result<Option<Box<dyn ServerSide>>> {
     Ok(match cfg.scheme {
         Scheme::Mcunet => None,
-        _ => Some(Box::new(RemoteServer::new(engine, cfg, meta)?)),
+        _ => Some(Box::new(RemoteServer::new(backend, cfg, meta)?)),
     })
 }
 

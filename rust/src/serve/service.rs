@@ -24,14 +24,14 @@
 
 use crate::baselines::RequestOutcome;
 use crate::compression::Frame;
-use crate::config::{default_artifacts_dir, Meta, RunConfig, Scheme};
+use crate::config::{default_artifacts_dir, BackendKind, Meta, RunConfig, Scheme};
 use crate::coordinator::batcher::{BatchQueue, Pending};
 use crate::metrics::{AccuracyCounter, LatencyStats};
 use crate::net::{
     importance_order, transmit_frame, transmit_packets, BandwidthTrace, Channel, DeliveryPolicy,
     GilbertElliott, LinkOutcome, Packet, PacketOrder, Packetizer,
 };
-use crate::runtime::Engine;
+use crate::runtime::{make_backend, Backend};
 use crate::serve::clock::{Clock, ClockKind};
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
@@ -156,6 +156,7 @@ pub struct ServeBuilder {
     artifacts_dir: PathBuf,
     dataset: String,
     scheme: Scheme,
+    backend: BackendKind,
     devices: usize,
     requests: usize,
     arrival: Arrival,
@@ -176,6 +177,7 @@ impl ServeBuilder {
             artifacts_dir: default_artifacts_dir(),
             dataset: dataset.into(),
             scheme: Scheme::Agile,
+            backend: BackendKind::default(),
             devices: 1,
             requests: 64,
             arrival: Arrival::Periodic { hz: 1e9 },
@@ -200,6 +202,16 @@ impl ServeBuilder {
     /// Serving scheme; every scheme runs through the same batched pipeline.
     pub fn scheme(mut self, scheme: Scheme) -> Self {
         self.scheme = scheme;
+        self
+    }
+
+    /// Inference backend (default: PJRT over the artifacts tree).
+    /// [`BackendKind::Reference`] swaps in the pure-Rust deterministic
+    /// model family plus a synthetic in-memory dataset
+    /// ([`crate::fixtures::SyntheticSpec`]) — no artifacts directory, no
+    /// `pjrt` cargo feature, same pipeline.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -335,6 +347,7 @@ impl ServeBuilder {
     /// The [`RunConfig`] this builder resolves to (without touching disk).
     pub fn to_config(&self) -> RunConfig {
         let mut cfg = RunConfig::new(self.artifacts_dir.clone(), &self.dataset, self.scheme);
+        cfg.backend = self.backend;
         cfg.bits = self.bits;
         cfg.alpha_override = self.alpha;
         cfg.max_batch = self.max_batch;
@@ -349,11 +362,14 @@ impl ServeBuilder {
         cfg
     }
 
-    /// Load the trained metadata + test set and assemble the [`Service`].
+    /// Assemble the [`Service`]: load the trained metadata + test set
+    /// from the artifacts tree (PJRT), or fabricate the synthetic world
+    /// in memory (reference backend — no artifacts directory needed, and
+    /// [`ServeBuilder::artifacts_dir`] is ignored).
     pub fn build(self) -> Result<Service> {
         let cfg = self.to_config();
-        let meta = Meta::load(&cfg.dataset_dir())?;
-        let testset = Arc::new(TestSet::load(&cfg.dataset_dir().join("test.bin"))?);
+        let (meta, testset) = crate::fixtures::load_world(&cfg)?;
+        let testset = Arc::new(testset);
         let arrival = match self.arrival_seed {
             Some(seed) => self.arrival.with_seed(seed),
             None => self.arrival,
@@ -417,8 +433,8 @@ impl Service {
     /// threads stop producing once the receiver is gone and every worker
     /// winds down.
     pub fn stream(self) -> Result<OutcomeStream> {
-        let engine = Arc::new(Engine::cpu()?);
-        let server = make_server_side(&engine, &self.cfg, &self.meta)?;
+        let backend: Arc<dyn Backend> = make_backend(&self.cfg, &self.meta)?;
+        let server = make_server_side(backend.as_ref(), &self.cfg, &self.meta)?;
         // some schemes export fewer remote batch sizes (edge-only: max 4)
         let max_batch = match &server {
             Some(s) => self.cfg.max_batch.min(s.max_batch()),
@@ -449,7 +465,7 @@ impl Service {
         for d in 0..self.devices {
             let cfg = self.cfg.clone();
             let meta = self.meta.clone();
-            let engine = engine.clone();
+            let backend = backend.clone();
             let testset = self.testset.clone();
             let tx_offload = tx_offload.clone();
             let tx_done = tx_done.clone();
@@ -475,7 +491,7 @@ impl Service {
             device_handles.push(std::thread::spawn(move || {
                 device_loop(
                     d,
-                    &engine,
+                    backend.as_ref(),
                     &cfg,
                     &meta,
                     &testset,
@@ -794,7 +810,7 @@ fn recv_reply(clock: &Clock, rx: &Receiver<Reply>) -> Option<Reply> {
 #[allow(clippy::too_many_arguments)]
 fn device_loop(
     device_index: usize,
-    engine: &Engine,
+    backend: &dyn Backend,
     cfg: &RunConfig,
     meta: &Meta,
     testset: &TestSet,
@@ -814,7 +830,7 @@ fn device_loop(
     // while the sender was still live and then sleep forever.
     let tx_offload = offload_tx;
     let tx_done = done_tx;
-    let mut device = make_device_side(engine, cfg, meta)?;
+    let mut device = make_device_side(backend, cfg, meta)?;
     let fuser = make_fuser(cfg, meta)?;
     let dev_sim = DeviceSim::new(cfg.device.clone());
     let net = NetworkSim::new(cfg.network.clone());
@@ -978,6 +994,7 @@ mod tests {
         let cfg = ServeBuilder::new("svhns")
             .artifacts_dir("/tmp/arts")
             .scheme(Scheme::Deepcod)
+            .backend(BackendKind::Reference)
             .devices(4)
             .requests(128)
             .max_batch(4)
@@ -989,6 +1006,7 @@ mod tests {
             .to_config();
         assert_eq!(cfg.dataset, "svhns");
         assert_eq!(cfg.scheme, Scheme::Deepcod);
+        assert_eq!(cfg.backend, BackendKind::Reference);
         assert_eq!(cfg.max_batch, 4);
         assert_eq!(cfg.batch_deadline_us, 500);
         assert_eq!(cfg.bits, 2);
@@ -1002,6 +1020,7 @@ mod tests {
     fn builder_defaults_match_run_config_defaults() {
         let cfg = ServeBuilder::new("x").to_config();
         let base = RunConfig::new(cfg.artifacts_dir.clone(), "x", Scheme::Agile);
+        assert_eq!(cfg.backend, base.backend);
         assert_eq!(cfg.bits, base.bits);
         assert_eq!(cfg.max_batch, base.max_batch);
         assert_eq!(cfg.batch_deadline_us, base.batch_deadline_us);

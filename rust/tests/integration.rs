@@ -1,50 +1,66 @@
-//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Integration tests over the serving stack.
 //!
-//! These need `make artifacts` (or AGILENN_ARTIFACTS pointing at a built
-//! tree). When no artifacts are present they skip, so `cargo test` stays
-//! green on a fresh checkout.
+//! The suite runs **unconditionally** on the pure-Rust reference backend
+//! (`BackendKind::Reference` + the synthetic world in `agilenn::fixtures`):
+//! no artifacts directory, no PJRT, no skips — the whole
+//! device→channel→batcher→fuser pipeline executes on every `cargo test`.
+//!
+//! The PJRT twin of the suite (real AOT artifacts, real numerics) lives in
+//! [`pjrt_artifact_tests`] at the bottom: it compiles only with the `pjrt`
+//! cargo feature and still skips gracefully when `make artifacts` hasn't
+//! been run.
 
 use agilenn::baselines::{make_runner, AgileRunner, SchemeRunner};
-use agilenn::config::{default_artifacts_dir, Manifest, Meta, RunConfig, Scheme};
+use agilenn::config::{BackendKind, Meta, RunConfig, Scheme};
 use agilenn::coordinator::{DeviceRuntime, RemoteServer};
-use agilenn::runtime::Engine;
+use agilenn::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
+use agilenn::net::{DeliveryPolicy, GilbertElliott};
+use agilenn::runtime::{make_backend, ReferenceBackend};
 use agilenn::serve::{ClockKind, PipelineReport, ServeBuilder, Service};
 use agilenn::workload::{Arrival, TestSet};
 use std::sync::Arc;
 
-struct Ctx {
-    engine: Engine,
+/// A path no artifacts tree will ever live at: every reference-backend
+/// test below proves the pipeline runs with *no* artifacts directory.
+const NO_ARTIFACTS: &str = "/nonexistent/agilenn-artifacts";
+
+struct RefCtx {
+    backend: ReferenceBackend,
     cfg: RunConfig,
     meta: Meta,
     testset: TestSet,
 }
 
-fn ctx() -> Option<Ctx> {
-    let dir = default_artifacts_dir();
-    let manifest = Manifest::load(&dir).ok()?;
-    let ds = manifest.datasets.first()?.clone();
-    let cfg = RunConfig::new(dir, &ds, Scheme::Agile);
-    let meta = Meta::load(&cfg.dataset_dir()).ok()?;
-    let testset = TestSet::load(&cfg.dataset_dir().join("test.bin")).ok()?;
-    Some(Ctx { engine: Engine::cpu().ok()?, cfg, meta, testset })
+fn ref_ctx(scheme: Scheme) -> RefCtx {
+    let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+    let meta = spec.meta();
+    let mut cfg = RunConfig::new(NO_ARTIFACTS, SYNTHETIC_DATASET, scheme);
+    cfg.backend = BackendKind::Reference;
+    RefCtx {
+        backend: ReferenceBackend::from_meta(&meta),
+        cfg,
+        meta,
+        testset: spec.testset(64).unwrap(),
+    }
 }
 
-macro_rules! require_artifacts {
-    () => {
-        match ctx() {
-            Some(c) => c,
-            None => {
-                eprintln!("skipping: no artifacts (run `make artifacts`)");
-                return;
-            }
-        }
-    };
+/// A `ServeBuilder` pinned to the reference backend and the synthetic
+/// dataset, pointing at a nonexistent artifacts tree on purpose.
+fn reference_builder(scheme: Scheme) -> ServeBuilder {
+    ServeBuilder::new(SYNTHETIC_DATASET)
+        .artifacts_dir(NO_ARTIFACTS)
+        .backend(BackendKind::Reference)
+        .scheme(scheme)
 }
+
+// ---------------------------------------------------------------------------
+// device/server halves on the reference backend
+// ---------------------------------------------------------------------------
 
 #[test]
-fn device_artifact_shapes_match_meta() {
-    let c = require_artifacts!();
-    let mut device = DeviceRuntime::new(&c.engine, &c.cfg, &c.meta).unwrap();
+fn reference_device_module_shapes_match_meta() {
+    let c = ref_ctx(Scheme::Agile);
+    let mut device = DeviceRuntime::new(&c.backend, &c.cfg, &c.meta).unwrap();
     let out = device.process(&c.testset.image(0).unwrap()).unwrap();
     assert_eq!(out.local_logits.len(), c.meta.num_classes);
     let [h, w, ch] = c.meta.feature;
@@ -54,12 +70,13 @@ fn device_artifact_shapes_match_meta() {
 }
 
 #[test]
-fn remote_batch_padding_is_row_consistent() {
-    // the same features must yield (near-)identical logits whether run at
-    // batch size 1 or padded into a batch of 8
-    let c = require_artifacts!();
-    let mut device = DeviceRuntime::new(&c.engine, &c.cfg, &c.meta).unwrap();
-    let mut server = RemoteServer::new(&c.engine, &c.cfg, &c.meta).unwrap();
+fn reference_remote_batch_padding_is_row_consistent() {
+    // the same features must yield identical logits whether run at batch
+    // size 1 or padded into a batch of 8 — on the reference family the
+    // rows are computed independently, so the match is bitwise
+    let c = ref_ctx(Scheme::Agile);
+    let mut device = DeviceRuntime::new(&c.backend, &c.cfg, &c.meta).unwrap();
+    let mut server = RemoteServer::new(&c.backend, &c.cfg, &c.meta).unwrap();
     let feats: Vec<_> = (0..5)
         .map(|i| {
             let out = device.process(&c.testset.image(i).unwrap()).unwrap();
@@ -72,19 +89,17 @@ fn remote_batch_padding_is_row_consistent() {
         .collect();
     let batched = server.infer(&feats).unwrap(); // pads 5 -> 8
     for (s, b) in single.iter().zip(&batched) {
-        for (x, y) in s.iter().zip(b) {
-            assert!((x - y).abs() < 1e-4, "batch padding changed logits: {x} vs {y}");
-        }
+        assert_eq!(s, b, "batch padding changed reference logits");
     }
 }
 
 #[test]
-fn rust_accuracy_tracks_python_measurement() {
-    // end-to-end accuracy through the Rust serving path (quantized tx)
-    // should be within a few points of python's agile_quant4 measurement.
-    let c = require_artifacts!();
-    let mut runner = AgileRunner::new(&c.engine, &c.cfg, &c.meta).unwrap();
-    let n = 128.min(c.testset.len());
+fn reference_accuracy_survives_the_quantized_tx_path() {
+    // end-to-end through quantize -> LZW -> decode -> remote head ->
+    // alpha fusion: the reference family recovers every synthetic label
+    let c = ref_ctx(Scheme::Agile);
+    let mut runner = AgileRunner::new(&c.backend, &c.cfg, &c.meta).unwrap();
+    let n = c.testset.len();
     let mut correct = 0;
     for i in 0..n {
         let out =
@@ -93,22 +108,22 @@ fn rust_accuracy_tracks_python_measurement() {
         correct += out.correct as usize;
     }
     let acc = correct as f64 / n as f64;
-    let py = c.meta.accuracy.agile_quant4;
-    assert!(
-        (acc - py).abs() < 0.08,
-        "rust accuracy {acc:.3} vs python {py:.3} diverged (n={n})"
-    );
+    let nominal = c.meta.accuracy.agile_quant4;
+    assert!(acc >= 0.95, "clean-link reference accuracy {acc} must be ~1.0");
+    assert!((acc - nominal).abs() < 0.08, "accuracy {acc} vs nominal {nominal}");
 }
 
 #[test]
-fn all_schemes_produce_outcomes() {
-    let c = require_artifacts!();
+fn reference_all_schemes_produce_outcomes() {
+    let c = ref_ctx(Scheme::Agile);
     let img = c.testset.image(0).unwrap();
     for scheme in Scheme::all() {
-        let cfg = RunConfig::new(c.cfg.artifacts_dir.clone(), &c.cfg.dataset, scheme);
-        let mut runner = make_runner(&c.engine, &cfg, &c.meta).unwrap();
+        let mut cfg = c.cfg.clone();
+        cfg.scheme = scheme;
+        let mut runner = make_runner(&c.backend, &cfg, &c.meta).unwrap();
         let out = runner.process(&img, c.testset.labels[0]).unwrap();
         assert!(out.predicted < c.meta.num_classes, "{}", scheme.name());
+        assert!(out.correct, "{} must recover the synthetic label", scheme.name());
         assert!(out.breakdown.total_s() > 0.0, "{}", scheme.name());
         assert!(out.energy.total_j() > 0.0, "{}", scheme.name());
         let mem = runner.memory_report();
@@ -122,34 +137,24 @@ fn all_schemes_produce_outcomes() {
 }
 
 #[test]
-fn agile_features_compress_harder_than_deepcod_code() {
-    // Table 2's mechanism: skewness manipulation leaves the transmitted
-    // features sparser than DeepCOD's learned code, so AgileNN spends fewer
-    // wire bits *per transmitted element* at the same quantizer width.
-    // (Absolute byte totals are reported by `bench --figure t2`.)
-    let c = require_artifacts!();
-    let mut agile = make_runner(&c.engine, &c.cfg, &c.meta).unwrap();
-    let cfg_d = RunConfig::new(c.cfg.artifacts_dir.clone(), &c.cfg.dataset, Scheme::Deepcod);
-    let mut deepcod = make_runner(&c.engine, &cfg_d, &c.meta).unwrap();
-    let n = 32.min(c.testset.len());
-    let (mut a_bytes, mut d_bytes) = (0usize, 0usize);
+fn reference_tx_stream_is_compressible() {
+    // the family's skewed (half-zero) features must make the quantized +
+    // LZW'd uplink far smaller than shipping raw f32 features
+    let c = ref_ctx(Scheme::Agile);
+    let mut runner = make_runner(&c.backend, &c.cfg, &c.meta).unwrap();
+    let n = 16;
+    let mut tx = 0usize;
     for i in 0..n {
-        let img = c.testset.image(i).unwrap();
-        a_bytes += agile.process(&img, c.testset.labels[i]).unwrap().tx_bytes;
-        d_bytes += deepcod.process(&img, c.testset.labels[i]).unwrap().tx_bytes;
+        tx += runner.process(&c.testset.image(i).unwrap(), c.testset.labels[i]).unwrap().tx_bytes;
     }
-    let a_per_elem = a_bytes as f64 / c.meta.tx_elements(Scheme::Agile) as f64;
-    let d_per_elem = d_bytes as f64 / c.meta.tx_elements(Scheme::Deepcod) as f64;
-    assert!(
-        a_per_elem < d_per_elem * 1.05,
-        "agile {a_per_elem:.4} B/elem must not exceed deepcod {d_per_elem:.4} B/elem (n={n})"
-    );
+    let raw = n * c.meta.tx_elements(Scheme::Agile) * 4;
+    assert!(tx * 2 < raw, "compressed {tx} vs raw {raw}: expected >2x saving");
 }
 
 #[test]
-fn alpha_override_changes_behavior_at_extremes() {
-    let c = require_artifacts!();
-    let mut runner = AgileRunner::new(&c.engine, &c.cfg, &c.meta).unwrap();
+fn reference_alpha_override_changes_behavior_at_extremes() {
+    let c = ref_ctx(Scheme::Agile);
+    let mut runner = AgileRunner::new(&c.backend, &c.cfg, &c.meta).unwrap();
     let n = 48.min(c.testset.len());
     let mut acc_at = |alpha: f64, runner: &mut AgileRunner| {
         runner.set_alpha(alpha).unwrap();
@@ -167,33 +172,64 @@ fn alpha_override_changes_behavior_at_extremes() {
     };
     let trained = acc_at(c.meta.alpha, &mut runner);
     let local_only = acc_at(1.0, &mut runner);
-    // the trained combination must not be worse than the local-only extreme
-    // (Fig 18's shape: accuracy collapses toward alpha = 1)
+    let remote_only = acc_at(0.0, &mut runner);
+    // the reference family classifies from either head alone, so every
+    // mix must work — and the trained combination never loses to an
+    // extreme (Fig 18's shape)
     assert!(trained >= local_only - 1e-9, "trained {trained} < local-only {local_only}");
+    assert!(remote_only > 0.9, "remote head alone must classify: {remote_only}");
 }
 
 #[test]
-fn offline_fallback_runs_without_network() {
-    let c = require_artifacts!();
-    let mut runner = AgileRunner::new(&c.engine, &c.cfg, &c.meta).unwrap();
+fn reference_offline_fallback_runs_without_network() {
+    let c = ref_ctx(Scheme::Agile);
+    let mut runner = AgileRunner::new(&c.backend, &c.cfg, &c.meta).unwrap();
     let out = runner.process_offline(&c.testset.image(0).unwrap(), c.testset.labels[0]).unwrap();
     assert_eq!(out.tx_bytes, 0);
     assert_eq!(out.breakdown.network_s, 0.0);
     assert!(out.exited_early);
+    assert!(out.correct, "local top-k head alone must recover the label");
 }
 
 #[test]
-fn pipeline_serves_all_requests() {
-    let c = require_artifacts!();
+fn reference_spinn_exit_rate_matches_the_exported_meta() {
+    // fixture samples alternate strong/weak amplitudes, so the exit head
+    // resolves exactly the strong half on device
+    let c = ref_ctx(Scheme::Spinn);
+    let mut runner = make_runner(&c.backend, &c.cfg, &c.meta).unwrap();
+    let n = 32;
+    let mut exits = 0usize;
+    for i in 0..n {
+        let out = runner.process(&c.testset.image(i).unwrap(), c.testset.labels[i]).unwrap();
+        assert!(out.correct, "sample {i}");
+        exits += out.exited_early as usize;
+    }
+    let rate = exits as f64 / n as f64;
+    assert!(
+        (rate - c.meta.spinn_exit.rate).abs() < 0.1,
+        "exit rate {rate} vs exported {}",
+        c.meta.spinn_exit.rate
+    );
+}
+
+// ---------------------------------------------------------------------------
+// the batched multi-device pipeline, artifact-free
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reference_pipeline_serves_all_requests() {
+    let c = ref_ctx(Scheme::Agile);
+    let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
     let rep = Service::from_parts(
         c.cfg.clone(),
         c.meta.clone(),
-        Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
+        Arc::new(spec.testset(64).unwrap()),
         3,
         24,
         Arrival::Poisson { hz: 200.0, seed: 7 },
     )
     .unwrap()
+    .with_clock(ClockKind::Sim)
     .run()
     .unwrap();
     assert_eq!(rep.requests, 24);
@@ -203,15 +239,13 @@ fn pipeline_serves_all_requests() {
 }
 
 #[test]
-fn serve_runs_all_five_schemes_through_the_batched_pipeline() {
-    // the redesign's acceptance bar: every scheme (not just agile)
-    // completes N requests through the multi-device batched Service
-    let c = require_artifacts!();
+fn reference_serve_runs_all_five_schemes_through_the_batched_pipeline() {
+    // the acceptance bar: with no artifacts directory at all, every
+    // scheme completes N requests through the multi-device batched
+    // Service on the reference backend
     let n = 12;
     for scheme in Scheme::all() {
-        let rep = ServeBuilder::new(&c.cfg.dataset)
-            .artifacts_dir(c.cfg.artifacts_dir.clone())
-            .scheme(scheme)
+        let rep = reference_builder(scheme)
             .devices(2)
             .requests(n)
             .rate_hz(500.0)
@@ -235,18 +269,10 @@ fn serve_runs_all_five_schemes_through_the_batched_pipeline() {
 }
 
 #[test]
-fn streaming_outcomes_are_observable_per_request() {
-    let c = require_artifacts!();
+fn reference_streaming_outcomes_are_observable_per_request() {
     let n = 16;
-    let mut stream = ServeBuilder::new(&c.cfg.dataset)
-        .artifacts_dir(c.cfg.artifacts_dir.clone())
-        .scheme(Scheme::Agile)
-        .devices(2)
-        .requests(n)
-        .build()
-        .unwrap()
-        .stream()
-        .unwrap();
+    let mut stream =
+        reference_builder(Scheme::Agile).devices(2).requests(n).build().unwrap().stream().unwrap();
     let mut ids = std::collections::HashSet::new();
     let mut count = 0;
     for out in stream.by_ref() {
@@ -254,7 +280,7 @@ fn streaming_outcomes_are_observable_per_request() {
         assert!(out.device < 2);
         assert!(out.wall_s > 0.0);
         assert!(out.outcome.tx_bytes > 0); // agile always uplinks
-        assert!(out.outcome.predicted < c.meta.num_classes);
+        assert!(out.outcome.predicted < 10);
         count += 1;
     }
     assert_eq!(count, n);
@@ -264,12 +290,13 @@ fn streaming_outcomes_are_observable_per_request() {
 
 #[test]
 #[allow(deprecated)]
-fn deprecated_run_pipeline_shim_still_serves() {
-    let c = require_artifacts!();
+fn reference_deprecated_run_pipeline_shim_still_serves() {
+    let c = ref_ctx(Scheme::Agile);
+    let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
     let rep = agilenn::coordinator::run_pipeline(
         &c.cfg,
         &c.meta,
-        Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
+        Arc::new(spec.testset(16).unwrap()),
         2,
         8,
         Arrival::Periodic { hz: 1e9 },
@@ -279,29 +306,33 @@ fn deprecated_run_pipeline_shim_still_serves() {
 }
 
 #[test]
-fn engine_caches_executables() {
-    let c = require_artifacts!();
-    let dir = c.cfg.dataset_dir();
-    let before = c.engine.cached_count();
-    let _a = c.engine.load_artifact(&dir, "agile_device_b1").unwrap();
-    let _b = c.engine.load_artifact(&dir, "agile_device_b1").unwrap();
-    assert_eq!(c.engine.cached_count(), before + 1, "second load must hit the cache");
+fn serve_builder_reference_needs_no_artifacts_directory() {
+    // Meta::load on the same config must fail — and the builder must not
+    // care, because the synthetic world replaces the artifacts tree
+    let cfg = reference_builder(Scheme::Agile).to_config();
+    assert!(Meta::load(&cfg.dataset_dir()).is_err(), "test must point at no artifacts");
+    assert!(TestSet::load(&cfg.dataset_dir().join("test.bin")).is_err());
+    let rep = reference_builder(Scheme::Agile).requests(4).build().unwrap().run().unwrap();
+    assert_eq!(rep.requests, 4);
+    // and make_backend resolves without touching the filesystem
+    let backend = make_backend(&cfg, &SyntheticSpec::new(SYNTHETIC_DATASET).meta()).unwrap();
+    assert_eq!(backend.name(), "reference");
 }
 
+// ---------------------------------------------------------------------------
+// lossy channel + serving clock, artifact-free
+// ---------------------------------------------------------------------------
+
 #[test]
-fn lossy_serve_is_seed_deterministic() {
-    // acceptance: two runs with the same ServeBuilder seed produce the same
-    // accuracy and transport counters (wall-clock fields excepted)
-    let c = require_artifacts!();
+fn reference_lossy_serve_is_seed_deterministic() {
+    // two runs with the same ServeBuilder seeds produce the same accuracy
+    // and transport counters (wall-clock fields excepted)
     let run = || {
-        use agilenn::net::DeliveryPolicy;
-        ServeBuilder::new(&c.cfg.dataset)
-            .artifacts_dir(c.cfg.artifacts_dir.clone())
-            .scheme(Scheme::Agile)
+        reference_builder(Scheme::Agile)
             .devices(2)
             .requests(24)
-            .max_batch(1) // b1 executable everywhere: bitwise-stable logits
-            .loss(agilenn::net::GilbertElliott::bursty(0.3, 4.0))
+            .max_batch(1)
+            .loss(GilbertElliott::bursty(0.3, 4.0))
             .delivery(DeliveryPolicy::Anytime { deadline_s: 0.01 })
             .packet_payload(64)
             .net_seed(9)
@@ -324,15 +355,11 @@ fn lossy_serve_is_seed_deterministic() {
 }
 
 #[test]
-fn anytime_transport_decodes_partial_frames_under_heavy_loss() {
-    let c = require_artifacts!();
-    use agilenn::net::{DeliveryPolicy, GilbertElliott};
-    // paced arrivals on the sim clock: the radio is uncontended (33 ms
-    // gaps vs a 4 ms deadline-bounded exchange), so p99_net_s measures
-    // the transport alone — and the pacing costs no wall time
-    let rep = ServeBuilder::new(&c.cfg.dataset)
-        .artifacts_dir(c.cfg.artifacts_dir.clone())
-        .scheme(Scheme::Agile)
+fn reference_anytime_transport_decodes_partial_frames_under_heavy_loss() {
+    // paced arrivals on the sim clock: the radio is uncontended, so
+    // p99_net_s measures the transport alone — and the pacing costs no
+    // wall time
+    let rep = reference_builder(Scheme::Agile)
         .devices(1)
         .requests(16)
         .max_batch(1)
@@ -351,23 +378,19 @@ fn anytime_transport_decodes_partial_frames_under_heavy_loss() {
     assert!(rep.incomplete_frames > 0, "50% loss must leave partial frames");
     assert!(rep.delivered_feature_rate < 1.0);
     assert!(rep.delivered_feature_rate > 0.0);
-    // every request still produced a prediction (graceful degradation)
-    assert!(rep.accuracy > 0.0);
+    // every request still produced a prediction (graceful degradation);
+    // the imputed reference symbols keep most of them correct
+    assert!(rep.accuracy > 0.5, "accuracy {}", rep.accuracy);
     // the deadline bounds the simulated link time
     assert!(rep.p99_net_s <= 0.004 + 0.01, "p99 net {}", rep.p99_net_s);
 }
 
 #[test]
-fn zero_loss_channel_reproduces_the_ideal_link_numbers() {
-    // acceptance: at 0% loss the default (ARQ, whole-frame) path is
-    // behaviorally identical to the pre-channel NetworkSim pricing. Paced
-    // arrivals keep the radio idle between requests (no queueing term);
-    // the sim clock makes the pacing free.
-    let c = require_artifacts!();
+fn reference_zero_loss_channel_reproduces_the_ideal_link_numbers() {
+    // at 0% loss the default (ARQ, whole-frame) path is behaviorally
+    // identical to the pre-channel NetworkSim pricing
     use agilenn::simulator::NetworkSim;
-    let mut stream = ServeBuilder::new(&c.cfg.dataset)
-        .artifacts_dir(c.cfg.artifacts_dir.clone())
-        .scheme(Scheme::Agile)
+    let mut stream = reference_builder(Scheme::Agile)
         .devices(1)
         .requests(8)
         .max_batch(1)
@@ -377,8 +400,9 @@ fn zero_loss_channel_reproduces_the_ideal_link_numbers() {
         .unwrap()
         .stream()
         .unwrap();
-    let net = NetworkSim::new(c.cfg.network.clone());
-    let reply = agilenn::serve::reply_bytes(c.meta.num_classes);
+    let cfg = reference_builder(Scheme::Agile).to_config();
+    let net = NetworkSim::new(cfg.network.clone());
+    let reply = agilenn::serve::reply_bytes(10);
     for out in stream.by_ref() {
         let expect = net.transfer_s(out.outcome.tx_bytes) + net.transfer_s(reply);
         let got = out.outcome.breakdown.network_s;
@@ -390,27 +414,17 @@ fn zero_loss_channel_reproduces_the_ideal_link_numbers() {
     stream.finish().unwrap();
 }
 
-// ---------------------------------------------------------------------------
-// virtual-time serving clock
-// ---------------------------------------------------------------------------
-
 #[test]
-fn sim_clock_serve_is_bit_reproducible_and_never_sleeps() {
-    // acceptance: two identical-seed sim-clock runs produce bit-identical
-    // accuracy, latency quantiles and net counters — and the paced run
-    // costs no wall time (512 requests at 200 Hz would be ~0.32 s of
-    // sleeping per device on the wall clock; here only the compute pays)
-    let c = require_artifacts!();
-    use agilenn::net::GilbertElliott;
+fn reference_sim_clock_serve_is_bit_reproducible_and_never_sleeps() {
+    // two identical-seed sim-clock runs produce bit-identical accuracy,
+    // latency quantiles and net counters
     let run = || -> PipelineReport {
-        ServeBuilder::new(&c.cfg.dataset)
-            .artifacts_dir(c.cfg.artifacts_dir.clone())
-            .scheme(Scheme::Agile)
+        reference_builder(Scheme::Agile)
             .devices(8)
             .requests(512)
             .rate_hz(200.0)
             .arrival_seed(11)
-            .max_batch(1) // b1 executable everywhere: bitwise-stable logits
+            .max_batch(1)
             .loss(GilbertElliott::bursty(0.2, 4.0))
             .net_seed(5)
             .clock(ClockKind::Sim)
@@ -439,16 +453,11 @@ fn sim_clock_serve_is_bit_reproducible_and_never_sleeps() {
 }
 
 #[test]
-fn wall_and_sim_clocks_agree_on_the_seed_deterministic_fields() {
-    // the simulated timeline (channel timestamps, loss pattern, radio
-    // queueing) is schedule-anchored, so switching clocks must not move
-    // any deterministic field — only the live wall measurements change
-    let c = require_artifacts!();
-    use agilenn::net::GilbertElliott;
+fn reference_wall_and_sim_clocks_agree_on_the_seed_deterministic_fields() {
+    // the simulated timeline is schedule-anchored, so switching clocks
+    // must not move any deterministic field
     let run = |clock: ClockKind| -> PipelineReport {
-        ServeBuilder::new(&c.cfg.dataset)
-            .artifacts_dir(c.cfg.artifacts_dir.clone())
-            .scheme(Scheme::Agile)
+        reference_builder(Scheme::Agile)
             .devices(2)
             .requests(16)
             .rate_hz(120.0)
@@ -477,15 +486,9 @@ fn wall_and_sim_clocks_agree_on_the_seed_deterministic_fields() {
 }
 
 #[test]
-fn radio_contention_grows_with_offered_rate_never_shrinks() {
-    // regression: uplinks used to start at arrival + compute with no
-    // memory of the previous transmission, so a saturated device's
-    // simulated transfers overlapped and link latency was underestimated
-    let c = require_artifacts!();
+fn reference_radio_contention_grows_with_offered_rate_never_shrinks() {
     let run = |hz: f64| -> PipelineReport {
-        ServeBuilder::new(&c.cfg.dataset)
-            .artifacts_dir(c.cfg.artifacts_dir.clone())
-            .scheme(Scheme::Agile)
+        reference_builder(Scheme::Agile)
             .devices(1)
             .requests(48)
             .max_batch(1)
@@ -499,14 +502,618 @@ fn radio_contention_grows_with_offered_rate_never_shrinks() {
     let relaxed = run(5.0); // 200 ms gaps: the radio always drains
     let saturated = run(2000.0); // 0.5 ms gaps: far beyond link capacity
     assert_eq!(relaxed.mean_radio_wait_s, 0.0, "uncontended link must not queue");
-    assert!(
-        saturated.mean_radio_wait_s > 0.0,
-        "saturated link must surface radio queueing"
-    );
+    assert!(saturated.mean_radio_wait_s > 0.0, "saturated link must surface radio queueing");
     assert!(
         saturated.p99_net_s >= relaxed.p99_net_s,
         "higher rate cannot lower simulated link latency: {} vs {}",
         saturated.p99_net_s,
         relaxed.p99_net_s
     );
+}
+
+// ---------------------------------------------------------------------------
+// scheme × clock × delivery matrix smoke
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reference_scheme_clock_delivery_matrix_smoke() {
+    // 5 schemes × {wall, sim} × {ARQ, anytime}: every combination serves
+    // its requests and produces predictions on the reference backend,
+    // under a mildly lossy link so both transports do real work
+    let n = 10;
+    for scheme in Scheme::all() {
+        for clock in [ClockKind::Wall, ClockKind::Sim] {
+            for delivery in
+                [DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.004 }]
+            {
+                let label =
+                    format!("{} / {} / {}", scheme.name(), clock.name(), delivery.name());
+                let rep = reference_builder(scheme)
+                    .devices(2)
+                    .requests(n)
+                    .rate_hz(500.0)
+                    .clock(clock)
+                    .loss(GilbertElliott::uniform(0.1))
+                    .delivery(delivery)
+                    .net_seed(1)
+                    .build()
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                assert_eq!(rep.requests, n, "{label}");
+                assert!(rep.accuracy > 0.0, "{label}: accuracy {}", rep.accuracy);
+                if scheme == Scheme::Mcunet {
+                    assert_eq!(rep.batches, 0, "{label}");
+                    assert_eq!(rep.packets_sent, 0, "{label}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// golden snapshot: PR 3's reproducibility contract
+// ---------------------------------------------------------------------------
+
+fn golden_run() -> PipelineReport {
+    reference_builder(Scheme::Agile)
+        .devices(8)
+        .requests(256)
+        .rate_hz(200.0)
+        .arrival_seed(11)
+        .max_batch(4)
+        .loss(GilbertElliott::bursty(0.2, 4.0))
+        .delivery(DeliveryPolicy::Anytime { deadline_s: 0.02 })
+        .packet_payload(128)
+        .net_seed(5)
+        .clock(ClockKind::Sim)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+/// Canonical text form of the report's deterministic fields. Floats use
+/// Rust's shortest-roundtrip `{:?}` formatting, so string equality is
+/// bit equality.
+fn golden_snapshot(r: &PipelineReport) -> String {
+    format!(
+        "requests={}\nclock={}\naccuracy={:?}\nwall_s={:?}\np95_latency_s={:?}\n\
+         batches={}\npackets_sent={}\npackets_lost={}\nretransmit_rounds={}\n\
+         incomplete_frames={}\ndelivered_feature_rate={:?}\np99_net_s={:?}\n",
+        r.requests,
+        r.clock.name(),
+        r.accuracy,
+        r.wall_s,
+        r.p95_latency_s,
+        r.batches,
+        r.packets_sent,
+        r.packets_lost,
+        r.retransmit_rounds,
+        r.incomplete_frames,
+        r.delivered_feature_rate,
+        r.p99_net_s,
+    )
+}
+
+#[test]
+fn golden_sim_pipeline_report_is_bit_stable() {
+    // (1) two consecutive runs must agree bitwise on every deterministic
+    // field — the sim clock's reproducibility contract from PR 3
+    let (a, b) = (golden_run(), golden_run());
+    let (sa, sb) = (golden_snapshot(&a), golden_snapshot(&b));
+    assert_eq!(sa, sb, "sim-clock report must be bit-stable across consecutive runs");
+
+    // (2) and they must match the committed snapshot, guarding the
+    // contract across commits. Bless (create/update) the file with
+    // AGILENN_BLESS=1, then commit it.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/serve_sim_reference.snap");
+    if path.exists() && std::env::var_os("AGILENN_BLESS").is_none() {
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            sa,
+            want,
+            "deterministic PipelineReport fields drifted from the committed golden \
+             snapshot at {}; if the change is intentional, re-bless with \
+             `AGILENN_BLESS=1 cargo test golden` and commit the file",
+            path.display()
+        );
+    } else {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &sa).unwrap();
+        eprintln!("blessed golden snapshot at {} — commit this file", path.display());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT twin: the same suite over real AOT artifacts (feature `pjrt` +
+// `make artifacts`; skips gracefully when no artifacts are present)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_artifact_tests {
+    use super::*;
+    use agilenn::config::{default_artifacts_dir, Manifest};
+    use agilenn::runtime::Engine;
+
+    struct Ctx {
+        engine: Engine,
+        cfg: RunConfig,
+        meta: Meta,
+        testset: TestSet,
+    }
+
+    fn ctx() -> Option<Ctx> {
+        let dir = default_artifacts_dir();
+        let manifest = Manifest::load(&dir).ok()?;
+        let ds = manifest.datasets.first()?.clone();
+        let cfg = RunConfig::new(dir, &ds, Scheme::Agile);
+        let meta = Meta::load(&cfg.dataset_dir()).ok()?;
+        let testset = TestSet::load(&cfg.dataset_dir().join("test.bin")).ok()?;
+        Some(Ctx { engine: Engine::cpu().ok()?, cfg, meta, testset })
+    }
+
+    macro_rules! require_artifacts {
+        () => {
+            match ctx() {
+                Some(c) => c,
+                None => {
+                    eprintln!("skipping: no artifacts (run `make artifacts`)");
+                    return;
+                }
+            }
+        };
+    }
+
+    #[test]
+    fn device_artifact_shapes_match_meta() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let mut device = DeviceRuntime::new(&backend, &c.cfg, &c.meta).unwrap();
+        let out = device.process(&c.testset.image(0).unwrap()).unwrap();
+        assert_eq!(out.local_logits.len(), c.meta.num_classes);
+        let [h, w, ch] = c.meta.feature;
+        assert_eq!(out.remote_shape, vec![1, h, w, ch - c.meta.k]);
+        assert_eq!(out.frame.count, c.meta.tx_elements(Scheme::Agile));
+        assert!(out.timings.total_s() > 0.0);
+    }
+
+    #[test]
+    fn remote_batch_padding_is_row_consistent() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let mut device = DeviceRuntime::new(&backend, &c.cfg, &c.meta).unwrap();
+        let mut server = RemoteServer::new(&backend, &c.cfg, &c.meta).unwrap();
+        let feats: Vec<_> = (0..5)
+            .map(|i| {
+                let out = device.process(&c.testset.image(i).unwrap()).unwrap();
+                server.decode(&out.frame).unwrap()
+            })
+            .collect();
+        let single: Vec<Vec<f32>> = feats
+            .iter()
+            .map(|f| server.infer(std::slice::from_ref(f)).unwrap().remove(0))
+            .collect();
+        let batched = server.infer(&feats).unwrap(); // pads 5 -> 8
+        for (s, b) in single.iter().zip(&batched) {
+            for (x, y) in s.iter().zip(b) {
+                assert!((x - y).abs() < 1e-4, "batch padding changed logits: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn rust_accuracy_tracks_python_measurement() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let mut runner = AgileRunner::new(&backend, &c.cfg, &c.meta).unwrap();
+        let n = 128.min(c.testset.len());
+        let mut correct = 0;
+        for i in 0..n {
+            let out = SchemeRunner::process(
+                &mut runner,
+                &c.testset.image(i).unwrap(),
+                c.testset.labels[i],
+            )
+            .unwrap();
+            correct += out.correct as usize;
+        }
+        let acc = correct as f64 / n as f64;
+        let py = c.meta.accuracy.agile_quant4;
+        assert!((acc - py).abs() < 0.08, "rust accuracy {acc:.3} vs python {py:.3} (n={n})");
+    }
+
+    #[test]
+    fn all_schemes_produce_outcomes() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let img = c.testset.image(0).unwrap();
+        for scheme in Scheme::all() {
+            let cfg = RunConfig::new(c.cfg.artifacts_dir.clone(), &c.cfg.dataset, scheme);
+            let mut runner = make_runner(&backend, &cfg, &c.meta).unwrap();
+            let out = runner.process(&img, c.testset.labels[0]).unwrap();
+            assert!(out.predicted < c.meta.num_classes, "{}", scheme.name());
+            assert!(out.breakdown.total_s() > 0.0, "{}", scheme.name());
+            assert!(out.energy.total_j() > 0.0, "{}", scheme.name());
+            let mem = runner.memory_report();
+            assert!(mem.fits(), "{} must fit the STM32F746 budgets", scheme.name());
+            match scheme {
+                Scheme::Mcunet => assert_eq!(out.tx_bytes, 0),
+                Scheme::Agile | Scheme::Deepcod | Scheme::EdgeOnly => assert!(out.tx_bytes > 0),
+                Scheme::Spinn => {} // tx depends on the early exit
+            }
+        }
+    }
+
+    #[test]
+    fn agile_features_compress_harder_than_deepcod_code() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let mut agile = make_runner(&backend, &c.cfg, &c.meta).unwrap();
+        let cfg_d = RunConfig::new(c.cfg.artifacts_dir.clone(), &c.cfg.dataset, Scheme::Deepcod);
+        let mut deepcod = make_runner(&backend, &cfg_d, &c.meta).unwrap();
+        let n = 32.min(c.testset.len());
+        let (mut a_bytes, mut d_bytes) = (0usize, 0usize);
+        for i in 0..n {
+            let img = c.testset.image(i).unwrap();
+            a_bytes += agile.process(&img, c.testset.labels[i]).unwrap().tx_bytes;
+            d_bytes += deepcod.process(&img, c.testset.labels[i]).unwrap().tx_bytes;
+        }
+        let a_per_elem = a_bytes as f64 / c.meta.tx_elements(Scheme::Agile) as f64;
+        let d_per_elem = d_bytes as f64 / c.meta.tx_elements(Scheme::Deepcod) as f64;
+        assert!(
+            a_per_elem < d_per_elem * 1.05,
+            "agile {a_per_elem:.4} B/elem must not exceed deepcod {d_per_elem:.4} B/elem (n={n})"
+        );
+    }
+
+    #[test]
+    fn alpha_override_changes_behavior_at_extremes() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let mut runner = AgileRunner::new(&backend, &c.cfg, &c.meta).unwrap();
+        let n = 48.min(c.testset.len());
+        let mut acc_at = |alpha: f64, runner: &mut AgileRunner| {
+            runner.set_alpha(alpha).unwrap();
+            let mut correct = 0;
+            for i in 0..n {
+                let out = SchemeRunner::process(
+                    runner,
+                    &c.testset.image(i).unwrap(),
+                    c.testset.labels[i],
+                )
+                .unwrap();
+                correct += out.correct as usize;
+            }
+            correct as f64 / n as f64
+        };
+        let trained = acc_at(c.meta.alpha, &mut runner);
+        let local_only = acc_at(1.0, &mut runner);
+        assert!(trained >= local_only - 1e-9, "trained {trained} < local-only {local_only}");
+    }
+
+    #[test]
+    fn offline_fallback_runs_without_network() {
+        let c = require_artifacts!();
+        let backend = agilenn::runtime::PjrtBackend::cpu().unwrap();
+        let mut runner = AgileRunner::new(&backend, &c.cfg, &c.meta).unwrap();
+        let out =
+            runner.process_offline(&c.testset.image(0).unwrap(), c.testset.labels[0]).unwrap();
+        assert_eq!(out.tx_bytes, 0);
+        assert_eq!(out.breakdown.network_s, 0.0);
+        assert!(out.exited_early);
+    }
+
+    #[test]
+    fn pipeline_serves_all_requests() {
+        let c = require_artifacts!();
+        let rep = Service::from_parts(
+            c.cfg.clone(),
+            c.meta.clone(),
+            Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
+            3,
+            24,
+            Arrival::Poisson { hz: 200.0, seed: 7 },
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        assert_eq!(rep.requests, 24);
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.mean_batch_size >= 1.0);
+        assert!(rep.batches >= 3);
+    }
+
+    #[test]
+    fn serve_runs_all_five_schemes_through_the_batched_pipeline() {
+        let c = require_artifacts!();
+        let n = 12;
+        for scheme in Scheme::all() {
+            let rep = ServeBuilder::new(&c.cfg.dataset)
+                .artifacts_dir(c.cfg.artifacts_dir.clone())
+                .scheme(scheme)
+                .devices(2)
+                .requests(n)
+                .rate_hz(500.0)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            assert_eq!(rep.requests, n, "{}", scheme.name());
+            assert!(rep.throughput_rps > 0.0, "{}", scheme.name());
+            assert!(rep.accuracy > 0.0, "{}", scheme.name());
+            match scheme {
+                Scheme::Mcunet => assert_eq!(rep.batches, 0, "{}", scheme.name()),
+                Scheme::Agile | Scheme::Deepcod | Scheme::EdgeOnly => {
+                    assert!(rep.batches > 0, "{}", scheme.name())
+                }
+                Scheme::Spinn => {}
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_outcomes_are_observable_per_request() {
+        let c = require_artifacts!();
+        let n = 16;
+        let mut stream = ServeBuilder::new(&c.cfg.dataset)
+            .artifacts_dir(c.cfg.artifacts_dir.clone())
+            .scheme(Scheme::Agile)
+            .devices(2)
+            .requests(n)
+            .build()
+            .unwrap()
+            .stream()
+            .unwrap();
+        let mut ids = std::collections::HashSet::new();
+        let mut count = 0;
+        for out in stream.by_ref() {
+            assert!(ids.insert(out.id), "duplicate outcome id {}", out.id);
+            assert!(out.device < 2);
+            assert!(out.wall_s > 0.0);
+            assert!(out.outcome.tx_bytes > 0);
+            assert!(out.outcome.predicted < c.meta.num_classes);
+            count += 1;
+        }
+        assert_eq!(count, n);
+        let rep = stream.finish().unwrap();
+        assert_eq!(rep.requests, n);
+    }
+
+    #[test]
+    fn engine_caches_executables() {
+        let c = require_artifacts!();
+        let dir = c.cfg.dataset_dir();
+        let before = c.engine.cached_count();
+        let _a = c.engine.load_artifact(&dir, "agile_device_b1").unwrap();
+        let _b = c.engine.load_artifact(&dir, "agile_device_b1").unwrap();
+        assert_eq!(c.engine.cached_count(), before + 1, "second load must hit the cache");
+    }
+
+    #[test]
+    fn engine_concurrent_first_loads_compile_once() {
+        // regression for the duplicate-compilation race: N threads race
+        // the first load of one artifact; the single-flight cache must
+        // end up with exactly one entry (and everyone gets the same exe)
+        let c = require_artifacts!();
+        let engine = Arc::new(c.engine);
+        let dir = c.cfg.dataset_dir();
+        let before = engine.cached_count();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let engine = engine.clone();
+                let dir = dir.clone();
+                std::thread::spawn(move || {
+                    engine.load_artifact(&dir, "agile_remote_b2").unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(engine.cached_count(), before + 1);
+    }
+
+    #[test]
+    fn lossy_serve_is_seed_deterministic() {
+        let c = require_artifacts!();
+        let run = || {
+            ServeBuilder::new(&c.cfg.dataset)
+                .artifacts_dir(c.cfg.artifacts_dir.clone())
+                .scheme(Scheme::Agile)
+                .devices(2)
+                .requests(24)
+                .max_batch(1) // b1 executable everywhere: bitwise-stable logits
+                .loss(GilbertElliott::bursty(0.3, 4.0))
+                .delivery(DeliveryPolicy::Anytime { deadline_s: 0.01 })
+                .packet_payload(64)
+                .net_seed(9)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.packets_sent, b.packets_sent);
+        assert_eq!(a.packets_lost, b.packets_lost);
+        assert_eq!(a.retransmit_rounds, b.retransmit_rounds);
+        assert_eq!(a.incomplete_frames, b.incomplete_frames);
+        assert_eq!(a.delivered_feature_rate, b.delivered_feature_rate);
+        assert!((a.mean_net_s - b.mean_net_s).abs() < 1e-9);
+        assert!(a.packets_lost > 0, "30% loss over 24 uplinks must drop something");
+    }
+
+    #[test]
+    fn anytime_transport_decodes_partial_frames_under_heavy_loss() {
+        let c = require_artifacts!();
+        let rep = ServeBuilder::new(&c.cfg.dataset)
+            .artifacts_dir(c.cfg.artifacts_dir.clone())
+            .scheme(Scheme::Agile)
+            .devices(1)
+            .requests(16)
+            .max_batch(1)
+            .arrival(Arrival::Periodic { hz: 30.0 })
+            .clock(ClockKind::Sim)
+            .loss(GilbertElliott::uniform(0.5))
+            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.004 })
+            .packet_payload(64)
+            .net_seed(3)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(rep.requests, 16);
+        assert!(rep.incomplete_frames > 0, "50% loss must leave partial frames");
+        assert!(rep.delivered_feature_rate < 1.0);
+        assert!(rep.delivered_feature_rate > 0.0);
+        assert!(rep.accuracy > 0.0);
+        assert!(rep.p99_net_s <= 0.004 + 0.01, "p99 net {}", rep.p99_net_s);
+    }
+
+    #[test]
+    fn zero_loss_channel_reproduces_the_ideal_link_numbers() {
+        let c = require_artifacts!();
+        use agilenn::simulator::NetworkSim;
+        let mut stream = ServeBuilder::new(&c.cfg.dataset)
+            .artifacts_dir(c.cfg.artifacts_dir.clone())
+            .scheme(Scheme::Agile)
+            .devices(1)
+            .requests(8)
+            .max_batch(1)
+            .arrival(Arrival::Periodic { hz: 30.0 })
+            .clock(ClockKind::Sim)
+            .build()
+            .unwrap()
+            .stream()
+            .unwrap();
+        let net = NetworkSim::new(c.cfg.network.clone());
+        let reply = agilenn::serve::reply_bytes(c.meta.num_classes);
+        for out in stream.by_ref() {
+            let expect = net.transfer_s(out.outcome.tx_bytes) + net.transfer_s(reply);
+            let got = out.outcome.breakdown.network_s;
+            assert!((got - expect).abs() < 1e-9, "network_s {got} != closed form {expect}");
+            assert!(out.outcome.net.complete);
+            assert_eq!(out.outcome.net.packets_lost, 0);
+            assert_eq!(out.outcome.net.radio_wait_s, 0.0);
+        }
+        stream.finish().unwrap();
+    }
+
+    #[test]
+    fn sim_clock_serve_is_bit_reproducible_and_never_sleeps() {
+        let c = require_artifacts!();
+        let run = || -> PipelineReport {
+            ServeBuilder::new(&c.cfg.dataset)
+                .artifacts_dir(c.cfg.artifacts_dir.clone())
+                .scheme(Scheme::Agile)
+                .devices(8)
+                .requests(512)
+                .rate_hz(200.0)
+                .arrival_seed(11)
+                .max_batch(1)
+                .loss(GilbertElliott::bursty(0.2, 4.0))
+                .net_seed(5)
+                .clock(ClockKind::Sim)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.clock, ClockKind::Sim);
+        assert_eq!(a.requests, 512);
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.p95_latency_s, b.p95_latency_s);
+        assert_eq!(a.p99_net_s, b.p99_net_s);
+        assert_eq!(a.packets_sent, b.packets_sent);
+        assert_eq!(a.packets_lost, b.packets_lost);
+        assert_eq!(a.retransmit_rounds, b.retransmit_rounds);
+        assert_eq!(a.incomplete_frames, b.incomplete_frames);
+        assert_eq!(a.delivered_feature_rate, b.delivered_feature_rate);
+        assert!((a.wall_s - b.wall_s).abs() < 1e-9);
+        assert!((a.mean_latency_s - b.mean_latency_s).abs() < 1e-9);
+        assert!(a.wall_s > 0.1, "virtual time {} must reflect the pacing", a.wall_s);
+        assert!(a.packets_lost > 0, "20% bursty loss must drop something");
+    }
+
+    #[test]
+    fn wall_and_sim_clocks_agree_on_the_seed_deterministic_fields() {
+        let c = require_artifacts!();
+        let run = |clock: ClockKind| -> PipelineReport {
+            ServeBuilder::new(&c.cfg.dataset)
+                .artifacts_dir(c.cfg.artifacts_dir.clone())
+                .scheme(Scheme::Agile)
+                .devices(2)
+                .requests(16)
+                .rate_hz(120.0)
+                .arrival_seed(3)
+                .max_batch(1)
+                .loss(GilbertElliott::uniform(0.1))
+                .net_seed(4)
+                .clock(clock)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let (w, s) = (run(ClockKind::Wall), run(ClockKind::Sim));
+        assert_eq!(w.clock, ClockKind::Wall);
+        assert_eq!(s.clock, ClockKind::Sim);
+        assert_eq!(w.accuracy, s.accuracy);
+        assert_eq!(w.packets_sent, s.packets_sent);
+        assert_eq!(w.packets_lost, s.packets_lost);
+        assert_eq!(w.retransmit_rounds, s.retransmit_rounds);
+        assert_eq!(w.incomplete_frames, s.incomplete_frames);
+        assert_eq!(w.delivered_feature_rate, s.delivered_feature_rate);
+        assert_eq!(w.p99_net_s, s.p99_net_s);
+        assert!((w.mean_net_s - s.mean_net_s).abs() < 1e-9);
+        assert!((w.mean_radio_wait_s - s.mean_radio_wait_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn radio_contention_grows_with_offered_rate_never_shrinks() {
+        let c = require_artifacts!();
+        let run = |hz: f64| -> PipelineReport {
+            ServeBuilder::new(&c.cfg.dataset)
+                .artifacts_dir(c.cfg.artifacts_dir.clone())
+                .scheme(Scheme::Agile)
+                .devices(1)
+                .requests(48)
+                .max_batch(1)
+                .arrival(Arrival::Periodic { hz })
+                .clock(ClockKind::Sim)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let relaxed = run(5.0);
+        let saturated = run(2000.0);
+        assert_eq!(relaxed.mean_radio_wait_s, 0.0, "uncontended link must not queue");
+        assert!(saturated.mean_radio_wait_s > 0.0, "saturated link must queue");
+        assert!(
+            saturated.p99_net_s >= relaxed.p99_net_s,
+            "higher rate cannot lower simulated link latency: {} vs {}",
+            saturated.p99_net_s,
+            relaxed.p99_net_s
+        );
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_run_pipeline_shim_still_serves() {
+        let c = require_artifacts!();
+        let rep = agilenn::coordinator::run_pipeline(
+            &c.cfg,
+            &c.meta,
+            Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
+            2,
+            8,
+            Arrival::Periodic { hz: 1e9 },
+        )
+        .unwrap();
+        assert_eq!(rep.requests, 8);
+    }
 }
