@@ -1,0 +1,48 @@
+//! Fleet-engine timed harness: events/sec of the discrete-event serving
+//! engine on the reference backend, at a size small enough for the
+//! microbench loop (the full 1M-request gate lives in `agilenn perfgate`;
+//! this bench tracks per-iteration cost during development).
+
+use agilenn::bench::Bench;
+use agilenn::config::{BackendKind, Scheme};
+use agilenn::fixtures::SYNTHETIC_DATASET;
+use agilenn::serve::{ClockKind, Placement, ServeBuilder, SimEngine};
+
+fn run(requests: usize, devices: usize, servers: usize) -> usize {
+    ServeBuilder::new(SYNTHETIC_DATASET)
+        .backend(BackendKind::Reference)
+        .scheme(Scheme::Agile)
+        .clock(ClockKind::Sim)
+        .devices(devices)
+        .requests(requests)
+        .rate_hz(20.0)
+        .arrival_seed(11)
+        .servers(servers)
+        .placement(Placement::LeastLoaded)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .requests
+}
+
+fn main() {
+    let b = Bench::new();
+    b.run("fleet_engine/10k_reqs_256_dev_1srv", || run(10_000, 256, 1));
+    b.run("fleet_engine/10k_reqs_256_dev_4srv", || run(10_000, 256, 4));
+
+    // the threaded fabric at the largest size it comfortably runs, for
+    // the engine-vs-threads speedup headline
+    let threaded = ServeBuilder::new(SYNTHETIC_DATASET)
+        .backend(BackendKind::Reference)
+        .scheme(Scheme::Agile)
+        .clock(ClockKind::Sim)
+        .sim_engine(SimEngine::Threads)
+        .devices(8)
+        .requests(2_000)
+        .rate_hz(20.0)
+        .arrival_seed(11);
+    b.run("fleet_threads/2k_reqs_8_dev", || {
+        threaded.clone().build().unwrap().run().unwrap().requests
+    });
+}

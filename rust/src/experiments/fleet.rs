@@ -1,0 +1,172 @@
+//! Fleet-scale serving sweeps on the discrete-event engine (`bench
+//! --figure fleet`): the ROADMAP's "heavy traffic from millions of users"
+//! regime, far beyond what the paper's 8-device tables exercise.
+//!
+//! Three tables:
+//!
+//! 1. the headline sweep — 1M requests × 10k devices through a 4-server
+//!    least-loaded topology, with per-shard load/latency (seconds of host
+//!    time on the reference backend; the CI rust job runs it under a
+//!    5-minute timeout);
+//! 2. placement-policy comparison (static / round-robin / least-loaded)
+//!    at a reduced scale, including the shard imbalance each policy
+//!    leaves behind;
+//! 3. server scaling: how p95 sojourn and batch-queue wait move as the
+//!    same offered load spreads over 1 → 8 servers.
+//!
+//! Scale knobs: `AGILENN_FLEET_N` / `AGILENN_FLEET_DEVICES` override the
+//! request/device counts; the PJRT backend defaults two orders of
+//! magnitude smaller (real NN execution per request — the fleet regime is
+//! the reference backend's job).
+
+use super::common::EvalCtx;
+use crate::config::{BackendKind, Scheme};
+use crate::report::{ms, pct, Table};
+use crate::serve::{ClockKind, Placement, PipelineReport, Service};
+use crate::workload::Arrival;
+use anyhow::Result;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// (requests, devices) for the headline sweep.
+fn scale(ctx: &EvalCtx) -> (usize, usize) {
+    let (n, d) = match ctx.backend_kind {
+        BackendKind::Reference => (1_000_000, 10_000),
+        // PJRT executes a real NN per request; keep the smoke honest but
+        // small
+        BackendKind::Pjrt => (2_000, 16),
+    };
+    (env_usize("AGILENN_FLEET_N", n), env_usize("AGILENN_FLEET_DEVICES", d))
+}
+
+struct FleetRun {
+    rep: PipelineReport,
+    host_s: f64,
+}
+
+fn run_fleet(
+    ctx: &EvalCtx,
+    dataset: &str,
+    requests: usize,
+    devices: usize,
+    servers: usize,
+    placement: Placement,
+) -> Result<FleetRun> {
+    let cfg = ctx.run_config(dataset, Scheme::Agile);
+    let meta = ctx.meta(dataset)?;
+    let testset = ctx.testset(dataset)?;
+    let t0 = Instant::now();
+    let rep = Service::from_parts(
+        cfg,
+        meta,
+        testset,
+        devices,
+        requests,
+        Arrival::Poisson { hz: 20.0, seed: 16 },
+    )?
+    .with_clock(ClockKind::Sim)
+    .with_servers(servers, placement)
+    .run()?;
+    Ok(FleetRun { rep, host_s: t0.elapsed().as_secs_f64() })
+}
+
+/// max/min offloads across shards (1.0 = perfectly balanced).
+fn imbalance(rep: &PipelineReport) -> f64 {
+    let max = rep.shards.iter().map(|s| s.requests).max().unwrap_or(0);
+    let min = rep.shards.iter().map(|s| s.requests).min().unwrap_or(0);
+    if min == 0 {
+        f64::INFINITY
+    } else {
+        max as f64 / min as f64
+    }
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    let (requests, devices) = scale(ctx);
+    let ds = ctx.datasets.first().cloned().unwrap_or_else(|| "synthetic".into());
+
+    // 1) headline: the full fleet through 4 least-loaded servers
+    let head = run_fleet(ctx, &ds, requests, devices, 4, Placement::LeastLoaded)?;
+    let mut t = Table::new(
+        format!(
+            "Fleet [{ds}]: {requests} requests x {devices} devices, 4 servers \
+             (least-loaded, sim engine) — {:.1}s host, {:.0} req/s host, \
+             sojourn p95 {} ms / p99 {} ms",
+            head.host_s,
+            requests as f64 / head.host_s.max(1e-9),
+            ms(head.rep.p95_latency_s),
+            ms(head.rep.p99_latency_s),
+        ),
+        &["server", "requests", "batches", "mean_batch", "queue_mean_ms", "queue_p95_ms"],
+    );
+    for s in &head.rep.shards {
+        t.row(vec![
+            s.server.to_string(),
+            s.requests.to_string(),
+            s.batches.to_string(),
+            format!("{:.2}", s.mean_batch_size),
+            ms(s.mean_queue_s),
+            ms(s.p95_queue_s),
+        ]);
+    }
+    // totals row: the queue columns are per-shard quantities and do not
+    // aggregate into one number, so they stay blank here (sojourn latency
+    // lives in the title)
+    t.row(vec![
+        "all".into(),
+        head.rep.requests.to_string(),
+        head.rep.batches.to_string(),
+        format!("{:.2}", head.rep.mean_batch_size),
+        "-".into(),
+        "-".into(),
+    ]);
+    tables.push(t);
+
+    // 2) placement comparison at reduced scale
+    let (n2, d2) = ((requests / 5).max(1000), (devices / 10).max(8));
+    let mut t2 = Table::new(
+        format!("Fleet [{ds}]: placement policies ({n2} requests x {d2} devices, 4 servers)"),
+        &["placement", "throughput_rps", "p95_ms", "p99_ms", "shard_imbalance", "accuracy"],
+    );
+    for placement in [Placement::Static, Placement::RoundRobin, Placement::LeastLoaded] {
+        let run = run_fleet(ctx, &ds, n2, d2, 4, placement)?;
+        t2.row(vec![
+            placement.name().into(),
+            format!("{:.1}", run.rep.throughput_rps),
+            ms(run.rep.p95_latency_s),
+            ms(run.rep.p99_latency_s),
+            format!("{:.2}", imbalance(&run.rep)),
+            pct(run.rep.accuracy),
+        ]);
+    }
+    tables.push(t2);
+
+    // 3) server scaling under the same offered load
+    let mut t3 = Table::new(
+        format!("Fleet [{ds}]: server scaling ({n2} requests x {d2} devices, least-loaded)"),
+        &["servers", "p95_ms", "p99_ms", "queue_mean_ms", "batches", "mean_batch"],
+    );
+    for servers in [1usize, 2, 4, 8] {
+        let run = run_fleet(ctx, &ds, n2, d2, servers, Placement::LeastLoaded)?;
+        let queue_mean = if run.rep.shards.is_empty() {
+            0.0
+        } else {
+            run.rep.shards.iter().map(|s| s.mean_queue_s).sum::<f64>()
+                / run.rep.shards.len() as f64
+        };
+        t3.row(vec![
+            servers.to_string(),
+            ms(run.rep.p95_latency_s),
+            ms(run.rep.p99_latency_s),
+            ms(queue_mean),
+            run.rep.batches.to_string(),
+            format!("{:.2}", run.rep.mean_batch_size),
+        ]);
+    }
+    tables.push(t3);
+    Ok(tables)
+}

@@ -14,9 +14,12 @@
 //!   trace-driven channel with importance-ordered anytime transport
 //!   ([`net`]), dynamic remote batching, alpha-weighted prediction fusion,
 //!   baseline schemes, a pluggable serving clock ([`serve::clock`]: wall
-//!   time or seed-deterministic discrete-event virtual time), and the
-//!   bench harness regenerating every figure/table in the paper's
-//!   evaluation. Python is never on the request path.
+//!   time or seed-deterministic discrete-event virtual time), a
+//!   single-threaded discrete-event fleet engine ([`serve::engine`]:
+//!   million-request multi-server sweeps with pluggable device→server
+//!   placement), a CI perf-regression gate ([`perfgate`]), and the bench
+//!   harness regenerating every figure/table in the paper's evaluation.
+//!   Python is never on the request path.
 //!
 //! Inference is pluggable ([`runtime::Backend`]): the PJRT backend (cargo
 //! feature `pjrt`) executes the real AOT artifacts, while the pure-Rust
@@ -68,6 +71,7 @@ pub mod fixtures;
 pub mod json;
 pub mod metrics;
 pub mod net;
+pub mod perfgate;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -9,9 +9,10 @@ use agilenn::baselines::SchemeRunner;
 use agilenn::config::{default_artifacts_dir, BackendKind, Manifest, Meta, RunConfig, Scheme};
 use agilenn::experiments::{all_ids, run_figure, EvalCtx};
 use agilenn::net::{BandwidthTrace, DeliveryPolicy, GilbertElliott, PacketOrder};
+use agilenn::perfgate;
 use agilenn::report::{ms, pct};
 use agilenn::runtime::make_backend;
-use agilenn::serve::{ClockKind, ServeBuilder};
+use agilenn::serve::{ClockKind, Placement, ServeBuilder, SimEngine};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
@@ -84,11 +85,21 @@ COMMANDS:
                                  artifacts needed at all)
              --devices 4 --requests 256 --rate-hz 30
              --clock wall|sim    (sim: discrete-event virtual time — no
-                                 sleeps, seed-deterministic latencies,
-                                 100k+-request sweeps in seconds)
+                                 sleeps, seed-deterministic latencies;
+                                 runs on the single-threaded fleet
+                                 engine, so 1M+-request sweeps take
+                                 seconds)
+             --servers 1         remote servers, each with its own batch
+                                 queue (needs --clock sim)
+             --placement static|rr|least
+                                 device->server placement policy
+             --sim-engine event|threads
+                                 sim execution engine (threads: the
+                                 legacy fabric, bitwise-equivalent)
              --arrival-seed 42   base seed for per-device Poisson arrivals
              --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
              --quiet   (suppress streaming per-request progress)
+             --json    (print the report as deterministic JSON)
            channel (default: ideal link; all stochastic behavior is
            deterministic in --net-seed):
              --loss 0.3          packet-loss rate
@@ -102,10 +113,20 @@ COMMANDS:
   infer    process one request, print the full breakdown
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --backend pjrt|reference --index 0 --bits 4 [--alpha 0.3]
-  bench    regenerate a paper figure/table
-             --figure 2|16|t2|17|18|19|20|21|22|23|24|all
+  bench    regenerate a paper figure/table (or a fleet-scale sweep)
+             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|all
              --backend pjrt|reference  (reference: artifact-free sweeps
                                  on the synthetic model family)
+  perfgate run the CI perf-regression suite (fleet engine + serving hot
+           paths, reference backend), write deterministic JSON, and fail
+           on a throughput regression vs a baseline
+             --out BENCH_5.json  where to write the measurements
+             --baseline FILE     compare against this JSON (committed
+                                 floors live in rust/bench/baseline.json)
+             --tolerance 0.20    allowed fractional regression
+             --requests 1000000 --devices 10000 --servers 4
+           AGILENN_PERF_HANDICAP=1.5 injects a real 1.5x slowdown into
+           every timed section (CI uses it to prove the gate trips)
   report   print what was trained/exported per dataset
   help     this text
 
@@ -130,7 +151,10 @@ fn main() -> Result<()> {
             let scheme: Scheme = args.get_str("scheme", "agile").parse()?;
             let devices: usize = args.get("devices", 4)?;
             let requests: usize = args.get("requests", 256)?;
-            let quiet: bool = args.get("quiet", false)?;
+            let json_out: bool = args.get("json", false)?;
+            // --json owns stdout: progress lines would corrupt the
+            // machine-readable output, so it implies --quiet
+            let quiet: bool = args.get("quiet", false)? || json_out;
             let mut builder = ServeBuilder::new(&dataset)
                 .artifacts_dir(artifacts)
                 .scheme(scheme)
@@ -139,6 +163,9 @@ fn main() -> Result<()> {
                 .requests(requests)
                 .rate_hz(args.get("rate-hz", 30.0)?)
                 .clock(args.get("clock", ClockKind::Wall)?)
+                .servers(args.get("servers", 1)?)
+                .placement(args.get("placement", Placement::Static)?)
+                .sim_engine(args.get("sim-engine", SimEngine::Event)?)
                 .max_batch(args.get("max-batch", 8)?)
                 .batch_deadline_us(args.get("deadline-us", 2000)?)
                 .bits(args.get("bits", 4)?);
@@ -189,6 +216,10 @@ fn main() -> Result<()> {
                 }
             }
             let rep = stream.finish()?;
+            if json_out {
+                println!("{}", rep.to_ordered_json());
+                return Ok(());
+            }
             println!(
                 "{}: {} requests over {} devices ({} clock)",
                 scheme.name(),
@@ -217,6 +248,20 @@ fn main() -> Result<()> {
                 rep.incomplete_frames
             );
             println!("  radio queueing : mean {} ms", ms(rep.mean_radio_wait_s));
+            if rep.shards.len() > 1 {
+                for s in &rep.shards {
+                    println!(
+                        "  server {:<2}      : {} reqs in {} batches (mean {:.2}), \
+                         queue mean {} ms / p95 {} ms",
+                        s.server,
+                        s.requests,
+                        s.batches,
+                        s.mean_batch_size,
+                        ms(s.mean_queue_s),
+                        ms(s.p95_queue_s)
+                    );
+                }
+            }
         }
         "infer" => {
             let dataset = args.get_str("dataset", "svhns");
@@ -255,6 +300,45 @@ fn main() -> Result<()> {
                     table.print();
                     println!();
                 }
+            }
+        }
+        "perfgate" => {
+            let out = args.get_str("out", "BENCH_5.json");
+            let tolerance: f64 = args.get("tolerance", perfgate::DEFAULT_TOLERANCE)?;
+            let gcfg = perfgate::GateConfig {
+                requests: args.get("requests", 1_000_000)?,
+                devices: args.get("devices", 10_000)?,
+                servers: args.get("servers", 4)?,
+            };
+            let handicap = perfgate::handicap_factor();
+            if handicap > 1.0 {
+                println!("injected slowdown active: {handicap}x (AGILENN_PERF_HANDICAP)");
+            }
+            println!(
+                "perfgate: fleet {} requests x {} devices x {} servers (reference backend)",
+                gcfg.requests, gcfg.devices, gcfg.servers
+            );
+            let report = perfgate::measure(&gcfg, |e| {
+                println!("  {:<14} {:>12.1}/s  ({:.2} s)", e.name, e.throughput, e.wall_s);
+            })?;
+            std::fs::write(&out, report.to_json())?;
+            println!("wrote {out}");
+            if let Some(baseline_path) = args.flags.get("baseline") {
+                let baseline = perfgate::PerfReport::load(std::path::Path::new(baseline_path))?;
+                let failures = perfgate::check(&report, &baseline, tolerance);
+                if !failures.is_empty() {
+                    for f in &failures {
+                        eprintln!("PERF REGRESSION: {f}");
+                    }
+                    bail!(
+                        "perf gate failed: {} regression(s) vs {baseline_path}",
+                        failures.len()
+                    );
+                }
+                println!(
+                    "perf gate OK vs {baseline_path} (tolerance {:.0}%)",
+                    tolerance * 100.0
+                );
             }
         }
         "report" => {
@@ -346,5 +430,29 @@ mod tests {
     #[test]
     fn non_flag_token_errors() {
         assert!(Args::from_iter(["serve".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn fleet_flags_parse_through_args() {
+        use agilenn::serve::{Placement, SimEngine};
+        let a = parse(&[
+            "serve",
+            "--servers",
+            "4",
+            "--placement",
+            "least",
+            "--sim-engine",
+            "threads",
+        ]);
+        assert_eq!(a.get::<usize>("servers", 1).unwrap(), 4);
+        assert_eq!(a.get("placement", Placement::Static).unwrap(), Placement::LeastLoaded);
+        assert_eq!(a.get("sim-engine", SimEngine::Event).unwrap(), SimEngine::Threads);
+        let d = parse(&["serve"]);
+        assert_eq!(d.get::<usize>("servers", 1).unwrap(), 1);
+        assert_eq!(d.get("placement", Placement::Static).unwrap(), Placement::Static);
+        assert_eq!(d.get("sim-engine", SimEngine::Event).unwrap(), SimEngine::Event);
+        assert!(parse(&["serve", "--placement", "hash"])
+            .get("placement", Placement::Static)
+            .is_err());
     }
 }

@@ -1,0 +1,365 @@
+//! CI perf-regression gate over the fleet engine and the serving hot
+//! paths (`agilenn perfgate`).
+//!
+//! The gate measures a small timed-harness suite on the reference backend
+//! (no artifacts, no PJRT — the numbers isolate the serving stack), emits
+//! the results as deterministic insertion-ordered JSON (`BENCH_5.json`,
+//! uploaded as a CI artifact), and fails — nonzero exit — when any gated
+//! throughput falls more than `tolerance` below a baseline JSON:
+//!
+//! * the **committed floors** in `rust/bench/baseline.json` guard against
+//!   catastrophic regressions on any machine (they are deliberately far
+//!   below healthy throughput, so cross-machine variance cannot flake CI);
+//! * CI additionally re-runs the gate with `AGILENN_PERF_HANDICAP=1.5`
+//!   against the *fresh* same-machine measurement, proving end to end
+//!   that an injected slowdown actually trips the gate.
+//!
+//! `AGILENN_PERF_HANDICAP=<factor>` stretches every timed section by
+//! busy-waiting `(factor - 1) × elapsed` inside the measurement — real
+//! wall time, not arithmetic on the result — so the handicapped run is a
+//! genuine slowdown as the gate sees it.
+
+use crate::config::{BackendKind, Scheme};
+use crate::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
+use crate::json::Value;
+use crate::net::{transmit_frame, Channel, GilbertElliott};
+use crate::report::{json_array, JsonObj};
+use crate::runtime::ReferenceBackend;
+use crate::serve::{make_device_side, ClockKind, Placement, ServeBuilder};
+use anyhow::{ensure, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Schema tag carried by every emitted report, so a future format change
+/// cannot be silently compared against an old baseline.
+pub const SCHEMA: &str = "agilenn-bench-v1";
+
+/// Default regression tolerance: fail when a gated throughput drops more
+/// than 20% below its baseline.
+pub const DEFAULT_TOLERANCE: f64 = 0.20;
+
+/// One measured benchmark.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfEntry {
+    pub name: String,
+    /// the gated metric: work units per second (higher is better)
+    pub throughput: f64,
+    /// wall seconds of the measured section (informational)
+    pub wall_s: f64,
+    /// informational extras (deterministic virtual-time quantities etc.),
+    /// sorted by key for stable serialization; never gated
+    pub info: Vec<(String, f64)>,
+}
+
+/// A bench suite result: what `BENCH_5.json` holds.
+#[derive(Debug, Clone, Default)]
+pub struct PerfReport {
+    pub entries: Vec<PerfEntry>,
+}
+
+impl PerfReport {
+    /// Deterministic JSON form (insertion-ordered; see `report::JsonObj`).
+    pub fn to_json(&self) -> String {
+        let entries = json_array(self.entries.iter().map(|e| {
+            let mut info = e.info.clone();
+            info.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut obj = JsonObj::new()
+                .field_str("name", &e.name)
+                .field_f64("throughput", e.throughput)
+                .field_f64("wall_s", e.wall_s);
+            let mut inner = JsonObj::new();
+            for (k, v) in &info {
+                inner = inner.field_f64(k, *v);
+            }
+            obj = obj.field_raw("info", &inner.finish());
+            obj.finish()
+        }));
+        JsonObj::new()
+            .field_str("schema", SCHEMA)
+            .field_raw("entries", &entries)
+            .finish()
+    }
+
+    pub fn parse(text: &str) -> Result<PerfReport> {
+        let v = Value::parse(text).context("parsing bench JSON")?;
+        ensure!(
+            v.str_at("schema")? == SCHEMA,
+            "bench JSON schema {:?} is not {SCHEMA:?}",
+            v.str_at("schema")?
+        );
+        let mut entries = Vec::new();
+        for e in v.get("entries")?.as_arr()? {
+            let mut info: Vec<(String, f64)> = match e.opt("info") {
+                Some(obj) => obj
+                    .as_obj()?
+                    .iter()
+                    .map(|(k, val)| Ok((k.clone(), val.as_f64()?)))
+                    .collect::<Result<_>>()?,
+                None => Vec::new(),
+            };
+            info.sort_by(|a, b| a.0.cmp(&b.0));
+            entries.push(PerfEntry {
+                name: e.str_at("name")?,
+                throughput: e.f64_at("throughput")?,
+                wall_s: e.opt("wall_s").map(|w| w.as_f64()).transpose()?.unwrap_or(0.0),
+                info,
+            });
+        }
+        Ok(PerfReport { entries })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PerfReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench baseline {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Compare `current` against `baseline`: one failure line per gated
+/// metric that regressed beyond `tolerance` (or went missing). An empty
+/// result means the gate passes; extra entries in `current` are fine.
+pub fn check(current: &PerfReport, baseline: &PerfReport, tolerance: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    for base in &baseline.entries {
+        match current.entries.iter().find(|e| e.name == base.name) {
+            None => failures.push(format!("bench {:?} missing from the current run", base.name)),
+            Some(cur) => {
+                let floor = base.throughput * (1.0 - tolerance);
+                if cur.throughput < floor {
+                    failures.push(format!(
+                        "{}: {:.1}/s is a {:.1}% regression vs baseline {:.1}/s \
+                         (tolerance {:.0}%)",
+                        base.name,
+                        cur.throughput,
+                        (1.0 - cur.throughput / base.throughput) * 100.0,
+                        base.throughput,
+                        tolerance * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    failures
+}
+
+/// What the measurement suite runs.
+#[derive(Debug, Clone)]
+pub struct GateConfig {
+    /// fleet-engine sweep size (the headline 1M-request scenario)
+    pub requests: usize,
+    pub devices: usize,
+    pub servers: usize,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        Self { requests: 1_000_000, devices: 10_000, servers: 4 }
+    }
+}
+
+/// Injected-slowdown factor from `AGILENN_PERF_HANDICAP` (>= 1.0; 1.0 =
+/// no handicap).
+pub fn handicap_factor() -> f64 {
+    std::env::var("AGILENN_PERF_HANDICAP")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|f| f.max(1.0))
+        .unwrap_or(1.0)
+}
+
+/// Busy-wait for `d` (std::thread::sleep is too coarse for sub-ms spans
+/// and a sleep would not register as CPU work anyway).
+fn spin_for(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// Time one measured section, stretching it by the handicap factor.
+fn timed<T>(handicap: f64, f: impl FnOnce() -> Result<T>) -> Result<(T, f64)> {
+    let t0 = Instant::now();
+    let out = f()?;
+    let measured = t0.elapsed();
+    if handicap > 1.0 {
+        spin_for(measured.mul_f64(handicap - 1.0));
+    }
+    Ok((out, t0.elapsed().as_secs_f64()))
+}
+
+/// Run the suite and return the report. `progress` gets one line per
+/// finished bench (the CLI passes a printer; tests pass a no-op).
+pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result<PerfReport> {
+    let handicap = handicap_factor();
+    let mut entries = Vec::new();
+
+    // 1) the fleet engine: the 1M-request × 10k-device reference sweep.
+    //    Gated on served requests per host second; the sim quantiles ride
+    //    along as (deterministic) info fields.
+    let (rep, wall) = timed(handicap, || {
+        ServeBuilder::new(SYNTHETIC_DATASET)
+            .backend(BackendKind::Reference)
+            .scheme(Scheme::Agile)
+            .clock(ClockKind::Sim)
+            .devices(cfg.devices)
+            .requests(cfg.requests)
+            .rate_hz(20.0)
+            .arrival_seed(11)
+            .servers(cfg.servers)
+            .placement(Placement::LeastLoaded)
+            .build()?
+            .run()
+    })?;
+    ensure!(rep.requests == cfg.requests, "fleet sweep served {} requests", rep.requests);
+    let entry = PerfEntry {
+        name: "fleet_engine".into(),
+        throughput: cfg.requests as f64 / wall,
+        wall_s: wall,
+        info: vec![
+            ("sim_p99_latency_ms".into(), rep.p99_latency_s * 1e3),
+            ("sim_p95_latency_ms".into(), rep.p95_latency_s * 1e3),
+            ("sim_wall_s".into(), rep.wall_s),
+            ("batches".into(), rep.batches as f64),
+            ("servers".into(), rep.shards.len() as f64),
+        ],
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    // 2) the device hot path: un-memoized reference encode (NN + quantize
+    //    + LZW) — what every request pays on the threaded/wall pipeline.
+    let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
+    let meta = spec.meta();
+    let backend = ReferenceBackend::from_meta(&meta);
+    let mut run_cfg =
+        crate::config::RunConfig::new("/nonexistent", SYNTHETIC_DATASET, Scheme::Agile);
+    run_cfg.backend = BackendKind::Reference;
+    let mut device = make_device_side(&backend, &run_cfg, &meta)?;
+    let testset = spec.testset(64)?;
+    let images: Vec<_> = (0..16).map(|i| testset.image(i).unwrap()).collect();
+    let (iters, wall) = timed(handicap, || {
+        let mut iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(250) {
+            for img in &images {
+                std::hint::black_box(device.encode(img)?);
+                iters += 1;
+            }
+        }
+        Ok(iters)
+    })?;
+    let entry = PerfEntry {
+        name: "device_encode".into(),
+        throughput: iters as f64 / wall,
+        wall_s: wall,
+        info: Vec::new(),
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    // 3) the transport hot path: whole-frame ARQ over a bursty channel.
+    let profile = crate::simulator::NetworkProfile::wifi_6mbps();
+    let mut chan = Channel::new(&profile, GilbertElliott::bursty(0.2, 4.0), None, 7);
+    let (iters, wall) = timed(handicap, || {
+        let mut iters = 0u64;
+        let mut t = 0.0f64;
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(250) {
+            for _ in 0..256 {
+                let stats = transmit_frame(&mut chan, 420, t);
+                t += stats.uplink_s;
+                iters += 1;
+            }
+        }
+        Ok(iters)
+    })?;
+    let entry = PerfEntry {
+        name: "arq_transport".into(),
+        throughput: iters as f64 / wall,
+        wall_s: wall,
+        info: Vec::new(),
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    Ok(PerfReport { entries })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, throughput: f64) -> PerfEntry {
+        PerfEntry { name: name.into(), throughput, wall_s: 1.0, info: Vec::new() }
+    }
+
+    fn report(entries: Vec<PerfEntry>) -> PerfReport {
+        PerfReport { entries }
+    }
+
+    #[test]
+    fn gate_fails_on_a_25_percent_slowdown_and_passes_within_tolerance() {
+        let baseline = report(vec![entry("fleet_engine", 100_000.0)]);
+        // 25% slower than baseline: must trip the 20% gate
+        let slowed = report(vec![entry("fleet_engine", 75_000.0)]);
+        let failures = check(&slowed, &baseline, DEFAULT_TOLERANCE);
+        assert_eq!(failures.len(), 1, "{failures:?}");
+        assert!(failures[0].contains("fleet_engine"), "{}", failures[0]);
+        // 10% slower: within tolerance
+        let ok = report(vec![entry("fleet_engine", 90_000.0)]);
+        assert!(check(&ok, &baseline, DEFAULT_TOLERANCE).is_empty());
+        // faster never fails
+        let faster = report(vec![entry("fleet_engine", 150_000.0)]);
+        assert!(check(&faster, &baseline, DEFAULT_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn gate_fails_on_a_missing_bench() {
+        let baseline = report(vec![entry("fleet_engine", 1.0), entry("device_encode", 1.0)]);
+        let current = report(vec![entry("fleet_engine", 1.0)]);
+        let failures = check(&current, &baseline, DEFAULT_TOLERANCE);
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].contains("device_encode"));
+        // extra entries in current are not an error
+        let extra = report(vec![
+            entry("fleet_engine", 1.0),
+            entry("device_encode", 1.0),
+            entry("brand_new", 9.0),
+        ]);
+        assert!(check(&extra, &baseline, DEFAULT_TOLERANCE).is_empty());
+    }
+
+    #[test]
+    fn report_json_roundtrips_and_is_byte_stable() {
+        let rep = report(vec![
+            PerfEntry {
+                name: "fleet_engine".into(),
+                throughput: 123456.789,
+                wall_s: 8.1,
+                info: vec![("sim_p99_latency_ms".into(), 4.25), ("batches".into(), 125000.0)],
+            },
+            entry("arq_transport", 1e6),
+        ]);
+        let a = rep.to_json();
+        assert_eq!(a, rep.to_json(), "serialization must be deterministic");
+        let back = PerfReport::parse(&a).unwrap();
+        assert_eq!(back.entries.len(), 2);
+        assert_eq!(back.entries[0].name, "fleet_engine");
+        assert_eq!(back.entries[0].throughput.to_bits(), 123456.789f64.to_bits());
+        // info parses back sorted by key regardless of map order
+        assert_eq!(back.entries[0].info[0].0, "batches");
+        assert_eq!(back.to_json(), a, "parse -> serialize is the identity");
+    }
+
+    #[test]
+    fn parse_rejects_other_schemas() {
+        assert!(PerfReport::parse(r#"{"schema":"v0","entries":[]}"#).is_err());
+        assert!(PerfReport::parse("{}").is_err());
+    }
+
+    #[test]
+    fn handicap_defaults_to_unity_and_clamps() {
+        // (env-var reads in tests are race-prone; exercise the clamp math
+        // through the public surface instead)
+        assert!(handicap_factor() >= 1.0);
+    }
+}

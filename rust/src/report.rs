@@ -1,5 +1,14 @@
 //! Plain-text table rendering for figure/table regeneration — each bench
-//! prints the same rows/series the paper reports.
+//! prints the same rows/series the paper reports — plus the deterministic
+//! JSON writer behind golden snapshots and the CI bench artifacts.
+//!
+//! JSON emission here is **insertion-ordered** ([`JsonObj`] keeps fields
+//! in the order they are written, never a `HashMap` iteration): emitting
+//! through a hash map made `tests/golden/` diffs and `BENCH_*.json`
+//! artifacts reshuffle fields run to run, so every re-bless produced a
+//! full-file diff and byte-comparison of reports was impossible. Floats
+//! use Rust's shortest-roundtrip formatting, so string equality of two
+//! serialized reports is bit equality of their fields.
 
 /// A simple aligned table.
 #[derive(Debug, Clone)]
@@ -57,6 +66,122 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic (insertion-ordered) JSON emission
+// ---------------------------------------------------------------------------
+
+/// Escape a string for JSON output.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A float as JSON: shortest-roundtrip decimal (`{:?}`), so parsing it
+/// back yields the bit-identical f64; non-finite values (which JSON
+/// cannot carry) become `null`.
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// A JSON array from already-serialized element strings.
+pub fn json_array(items: impl IntoIterator<Item = String>) -> String {
+    let mut out = String::from("[");
+    for (i, item) in items.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&item);
+    }
+    out.push(']');
+    out
+}
+
+/// Insertion-ordered JSON object writer: fields serialize in exactly the
+/// order they are added, every time. This is the substrate for golden
+/// snapshots and `BENCH_*.json` — any map-ordered emission would reshuffle
+/// keys across runs and make byte comparison meaningless.
+#[derive(Debug, Clone)]
+pub struct JsonObj {
+    body: String,
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> Self {
+        Self { body: String::from("{") }
+    }
+
+    fn push_key(&mut self, key: &str) {
+        if self.body.len() > 1 {
+            self.body.push(',');
+        }
+        self.body.push_str(&json_str(key));
+        self.body.push(':');
+    }
+
+    pub fn field_str(mut self, key: &str, v: &str) -> Self {
+        self.push_key(key);
+        self.body.push_str(&json_str(v));
+        self
+    }
+
+    pub fn field_f64(mut self, key: &str, v: f64) -> Self {
+        self.push_key(key);
+        self.body.push_str(&json_f64(v));
+        self
+    }
+
+    pub fn field_u64(mut self, key: &str, v: u64) -> Self {
+        self.push_key(key);
+        self.body.push_str(&v.to_string());
+        self
+    }
+
+    pub fn field_usize(self, key: &str, v: usize) -> Self {
+        self.field_u64(key, v as u64)
+    }
+
+    pub fn field_bool(mut self, key: &str, v: bool) -> Self {
+        self.push_key(key);
+        self.body.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    /// Insert an already-serialized JSON value (nested object or array).
+    pub fn field_raw(mut self, key: &str, raw: &str) -> Self {
+        self.push_key(key);
+        self.body.push_str(raw);
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.body.push('}');
+        self.body
+    }
+}
+
 pub fn ms(seconds: f64) -> String {
     format!("{:.2}", seconds * 1e3)
 }
@@ -100,5 +225,55 @@ mod tests {
         assert_eq!(pct(0.912), "91.2%");
         assert_eq!(mj(0.0042), "4.20");
         assert_eq!(kb(2048), "2.0");
+    }
+
+    #[test]
+    fn json_obj_preserves_insertion_order_byte_for_byte() {
+        let build = || {
+            JsonObj::new()
+                .field_str("name", "fleet")
+                .field_f64("throughput", 1234.5)
+                .field_u64("requests", 42)
+                .field_bool("ok", true)
+                .finish()
+        };
+        let a = build();
+        assert_eq!(a, build(), "same fields must serialize identically");
+        assert_eq!(a, r#"{"name":"fleet","throughput":1234.5,"requests":42,"ok":true}"#);
+    }
+
+    #[test]
+    fn json_floats_roundtrip_bit_exactly() {
+        for v in [0.1 + 0.2, 1.0 / 3.0, 1e-7, 123456789.123456789, 0.0] {
+            let s = json_f64(v);
+            let back: f64 = s.parse().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{s}");
+        }
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+
+    #[test]
+    fn json_output_parses_with_the_crate_parser() {
+        let nested = json_array(vec![
+            JsonObj::new().field_usize("server", 0).field_f64("q", 0.25).finish(),
+            JsonObj::new().field_usize("server", 1).field_f64("q", 0.5).finish(),
+        ]);
+        let text = JsonObj::new()
+            .field_str("esc", "a\"b\\c\nd\u{1}")
+            .field_raw("shards", &nested)
+            .finish();
+        let v = crate::json::Value::parse(&text).unwrap();
+        assert_eq!(v.str_at("esc").unwrap(), "a\"b\\c\nd\u{1}");
+        let shards = v.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[1].usize_at("server").unwrap(), 1);
+        assert_eq!(shards[1].f64_at("q").unwrap(), 0.5);
+    }
+
+    #[test]
+    fn empty_json_obj_is_valid() {
+        assert_eq!(JsonObj::new().finish(), "{}");
+        assert_eq!(json_array(Vec::<String>::new()), "[]");
     }
 }

@@ -1,0 +1,755 @@
+//! `serve::engine` — the single-threaded discrete-event fleet engine.
+//!
+//! The threaded sim pipeline (`super::service` + `super::clock`) runs one
+//! OS thread per device and coordinates them through a shared conservative
+//! virtual clock. That is faithful but caps out around 10k requests × 8
+//! devices: every virtual-time step is a cross-thread rendezvous. This
+//! module executes the *same* device/server logic as event-driven state
+//! machines on one thread: arrival → local NN → packetized uplink through
+//! [`Channel`] → batch queue → remote NN → fusion, with a binary heap of
+//! `(time, seq)` events replacing the clock's quiescence protocol. A
+//! million-request, ten-thousand-device sweep plays out in seconds.
+//!
+//! ## Equivalence contract
+//!
+//! On every **tie-free** configuration both paths accept (one server),
+//! the engine is **bitwise equivalent** to the threaded sim clock:
+//! identical `PipelineReport` deterministic fields, identical virtual
+//! makespan, identical batch compositions. This holds because the
+//! simulated timeline was already schedule-anchored (PR 3): every channel
+//! timestamp is a pure function of the arrival schedule, the per-device
+//! seeds, and the batch dispatch times — and the engine reproduces each
+//! arithmetic expression of the threaded device/server loops verbatim:
+//!
+//! * a device's uplink starts at `max(arrival + compute, radio_free)`;
+//! * the offload reaches its server at `max(device cursor, t_reply)`;
+//! * batches dispatch on the size trigger at the push timestamp, or on
+//!   the deadline at exactly `BatchQueue::next_deadline_at`;
+//! * the reply frees the device at `dispatch + downlink`.
+//!
+//! Events at *distinct* virtual times are totally ordered. Exact ties are
+//! broken FIFO by schedule order, deterministically — whereas the
+//! threaded fabric resolves them by OS scheduling. Ties are not
+//! hypothetical: in a **saturated** fleet, devices whose offloads ride
+//! the same batch resume at the identical virtual instant (dispatch time
+//! plus the constant downlink), and if they are all backlogged their next
+//! offloads are sent at bit-equal times, so the threaded fabric's batch
+//! composition there depends on thread wake order. Non-saturating
+//! configurations (device latency below the inter-arrival gap, as in the
+//! equivalence suite) are tie-free by construction: every send is
+//! anchored on `arrival + compute + uplink`, and the per-device periodic
+//! phases / decorrelated Poisson streams keep those sums distinct. The
+//! engine turns the remaining saturated-tie races into one deterministic
+//! schedule instead of inheriting them.
+//!
+//! The engine additionally memoizes the device encode and the whole-frame
+//! server decode per test-set sample: both are pure functions of the
+//! sample (the same request indexes the same image), so a 1M-request run
+//! pays the NN/LZW cost once per distinct sample instead of once per
+//! request. This is an optimization, not a semantic change.
+//!
+//! ## Multi-server sharding
+//!
+//! The engine generalizes the server side to N shards, each with its own
+//! [`ServerSide`] instance and [`BatchQueue`], fed through a pluggable
+//! device→server [`Placement`] policy (static shard, round-robin,
+//! least-loaded). Surfaced as `ServeBuilder::{servers,placement}` and
+//! `serve --servers N --placement p`; per-shard load/latency lands in
+//! `PipelineReport::shards`. Multi-server topologies exist only here —
+//! the wall clock and the threaded sim reject `servers > 1`.
+
+use crate::config::{Meta, RunConfig};
+use crate::coordinator::batcher::BatchQueue;
+use crate::net::{
+    importance_order, transmit_frame, transmit_packets, Channel, DeliveryPolicy, LinkOutcome,
+    PacketOrder, Packetizer,
+};
+use crate::runtime::Backend;
+use crate::serve::scheme::{
+    assemble_outcome, make_device_side, make_fuser, make_server_side, reply_bytes, DeviceSide,
+    Fuser, LocalResult, ServerSide,
+};
+use crate::serve::service::{device_schedule, ServedOutcome, ShardAgg, UplinkBody};
+use crate::simulator::{DeviceSim, NetworkSim};
+use crate::tensor::Tensor;
+use crate::workload::{Arrival, TestSet};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::str::FromStr;
+use std::sync::mpsc::Sender;
+
+/// How `ClockKind::Sim` executes: the discrete-event fleet engine (the
+/// default) or the legacy thread-per-device fabric it replaced. The
+/// threaded fabric is kept as the equivalence oracle — the two must agree
+/// bitwise on every overlapping configuration — and as a debugging escape
+/// hatch (`serve --sim-engine threads`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimEngine {
+    /// Single-threaded event loop; supports multi-server topologies.
+    #[default]
+    Event,
+    /// One OS thread per device + the shared conservative clock (PR 3).
+    Threads,
+}
+
+impl SimEngine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimEngine::Event => "event",
+            SimEngine::Threads => "threads",
+        }
+    }
+}
+
+impl FromStr for SimEngine {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "event" | "engine" => Ok(SimEngine::Event),
+            "threads" | "threaded" => Ok(SimEngine::Threads),
+            other => anyhow::bail!("unknown sim engine {other:?} (event|threads)"),
+        }
+    }
+}
+
+/// Device→server placement policy for multi-server topologies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// `server = device % servers`: a pure function of the device index,
+    /// so the assignment survives run-to-run and device renumbering
+    /// renumbers shards predictably. The default.
+    #[default]
+    Static,
+    /// Offloads cycle through the servers in virtual-time order,
+    /// regardless of which device sent them.
+    RoundRobin,
+    /// Each offload goes to the server with the fewest queued requests at
+    /// its arrival instant. Ties rotate round-robin rather than picking
+    /// the lowest index: serving-fleet queues drain to empty between
+    /// bursts, and a lowest-index tie-break would pile every
+    /// empty-queue decision onto server 0 (measured: worse totals than
+    /// static placement); with rotation the policy degenerates to
+    /// round-robin when depths are flat and water-fills when they are
+    /// not.
+    LeastLoaded,
+}
+
+impl Placement {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Static => "static",
+            Placement::RoundRobin => "rr",
+            Placement::LeastLoaded => "least",
+        }
+    }
+}
+
+impl FromStr for Placement {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" | "shard" => Ok(Placement::Static),
+            "rr" | "round-robin" | "roundrobin" => Ok(Placement::RoundRobin),
+            "least" | "least-loaded" | "leastloaded" => Ok(Placement::LeastLoaded),
+            other => anyhow::bail!("unknown placement {other:?} (static|rr|least)"),
+        }
+    }
+}
+
+/// The placement decision procedure, separated from the engine so the
+/// policy is unit-testable without a pipeline.
+#[derive(Debug)]
+pub(crate) struct Placer {
+    policy: Placement,
+    servers: usize,
+    rr_next: usize,
+}
+
+impl Placer {
+    pub(crate) fn new(policy: Placement, servers: usize) -> Self {
+        Self { policy, servers, rr_next: 0 }
+    }
+
+    /// Shard for one offload from `device`; `load` reports a shard's
+    /// currently queued requests.
+    pub(crate) fn pick(&mut self, device: usize, load: impl Fn(usize) -> usize) -> usize {
+        match self.policy {
+            Placement::Static => device % self.servers,
+            Placement::RoundRobin => {
+                let s = self.rr_next;
+                self.rr_next = (s + 1) % self.servers;
+                s
+            }
+            Placement::LeastLoaded => {
+                // strict minimum scanned from the rotation cursor: flat
+                // depths degenerate to round-robin instead of piling every
+                // tie onto server 0
+                let mut best = self.rr_next;
+                let mut best_load = load(best);
+                for k in 1..self.servers {
+                    let s = (self.rr_next + k) % self.servers;
+                    let l = load(s);
+                    if l < best_load {
+                        best = s;
+                        best_load = l;
+                    }
+                }
+                self.rr_next = (best + 1) % self.servers;
+                best
+            }
+        }
+    }
+}
+
+/// What one engine run hands back to `OutcomeStream::finish`.
+#[derive(Debug)]
+pub(crate) struct EngineRun {
+    /// final virtual time: the completion timestamp of the last request
+    pub wall_s: f64,
+    /// per-server batch/queue accounting, indexed by server
+    pub shards: Vec<ShardAgg>,
+}
+
+/// Everything that parameterizes one fleet run (identical to what the
+/// threaded `Service::stream` consumes, plus the server topology).
+pub(crate) struct FleetSpec {
+    pub devices: usize,
+    pub requests: usize,
+    pub arrival: Arrival,
+    pub servers: usize,
+    pub placement: Placement,
+}
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// the device starts (or resumes after completing) its next request
+    Device { device: usize },
+    /// a computed offload reaches the server side
+    Offload { device: usize },
+    /// batch-deadline wake-up for one shard; stale wake-ups are no-ops,
+    /// exactly like the threaded clock's deadline waits
+    Deadline { shard: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    t: f64,
+    /// schedule order, the deterministic FIFO tie-break at equal times
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Ev {}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse so the earliest (then
+        // first-scheduled) event pops first. Event times are never NaN.
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// state machines
+// ---------------------------------------------------------------------------
+
+/// One in-flight offload: everything the device needs back when its reply
+/// arrives from the batch dispatch.
+struct Awaiting {
+    /// schedule index (into `ids`/`times`) of the offloaded request
+    j: usize,
+    /// global request id
+    id: usize,
+    body: Option<UplinkBody>,
+    local: LocalResult,
+    link: LinkOutcome,
+    tx_bytes: usize,
+    downlink_s: f64,
+    /// virtual instant the offload left the device (= the threaded
+    /// pipeline's channel-send time)
+    t_send: f64,
+}
+
+struct DeviceState {
+    ids: Vec<usize>,
+    times: Vec<f64>,
+    /// index of the next request in `ids`/`times`
+    next: usize,
+    /// simulated time this device's radio frees up after the previous
+    /// request's uplink + downlink exchange (priced timeline)
+    radio_free: f64,
+    chan: Channel,
+    awaiting: Option<Awaiting>,
+}
+
+struct ServerState {
+    side: Box<dyn ServerSide>,
+    queue: BatchQueue<(usize, Tensor)>,
+    agg: ShardAgg,
+}
+
+/// The assembled fleet: every state machine plus the event heap.
+struct Fleet<'a> {
+    cfg: &'a RunConfig,
+    testset: &'a TestSet,
+    tx_done: &'a Sender<ServedOutcome>,
+    devices: Vec<DeviceState>,
+    servers: Vec<ServerState>,
+    placer: Placer,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    device_side: Box<dyn DeviceSide>,
+    fuser: Box<dyn Fuser>,
+    dev_sim: DeviceSim,
+    net_sim: NetworkSim,
+    packetizer: Packetizer,
+    /// downlink reply payload, bytes
+    reply: usize,
+    num_classes: usize,
+    /// per-sample memoized device encodes (index = sample index) — sound
+    /// because `DeviceSide::encode` is a pure function of the sample: the
+    /// same request index always reproduces the same frame, symbols, and
+    /// priced timings
+    encoded: Vec<Option<LocalResult>>,
+    /// per-sample memoized whole-frame decodes (ARQ path only; a partial
+    /// packet set depends on the channel state and is never cached)
+    decoded: Vec<Option<Tensor>>,
+    /// completion timestamp of the latest finished request — the virtual
+    /// makespan, matching the threaded sim clock's final `now()`
+    t_end: f64,
+    /// the stream consumer is gone; stop producing, like device threads do
+    stopped: bool,
+}
+
+/// Run the fleet to completion, streaming outcomes into `tx_done`.
+pub(crate) fn run_fleet(
+    backend: &dyn Backend,
+    cfg: &RunConfig,
+    meta: &Meta,
+    testset: &TestSet,
+    spec: &FleetSpec,
+    tx_done: &Sender<ServedOutcome>,
+) -> Result<EngineRun> {
+    ensure!(spec.servers >= 1, "need at least one server");
+    let device_side = make_device_side(backend, cfg, meta)?;
+    let fuser = make_fuser(cfg, meta)?;
+    let mut servers = Vec::new();
+    for _ in 0..spec.servers {
+        match make_server_side(backend, cfg, meta)? {
+            Some(side) => {
+                let max_batch = cfg.max_batch.min(side.max_batch());
+                let deadline_s = cfg.batch_deadline_us as f64 * 1e-6;
+                servers.push(ServerState {
+                    side,
+                    queue: BatchQueue::new(max_batch, deadline_s),
+                    agg: ShardAgg::default(),
+                });
+            }
+            // local-only schemes have no server half; the topology is moot
+            None => break,
+        }
+    }
+    let order = match cfg.net.order {
+        PacketOrder::Importance => importance_order(meta, cfg.scheme),
+        PacketOrder::Index => None,
+    };
+    let mut fleet = Fleet {
+        cfg,
+        testset,
+        tx_done,
+        devices: Vec::with_capacity(spec.devices),
+        servers,
+        placer: Placer::new(spec.placement, spec.servers),
+        heap: BinaryHeap::with_capacity(spec.devices + 1),
+        seq: 0,
+        device_side,
+        fuser,
+        dev_sim: DeviceSim::new(cfg.device.clone()),
+        net_sim: NetworkSim::new(cfg.network.clone()),
+        packetizer: Packetizer::new(cfg.net.payload_cap(cfg.network.mtu), order),
+        reply: reply_bytes(meta.num_classes),
+        num_classes: meta.num_classes,
+        encoded: (0..testset.len()).map(|_| None).collect(),
+        decoded: (0..testset.len()).map(|_| None).collect(),
+        t_end: 0.0,
+        stopped: false,
+    };
+    for d in 0..spec.devices {
+        let (ids, times) = device_schedule(&spec.arrival, spec.devices, spec.requests, d);
+        let first = times.first().copied();
+        fleet.devices.push(DeviceState {
+            ids,
+            times,
+            next: 0,
+            radio_free: 0.0,
+            chan: Channel::new(
+                &cfg.network,
+                cfg.net.loss.clone(),
+                cfg.net.trace.clone(),
+                cfg.net.device_seed(d),
+            ),
+            awaiting: None,
+        });
+        if let Some(t0) = first {
+            fleet.schedule(t0, EventKind::Device { device: d });
+        }
+    }
+    fleet.run()
+}
+
+impl Fleet<'_> {
+    fn schedule(&mut self, t: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Ev { t, seq, kind });
+    }
+
+    fn run(&mut self) -> Result<EngineRun> {
+        while let Some(ev) = self.heap.pop() {
+            if self.stopped {
+                break;
+            }
+            match ev.kind {
+                EventKind::Device { device } => self.handle_device(ev.t, device)?,
+                EventKind::Offload { device } => self.handle_offload(ev.t, device)?,
+                EventKind::Deadline { shard } => self.handle_deadline(ev.t, shard)?,
+            }
+        }
+        Ok(EngineRun {
+            wall_s: self.t_end,
+            shards: self.servers.drain(..).map(|s| s.agg).collect(),
+        })
+    }
+
+    /// Memoized device encode for one test-set sample.
+    fn encode(&mut self, idx: usize) -> Result<LocalResult> {
+        if self.encoded[idx].is_none() {
+            let img = self.testset.image(idx)?;
+            self.encoded[idx] = Some(self.device_side.encode(&img)?);
+        }
+        Ok(self.encoded[idx].as_ref().expect("just memoized").clone())
+    }
+
+    /// The device phase of one request: the arithmetic of the threaded
+    /// `device_loop`, expression for expression. The event fires at
+    /// `max(t_free, times[j])` — the device's virtual cursor after arrival
+    /// pacing — which is `t` here by construction.
+    fn handle_device(&mut self, t: f64, d: usize) -> Result<()> {
+        let (j, id, t_arrival) = {
+            let st = &self.devices[d];
+            (st.next, st.ids[st.next], st.times[st.next])
+        };
+        let idx = id % self.testset.len();
+        let mut local = self.encode(idx)?;
+        let timings_total = local.timings.total_s();
+        match local.frame.take() {
+            Some(frame) => {
+                ensure!(
+                    !self.servers.is_empty(),
+                    "{} produced an uplink frame but has no server half",
+                    self.cfg.scheme.name()
+                );
+                let symbols = local.symbols.take();
+                let st = &mut self.devices[d];
+                // the uplink starts when the device phase is done AND the
+                // radio has finished the previous exchange (schedule-
+                // anchored, identical to the threaded pipeline)
+                let compute_done = t_arrival + timings_total;
+                let tx_start = compute_done.max(st.radio_free);
+                let (body, mut stats) = match (&self.cfg.net.delivery, symbols) {
+                    (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
+                        let bits = frame.bits;
+                        let pkts = self.packetizer.packetize(id as u64, &symbols, bits)?;
+                        let (arrived, stats) = transmit_packets(
+                            &mut st.chan,
+                            &self.cfg.net.delivery,
+                            &pkts,
+                            tx_start,
+                        );
+                        let count = symbols.len();
+                        (UplinkBody::Packets { packets: arrived, count, bits }, stats)
+                    }
+                    _ => {
+                        let stats = transmit_frame(&mut st.chan, frame.wire_bytes(), tx_start);
+                        (UplinkBody::Whole(frame), stats)
+                    }
+                };
+                stats.radio_wait_s = tx_start - compute_done;
+                let tx_bytes = stats.app_bytes_offered;
+                let t_reply = tx_start + stats.uplink_s;
+                let downlink_s = st.chan.transfer_s(t_reply, self.reply);
+                st.radio_free = t_reply + downlink_s;
+                let link = LinkOutcome {
+                    network_s: stats.uplink_s + downlink_s,
+                    airtime_s: stats.airtime_s + st.chan.airtime_s(t_reply, self.reply),
+                    stats,
+                };
+                // the offload reaches the server once the device's own
+                // timeline catches up with the simulated link arrival
+                let t_send = t.max(t_reply);
+                st.awaiting = Some(Awaiting {
+                    j,
+                    id,
+                    body: Some(body),
+                    local,
+                    link,
+                    tx_bytes,
+                    downlink_s,
+                    t_send,
+                });
+                self.schedule(t_send, EventKind::Offload { device: d });
+            }
+            None => {
+                // resolved on device: the local timeline alone
+                let t_done = t + timings_total;
+                self.emit(d, j, id, &local, None, 0, 0.0, None, t_done)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// One offload arrives at the server side: place it on a shard,
+    /// decode, and run the batch policy — the threaded `server_loop`'s
+    /// message branch.
+    fn handle_offload(&mut self, t: f64, d: usize) -> Result<()> {
+        let (id, body) = {
+            let aw = self.devices[d]
+                .awaiting
+                .as_mut()
+                .ok_or_else(|| anyhow!("offload event for device {d} with nothing in flight"))?;
+            (aw.id, aw.body.take().ok_or_else(|| anyhow!("offload body already consumed"))?)
+        };
+        let shard = self.placer.pick(d, |s| self.servers[s].queue.len());
+        let idx = id % self.testset.len();
+        let feats = match &body {
+            UplinkBody::Whole(frame) => {
+                if self.decoded[idx].is_none() {
+                    let feats = self.servers[shard]
+                        .side
+                        .decode(frame)
+                        .with_context(|| format!("decoding request {id}"))?;
+                    self.decoded[idx] = Some(feats);
+                }
+                self.decoded[idx].as_ref().expect("just decoded").clone()
+            }
+            UplinkBody::Packets { packets, count, bits } => self.servers[shard]
+                .side
+                .decode_packets(packets, *count, *bits)
+                .with_context(|| format!("decoding request {id}"))?,
+        };
+        if let Some(batch) = self.servers[shard].queue.push(id as u64, (d, feats), t) {
+            return self.dispatch(shard, batch, t);
+        }
+        if self.servers[shard].queue.len() == 1 {
+            let at = self.servers[shard].queue.next_deadline_at().expect("just pushed");
+            self.schedule(at, EventKind::Deadline { shard });
+        }
+        // mirror the threaded loop's post-message poll: an already-expired
+        // deadline dispatches at the arrival instant
+        if let Some(batch) = self.servers[shard].queue.poll_deadline(t) {
+            return self.dispatch(shard, batch, t);
+        }
+        Ok(())
+    }
+
+    fn handle_deadline(&mut self, t: f64, shard: usize) -> Result<()> {
+        if let Some(batch) = self.servers[shard].queue.poll_deadline(t) {
+            return self.dispatch(shard, batch, t);
+        }
+        Ok(())
+    }
+
+    /// Run one batch through the shard's remote NN and resume every
+    /// waiting device — the threaded `run_batch` + reply delivery.
+    fn dispatch(
+        &mut self,
+        shard: usize,
+        batch: Vec<crate::coordinator::batcher::Pending<(usize, Tensor)>>,
+        t: f64,
+    ) -> Result<()> {
+        let feats: Vec<Tensor> = batch.iter().map(|p| p.payload.1.clone()).collect();
+        let rows = self.servers[shard]
+            .side
+            .infer_batch(&feats)
+            .with_context(|| format!("remote batch of {} failed on server {shard}", batch.len()))?;
+        let agg = &mut self.servers[shard].agg;
+        agg.batched += batch.len();
+        agg.batches += 1;
+        for p in &batch {
+            agg.queue_wait.record(t - p.enqueued);
+        }
+        for (p, row) in batch.into_iter().zip(rows) {
+            let d = p.payload.0;
+            let aw = self.devices[d]
+                .awaiting
+                .take()
+                .ok_or_else(|| anyhow!("reply for device {d} with nothing in flight"))?;
+            let remote_s = t - aw.t_send;
+            let t_done = t + aw.downlink_s;
+            self.emit(
+                d,
+                aw.j,
+                aw.id,
+                &aw.local,
+                Some(&row),
+                aw.tx_bytes,
+                remote_s,
+                Some(&aw.link),
+                t_done,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Assemble and stream one finished request, then advance the device
+    /// to its next arrival.
+    #[allow(clippy::too_many_arguments)]
+    fn emit(
+        &mut self,
+        d: usize,
+        j: usize,
+        id: usize,
+        local: &LocalResult,
+        remote: Option<&[f32]>,
+        tx_bytes: usize,
+        remote_s: f64,
+        link: Option<&LinkOutcome>,
+        t_done: f64,
+    ) -> Result<()> {
+        let idx = id % self.testset.len();
+        let outcome = assemble_outcome(
+            self.fuser.as_ref(),
+            local,
+            remote,
+            self.testset.labels[idx],
+            tx_bytes,
+            remote_s,
+            &self.dev_sim,
+            &self.net_sim,
+            link,
+            self.num_classes,
+        )?;
+        let served = ServedOutcome {
+            id: id as u64,
+            device: d,
+            // sojourn from the scheduled arrival, the sim-clock convention
+            wall_s: t_done - self.devices[d].times[j],
+            outcome,
+        };
+        self.t_end = self.t_end.max(t_done);
+        if self.tx_done.send(served).is_err() {
+            self.stopped = true;
+        }
+        let st = &mut self.devices[d];
+        st.next = j + 1;
+        if st.next < st.ids.len() && !self.stopped {
+            let t_next = st.times[st.next].max(t_done);
+            self.schedule(t_next, EventKind::Device { device: d });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_engine_and_placement_parse() {
+        assert_eq!("event".parse::<SimEngine>().unwrap(), SimEngine::Event);
+        assert_eq!("THREADS".parse::<SimEngine>().unwrap(), SimEngine::Threads);
+        assert!("fibers".parse::<SimEngine>().is_err());
+        assert_eq!(SimEngine::default(), SimEngine::Event);
+        assert_eq!(SimEngine::Event.name(), "event");
+
+        assert_eq!("static".parse::<Placement>().unwrap(), Placement::Static);
+        assert_eq!("rr".parse::<Placement>().unwrap(), Placement::RoundRobin);
+        assert_eq!("round-robin".parse::<Placement>().unwrap(), Placement::RoundRobin);
+        assert_eq!("least".parse::<Placement>().unwrap(), Placement::LeastLoaded);
+        assert!("hash".parse::<Placement>().is_err());
+        assert_eq!(Placement::default(), Placement::Static);
+        for p in [Placement::Static, Placement::RoundRobin, Placement::LeastLoaded] {
+            assert_eq!(p.name().parse::<Placement>().unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn static_placement_is_a_pure_function_of_the_device_index() {
+        let mut p = Placer::new(Placement::Static, 4);
+        // load and call history are irrelevant; renumbering a device
+        // renumbers its shard the same way every time
+        for round in 0..3 {
+            for d in 0..16 {
+                let shard = p.pick(d, |s| (s * 31 + round) % 7);
+                assert_eq!(shard, d % 4, "device {d} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_regardless_of_device() {
+        let mut p = Placer::new(Placement::RoundRobin, 3);
+        let picks: Vec<usize> =
+            [7usize, 7, 7, 0, 1, 2, 9].iter().map(|&d| p.pick(d, |_| 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_loaded_picks_the_minimum_and_rotates_ties() {
+        let mut p = Placer::new(Placement::LeastLoaded, 4);
+        // cursor at 0: the strict minimum (two servers tie at 1) is taken
+        // in rotation order -> server 1; cursor moves past it
+        let loads = [3usize, 1, 4, 1];
+        assert_eq!(p.pick(0, |s| loads[s]), 1, "first minimum in rotation order");
+        // flat depths degenerate to round-robin from the cursor (now 2)
+        let uniform = [2usize, 2, 2, 2];
+        assert_eq!(p.pick(5, |s| uniform[s]), 2);
+        assert_eq!(p.pick(5, |s| uniform[s]), 3);
+        assert_eq!(p.pick(5, |s| uniform[s]), 0);
+        // a strictly emptier server still wins over the rotation
+        let empty_last = [5usize, 4, 3, 0];
+        assert_eq!(p.pick(1, |s| empty_last[s]), 3);
+    }
+
+    #[test]
+    fn least_loaded_on_empty_queues_is_round_robin() {
+        // the serving fleet's common case: queues drained between bursts.
+        // A lowest-index tie-break would return 0 forever and overload one
+        // shard; the rotation spreads the burst evenly.
+        let mut p = Placer::new(Placement::LeastLoaded, 3);
+        let picks: Vec<usize> = (0..7).map(|d| p.pick(d, |_| 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn event_heap_orders_by_time_then_schedule_order() {
+        let mut heap = BinaryHeap::new();
+        let ev = |t: f64, seq: u64| Ev { t, seq, kind: EventKind::Deadline { shard: 0 } };
+        heap.push(ev(2.0, 0));
+        heap.push(ev(1.0, 3));
+        heap.push(ev(1.0, 1));
+        heap.push(ev(0.5, 4));
+        let order: Vec<(f64, u64)> =
+            std::iter::from_fn(|| heap.pop()).map(|e| (e.t, e.seq)).collect();
+        assert_eq!(order, vec![(0.5, 4), (1.0, 1), (1.0, 3), (2.0, 0)]);
+    }
+}

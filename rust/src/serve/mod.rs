@@ -32,17 +32,28 @@
 //! decodes whatever arrived). The defaults reproduce the ideal link.
 //!
 //! The pipeline's timeline is pluggable ([`clock`]):
-//! `ServeBuilder::clock(ClockKind::Sim)` swaps the wall clock for a
-//! shared discrete-event virtual clock — arrival pacing, batch deadlines
-//! and reply waits play out in virtual time without ever sleeping, so
-//! 100k+-request load sweeps run at CPU speed and every latency quantile
-//! in the [`PipelineReport`] becomes seed-deterministic.
+//! `ServeBuilder::clock(ClockKind::Sim)` swaps the wall clock for
+//! discrete-event virtual time — arrival pacing, batch deadlines and
+//! reply waits play out without ever sleeping, so sustained-load sweeps
+//! run at CPU speed and every latency quantile in the [`PipelineReport`]
+//! becomes seed-deterministic.
+//!
+//! Sim runs execute on the single-threaded fleet [`engine`] (bitwise-
+//! equivalent to the legacy thread-per-device fabric, which remains
+//! selectable via `ServeBuilder::sim_engine`), which scales to millions
+//! of requests across tens of thousands of devices and adds the
+//! multi-server axis: `ServeBuilder::{servers,placement}` shards the
+//! batch queue across N servers under a static / round-robin /
+//! least-loaded device→server [`Placement`] policy, with per-shard
+//! load/latency in [`PipelineReport::shards`].
 
 pub mod clock;
+pub mod engine;
 pub mod scheme;
 pub mod service;
 
 pub use clock::{Clock, ClockKind};
+pub use engine::{Placement, SimEngine};
 pub use scheme::{
     make_device_side, make_fuser, make_server_side, reply_bytes, AgileDevice, AlphaFuser,
     DeepcodDevice, DeviceSide, EdgeDevice, Fuser, LocalArgmaxFuser, LocalResult, McunetDevice,
@@ -50,4 +61,5 @@ pub use scheme::{
 };
 pub use service::{
     OutcomeStream, PipelineReport, RemoteFailure, ServeBuilder, ServedOutcome, Service,
+    ShardReport,
 };

@@ -36,7 +36,9 @@ pub fn reply_bytes(num_classes: usize) -> usize {
 }
 
 /// Result of the on-device phase for one request, scheme-agnostic.
-#[derive(Debug)]
+/// `Clone` because the fleet engine memoizes encodes per test-set sample
+/// (encode is a pure function of the input) and hands out copies.
+#[derive(Debug, Clone)]
 pub struct LocalResult {
     /// On-device logits (empty when the scheme has no device-side head).
     pub local_logits: Vec<f32>,

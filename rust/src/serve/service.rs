@@ -33,6 +33,7 @@ use crate::net::{
 };
 use crate::runtime::{make_backend, Backend};
 use crate::serve::clock::{Clock, ClockKind};
+use crate::serve::engine::{self, FleetSpec, Placement, SimEngine};
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
 };
@@ -55,7 +56,9 @@ use std::time::{Duration, Instant};
 /// bit-identical values. `mean_net_s`, `mean_radio_wait_s` and
 /// `goodput_bps` (whose airtime denominator is an f64 sum) are
 /// deterministic up to f64 summation order (outcomes are accumulated in
-/// stream-arrival order, which thread scheduling can permute). The
+/// stream-arrival order, which thread scheduling can permute on the
+/// threaded paths; the sim clock's event engine emits in deterministic
+/// event order, so there even these means reproduce bitwise). The
 /// remaining fields depend on the clock
 /// ([`ServeBuilder::clock`]): under the wall clock (the default) `wall_s`,
 /// `throughput_rps`, the latency quantiles, and the batch counters measure
@@ -72,8 +75,14 @@ pub struct PipelineReport {
     pub accuracy: f64,
     pub mean_latency_s: f64,
     pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
     pub mean_batch_size: f64,
     pub batches: usize,
+    /// per-server batch/queue accounting, indexed by server (one entry on
+    /// the single-server paths; empty for local-only schemes, which have
+    /// no server half). Multi-server topologies exist only on the sim
+    /// clock's event engine ([`ServeBuilder::servers`]).
+    pub shards: Vec<ShardReport>,
     /// packets pushed into the simulated channel, retransmissions included
     pub packets_sent: u64,
     /// packets the channel dropped
@@ -98,6 +107,113 @@ pub struct PipelineReport {
     /// (deterministic; 0 when the offered load never contends the link or
     /// nothing offloaded)
     pub mean_radio_wait_s: f64,
+}
+
+impl PipelineReport {
+    /// Deterministic machine-readable form: insertion-ordered JSON (see
+    /// [`crate::report::JsonObj`]), so two runs with identical reports
+    /// serialize byte-identically — the property golden snapshots and the
+    /// CI perf-gate artifacts key on.
+    pub fn to_ordered_json(&self) -> String {
+        use crate::report::{json_array, JsonObj};
+        let shards = json_array(self.shards.iter().map(|s| {
+            JsonObj::new()
+                .field_usize("server", s.server)
+                .field_usize("requests", s.requests)
+                .field_usize("batches", s.batches)
+                .field_f64("mean_batch_size", s.mean_batch_size)
+                .field_f64("mean_queue_s", s.mean_queue_s)
+                .field_f64("p95_queue_s", s.p95_queue_s)
+                .finish()
+        }));
+        JsonObj::new()
+            .field_usize("requests", self.requests)
+            .field_str("clock", self.clock.name())
+            .field_f64("wall_s", self.wall_s)
+            .field_f64("throughput_rps", self.throughput_rps)
+            .field_f64("accuracy", self.accuracy)
+            .field_f64("mean_latency_s", self.mean_latency_s)
+            .field_f64("p95_latency_s", self.p95_latency_s)
+            .field_f64("p99_latency_s", self.p99_latency_s)
+            .field_f64("mean_batch_size", self.mean_batch_size)
+            .field_usize("batches", self.batches)
+            .field_raw("shards", &shards)
+            .field_u64("packets_sent", self.packets_sent)
+            .field_u64("packets_lost", self.packets_lost)
+            .field_u64("retransmit_rounds", self.retransmit_rounds)
+            .field_usize("incomplete_frames", self.incomplete_frames)
+            .field_f64("delivered_feature_rate", self.delivered_feature_rate)
+            .field_f64("goodput_bps", self.goodput_bps)
+            .field_f64("mean_net_s", self.mean_net_s)
+            .field_f64("p99_net_s", self.p99_net_s)
+            .field_f64("mean_radio_wait_s", self.mean_radio_wait_s)
+            .finish()
+    }
+}
+
+/// Per-server load/latency accounting of one run.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub server: usize,
+    /// offloaded requests this server batched
+    pub requests: usize,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    /// batch-queue wait (enqueue → dispatch), deterministic in sim mode
+    pub mean_queue_s: f64,
+    pub p95_queue_s: f64,
+}
+
+/// Accumulating form of [`ShardReport`], shared by the threaded server
+/// loop and the event engine.
+#[derive(Debug, Default)]
+pub(crate) struct ShardAgg {
+    pub batched: usize,
+    pub batches: usize,
+    pub queue_wait: LatencyStats,
+}
+
+impl ShardAgg {
+    fn into_report(mut self, server: usize) -> ShardReport {
+        ShardReport {
+            server,
+            requests: self.batched,
+            batches: self.batches,
+            mean_batch_size: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched as f64 / self.batches as f64
+            },
+            mean_queue_s: self.queue_wait.mean_s(),
+            p95_queue_s: self.queue_wait.p95(),
+        }
+    }
+}
+
+/// Request ids and arrival timestamps for one device: round-robin request
+/// assignment plus the per-device periodic phase tie-break. One
+/// implementation for both execution paths (threads and event engine), so
+/// their schedules cannot drift — the phase keeps lockstep periodic
+/// sensors off bit-identical virtual instants (see the comment in
+/// [`Service::stream`]); Poisson streams are decorrelated by
+/// `Arrival::for_device`.
+pub(crate) fn device_schedule(
+    arrival: &Arrival,
+    devices: usize,
+    requests: usize,
+    d: usize,
+) -> (Vec<usize>, Vec<f64>) {
+    let ids: Vec<usize> = (d..requests).step_by(devices).collect();
+    let mut times = arrival.for_device(d).timestamps(ids.len());
+    if let Arrival::Periodic { hz } = *arrival {
+        if hz > 0.0 {
+            let phase = d as f64 * 1e-6 / hz;
+            for t in &mut times {
+                *t += phase;
+            }
+        }
+    }
+    (ids, times)
 }
 
 /// One per-request outcome as it streams out of the live pipeline.
@@ -129,8 +245,10 @@ type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
 /// the waiting device's reply channel.
 type BatchItem = (Tensor, Sender<Reply>);
 
-/// What actually crossed the (simulated) wire for one offload.
-enum UplinkBody {
+/// What actually crossed the (simulated) wire for one offload. Shared
+/// with the event engine ([`super::engine`]), which builds the same
+/// bodies from the same transmit calls.
+pub(crate) enum UplinkBody {
     /// intact LZW frame (ARQ transport: only decodable when complete)
     Whole(Frame),
     /// whatever packets arrived in time (anytime transport: the server
@@ -169,6 +287,9 @@ pub struct ServeBuilder {
     net: crate::net::NetConfig,
     clock: ClockKind,
     arrival_seed: Option<u64>,
+    servers: usize,
+    placement: Placement,
+    sim_engine: SimEngine,
 }
 
 impl ServeBuilder {
@@ -190,6 +311,9 @@ impl ServeBuilder {
             net: crate::net::NetConfig::default(),
             clock: ClockKind::Wall,
             arrival_seed: None,
+            servers: 1,
+            placement: Placement::default(),
+            sim_engine: SimEngine::default(),
         }
     }
 
@@ -260,6 +384,30 @@ impl ServeBuilder {
     /// sweeps at CPU speed).
     pub fn clock(mut self, clock: ClockKind) -> Self {
         self.clock = clock;
+        self
+    }
+
+    /// Number of remote servers, each with its own batch queue (default
+    /// 1). `servers > 1` requires the sim clock's event engine — the
+    /// threaded paths reject it at `stream()`.
+    pub fn servers(mut self, n: usize) -> Self {
+        self.servers = n;
+        self
+    }
+
+    /// Device→server placement policy for multi-server topologies
+    /// (default: [`Placement::Static`], `server = device % servers`).
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    /// How [`ClockKind::Sim`] executes (default: the single-threaded
+    /// discrete-event [`SimEngine::Event`] fleet engine; the legacy
+    /// [`SimEngine::Threads`] fabric is the bitwise-equivalence oracle).
+    /// No effect on the wall clock.
+    pub fn sim_engine(mut self, engine: SimEngine) -> Self {
+        self.sim_engine = engine;
         self
     }
 
@@ -375,7 +523,9 @@ impl ServeBuilder {
             None => self.arrival,
         };
         Ok(Service::from_parts(cfg, meta, testset, self.devices, self.requests, arrival)?
-            .with_clock(self.clock))
+            .with_clock(self.clock)
+            .with_servers(self.servers, self.placement)
+            .with_sim_engine(self.sim_engine))
     }
 }
 
@@ -388,6 +538,9 @@ pub struct Service {
     requests: usize,
     arrival: Arrival,
     clock: ClockKind,
+    servers: usize,
+    placement: Placement,
+    sim_engine: SimEngine,
 }
 
 impl Service {
@@ -406,12 +559,36 @@ impl Service {
         ensure!(devices >= 1, "need at least one device");
         ensure!(requests >= 1, "need at least one request");
         ensure!(!testset.is_empty(), "empty test set");
-        Ok(Self { cfg, meta, testset, devices, requests, arrival, clock: ClockKind::Wall })
+        Ok(Self {
+            cfg,
+            meta,
+            testset,
+            devices,
+            requests,
+            arrival,
+            clock: ClockKind::Wall,
+            servers: 1,
+            placement: Placement::default(),
+            sim_engine: SimEngine::default(),
+        })
     }
 
     /// Select the clock driving the run (default: wall).
     pub fn with_clock(mut self, clock: ClockKind) -> Self {
         self.clock = clock;
+        self
+    }
+
+    /// Select the server topology (default: one server, static placement).
+    pub fn with_servers(mut self, servers: usize, placement: Placement) -> Self {
+        self.servers = servers;
+        self.placement = placement;
+        self
+    }
+
+    /// Select the sim execution engine (default: the event engine).
+    pub fn with_sim_engine(mut self, engine: SimEngine) -> Self {
+        self.sim_engine = engine;
         self
     }
 
@@ -432,7 +609,25 @@ impl Service {
     /// outcomes. Dropping the stream without `finish()` is safe: device
     /// threads stop producing once the receiver is gone and every worker
     /// winds down.
+    ///
+    /// Routing: the sim clock runs on the single-threaded discrete-event
+    /// fleet engine ([`SimEngine::Event`], bitwise-equivalent to the
+    /// threaded fabric) unless [`Service::with_sim_engine`] opts back into
+    /// threads; the wall clock always runs the threaded pipeline.
+    /// Multi-server topologies (`servers > 1`) exist only on the engine.
     pub fn stream(self) -> Result<OutcomeStream> {
+        ensure!(self.servers >= 1, "need at least one server");
+        let use_engine = self.clock == ClockKind::Sim && self.sim_engine == SimEngine::Event;
+        if use_engine {
+            return self.stream_engine();
+        }
+        ensure!(
+            self.servers == 1,
+            "multi-server topologies require the sim clock's event engine \
+             (clock sim + sim-engine event), not {} clock / {} engine",
+            self.clock.name(),
+            self.sim_engine.name()
+        );
         let backend: Arc<dyn Backend> = make_backend(&self.cfg, &self.meta)?;
         let server = make_server_side(backend.as_ref(), &self.cfg, &self.meta)?;
         // some schemes export fewer remote batch sizes (edge-only: max 4)
@@ -470,8 +665,6 @@ impl Service {
             let tx_offload = tx_offload.clone();
             let tx_done = tx_done.clone();
             let clock = clock.clone();
-            let ids: Vec<usize> = (0..self.requests).filter(|i| i % self.devices == d).collect();
-            let mut times = self.arrival.for_device(d).timestamps(ids.len());
             // break exact cross-device event-time ties deterministically:
             // lockstep periodic sensors get a vanishing per-device phase
             // of (device index) ppm of the period, so the server never
@@ -479,15 +672,9 @@ impl Service {
             // instant. Scaling by the period keeps the phase off the
             // arrival grid at every rate (a fixed offset would collide
             // with the unpaced 1e9 Hz grid); Poisson streams are already
-            // decorrelated by for_device.
-            if let Arrival::Periodic { hz } = self.arrival {
-                if hz > 0.0 {
-                    let phase = d as f64 * 1e-6 / hz;
-                    for t in &mut times {
-                        *t += phase;
-                    }
-                }
-            }
+            // decorrelated by for_device. One implementation with the
+            // event engine (`device_schedule`), so the paths agree bitwise.
+            let (ids, times) = device_schedule(&self.arrival, self.devices, self.requests, d);
             device_handles.push(std::thread::spawn(move || {
                 device_loop(
                     d,
@@ -508,9 +695,42 @@ impl Service {
 
         Ok(OutcomeStream {
             rx: rx_done,
-            device_handles,
-            server_handle,
-            clock,
+            handle: RunHandle::Threads { device_handles, server_handle, clock },
+            acc: AccuracyCounter::default(),
+            lat: LatencyStats::new(),
+            net_lat: LatencyStats::new(),
+            net: NetAgg::default(),
+        })
+    }
+
+    /// The event-engine path: one background thread runs the whole fleet
+    /// and streams outcomes through the same channel the threaded path
+    /// uses, so `OutcomeStream` consumers cannot tell them apart.
+    fn stream_engine(self) -> Result<OutcomeStream> {
+        // resolve the backend up front so configuration errors surface
+        // from stream() rather than at finish()
+        let backend: Arc<dyn Backend> = make_backend(&self.cfg, &self.meta)?;
+        let (tx_done, rx_done) = channel::<ServedOutcome>();
+        let spec = FleetSpec {
+            devices: self.devices,
+            requests: self.requests,
+            arrival: self.arrival,
+            servers: self.servers,
+            placement: self.placement,
+        };
+        let handle = std::thread::spawn(move || {
+            engine::run_fleet(
+                backend.as_ref(),
+                &self.cfg,
+                &self.meta,
+                &self.testset,
+                &spec,
+                &tx_done,
+            )
+        });
+        Ok(OutcomeStream {
+            rx: rx_done,
+            handle: RunHandle::Engine { handle },
             acc: AccuracyCounter::default(),
             lat: LatencyStats::new(),
             net_lat: LatencyStats::new(),
@@ -573,13 +793,24 @@ impl NetAgg {
 /// for the aggregate [`PipelineReport`].
 pub struct OutcomeStream {
     rx: Receiver<ServedOutcome>,
-    device_handles: Vec<JoinHandle<Result<()>>>,
-    server_handle: Option<JoinHandle<(usize, usize)>>,
-    clock: Clock,
+    handle: RunHandle,
     acc: AccuracyCounter,
     lat: LatencyStats,
     net_lat: LatencyStats,
     net: NetAgg,
+}
+
+/// The worker fabric behind an [`OutcomeStream`]: the threaded pipeline
+/// (wall clock or legacy sim fabric) or the event engine's run thread.
+enum RunHandle {
+    Threads {
+        device_handles: Vec<JoinHandle<Result<()>>>,
+        server_handle: Option<JoinHandle<ShardAgg>>,
+        clock: Clock,
+    },
+    Engine {
+        handle: JoinHandle<Result<engine::EngineRun>>,
+    },
 }
 
 impl Iterator for OutcomeStream {
@@ -600,35 +831,53 @@ impl Iterator for OutcomeStream {
 }
 
 impl OutcomeStream {
-    /// Drain any remaining outcomes, join the worker threads, and return
-    /// the aggregate report. Worker errors (device or server) surface here.
+    /// Drain any remaining outcomes, join the worker threads (or the
+    /// engine thread), and return the aggregate report. Worker errors
+    /// surface here.
     pub fn finish(mut self) -> Result<PipelineReport> {
         while self.next().is_some() {}
-        for h in self.device_handles.drain(..) {
-            h.join().map_err(|_| anyhow!("device thread panicked"))??;
-        }
-        let (total_batched, batches) = match self.server_handle.take() {
-            Some(h) => h.join().map_err(|_| anyhow!("server thread panicked"))?,
-            None => (0, 0),
+        let (clock_kind, wall, shard_aggs) = match self.handle {
+            RunHandle::Threads { device_handles, server_handle, clock } => {
+                for h in device_handles {
+                    h.join().map_err(|_| anyhow!("device thread panicked"))??;
+                }
+                let aggs = match server_handle {
+                    Some(h) => {
+                        vec![h.join().map_err(|_| anyhow!("server thread panicked"))?]
+                    }
+                    None => Vec::new(),
+                };
+                // host seconds on the wall clock; final virtual time on
+                // the sim clock (all participants have deregistered by
+                // now, so this is the timestamp of the last simulated
+                // event)
+                (clock.kind(), clock.now(), aggs)
+            }
+            RunHandle::Engine { handle } => {
+                let run = handle.join().map_err(|_| anyhow!("engine thread panicked"))??;
+                (ClockKind::Sim, run.wall_s, run.shards)
+            }
         };
-        // host seconds on the wall clock; final virtual time on the sim
-        // clock (all participants have deregistered by now, so this is
-        // the timestamp of the last simulated event)
-        let wall = self.clock.now();
+        let total_batched: usize = shard_aggs.iter().map(|a| a.batched).sum();
+        let batches: usize = shard_aggs.iter().map(|a| a.batches).sum();
+        let shards: Vec<ShardReport> =
+            shard_aggs.into_iter().enumerate().map(|(i, a)| a.into_report(i)).collect();
         Ok(PipelineReport {
             requests: self.acc.total,
-            clock: self.clock.kind(),
+            clock: clock_kind,
             wall_s: wall,
             throughput_rps: if wall > 0.0 { self.acc.total as f64 / wall } else { 0.0 },
             accuracy: self.acc.accuracy(),
             mean_latency_s: self.lat.mean_s(),
             p95_latency_s: self.lat.p95(),
+            p99_latency_s: self.lat.p99(),
             mean_batch_size: if batches == 0 {
                 0.0
             } else {
                 total_batched as f64 / batches as f64
             },
             batches,
+            shards,
             packets_sent: self.net.packets_sent,
             packets_lost: self.net.packets_lost,
             retransmit_rounds: self.net.retransmit_rounds,
@@ -697,17 +946,24 @@ fn server_loop(
     max_batch: usize,
     deadline_s: f64,
     clock: Clock,
-) -> (usize, usize) {
+) -> ShardAgg {
     let _participant = clock.participant();
     let mut queue: BatchQueue<BatchItem> = BatchQueue::new(max_batch, deadline_s);
-    let mut total_batched = 0usize;
-    let mut batches = 0usize;
+    let mut agg = ShardAgg::default();
     let mut run_batch = |batch: Vec<Pending<BatchItem>>, server: &mut dyn ServerSide| {
         let feats: Vec<_> = batch.iter().map(|p| p.payload.0.clone()).collect();
+        // dispatch instant, taken before the batch executes: queue wait is
+        // enqueue → dispatch on both clocks (under the sim clock virtual
+        // time is frozen during inference anyway; under the wall clock a
+        // post-inference read would fold remote execution into the wait)
+        let dispatched = clock.now();
         match server.infer_batch(&feats) {
             Ok(rows) => {
-                total_batched += batch.len();
-                batches += 1;
+                agg.batched += batch.len();
+                agg.batches += 1;
+                for p in &batch {
+                    agg.queue_wait.record(dispatched - p.enqueued);
+                }
                 for (p, row) in batch.into_iter().zip(rows) {
                     send_reply(&clock, &p.payload.1, Ok(row));
                 }
@@ -771,7 +1027,7 @@ fn server_loop(
     if !tail.is_empty() {
         run_batch(tail, server.as_mut());
     }
-    (total_batched, batches)
+    agg
 }
 
 /// Receive the server reply: a plain blocking `recv` under the wall clock,
