@@ -1,0 +1,120 @@
+//! Autotuner demonstration (`bench --figure tune`): search the serving
+//! config space with the fleet engine as the evaluator and print the
+//! Pareto fronts both strategies find.
+//!
+//! Two tables:
+//!
+//! 1. exhaustive sweep of the default 8-point grid (2 batch deadlines ×
+//!    2 quantizer widths × 2 server counts) — every point evaluated, the
+//!    non-dominated subset shown;
+//! 2. a seeded genetic search over a wider 64-point space under a small
+//!    evaluation budget — what a long search's front looks like when
+//!    exhaustion is off the table.
+//!
+//! Both searches are in-memory here (no `--state`); the durable-resume
+//! path is exercised by the integration suite and the CI smoke leg.
+
+use super::common::EvalCtx;
+use crate::net::DeliveryPolicy;
+use crate::report::{ms, pct, Table};
+use crate::serve::Placement;
+use crate::tune::{self, EvalSpec, Objectives, SearchSpace, StrategyKind, TuneConfig, TunePoint};
+use anyhow::Result;
+
+fn eval_spec(ctx: &EvalCtx, dataset: &str) -> EvalSpec {
+    EvalSpec {
+        artifacts_dir: Some(ctx.artifacts_dir.clone()),
+        dataset: dataset.to_string(),
+        backend: ctx.backend_kind,
+        devices: 16,
+        requests: 4000,
+        rate_hz: 50.0,
+        ..EvalSpec::default()
+    }
+}
+
+fn front_table(title: String, front: &[(TunePoint, Objectives)]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "deadline_us",
+            "bits",
+            "delivery",
+            "placement",
+            "servers",
+            "accuracy",
+            "p99_ms",
+            "goodput_kbps",
+            "server_s",
+        ],
+    );
+    for (p, o) in front {
+        t.row(vec![
+            p.batch_deadline_us.to_string(),
+            p.bits.to_string(),
+            p.delivery.name().into(),
+            p.placement.name().into(),
+            p.servers.to_string(),
+            pct(o.accuracy),
+            ms(o.p99_latency_s),
+            format!("{:.1}", o.goodput_bps / 1e3),
+            format!("{:.2}", o.server_seconds),
+        ]);
+    }
+    t
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let ds = ctx.datasets.first().cloned().unwrap_or_else(|| "synthetic".into());
+    let mut tables = Vec::new();
+
+    // 1) exhaustive over the default grid
+    let cfg = TuneConfig {
+        space: SearchSpace::default(),
+        eval: eval_spec(ctx, &ds),
+        strategy: StrategyKind::Exhaustive,
+        state: None,
+        out: None,
+        stop_after: None,
+    };
+    let grid = cfg.space.len();
+    let out = tune::run(&cfg, |_| {})?;
+    tables.push(front_table(
+        format!(
+            "Tune [{ds}]: exhaustive front — {} of {grid} grid points non-dominated \
+             ({} infeasible)",
+            out.front.len(),
+            out.infeasible
+        ),
+        &out.front,
+    ));
+
+    // 2) seeded genetic over a wider space, budget-bounded
+    let cfg = TuneConfig {
+        space: SearchSpace {
+            batch_deadline_us: vec![250, 500, 1000, 2000],
+            packet_payload: vec![None],
+            bits: vec![1, 2, 4, 8],
+            delivery: vec![DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.005 }],
+            placement: vec![Placement::Static],
+            servers: vec![1, 2],
+        },
+        eval: eval_spec(ctx, &ds),
+        strategy: StrategyKind::Genetic { seed: 7, population: 8, budget: 24 },
+        state: None,
+        out: None,
+        stop_after: None,
+    };
+    let wide = cfg.space.len();
+    let out = tune::run(&cfg, |_| {})?;
+    tables.push(front_table(
+        format!(
+            "Tune [{ds}]: genetic front (seed 7, budget 24 of {wide} points) — \
+             {} evaluated, {} non-dominated",
+            out.evaluated,
+            out.front.len()
+        ),
+        &out.front,
+    ));
+    Ok(tables)
+}

@@ -17,8 +17,11 @@
 //!   time or seed-deterministic discrete-event virtual time), a
 //!   single-threaded discrete-event fleet engine ([`serve::engine`]:
 //!   million-request multi-server sweeps with pluggable device→server
-//!   placement), a CI perf-regression gate ([`perfgate`]), and the bench
-//!   harness regenerating every figure/table in the paper's evaluation.
+//!   placement), a resumable serving autotuner ([`tune`]: exhaustive or
+//!   seeded-genetic search over the serving knobs, Pareto-ranked with the
+//!   fleet engine as its evaluator), a CI perf-regression gate
+//!   ([`perfgate`]), and the bench harness regenerating every
+//!   figure/table in the paper's evaluation.
 //!   Python is never on the request path.
 //!
 //! Inference is pluggable ([`runtime::Backend`]): the PJRT backend (cargo
@@ -77,5 +80,6 @@ pub mod runtime;
 pub mod serve;
 pub mod simulator;
 pub mod tensor;
+pub mod tune;
 pub mod workload;
 pub mod xai;

@@ -1,6 +1,6 @@
 //! AgileNN CLI: serve (multi-device batched pipeline, any scheme), infer
 //! (single request, verbose), bench (regenerate a paper figure/table),
-//! report (summary).
+//! tune (Pareto autotuner over the serving knobs), report (summary).
 //!
 //! Argument parsing is hand-rolled (`Args` below) — the build environment
 //! vendors only the xla dependency tree.
@@ -13,6 +13,7 @@ use agilenn::perfgate;
 use agilenn::report::{ms, pct};
 use agilenn::runtime::make_backend;
 use agilenn::serve::{ClockKind, Placement, ServeBuilder, SimEngine};
+use agilenn::tune::{self, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
@@ -117,10 +118,42 @@ COMMANDS:
              --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|all
              --backend pjrt|reference  (reference: artifact-free sweeps
                                  on the synthetic model family)
+  tune     search the serving-knob space with the fleet engine as the
+           evaluator; prints (and optionally writes) the Pareto front
+           over {accuracy, p99_latency_s, goodput_bps, server_seconds}
+           search axes (comma lists; the cross product is the grid):
+             --deadlines-us 500,2000  batch deadlines, microseconds
+             --payloads mtu          anytime payload caps (mtu = link MTU)
+             --bits 2,4              quantizer widths
+             --delivery arq          uplink transports (arq,anytime)
+             --net-deadline-ms 5     anytime decode deadline
+             --placements static     device->server policies (static,rr,least)
+             --servers 1,2           server counts
+           evaluation (shared by every point; defaults are the fast
+           deterministic path — reference backend on the sim clock's
+           event engine):
+             --dataset synthetic --scheme agile --backend reference
+             --devices 16 --requests 4000 --rate-hz 50
+             --arrival-seed 11 --net-seed 42 --loss 0 --burst 1
+             --max-batch 8 --clock sim --sim-engine event
+           strategy:
+             --strategy exhaustive|genetic
+             --seed 1 --pop 8 --budget 64   (genetic knobs)
+           state / output:
+             --state PATH    resumable saved state (+ PATH.log.jsonl);
+                             re-running with the same PATH skips already-
+                             completed evaluations and yields a front
+                             byte-identical to an uninterrupted run
+             --stop-after K  pause this invocation after K new evaluations
+             --out FILE      write the ordered-JSON front artifact
+             --quiet         suppress per-evaluation progress
   perfgate run the CI perf-regression suite (fleet engine + serving hot
-           paths, reference backend), write deterministic JSON, and fail
-           on a throughput regression vs a baseline
-             --out BENCH_5.json  where to write the measurements
+           paths + autotuner evaluator, reference backend), write
+           deterministic JSON, and fail on a throughput regression vs a
+           baseline
+             --out BENCH_6.json  where to write the measurements
+             --pointer FILE      also write a self-describing repo-root
+                                 pointer (git SHA + measured entry names)
              --baseline FILE     compare against this JSON (committed
                                  floors live in rust/bench/baseline.json)
              --tolerance 0.20    allowed fractional regression
@@ -302,8 +335,99 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "tune" => {
+            let quiet: bool = args.get("quiet", false)?;
+            let net_deadline_ms: f64 = args.get("net-deadline-ms", 5.0)?;
+            let space = SearchSpace {
+                batch_deadline_us: tune::space::parse_list(
+                    &args.get_str("deadlines-us", "500,2000"),
+                )?,
+                packet_payload: tune::space::parse_payloads(&args.get_str("payloads", "mtu"))?,
+                bits: tune::space::parse_list(&args.get_str("bits", "2,4"))?,
+                delivery: tune::space::parse_deliveries(
+                    &args.get_str("delivery", "arq"),
+                    net_deadline_ms * 1e-3,
+                )?,
+                placement: tune::space::parse_placements(&args.get_str("placements", "static"))?,
+                servers: tune::space::parse_list(&args.get_str("servers", "1,2"))?,
+            };
+            let eval = EvalSpec {
+                artifacts_dir: Some(artifacts),
+                dataset: args.get_str("dataset", agilenn::fixtures::SYNTHETIC_DATASET),
+                backend: args.get("backend", BackendKind::Reference)?,
+                scheme: args.get_str("scheme", "agile").parse()?,
+                devices: args.get("devices", 16)?,
+                requests: args.get("requests", 4000)?,
+                rate_hz: args.get("rate-hz", 50.0)?,
+                arrival_seed: args.get("arrival-seed", 11u64)?,
+                net_seed: args.get("net-seed", 42u64)?,
+                loss: args.get("loss", 0.0)?,
+                burst: args.get("burst", 1.0)?,
+                max_batch: args.get("max-batch", 8)?,
+                clock: args.get("clock", ClockKind::Sim)?,
+                sim_engine: args.get("sim-engine", SimEngine::Event)?,
+            };
+            let strategy = match args.get_str("strategy", "exhaustive").parse::<StrategyKind>()? {
+                StrategyKind::Exhaustive => StrategyKind::Exhaustive,
+                StrategyKind::Genetic { .. } => StrategyKind::Genetic {
+                    seed: args.get("seed", 1u64)?,
+                    population: args.get("pop", 8)?,
+                    budget: args.get("budget", 64)?,
+                },
+            };
+            let stop_after = match args.flags.get("stop-after") {
+                Some(v) => Some(v.parse()?),
+                None => None,
+            };
+            let cfg = TuneConfig {
+                space,
+                eval,
+                strategy,
+                state: args.flags.get("state").map(PathBuf::from),
+                out: args.flags.get("out").map(PathBuf::from),
+                stop_after,
+            };
+            println!(
+                "tune: {} strategy over a {}-point grid ({} backend, {} clock, {} engine)",
+                cfg.strategy.name(),
+                cfg.space.len(),
+                cfg.eval.backend.name(),
+                cfg.eval.clock.name(),
+                cfg.eval.sim_engine.name()
+            );
+            let outcome = tune::run(&cfg, |line| {
+                if !quiet {
+                    println!("  {line}");
+                }
+            })?;
+            println!(
+                "{}: {} evaluated, {} cached, {} infeasible, front size {}",
+                if outcome.completed {
+                    "search complete"
+                } else {
+                    "search interrupted (re-run with the same --state to resume)"
+                },
+                outcome.evaluated,
+                outcome.cached,
+                outcome.infeasible,
+                outcome.front.len()
+            );
+            for (p, o) in &outcome.front {
+                println!(
+                    "  front: acc {}  p99 {} ms  goodput {:.1} kbps  server-s {:.2}  <- {}",
+                    pct(o.accuracy),
+                    ms(o.p99_latency_s),
+                    o.goodput_bps / 1e3,
+                    o.server_seconds,
+                    p.key()
+                );
+            }
+            if let Some(path) = &cfg.out {
+                println!("wrote {}", path.display());
+            }
+        }
         "perfgate" => {
-            let out = args.get_str("out", "BENCH_5.json");
+            let out = args.get_str("out", "BENCH_6.json");
             let tolerance: f64 = args.get("tolerance", perfgate::DEFAULT_TOLERANCE)?;
             let gcfg = perfgate::GateConfig {
                 requests: args.get("requests", 1_000_000)?,
@@ -323,6 +447,10 @@ fn main() -> Result<()> {
             })?;
             std::fs::write(&out, report.to_json())?;
             println!("wrote {out}");
+            if let Some(ptr) = args.flags.get("pointer") {
+                std::fs::write(ptr, perfgate::pointer_json(&report, &out))?;
+                println!("wrote {ptr}");
+            }
             if let Some(baseline_path) = args.flags.get("baseline") {
                 let baseline = perfgate::PerfReport::load(std::path::Path::new(baseline_path))?;
                 let failures = perfgate::check(&report, &baseline, tolerance);
@@ -430,6 +558,52 @@ mod tests {
     #[test]
     fn non_flag_token_errors() {
         assert!(Args::from_iter(["serve".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn tune_flags_parse_through_args() {
+        use agilenn::net::DeliveryPolicy;
+        use agilenn::tune::{space, StrategyKind};
+        let a = parse(&[
+            "tune",
+            "--deadlines-us",
+            "500,2000",
+            "--bits",
+            "2,4",
+            "--delivery",
+            "arq,anytime",
+            "--servers",
+            "1,2",
+            "--strategy",
+            "genetic",
+            "--budget",
+            "16",
+            "--stop-after",
+            "3",
+        ]);
+        assert_eq!(
+            space::parse_list::<u64>(&a.get_str("deadlines-us", "")).unwrap(),
+            vec![500, 2000]
+        );
+        assert_eq!(space::parse_list::<u32>(&a.get_str("bits", "")).unwrap(), vec![2, 4]);
+        assert_eq!(
+            space::parse_deliveries(&a.get_str("delivery", ""), 0.005).unwrap(),
+            vec![DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.005 }]
+        );
+        let s: StrategyKind = a.get_str("strategy", "exhaustive").parse().unwrap();
+        assert_eq!(s.name(), "genetic");
+        assert_eq!(a.get::<usize>("budget", 64).unwrap(), 16);
+        assert_eq!(a.get::<usize>("stop-after", 0).unwrap(), 3);
+        // the defaults reproduce the default search space
+        let d = parse(&["tune"]);
+        assert_eq!(
+            space::parse_payloads(&d.get_str("payloads", "mtu")).unwrap(),
+            vec![None]
+        );
+        assert_eq!(
+            d.get_str("strategy", "exhaustive").parse::<StrategyKind>().unwrap(),
+            StrategyKind::Exhaustive
+        );
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //!
 //! The gate measures a small timed-harness suite on the reference backend
 //! (no artifacts, no PJRT — the numbers isolate the serving stack), emits
-//! the results as deterministic insertion-ordered JSON (`BENCH_5.json`,
-//! uploaded as a CI artifact), and fails — nonzero exit — when any gated
+//! the results as deterministic insertion-ordered JSON (`BENCH_6.json`,
+//! uploaded as a CI artifact, with a self-describing repo-root pointer
+//! from [`pointer_json`]), and fails — nonzero exit — when any gated
 //! throughput falls more than `tolerance` below a baseline JSON:
 //!
 //! * the **committed floors** in `rust/bench/baseline.json` guard against
@@ -23,7 +24,7 @@ use crate::config::{BackendKind, Scheme};
 use crate::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
 use crate::json::Value;
 use crate::net::{transmit_frame, Channel, GilbertElliott};
-use crate::report::{json_array, JsonObj};
+use crate::report::{json_array, json_str, JsonObj};
 use crate::runtime::ReferenceBackend;
 use crate::serve::{make_device_side, ClockKind, Placement, ServeBuilder};
 use anyhow::{ensure, Context, Result};
@@ -50,7 +51,7 @@ pub struct PerfEntry {
     pub info: Vec<(String, f64)>,
 }
 
-/// A bench suite result: what `BENCH_5.json` holds.
+/// A bench suite result: what `BENCH_6.json` holds.
 #[derive(Debug, Clone, Default)]
 pub struct PerfReport {
     pub entries: Vec<PerfEntry>,
@@ -281,7 +282,78 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
     progress(&entry);
     entries.push(entry);
 
+    // 4) the autotuner evaluator: an exhaustive tune over the default
+    //    8-point grid, every point a fresh fleet-engine run. Gated on
+    //    config evaluations per host second.
+    let tune_cfg = crate::tune::TuneConfig {
+        space: crate::tune::SearchSpace::default(),
+        eval: crate::tune::EvalSpec {
+            requests: 2000,
+            ..crate::tune::EvalSpec::default()
+        },
+        strategy: crate::tune::StrategyKind::Exhaustive,
+        state: None,
+        out: None,
+        stop_after: None,
+    };
+    let grid = tune_cfg.space.len();
+    let (outcome, wall) = timed(handicap, || crate::tune::run(&tune_cfg, |_| {}))?;
+    ensure!(
+        outcome.completed && outcome.evaluated == grid,
+        "tune sweep evaluated {}/{} points",
+        outcome.evaluated,
+        grid
+    );
+    let entry = PerfEntry {
+        name: "tune_eval".into(),
+        throughput: outcome.evaluated as f64 / wall,
+        wall_s: wall,
+        info: vec![
+            ("grid_points".into(), grid as f64),
+            ("front_size".into(), outcome.front.len() as f64),
+        ],
+    };
+    progress(&entry);
+    entries.push(entry);
+
     Ok(PerfReport { entries })
+}
+
+/// Current commit id: `GITHUB_SHA` in CI, `git rev-parse HEAD` locally,
+/// `"unknown"` outside a work tree.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|out| out.status.success())
+        .and_then(|out| String::from_utf8(out.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Self-describing repo-root pointer for a bench artifact: which file
+/// holds the measurements, which commit produced them, and which entries
+/// were actually measured. Replaces the hand-written placeholder notes.
+pub fn pointer_json(report: &PerfReport, artifact: &str) -> String {
+    let names = json_array(report.entries.iter().map(|e| json_str(&e.name)));
+    JsonObj::new()
+        .field_str("schema", "agilenn-bench-pointer-v1")
+        .field_str("artifact", artifact)
+        .field_str("git_sha", &git_sha())
+        .field_raw("entries", &names)
+        .field_str(
+            "note",
+            "regenerated by `agilenn perfgate --pointer`; CI uploads the artifact named here",
+        )
+        .finish()
+        + "\n"
 }
 
 #[cfg(test)]
@@ -354,6 +426,20 @@ mod tests {
     fn parse_rejects_other_schemas() {
         assert!(PerfReport::parse(r#"{"schema":"v0","entries":[]}"#).is_err());
         assert!(PerfReport::parse("{}").is_err());
+    }
+
+    #[test]
+    fn pointer_json_names_the_artifact_and_every_entry() {
+        let rep = report(vec![entry("fleet_engine", 1.0), entry("tune_eval", 2.0)]);
+        let ptr = pointer_json(&rep, "BENCH_6.json");
+        assert!(ptr.ends_with('\n'));
+        let v = crate::json::Value::parse(&ptr).unwrap();
+        assert_eq!(v.str_at("schema").unwrap(), "agilenn-bench-pointer-v1");
+        assert_eq!(v.str_at("artifact").unwrap(), "BENCH_6.json");
+        assert!(!v.str_at("git_sha").unwrap().is_empty());
+        let names: Vec<_> =
+            v.get("entries").unwrap().as_arr().unwrap().iter().map(|e| e.as_str().unwrap()).collect();
+        assert_eq!(names, ["fleet_engine", "tune_eval"]);
     }
 
     #[test]

@@ -60,6 +60,6 @@ pub use scheme::{
     RemoteArgmaxFuser, ServerSide, SpinnDevice,
 };
 pub use service::{
-    OutcomeStream, PipelineReport, RemoteFailure, ServeBuilder, ServedOutcome, Service,
-    ShardReport,
+    ConfigError, OutcomeStream, PipelineReport, RemoteFailure, ServeBuilder, ServedOutcome,
+    Service, ShardReport,
 };

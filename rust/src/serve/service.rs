@@ -25,7 +25,7 @@
 use crate::baselines::RequestOutcome;
 use crate::compression::Frame;
 use crate::config::{default_artifacts_dir, BackendKind, Meta, RunConfig, Scheme};
-use crate::coordinator::batcher::{BatchQueue, Pending};
+use crate::coordinator::batcher::{BatchQueue, Pending, REMOTE_BATCH_SIZES};
 use crate::metrics::{AccuracyCounter, LatencyStats};
 use crate::net::{
     importance_order, transmit_frame, transmit_packets, BandwidthTrace, Channel, DeliveryPolicy,
@@ -40,7 +40,7 @@ use crate::serve::scheme::{
 use crate::simulator::{DeviceProfile, DeviceSim, NetworkProfile, NetworkSim};
 use crate::tensor::Tensor;
 use crate::workload::{Arrival, TestSet};
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -238,6 +238,58 @@ pub struct ServedOutcome {
 /// error names the remote cause instead of a bare "reply dropped".
 #[derive(Debug, Clone)]
 pub struct RemoteFailure(pub String);
+
+/// A rejected serving configuration, detected before anything starts.
+///
+/// Typed (and downcastable through `anyhow`) so programmatic callers —
+/// the autotuner skipping infeasible grid points — can tell a bad
+/// configuration from a real pipeline failure, and CLI users get a clear
+/// message from the calling thread instead of a panic inside a spawned
+/// worker. [`Service::stream`] runs [`Service::validate`] first, so every
+/// conflict below surfaces this way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `devices == 0`
+    NoDevices,
+    /// `requests == 0`
+    NoRequests,
+    /// the test set resolved to zero examples
+    EmptyTestSet,
+    /// `servers == 0`
+    NoServers,
+    /// `max_batch` is not an exported remote batch size
+    /// ([`REMOTE_BATCH_SIZES`]) — previously an assert inside the spawned
+    /// server thread
+    UnsupportedMaxBatch { max_batch: usize },
+    /// `servers > 1` off the sim clock's event engine (the threaded paths
+    /// have no server sharding)
+    MultiServerNeedsEventEngine { servers: usize, clock: ClockKind, engine: SimEngine },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoDevices => write!(f, "need at least one device"),
+            ConfigError::NoRequests => write!(f, "need at least one request"),
+            ConfigError::EmptyTestSet => write!(f, "empty test set"),
+            ConfigError::NoServers => write!(f, "need at least one server"),
+            ConfigError::UnsupportedMaxBatch { max_batch } => write!(
+                f,
+                "max batch {max_batch} is not an exported remote batch size \
+                 {REMOTE_BATCH_SIZES:?}"
+            ),
+            ConfigError::MultiServerNeedsEventEngine { servers, clock, engine } => write!(
+                f,
+                "{servers} servers require the sim clock's event engine \
+                 (clock sim + sim-engine event), not {} clock / {} engine",
+                clock.name(),
+                engine.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
 
@@ -517,7 +569,15 @@ impl ServeBuilder {
     pub fn build(self) -> Result<Service> {
         let cfg = self.to_config();
         let (meta, testset) = crate::fixtures::load_world(&cfg)?;
-        let testset = Arc::new(testset);
+        self.build_with_world(meta, Arc::new(testset))
+    }
+
+    /// Assemble the [`Service`] against an already-loaded world. Batch
+    /// evaluators (the autotuner) load `Meta` + test set once and reuse
+    /// them across hundreds of configurations instead of paying
+    /// `load_world` per point.
+    pub fn build_with_world(self, meta: Meta, testset: Arc<TestSet>) -> Result<Service> {
+        let cfg = self.to_config();
         let arrival = match self.arrival_seed {
             Some(seed) => self.arrival.with_seed(seed),
             None => self.arrival,
@@ -556,9 +616,15 @@ impl Service {
         requests: usize,
         arrival: Arrival,
     ) -> Result<Self> {
-        ensure!(devices >= 1, "need at least one device");
-        ensure!(requests >= 1, "need at least one request");
-        ensure!(!testset.is_empty(), "empty test set");
+        if devices < 1 {
+            return Err(ConfigError::NoDevices.into());
+        }
+        if requests < 1 {
+            return Err(ConfigError::NoRequests.into());
+        }
+        if testset.is_empty() {
+            return Err(ConfigError::EmptyTestSet.into());
+        }
         Ok(Self {
             cfg,
             meta,
@@ -605,6 +671,29 @@ impl Service {
         self.stream()?.finish()
     }
 
+    /// Check the configuration for conflicts without starting anything.
+    /// [`Service::stream`] calls this first, so every rejection here is a
+    /// typed [`ConfigError`] raised from the calling thread — never a
+    /// panic inside a spawned worker (the pre-tuner behavior for e.g.
+    /// `max_batch(3)`).
+    pub fn validate(&self) -> std::result::Result<(), ConfigError> {
+        if self.servers < 1 {
+            return Err(ConfigError::NoServers);
+        }
+        if !REMOTE_BATCH_SIZES.contains(&self.cfg.max_batch) {
+            return Err(ConfigError::UnsupportedMaxBatch { max_batch: self.cfg.max_batch });
+        }
+        let on_engine = self.clock == ClockKind::Sim && self.sim_engine == SimEngine::Event;
+        if self.servers > 1 && !on_engine {
+            return Err(ConfigError::MultiServerNeedsEventEngine {
+                servers: self.servers,
+                clock: self.clock,
+                engine: self.sim_engine,
+            });
+        }
+        Ok(())
+    }
+
     /// Start the pipeline and return a streaming handle over per-request
     /// outcomes. Dropping the stream without `finish()` is safe: device
     /// threads stop producing once the receiver is gone and every worker
@@ -616,18 +705,11 @@ impl Service {
     /// threads; the wall clock always runs the threaded pipeline.
     /// Multi-server topologies (`servers > 1`) exist only on the engine.
     pub fn stream(self) -> Result<OutcomeStream> {
-        ensure!(self.servers >= 1, "need at least one server");
+        self.validate()?;
         let use_engine = self.clock == ClockKind::Sim && self.sim_engine == SimEngine::Event;
         if use_engine {
             return self.stream_engine();
         }
-        ensure!(
-            self.servers == 1,
-            "multi-server topologies require the sim clock's event engine \
-             (clock sim + sim-engine event), not {} clock / {} engine",
-            self.clock.name(),
-            self.sim_engine.name()
-        );
         let backend: Arc<dyn Backend> = make_backend(&self.cfg, &self.meta)?;
         let server = make_server_side(backend.as_ref(), &self.cfg, &self.meta)?;
         // some schemes export fewer remote batch sizes (edge-only: max 4)

@@ -1,0 +1,423 @@
+//! `agilenn::tune` — a resumable serving autotuner with the fleet engine
+//! as its evaluator.
+//!
+//! AgileNN's core bet is moving cost from online inference to offline
+//! work. The event-driven fleet engine makes a full serving sweep cost
+//! seconds, which turns "pick good serving knobs" into an offline search
+//! problem: a [`SearchSpace`](space::SearchSpace) spans the serving knobs
+//! (batch deadline, packet payload, quantizer width, delivery policy,
+//! placement, server count), a [`strategies`] module decides which points
+//! to visit (exhaustive grid or seeded genetic), and every evaluation is
+//! one deterministic fleet-engine run — sim clock, event engine,
+//! reference backend by default — scored on four objectives at once
+//! ([`ranking::Objectives`]). The result is the Pareto front over
+//! {accuracy, p99_latency_s, goodput_bps, server_seconds}, emitted as an
+//! insertion-ordered JSON artifact that diffs cleanly in CI.
+//!
+//! Everything is deterministic end to end: the evaluator is
+//! seed-deterministic, the strategies draw from a config-seeded
+//! xorshift64* stream, and [`state`] logs every completed evaluation to
+//! an append-only JSONL file. Interrupting a search and re-invoking with
+//! the same `--state` path replays the strategy against the log —
+//! completed points are answered from cache — and produces a front
+//! byte-identical to an uninterrupted run's.
+//!
+//! Points the serving layer rejects (a typed
+//! [`ConfigError`](crate::serve::ConfigError), e.g. `servers > 1` on the
+//! threaded sim fabric) are recorded as infeasible and skipped, not
+//! fatal: the search space may legitimately cover corners the current
+//! execution mode cannot run.
+
+pub mod ranking;
+pub mod space;
+pub mod state;
+pub mod strategies;
+
+pub use ranking::Objectives;
+pub use space::{SearchSpace, TunePoint};
+pub use state::{EvalOutcome, TuneState};
+pub use strategies::StrategyKind;
+
+use crate::config::{BackendKind, Scheme};
+use crate::net::GilbertElliott;
+use crate::report::{json_array, JsonObj};
+use crate::serve::{ClockKind, ConfigError, ServeBuilder, SimEngine};
+use anyhow::{Context, Result};
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Everything about an evaluation that is *not* searched: the workload,
+/// the backend, and the execution mode every grid point shares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalSpec {
+    /// artifacts tree override (`None`: builder default; ignored by the
+    /// reference backend)
+    pub artifacts_dir: Option<PathBuf>,
+    pub dataset: String,
+    pub backend: BackendKind,
+    pub scheme: Scheme,
+    pub devices: usize,
+    pub requests: usize,
+    /// per-device Poisson arrival rate (Hz); `<= 0` = unpaced
+    pub rate_hz: f64,
+    pub arrival_seed: u64,
+    pub net_seed: u64,
+    /// expected packet-loss rate (0 = ideal link)
+    pub loss: f64,
+    /// mean loss-burst length; `> 1` selects the bursty Gilbert-Elliott
+    /// process, otherwise uniform loss
+    pub burst: f64,
+    /// dynamic batcher cap (not searched; must be an exported size)
+    pub max_batch: usize,
+    /// execution clock (default sim — wall-clock evaluations are neither
+    /// fast nor deterministic, but the axis stays overridable)
+    pub clock: ClockKind,
+    /// sim execution engine (default the event engine; `threads` makes
+    /// every multi-server point infeasible, exercising graceful skips)
+    pub sim_engine: SimEngine,
+}
+
+impl Default for EvalSpec {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: None,
+            dataset: crate::fixtures::SYNTHETIC_DATASET.to_string(),
+            backend: BackendKind::Reference,
+            scheme: Scheme::Agile,
+            devices: 16,
+            requests: 4000,
+            rate_hz: 50.0,
+            arrival_seed: 11,
+            net_seed: 42,
+            loss: 0.0,
+            burst: 1.0,
+            max_batch: 8,
+            clock: ClockKind::Sim,
+            sim_engine: SimEngine::Event,
+        }
+    }
+}
+
+impl EvalSpec {
+    /// The shared builder every grid point starts from.
+    pub fn base_builder(&self) -> ServeBuilder {
+        let mut b = ServeBuilder::new(self.dataset.as_str())
+            .backend(self.backend)
+            .scheme(self.scheme)
+            .devices(self.devices)
+            .requests(self.requests)
+            .rate_hz(self.rate_hz)
+            .arrival_seed(self.arrival_seed)
+            .net_seed(self.net_seed)
+            .max_batch(self.max_batch)
+            .clock(self.clock)
+            .sim_engine(self.sim_engine);
+        if let Some(dir) = &self.artifacts_dir {
+            b = b.artifacts_dir(dir);
+        }
+        if self.loss > 0.0 {
+            b = b.loss(if self.burst > 1.0 {
+                GilbertElliott::bursty(self.loss, self.burst)
+            } else {
+                GilbertElliott::uniform(self.loss)
+            });
+        }
+        b
+    }
+
+    /// Materialize one grid point onto the shared builder.
+    pub fn builder(&self, point: &TunePoint) -> ServeBuilder {
+        point.apply(self.base_builder())
+    }
+
+    /// Deterministic JSON form — part of the saved-state fingerprint and
+    /// the front artifact.
+    pub fn to_ordered_json(&self) -> String {
+        JsonObj::new()
+            .field_str("dataset", &self.dataset)
+            .field_str("backend", self.backend.name())
+            .field_str("scheme", self.scheme.name())
+            .field_usize("devices", self.devices)
+            .field_usize("requests", self.requests)
+            .field_f64("rate_hz", self.rate_hz)
+            .field_u64("arrival_seed", self.arrival_seed)
+            .field_u64("net_seed", self.net_seed)
+            .field_f64("loss", self.loss)
+            .field_f64("burst", self.burst)
+            .field_usize("max_batch", self.max_batch)
+            .field_str("clock", self.clock.name())
+            .field_str("sim_engine", self.sim_engine.name())
+            .finish()
+    }
+}
+
+/// One tuner invocation: what to search, how to evaluate, where to keep
+/// resumable state.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    pub space: SearchSpace,
+    pub eval: EvalSpec,
+    pub strategy: StrategyKind,
+    /// saved-state path; `None` runs in memory (no resume)
+    pub state: Option<PathBuf>,
+    /// write the front artifact here when set
+    pub out: Option<PathBuf>,
+    /// stop this invocation after N *new* evaluations (the search resumes
+    /// from the log next time); `None` runs to completion
+    pub stop_after: Option<usize>,
+}
+
+impl TuneConfig {
+    /// The saved-state fingerprint: everything that shapes the search.
+    /// `stop_after` is deliberately excluded — it partitions one search
+    /// across invocations rather than defining a different one.
+    pub fn fingerprint(&self) -> String {
+        let mut obj = JsonObj::new()
+            .field_str("schema", "agilenn-tune-state-v1")
+            .field_str("strategy", self.strategy.name());
+        if let StrategyKind::Genetic { seed, population, budget } = self.strategy {
+            obj = obj
+                .field_u64("seed", seed)
+                .field_usize("population", population)
+                .field_usize("budget", budget);
+        }
+        obj.field_raw("space", &self.space.to_ordered_json())
+            .field_raw("eval", &self.eval.to_ordered_json())
+            .finish()
+    }
+}
+
+/// What one tuner invocation produced.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// the strategy ran to completion (false: `--stop-after` interrupted
+    /// it; re-invoke with the same `--state` to continue)
+    pub completed: bool,
+    /// fleet evaluations actually executed by this invocation
+    pub evaluated: usize,
+    /// distinct points answered from the execution log (resume hits)
+    pub cached: usize,
+    /// distinct points rejected as infeasible configurations
+    pub infeasible: usize,
+    /// the Pareto front over every feasible evaluated point, in the
+    /// deterministic presentation order
+    pub front: Vec<(TunePoint, Objectives)>,
+    /// the full ordered-JSON front artifact
+    pub front_json: String,
+}
+
+/// Run one tuner invocation. `progress` receives one human-readable line
+/// per evaluation (fresh, cached, or skipped-infeasible).
+pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> Result<TuneOutcome> {
+    cfg.space.validate()?;
+    // load the world once; every evaluation shares it
+    let (meta, testset) = crate::fixtures::load_world(&cfg.eval.base_builder().to_config())?;
+    let testset = Arc::new(testset);
+    let fingerprint = cfg.fingerprint();
+    let mut st = match &cfg.state {
+        Some(path) => TuneState::open(path, &fingerprint)?,
+        None => TuneState::in_memory(),
+    };
+
+    // visit bookkeeping: artifact entries in strategy-visit order, plus
+    // counters distinguishing resume hits from this invocation's work
+    let mut visited: Vec<(TunePoint, EvalOutcome)> = Vec::new();
+    let mut visited_keys: HashSet<String> = HashSet::new();
+    let mut fresh_keys: HashSet<String> = HashSet::new();
+    let mut evaluated = 0usize;
+    let mut cached = 0usize;
+
+    let completed = {
+        let mut eval = |point: &TunePoint| -> Result<Option<EvalOutcome>> {
+            let key = point.key();
+            if let Some(hit) = st.lookup(&key).cloned() {
+                if visited_keys.insert(key.clone()) {
+                    if !fresh_keys.contains(&key) {
+                        cached += 1;
+                        progress(&format!("cached {key}"));
+                    }
+                    visited.push((point.clone(), hit.clone()));
+                }
+                return Ok(Some(hit));
+            }
+            if let Some(stop) = cfg.stop_after {
+                if evaluated >= stop {
+                    return Ok(None);
+                }
+            }
+            let run = cfg
+                .eval
+                .builder(point)
+                .build_with_world(meta.clone(), testset.clone())
+                .and_then(|svc| svc.run());
+            let outcome = match run {
+                Ok(rep) => {
+                    let obj = Objectives::from_report(&rep);
+                    if obj.is_finite() {
+                        progress(&format!(
+                            "eval {key}: accuracy {:.3}, p99 {:.4}s, goodput {:.0} bps, \
+                             server-seconds {:.2}",
+                            obj.accuracy, obj.p99_latency_s, obj.goodput_bps, obj.server_seconds
+                        ));
+                        let o = EvalOutcome::Done(obj);
+                        st.record(point, &o, Some(&rep.to_ordered_json()))?;
+                        o
+                    } else {
+                        progress(&format!("skip {key}: non-finite objectives"));
+                        let o = EvalOutcome::Infeasible("non-finite objectives".to_string());
+                        st.record(point, &o, Some(&rep.to_ordered_json()))?;
+                        o
+                    }
+                }
+                Err(e) => match e.downcast_ref::<ConfigError>() {
+                    Some(ce) => {
+                        progress(&format!("skip {key}: {ce}"));
+                        let o = EvalOutcome::Infeasible(ce.to_string());
+                        st.record(point, &o, None)?;
+                        o
+                    }
+                    None => return Err(e.context(format!("evaluating {key}"))),
+                },
+            };
+            evaluated += 1;
+            fresh_keys.insert(key.clone());
+            if visited_keys.insert(key) {
+                visited.push((point.clone(), outcome.clone()));
+            }
+            Ok(Some(outcome))
+        };
+        match cfg.strategy {
+            StrategyKind::Exhaustive => strategies::exhaustive::run(&cfg.space, &mut eval)?,
+            StrategyKind::Genetic { seed, population, budget } => {
+                strategies::genetic::run(&cfg.space, seed, population, budget, &mut eval)?
+            }
+        }
+    };
+
+    // the front over every feasible visited point, ordered by the
+    // deterministic objective order with point-key tie-breaks — the same
+    // bytes regardless of which invocation evaluated which point
+    let entries: Vec<(TunePoint, Objectives)> = visited
+        .iter()
+        .filter_map(|(p, o)| match o {
+            EvalOutcome::Done(obj) => Some((p.clone(), *obj)),
+            EvalOutcome::Infeasible(_) => None,
+        })
+        .collect();
+    let objs: Vec<Objectives> = entries.iter().map(|e| e.1).collect();
+    let mut front: Vec<(TunePoint, Objectives)> =
+        ranking::pareto_front(&objs).into_iter().map(|i| entries[i].clone()).collect();
+    front.sort_by(|a, b| ranking::compare(&a.1, &b.1).then_with(|| a.0.key().cmp(&b.0.key())));
+    let infeasible = visited.len() - entries.len();
+
+    let front_items = json_array(front.iter().map(|(p, o)| {
+        JsonObj::new()
+            .field_raw("point", &p.to_ordered_json())
+            .field_raw("objectives", &o.to_ordered_json())
+            .finish()
+    }));
+    let mut art = JsonObj::new()
+        .field_str("schema", "agilenn-tune-v1")
+        .field_str("strategy", cfg.strategy.name());
+    if let StrategyKind::Genetic { seed, population, budget } = cfg.strategy {
+        art = art
+            .field_u64("seed", seed)
+            .field_usize("population", population)
+            .field_usize("budget", budget);
+    }
+    let front_json = art
+        .field_raw("space", &cfg.space.to_ordered_json())
+        .field_raw("eval", &cfg.eval.to_ordered_json())
+        .field_usize("evaluations", visited.len())
+        .field_usize("infeasible", infeasible)
+        .field_bool("completed", completed)
+        .field_raw("front", &front_items)
+        .finish();
+    if let Some(out) = &cfg.out {
+        std::fs::write(out, format!("{front_json}\n"))
+            .with_context(|| format!("writing front artifact {}", out.display()))?;
+    }
+
+    Ok(TuneOutcome { completed, evaluated, cached, infeasible, front, front_json })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TuneConfig {
+        TuneConfig {
+            space: SearchSpace {
+                batch_deadline_us: vec![500, 2000],
+                packet_payload: vec![None],
+                bits: vec![2, 4],
+                delivery: vec![crate::net::DeliveryPolicy::Arq],
+                placement: vec![crate::serve::Placement::Static],
+                servers: vec![1],
+            },
+            eval: EvalSpec { devices: 2, requests: 32, rate_hz: 200.0, ..EvalSpec::default() },
+            strategy: StrategyKind::Exhaustive,
+            state: None,
+            out: None,
+            stop_after: None,
+        }
+    }
+
+    #[test]
+    fn exhaustive_in_memory_run_covers_the_grid() {
+        let cfg = tiny_cfg();
+        let out = run(&cfg, |_| {}).unwrap();
+        assert!(out.completed);
+        assert_eq!(out.evaluated, 4);
+        assert_eq!(out.cached, 0);
+        assert_eq!(out.infeasible, 0);
+        assert!(!out.front.is_empty(), "a full grid always yields a non-empty front");
+        let v = crate::json::Value::parse(&out.front_json).unwrap();
+        assert_eq!(v.str_at("schema").unwrap(), "agilenn-tune-v1");
+        assert_eq!(v.usize_at("evaluations").unwrap(), 4);
+        assert!(!v.get("front").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn same_config_reproduces_the_artifact_bitwise() {
+        let cfg = tiny_cfg();
+        let a = run(&cfg, |_| {}).unwrap();
+        let b = run(&cfg, |_| {}).unwrap();
+        assert_eq!(a.front_json, b.front_json);
+    }
+
+    #[test]
+    fn fingerprint_pins_strategy_space_and_eval() {
+        let cfg = tiny_cfg();
+        let fp = cfg.fingerprint();
+        assert_eq!(fp, cfg.fingerprint());
+        let mut genetic = cfg.clone();
+        genetic.strategy = StrategyKind::Genetic { seed: 3, population: 4, budget: 6 };
+        assert_ne!(fp, genetic.fingerprint());
+        let mut wider = cfg.clone();
+        wider.space.bits.push(6);
+        assert_ne!(fp, wider.fingerprint());
+        let mut busier = cfg;
+        busier.eval.requests += 1;
+        assert_ne!(fp, busier.fingerprint());
+        // stop_after does NOT change the fingerprint (same search, split
+        // across invocations)
+        let mut split = tiny_cfg();
+        split.stop_after = Some(2);
+        assert_eq!(fp, split.fingerprint());
+    }
+
+    #[test]
+    fn infeasible_spec_points_are_skipped_not_fatal() {
+        let mut cfg = tiny_cfg();
+        cfg.space.servers = vec![1, 2];
+        cfg.eval.sim_engine = SimEngine::Threads; // multi-server points now conflict
+        let out = run(&cfg, |_| {}).unwrap();
+        assert!(out.completed);
+        assert_eq!(out.evaluated, 8);
+        assert_eq!(out.infeasible, 4, "every servers=2 point is rejected, not fatal");
+        assert!(out.front.iter().all(|(p, _)| p.servers == 1));
+        assert!(!out.front.is_empty());
+    }
+}

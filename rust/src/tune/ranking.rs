@@ -1,0 +1,188 @@
+//! Pareto ranking over serving objectives.
+//!
+//! A tuned configuration is judged on four axes at once — accuracy and
+//! goodput (higher is better), p99 sojourn latency and server-seconds
+//! spent (lower is better) — and no scalarization is neutral between
+//! them, so the tuner reports the full Pareto front: every evaluated
+//! point that no other evaluated point beats on all four axes.
+//!
+//! Everything here is deterministic: [`pareto_front`] returns its members
+//! in a total order ([`compare`], ties broken by the caller-supplied point
+//! key), so the serialized front artifact is byte-stable across runs and
+//! independent of evaluation order.
+
+use crate::report::JsonObj;
+use crate::serve::PipelineReport;
+use anyhow::Result;
+use std::cmp::Ordering;
+
+/// The four gated objectives of one evaluated configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    /// top-1 accuracy over the run (maximize)
+    pub accuracy: f64,
+    /// p99 request sojourn, virtual seconds (minimize)
+    pub p99_latency_s: f64,
+    /// application-layer goodput, bits/s (maximize)
+    pub goodput_bps: f64,
+    /// fleet cost: servers × virtual makespan, server-seconds (minimize;
+    /// 0 for local-only schemes, which keep no server half)
+    pub server_seconds: f64,
+}
+
+impl Objectives {
+    /// Extract the objective vector from a finished fleet run.
+    pub fn from_report(rep: &PipelineReport) -> Self {
+        Self {
+            accuracy: rep.accuracy,
+            p99_latency_s: rep.p99_latency_s,
+            goodput_bps: rep.goodput_bps,
+            server_seconds: rep.shards.len() as f64 * rep.wall_s,
+        }
+    }
+
+    /// All four objectives are finite (JSON cannot carry non-finite
+    /// values, and dominance over NaN is meaningless).
+    pub fn is_finite(&self) -> bool {
+        self.accuracy.is_finite()
+            && self.p99_latency_s.is_finite()
+            && self.goodput_bps.is_finite()
+            && self.server_seconds.is_finite()
+    }
+
+    /// Deterministic JSON form; parsing it back yields bit-identical
+    /// floats (`report::json_f64` is shortest-roundtrip).
+    pub fn to_ordered_json(&self) -> String {
+        JsonObj::new()
+            .field_f64("accuracy", self.accuracy)
+            .field_f64("p99_latency_s", self.p99_latency_s)
+            .field_f64("goodput_bps", self.goodput_bps)
+            .field_f64("server_seconds", self.server_seconds)
+            .finish()
+    }
+
+    /// Parse the form [`Objectives::to_ordered_json`] writes (the
+    /// execution log stores evaluations this way).
+    pub fn parse(v: &crate::json::Value) -> Result<Self> {
+        Ok(Self {
+            accuracy: v.f64_at("accuracy")?,
+            p99_latency_s: v.f64_at("p99_latency_s")?,
+            goodput_bps: v.f64_at("goodput_bps")?,
+            server_seconds: v.f64_at("server_seconds")?,
+        })
+    }
+}
+
+/// Strict Pareto dominance: `a` is at least as good as `b` on every
+/// objective and strictly better on at least one. Irreflexive and
+/// transitive, so every dominated point is dominated by some front
+/// member.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let ge = a.accuracy >= b.accuracy
+        && a.p99_latency_s <= b.p99_latency_s
+        && a.goodput_bps >= b.goodput_bps
+        && a.server_seconds <= b.server_seconds;
+    let gt = a.accuracy > b.accuracy
+        || a.p99_latency_s < b.p99_latency_s
+        || a.goodput_bps > b.goodput_bps
+        || a.server_seconds < b.server_seconds;
+    ge && gt
+}
+
+/// How many of `objs` strictly dominate `objs[i]` — the genetic
+/// strategy's rank (0 = on the front of its population).
+pub fn domination_count(objs: &[Objectives], i: usize) -> usize {
+    objs.iter().enumerate().filter(|&(j, o)| j != i && dominates(o, &objs[i])).count()
+}
+
+/// Deterministic total order over objective vectors: accuracy descending,
+/// then p99 ascending, then goodput descending, then server-seconds
+/// ascending. Used to present the front and to break fitness ties; it is
+/// a refinement of dominance (a dominating point always sorts first).
+pub fn compare(a: &Objectives, b: &Objectives) -> Ordering {
+    b.accuracy
+        .total_cmp(&a.accuracy)
+        .then(a.p99_latency_s.total_cmp(&b.p99_latency_s))
+        .then(b.goodput_bps.total_cmp(&a.goodput_bps))
+        .then(a.server_seconds.total_cmp(&b.server_seconds))
+}
+
+/// Indices of the non-dominated members of `objs`, sorted by
+/// [`compare`] with exact ties kept in input order. Callers that need
+/// permutation-independent ordering (the front artifact) additionally
+/// tie-break by point key, which is unique per configuration.
+pub fn pareto_front(objs: &[Objectives]) -> Vec<usize> {
+    let mut front: Vec<usize> = (0..objs.len())
+        .filter(|&i| !objs.iter().enumerate().any(|(j, o)| j != i && dominates(o, &objs[i])))
+        .collect();
+    front.sort_by(|&a, &b| compare(&objs[a], &objs[b]));
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(acc: f64, p99: f64, gp: f64, ss: f64) -> Objectives {
+        Objectives { accuracy: acc, p99_latency_s: p99, goodput_bps: gp, server_seconds: ss }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_irreflexive() {
+        let a = obj(0.9, 0.01, 1e6, 10.0);
+        let better = obj(0.95, 0.01, 1e6, 10.0);
+        assert!(dominates(&better, &a));
+        assert!(!dominates(&a, &better));
+        assert!(!dominates(&a, &a), "equal points never dominate each other");
+        // a trade-off (better accuracy, worse latency) dominates neither way
+        let trade = obj(0.95, 0.02, 1e6, 10.0);
+        assert!(!dominates(&trade, &a));
+        assert!(!dominates(&a, &trade));
+    }
+
+    #[test]
+    fn front_keeps_trade_offs_and_drops_dominated_points() {
+        let objs = [
+            obj(0.90, 0.010, 1e6, 10.0), // dominated by [2]
+            obj(0.80, 0.005, 1e6, 10.0), // front: best latency
+            obj(0.95, 0.010, 1e6, 10.0), // front: best accuracy
+            obj(0.95, 0.010, 1e6, 20.0), // dominated by [2] on cost
+        ];
+        let front = pareto_front(&objs);
+        assert_eq!(front, vec![2, 1], "sorted accuracy-first");
+        assert_eq!(domination_count(&objs, 0), 1);
+        assert_eq!(domination_count(&objs, 2), 0);
+    }
+
+    #[test]
+    fn duplicate_points_all_stay_on_the_front() {
+        let objs = [obj(0.9, 0.01, 1e6, 10.0), obj(0.9, 0.01, 1e6, 10.0)];
+        assert_eq!(pareto_front(&objs), vec![0, 1]);
+    }
+
+    #[test]
+    fn objectives_json_roundtrips_bit_exactly() {
+        let o = obj(0.1 + 0.2, 1.0 / 3.0, 123456.789, 0.0);
+        let text = o.to_ordered_json();
+        let back = Objectives::parse(&crate::json::Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.accuracy.to_bits(), o.accuracy.to_bits());
+        assert_eq!(back.p99_latency_s.to_bits(), o.p99_latency_s.to_bits());
+        assert_eq!(back.goodput_bps.to_bits(), o.goodput_bps.to_bits());
+        assert_eq!(back.to_ordered_json(), text, "parse -> serialize is the identity");
+    }
+
+    #[test]
+    fn finiteness_check_rejects_any_nan_axis() {
+        assert!(obj(0.9, 0.01, 1e6, 10.0).is_finite());
+        assert!(!obj(f64::NAN, 0.0, 0.0, 0.0).is_finite());
+        assert!(!obj(0.9, f64::INFINITY, 0.0, 0.0).is_finite());
+    }
+
+    #[test]
+    fn compare_refines_dominance() {
+        let worse = obj(0.9, 0.02, 1e6, 10.0);
+        let better = obj(0.9, 0.01, 1e6, 10.0);
+        assert!(dominates(&better, &worse));
+        assert_eq!(compare(&better, &worse), Ordering::Less, "dominating point sorts first");
+    }
+}

@@ -1,0 +1,412 @@
+//! The typed search space: which serving knobs the tuner may move, and
+//! how an abstract point materializes into a [`ServeBuilder`].
+//!
+//! A [`SearchSpace`] is one `Vec` of candidate values per knob; the full
+//! grid is their cross product, addressed by a mixed-radix index (axis 0
+//! is the least-significant digit). The genetic strategy manipulates the
+//! digit vectors directly — a genome is a `Vec<usize>` of per-axis
+//! indices — so crossover and mutation always land on valid points.
+//!
+//! A [`TunePoint`]'s identity is its insertion-ordered JSON serialization
+//! ([`TunePoint::key`]): stable field order plus shortest-roundtrip
+//! floats make the key byte-stable, so the execution log can match
+//! completed evaluations across interrupted runs.
+
+use crate::net::DeliveryPolicy;
+use crate::report::{json_array, JsonObj};
+use crate::serve::{Placement, ServeBuilder};
+use anyhow::{bail, ensure, Result};
+
+/// Candidate values per serving knob; the search grid is the cross
+/// product of all six axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    /// dynamic-batcher deadline, microseconds
+    pub batch_deadline_us: Vec<u64>,
+    /// anytime packet payload cap, bytes (`None` = link MTU)
+    pub packet_payload: Vec<Option<usize>>,
+    /// quantizer bit width for transmitted features
+    pub bits: Vec<u32>,
+    /// uplink delivery policy (ARQ / deadline-bounded anytime)
+    pub delivery: Vec<DeliveryPolicy>,
+    /// device→server placement policy
+    pub placement: Vec<Placement>,
+    /// remote server count
+    pub servers: Vec<usize>,
+}
+
+impl Default for SearchSpace {
+    /// A small default grid (8 points): batch deadline × quantizer width
+    /// × server count, everything else pinned to the serving defaults.
+    fn default() -> Self {
+        Self {
+            batch_deadline_us: vec![500, 2000],
+            packet_payload: vec![None],
+            bits: vec![2, 4],
+            delivery: vec![DeliveryPolicy::Arq],
+            placement: vec![Placement::Static],
+            servers: vec![1, 2],
+        }
+    }
+}
+
+impl SearchSpace {
+    /// Per-axis lengths, least-significant axis first.
+    fn radices(&self) -> [usize; 6] {
+        [
+            self.batch_deadline_us.len(),
+            self.packet_payload.len(),
+            self.bits.len(),
+            self.delivery.len(),
+            self.placement.len(),
+            self.servers.len(),
+        ]
+    }
+
+    /// Every axis must offer at least one value.
+    pub fn validate(&self) -> Result<()> {
+        let names =
+            ["deadlines-us", "payloads", "bits", "delivery", "placements", "servers"];
+        for (n, name) in self.radices().iter().zip(names) {
+            ensure!(*n > 0, "search axis --{name} is empty");
+        }
+        Ok(())
+    }
+
+    /// Total number of grid points.
+    pub fn len(&self) -> usize {
+        self.radices().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decompose a grid index into per-axis digits (a genome).
+    pub fn genome(&self, index: usize) -> Vec<usize> {
+        debug_assert!(index < self.len());
+        let mut rest = index;
+        self.radices()
+            .iter()
+            .map(|&r| {
+                let d = rest % r;
+                rest /= r;
+                d
+            })
+            .collect()
+    }
+
+    /// Recompose per-axis digits into the grid index ([`SearchSpace::genome`]
+    /// inverted).
+    pub fn index_of(&self, genome: &[usize]) -> usize {
+        let radices = self.radices();
+        debug_assert_eq!(genome.len(), radices.len());
+        let mut index = 0usize;
+        let mut stride = 1usize;
+        for (d, r) in genome.iter().zip(radices) {
+            debug_assert!(*d < r);
+            index += d * stride;
+            stride *= r;
+        }
+        index
+    }
+
+    /// Materialize the point a genome addresses.
+    pub fn point_of(&self, genome: &[usize]) -> TunePoint {
+        TunePoint {
+            batch_deadline_us: self.batch_deadline_us[genome[0]],
+            packet_payload: self.packet_payload[genome[1]],
+            bits: self.bits[genome[2]],
+            delivery: self.delivery[genome[3]].clone(),
+            placement: self.placement[genome[4]],
+            servers: self.servers[genome[5]],
+        }
+    }
+
+    /// Materialize grid point `index`.
+    pub fn point(&self, index: usize) -> TunePoint {
+        self.point_of(&self.genome(index))
+    }
+
+    /// Number of axes (genome length).
+    pub fn axes(&self) -> usize {
+        self.radices().len()
+    }
+
+    /// Length of axis `a` (genome digit bound).
+    pub fn radix(&self, a: usize) -> usize {
+        self.radices()[a]
+    }
+
+    /// Deterministic JSON form — part of the saved-state fingerprint, so
+    /// a resumed run provably searches the same grid.
+    pub fn to_ordered_json(&self) -> String {
+        JsonObj::new()
+            .field_raw(
+                "batch_deadline_us",
+                &json_array(self.batch_deadline_us.iter().map(|v| v.to_string())),
+            )
+            .field_raw(
+                "packet_payload",
+                &json_array(self.packet_payload.iter().map(|v| match v {
+                    Some(n) => n.to_string(),
+                    None => "\"mtu\"".to_string(),
+                })),
+            )
+            .field_raw("bits", &json_array(self.bits.iter().map(|v| v.to_string())))
+            .field_raw(
+                "delivery",
+                &json_array(self.delivery.iter().map(delivery_json)),
+            )
+            .field_raw(
+                "placement",
+                &json_array(
+                    self.placement.iter().map(|p| crate::report::json_str(p.name())),
+                ),
+            )
+            .field_raw("servers", &json_array(self.servers.iter().map(|v| v.to_string())))
+            .finish()
+    }
+}
+
+/// One configuration under evaluation: a single value per searched knob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunePoint {
+    pub batch_deadline_us: u64,
+    pub packet_payload: Option<usize>,
+    pub bits: u32,
+    pub delivery: DeliveryPolicy,
+    pub placement: Placement,
+    pub servers: usize,
+}
+
+impl TunePoint {
+    /// Apply this point's knobs on top of an eval-spec builder.
+    pub fn apply(&self, mut b: ServeBuilder) -> ServeBuilder {
+        b = b
+            .batch_deadline_us(self.batch_deadline_us)
+            .bits(self.bits)
+            .delivery(self.delivery.clone())
+            .placement(self.placement)
+            .servers(self.servers);
+        if let Some(bytes) = self.packet_payload {
+            b = b.packet_payload(bytes);
+        }
+        b
+    }
+
+    /// Deterministic JSON form; doubles as the point's identity in the
+    /// execution log and the front artifact.
+    pub fn to_ordered_json(&self) -> String {
+        let mut obj = JsonObj::new().field_u64("batch_deadline_us", self.batch_deadline_us);
+        obj = match self.packet_payload {
+            Some(bytes) => obj.field_usize("packet_payload", bytes),
+            None => obj.field_str("packet_payload", "mtu"),
+        };
+        obj = obj.field_u64("bits", self.bits as u64);
+        obj = obj.field_str("delivery", self.delivery.name());
+        if let DeliveryPolicy::Anytime { deadline_s } = self.delivery {
+            obj = obj.field_f64("net_deadline_s", deadline_s);
+        }
+        obj.field_str("placement", self.placement.name())
+            .field_usize("servers", self.servers)
+            .finish()
+    }
+
+    /// The point's identity string (== its serialization).
+    pub fn key(&self) -> String {
+        self.to_ordered_json()
+    }
+
+    /// Parse the form [`TunePoint::to_ordered_json`] writes. The anytime
+    /// deadline roundtrips bit-exactly (shortest-roundtrip floats), so
+    /// `parse(p.key()).key() == p.key()` byte for byte.
+    pub fn parse(v: &crate::json::Value) -> Result<TunePoint> {
+        let delivery = match v.str_at("delivery")?.as_str() {
+            "arq" => DeliveryPolicy::Arq,
+            "anytime" => DeliveryPolicy::Anytime { deadline_s: v.f64_at("net_deadline_s")? },
+            other => bail!("unknown delivery {other:?} in logged point"),
+        };
+        let packet_payload = match v.get("packet_payload")? {
+            crate::json::Value::Str(s) if s == "mtu" => None,
+            other => Some(other.as_usize()?),
+        };
+        Ok(TunePoint {
+            batch_deadline_us: v.u64_at("batch_deadline_us")?,
+            packet_payload,
+            bits: v.u64_at("bits")? as u32,
+            delivery,
+            placement: v.str_at("placement")?.parse()?,
+            servers: v.usize_at("servers")?,
+        })
+    }
+}
+
+/// A delivery policy as a JSON value (string for ARQ, object carrying the
+/// deadline for anytime) — used by the space fingerprint.
+fn delivery_json(d: &DeliveryPolicy) -> String {
+    match d {
+        DeliveryPolicy::Arq => crate::report::json_str("arq"),
+        DeliveryPolicy::Anytime { deadline_s } => JsonObj::new()
+            .field_str("policy", "anytime")
+            .field_f64("deadline_s", *deadline_s)
+            .finish(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// comma-list flag parsers (CLI surface of the six axes)
+// ---------------------------------------------------------------------------
+
+/// Split a `--flag a,b,c` value; rejects empty segments.
+fn segments(s: &str) -> Result<Vec<&str>> {
+    let parts: Vec<&str> = s.split(',').map(str::trim).collect();
+    ensure!(
+        !parts.is_empty() && parts.iter().all(|p| !p.is_empty()),
+        "empty entry in list {s:?}"
+    );
+    Ok(parts)
+}
+
+/// `"500,2000"` → `[500, 2000]` (any `FromStr` integer/float axis).
+pub fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    segments(s)?
+        .into_iter()
+        .map(|p| p.parse().map_err(|e| anyhow::anyhow!("bad list entry {p:?}: {e}")))
+        .collect()
+}
+
+/// `"mtu,64"` → `[None, Some(64)]`.
+pub fn parse_payloads(s: &str) -> Result<Vec<Option<usize>>> {
+    segments(s)?
+        .into_iter()
+        .map(|p| {
+            if p.eq_ignore_ascii_case("mtu") {
+                Ok(None)
+            } else {
+                Ok(Some(p.parse().map_err(|e| anyhow::anyhow!("bad payload {p:?}: {e}"))?))
+            }
+        })
+        .collect()
+}
+
+/// `"arq,anytime"` → the two policies, anytime carrying `net_deadline_s`.
+pub fn parse_deliveries(s: &str, net_deadline_s: f64) -> Result<Vec<DeliveryPolicy>> {
+    segments(s)?
+        .into_iter()
+        .map(|p| match p.to_ascii_lowercase().as_str() {
+            "arq" => Ok(DeliveryPolicy::Arq),
+            "anytime" => Ok(DeliveryPolicy::Anytime { deadline_s: net_deadline_s }),
+            other => bail!("unknown delivery {other:?} (arq|anytime)"),
+        })
+        .collect()
+}
+
+/// `"static,least"` → placement policies (same spellings as `serve
+/// --placement`).
+pub fn parse_placements(s: &str) -> Result<Vec<Placement>> {
+    segments(s)?.into_iter().map(|p| p.parse()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SearchSpace {
+        SearchSpace {
+            batch_deadline_us: vec![500, 2000],
+            packet_payload: vec![None, Some(64)],
+            bits: vec![2, 4],
+            delivery: vec![DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.005 }],
+            placement: vec![Placement::Static, Placement::LeastLoaded],
+            servers: vec![1, 2],
+        }
+    }
+
+    #[test]
+    fn mixed_radix_indexing_is_a_bijection() {
+        let s = space();
+        assert_eq!(s.len(), 64);
+        let mut keys = std::collections::HashSet::new();
+        for i in 0..s.len() {
+            let g = s.genome(i);
+            assert_eq!(s.index_of(&g), i, "genome/index roundtrip at {i}");
+            assert!(keys.insert(s.point(i).key()), "duplicate point at index {i}");
+        }
+    }
+
+    #[test]
+    fn default_space_is_small_and_valid() {
+        let s = SearchSpace::default();
+        s.validate().unwrap();
+        assert_eq!(s.len(), 8);
+    }
+
+    #[test]
+    fn empty_axis_is_rejected() {
+        let mut s = space();
+        s.bits.clear();
+        assert!(s.validate().is_err());
+        assert_eq!(s.len(), 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn point_key_roundtrips_through_the_parser() {
+        let s = space();
+        for i in [0, 13, 37, 63] {
+            let p = s.point(i);
+            let v = crate::json::Value::parse(&p.key()).unwrap();
+            let back = TunePoint::parse(&v).unwrap();
+            assert_eq!(back, p);
+            assert_eq!(back.key(), p.key(), "key must be byte-stable through parse");
+        }
+    }
+
+    #[test]
+    fn apply_sets_every_searched_knob() {
+        let p = TunePoint {
+            batch_deadline_us: 750,
+            packet_payload: Some(96),
+            bits: 2,
+            delivery: DeliveryPolicy::Anytime { deadline_s: 0.004 },
+            placement: Placement::RoundRobin,
+            servers: 3,
+        };
+        let cfg = p.apply(ServeBuilder::new("x")).to_config();
+        assert_eq!(cfg.batch_deadline_us, 750);
+        assert_eq!(cfg.net.packet_payload, Some(96));
+        assert_eq!(cfg.bits, 2);
+        assert_eq!(cfg.net.delivery, DeliveryPolicy::Anytime { deadline_s: 0.004 });
+    }
+
+    #[test]
+    fn list_parsers() {
+        assert_eq!(parse_list::<u64>("500, 2000").unwrap(), vec![500, 2000]);
+        assert!(parse_list::<u64>("500,,2000").is_err());
+        assert_eq!(parse_payloads("mtu,64").unwrap(), vec![None, Some(64)]);
+        assert_eq!(
+            parse_deliveries("arq,anytime", 0.005).unwrap(),
+            vec![DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.005 }]
+        );
+        assert!(parse_deliveries("udp", 0.005).is_err());
+        assert_eq!(
+            parse_placements("static,rr,least").unwrap(),
+            vec![Placement::Static, Placement::RoundRobin, Placement::LeastLoaded]
+        );
+    }
+
+    #[test]
+    fn space_fingerprint_is_deterministic_json() {
+        let s = space();
+        let a = s.to_ordered_json();
+        assert_eq!(a, s.to_ordered_json());
+        // parses as JSON and names every axis
+        let v = crate::json::Value::parse(&a).unwrap();
+        assert_eq!(v.get("servers").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("packet_payload").unwrap().as_arr().unwrap()[0].as_str().unwrap(), "mtu");
+    }
+}

@@ -1,0 +1,289 @@
+//! Resumable tuner state: a fingerprint file plus an append-only JSONL
+//! execution log.
+//!
+//! Long searches must survive interruption. The state file at `--state
+//! <path>` pins a **fingerprint** of everything that shapes the search —
+//! space, eval spec, strategy, seed — so a resumed invocation provably
+//! continues the *same* search (a mismatch is a hard error, not a silent
+//! restart). Next to it, `<path>.log.jsonl` records one line per
+//! completed evaluation, flushed as it happens:
+//!
+//! ```text
+//! {"point":{...},"objectives":{...},"report":{...}}
+//! {"point":{...},"infeasible":true,"error":"..."}
+//! ```
+//!
+//! Resume is **replay**: strategies are deterministic functions of
+//! (config, seed, evaluation results), so a resumed run re-walks the
+//! decision sequence from scratch and the driver answers each already-
+//! logged point from this cache instead of re-running the fleet. Because
+//! objectives are stored with shortest-roundtrip floats, a cached answer
+//! is bit-identical to the original measurement — the resumed front
+//! serializes byte-for-byte equal to an uninterrupted run's.
+//!
+//! A process killed mid-write can leave a truncated final line; the
+//! loader drops exactly that (the evaluation is simply redone). A
+//! malformed line anywhere else means real corruption and errors out.
+
+use super::ranking::Objectives;
+use super::space::TunePoint;
+use crate::json::Value;
+use crate::report::JsonObj;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// What one logged evaluation resolved to.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EvalOutcome {
+    /// the fleet run finished; its objective vector
+    Done(Objectives),
+    /// the point is a rejected configuration (`serve::ConfigError`); the
+    /// message explains why. Skipped on resume like any completed point.
+    Infeasible(String),
+}
+
+/// The execution log beside a state file.
+pub fn log_path(state_path: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.log.jsonl", state_path.display()))
+}
+
+/// Completed-evaluation cache, optionally backed by a state file + log.
+#[derive(Debug)]
+pub struct TuneState {
+    log: Option<std::fs::File>,
+    cache: HashMap<String, EvalOutcome>,
+}
+
+impl TuneState {
+    /// Ephemeral state: no files, nothing survives the process (used by
+    /// `perfgate` and tests that don't exercise resume).
+    pub fn in_memory() -> Self {
+        Self { log: None, cache: HashMap::new() }
+    }
+
+    /// Open (or create) persistent state. `fingerprint` is the
+    /// deterministic JSON of the search configuration; an existing state
+    /// file must match it byte for byte.
+    pub fn open(state_path: &Path, fingerprint: &str) -> Result<Self> {
+        if let Some(dir) = state_path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating state dir {}", dir.display()))?;
+            }
+        }
+        match std::fs::read_to_string(state_path) {
+            Ok(existing) => {
+                if existing.trim_end() != fingerprint {
+                    bail!(
+                        "state file {} belongs to a different search \
+                         (space/eval/strategy/seed changed); pick a fresh --state path\n\
+                         saved:   {}\ncurrent: {fingerprint}",
+                        state_path.display(),
+                        existing.trim_end(),
+                    );
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                std::fs::write(state_path, format!("{fingerprint}\n"))
+                    .with_context(|| format!("writing state file {}", state_path.display()))?;
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading {}", state_path.display()))
+            }
+        }
+        let lp = log_path(state_path);
+        let cache = match std::fs::read_to_string(&lp) {
+            Ok(text) => parse_log(&text).with_context(|| format!("parsing {}", lp.display()))?,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => HashMap::new(),
+            Err(e) => return Err(e).with_context(|| format!("reading {}", lp.display())),
+        };
+        let log = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&lp)
+            .with_context(|| format!("opening {} for append", lp.display()))?;
+        Ok(Self { log: Some(log), cache })
+    }
+
+    /// Cached outcome for a point key, if this point was already
+    /// evaluated (possibly by an earlier, interrupted invocation).
+    pub fn lookup(&self, key: &str) -> Option<&EvalOutcome> {
+        self.cache.get(key)
+    }
+
+    /// Number of evaluations this state knows about.
+    pub fn completed(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Record one finished evaluation: append a log line (flushed
+    /// immediately — an interrupt after this call never loses the
+    /// evaluation) and cache it. `report_json` carries the full
+    /// `PipelineReport` for human inspection; only the objectives are
+    /// read back.
+    pub fn record(
+        &mut self,
+        point: &TunePoint,
+        outcome: &EvalOutcome,
+        report_json: Option<&str>,
+    ) -> Result<()> {
+        let mut obj = JsonObj::new().field_raw("point", &point.to_ordered_json());
+        match outcome {
+            EvalOutcome::Done(o) => {
+                obj = obj.field_raw("objectives", &o.to_ordered_json());
+                if let Some(rep) = report_json {
+                    obj = obj.field_raw("report", rep);
+                }
+            }
+            EvalOutcome::Infeasible(msg) => {
+                obj = obj.field_bool("infeasible", true).field_str("error", msg);
+            }
+        }
+        let line = obj.finish();
+        if let Some(f) = &mut self.log {
+            writeln!(f, "{line}").context("appending to the execution log")?;
+            f.flush().context("flushing the execution log")?;
+        }
+        self.cache.insert(point.key(), outcome.clone());
+        Ok(())
+    }
+}
+
+/// Parse the whole log text into the evaluation cache. A truncated
+/// **final** line (interrupted mid-write) is dropped; malformed lines
+/// anywhere else are corruption and error out.
+fn parse_log(text: &str) -> Result<HashMap<String, EvalOutcome>> {
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut cache = HashMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        let parsed = Value::parse(line).and_then(|v| parse_entry(&v));
+        match parsed {
+            Ok((key, outcome)) => {
+                cache.insert(key, outcome);
+            }
+            Err(e) => {
+                if i + 1 == lines.len() {
+                    // interrupted mid-write; the evaluation reruns
+                    continue;
+                }
+                return Err(e.context(format!("execution log line {}", i + 1)));
+            }
+        }
+    }
+    Ok(cache)
+}
+
+fn parse_entry(v: &Value) -> Result<(String, EvalOutcome)> {
+    let point = TunePoint::parse(v.get("point")?)?;
+    let outcome = match v.opt("infeasible") {
+        Some(flag) if flag.as_bool()? => EvalOutcome::Infeasible(v.str_at("error")?),
+        _ => EvalOutcome::Done(Objectives::parse(v.get("objectives")?)?),
+    };
+    Ok((point.key(), outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::DeliveryPolicy;
+    use crate::serve::Placement;
+
+    fn point(servers: usize) -> TunePoint {
+        TunePoint {
+            batch_deadline_us: 2000,
+            packet_payload: None,
+            bits: 4,
+            delivery: DeliveryPolicy::Anytime { deadline_s: 1.0 / 3.0 },
+            placement: Placement::Static,
+            servers,
+        }
+    }
+
+    fn objectives() -> Objectives {
+        Objectives {
+            accuracy: 0.1 + 0.2,
+            p99_latency_s: 1.0 / 7.0,
+            goodput_bps: 123456.789,
+            server_seconds: 2.5,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("agilenn_tune_state");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(log_path(&p));
+        p
+    }
+
+    #[test]
+    fn log_roundtrips_outcomes_bit_exactly() {
+        let path = tmp("roundtrip.state");
+        let fp = r#"{"schema":"test","seed":1}"#;
+        {
+            let mut st = TuneState::open(&path, fp).unwrap();
+            st.record(&point(1), &EvalOutcome::Done(objectives()), Some("{\"requests\":8}"))
+                .unwrap();
+            st.record(&point(2), &EvalOutcome::Infeasible("nope".into()), None).unwrap();
+            assert_eq!(st.completed(), 2);
+        }
+        let st = TuneState::open(&path, fp).unwrap();
+        assert_eq!(st.completed(), 2);
+        match st.lookup(&point(1).key()).unwrap() {
+            EvalOutcome::Done(o) => {
+                let want = objectives();
+                assert_eq!(o.accuracy.to_bits(), want.accuracy.to_bits());
+                assert_eq!(o.p99_latency_s.to_bits(), want.p99_latency_s.to_bits());
+                assert_eq!(o.goodput_bps.to_bits(), want.goodput_bps.to_bits());
+                assert_eq!(o.server_seconds.to_bits(), want.server_seconds.to_bits());
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+        assert_eq!(
+            st.lookup(&point(2).key()),
+            Some(&EvalOutcome::Infeasible("nope".into()))
+        );
+        assert!(st.lookup(&point(3).key()).is_none());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_a_hard_error() {
+        let path = tmp("mismatch.state");
+        TuneState::open(&path, r#"{"seed":1}"#).unwrap();
+        let err = TuneState::open(&path, r#"{"seed":2}"#).unwrap_err();
+        assert!(err.to_string().contains("different search"), "{err:#}");
+    }
+
+    #[test]
+    fn truncated_final_line_is_dropped_but_earlier_corruption_errors() {
+        let path = tmp("truncated.state");
+        let fp = "{}";
+        {
+            let mut st = TuneState::open(&path, fp).unwrap();
+            st.record(&point(1), &EvalOutcome::Done(objectives()), None).unwrap();
+        }
+        // simulate a kill mid-write: a half-written final line
+        {
+            use std::io::Write;
+            let mut f =
+                std::fs::OpenOptions::new().append(true).open(log_path(&path)).unwrap();
+            write!(f, "{{\"point\":{{\"batch_dead").unwrap();
+        }
+        let st = TuneState::open(&path, fp).unwrap();
+        assert_eq!(st.completed(), 1, "the truncated line is simply redone");
+        // corruption before the end is a real error
+        std::fs::write(log_path(&path), "garbage\n{\"also\":\"broken\"}\n").unwrap();
+        assert!(TuneState::open(&path, fp).is_err());
+    }
+
+    #[test]
+    fn in_memory_state_caches_without_files() {
+        let mut st = TuneState::in_memory();
+        st.record(&point(1), &EvalOutcome::Done(objectives()), None).unwrap();
+        assert!(st.lookup(&point(1).key()).is_some());
+        assert_eq!(st.completed(), 1);
+    }
+}

@@ -1,0 +1,66 @@
+//! Exhaustive grid sweep: every point, in mixed-radix index order.
+//!
+//! The order is part of the contract — resumed runs replay the same
+//! sequence and skip the logged prefix via the driver's cache.
+
+use crate::tune::space::{SearchSpace, TunePoint};
+use crate::tune::state::EvalOutcome;
+use anyhow::Result;
+
+/// Visit all `space.len()` points in index order. Returns `Ok(true)` when
+/// the grid was fully evaluated, `Ok(false)` when the evaluator declined
+/// (this invocation's budget is spent; resume later).
+pub fn run(
+    space: &SearchSpace,
+    eval: &mut dyn FnMut(&TunePoint) -> Result<Option<EvalOutcome>>,
+) -> Result<bool> {
+    for index in 0..space.len() {
+        if eval(&space.point(index))?.is_none() {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::ranking::Objectives;
+
+    fn outcome() -> EvalOutcome {
+        EvalOutcome::Done(Objectives {
+            accuracy: 0.9,
+            p99_latency_s: 0.01,
+            goodput_bps: 1e6,
+            server_seconds: 1.0,
+        })
+    }
+
+    #[test]
+    fn visits_every_point_in_index_order() {
+        let space = SearchSpace::default();
+        let mut seen = Vec::new();
+        let done = run(&space, &mut |p| {
+            seen.push(p.key());
+            Ok(Some(outcome()))
+        })
+        .unwrap();
+        assert!(done);
+        assert_eq!(seen.len(), space.len());
+        let expect: Vec<String> = (0..space.len()).map(|i| space.point(i).key()).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn stops_cleanly_when_the_evaluator_declines() {
+        let space = SearchSpace::default();
+        let mut calls = 0usize;
+        let done = run(&space, &mut |_| {
+            calls += 1;
+            Ok(if calls <= 3 { Some(outcome()) } else { None })
+        })
+        .unwrap();
+        assert!(!done, "an exhausted budget reports the search incomplete");
+        assert_eq!(calls, 4, "the declined call ends the sweep immediately");
+    }
+}

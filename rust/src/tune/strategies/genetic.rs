@@ -1,0 +1,285 @@
+//! Seeded genetic search over the typed space.
+//!
+//! Genomes are per-axis digit vectors ([`SearchSpace::genome`]), so
+//! crossover and mutation always produce valid grid points. Selection is
+//! a binary tournament on Pareto rank within the current population
+//! (fewer dominators wins), with deterministic tie-breaks: the
+//! [`ranking::compare`] total order, then lexicographic genome order.
+//! Infeasible members (rejected configurations) always lose to feasible
+//! ones, so the search drifts away from invalid corners of the space
+//! without hard-coding which combinations are legal.
+//!
+//! All randomness comes from one xorshift64* stream seeded via config.
+//! Given the same (space, seed, population, budget) and the same
+//! evaluation results, the strategy visits the same points in the same
+//! order — which is exactly what resume-by-replay requires. Re-proposing
+//! an already-seen point is allowed and costs nothing: the driver answers
+//! it from the evaluation cache.
+
+use crate::tune::ranking;
+use crate::tune::space::{SearchSpace, TunePoint};
+use crate::tune::state::EvalOutcome;
+use anyhow::Result;
+use std::cmp::Ordering;
+
+/// xorshift64* — same generator the simulator fabric uses; never zero.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Self(seed.max(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn usize(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        (self.next() % bound as u64) as usize
+    }
+}
+
+#[derive(Clone)]
+struct Member {
+    genome: Vec<usize>,
+    outcome: EvalOutcome,
+}
+
+/// How many feasible members of `pop` strictly dominate member `i`;
+/// `None` if `i` itself is infeasible (rank: worse than any feasible).
+fn dom_count(pop: &[Member], i: usize) -> Option<usize> {
+    let oi = match &pop[i].outcome {
+        EvalOutcome::Done(o) => o,
+        EvalOutcome::Infeasible(_) => return None,
+    };
+    Some(
+        pop.iter()
+            .enumerate()
+            .filter(|&(j, m)| {
+                j != i && matches!(&m.outcome, EvalOutcome::Done(oj) if ranking::dominates(oj, oi))
+            })
+            .count(),
+    )
+}
+
+/// Total fitness order (best first): lower domination count, then the
+/// deterministic objective order, then lexicographic genome.
+fn fitness_cmp(pop: &[Member], counts: &[Option<usize>], i: usize, j: usize) -> Ordering {
+    match (counts[i], counts[j]) {
+        (Some(ci), Some(cj)) => ci
+            .cmp(&cj)
+            .then_with(|| match (&pop[i].outcome, &pop[j].outcome) {
+                (EvalOutcome::Done(oi), EvalOutcome::Done(oj)) => ranking::compare(oi, oj),
+                _ => Ordering::Equal,
+            })
+            .then_with(|| pop[i].genome.cmp(&pop[j].genome)),
+        (Some(_), None) => Ordering::Less,
+        (None, Some(_)) => Ordering::Greater,
+        (None, None) => pop[i].genome.cmp(&pop[j].genome),
+    }
+}
+
+/// Binary tournament: draw two members, clone the fitter genome.
+fn tournament(pop: &[Member], counts: &[Option<usize>], rng: &mut Rng) -> Vec<usize> {
+    let a = rng.usize(pop.len());
+    let b = rng.usize(pop.len());
+    let w = if fitness_cmp(pop, counts, a, b) == Ordering::Greater { b } else { a };
+    pop[w].genome.clone()
+}
+
+/// Keep the `keep` fittest members, in fitness order (best first). The
+/// resulting order is deterministic, so subsequent tournament draws are
+/// too.
+fn select_survivors(pop: &mut Vec<Member>, keep: usize) {
+    let counts: Vec<Option<usize>> = (0..pop.len()).map(|i| dom_count(pop, i)).collect();
+    let mut order: Vec<usize> = (0..pop.len()).collect();
+    order.sort_by(|&i, &j| fitness_cmp(pop, &counts, i, j));
+    order.truncate(keep);
+    *pop = order.into_iter().map(|i| pop[i].clone()).collect();
+}
+
+/// Run the genetic search: seed `population` distinct random points, then
+/// evolve until `budget` evaluations are spent. Returns `Ok(true)` when
+/// the budget was fully consumed, `Ok(false)` when the evaluator declined
+/// mid-search (`--stop-after`; resume later).
+pub fn run(
+    space: &SearchSpace,
+    seed: u64,
+    population: usize,
+    budget: usize,
+    eval: &mut dyn FnMut(&TunePoint) -> Result<Option<EvalOutcome>>,
+) -> Result<bool> {
+    let population = population.max(2).min(space.len().max(1));
+    let mut rng = Rng::new(seed);
+    let mut pop: Vec<Member> = Vec::new();
+    let mut seeded = std::collections::HashSet::new();
+    let mut evals = 0usize;
+
+    // seed generation: distinct random grid points
+    while pop.len() < population && seeded.len() < space.len() {
+        if evals >= budget {
+            return Ok(true);
+        }
+        let index = rng.usize(space.len());
+        if !seeded.insert(index) {
+            continue;
+        }
+        match eval(&space.point(index))? {
+            None => return Ok(false),
+            Some(outcome) => {
+                evals += 1;
+                pop.push(Member { genome: space.genome(index), outcome });
+            }
+        }
+    }
+
+    // evolve: tournament parents -> uniform crossover -> mutation
+    while evals < budget {
+        let counts: Vec<Option<usize>> = (0..pop.len()).map(|i| dom_count(&pop, i)).collect();
+        let pa = tournament(&pop, &counts, &mut rng);
+        let pb = tournament(&pop, &counts, &mut rng);
+        let axes = space.axes();
+        let mut child: Vec<usize> = (0..axes)
+            .map(|a| if rng.usize(2) == 0 { pa[a] } else { pb[a] })
+            .collect();
+        for a in 0..axes {
+            // expected one mutated axis per child
+            if rng.usize(axes) == 0 {
+                child[a] = rng.usize(space.radix(a));
+            }
+        }
+        match eval(&space.point_of(&child))? {
+            None => return Ok(false),
+            Some(outcome) => {
+                evals += 1;
+                pop.push(Member { genome: child, outcome });
+                select_survivors(&mut pop, population);
+            }
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::DeliveryPolicy;
+    use crate::serve::Placement;
+    use crate::tune::ranking::Objectives;
+
+    fn space() -> SearchSpace {
+        SearchSpace {
+            batch_deadline_us: vec![500, 1000, 2000],
+            packet_payload: vec![None, Some(64)],
+            bits: vec![1, 2, 4],
+            delivery: vec![DeliveryPolicy::Arq],
+            placement: vec![Placement::Static, Placement::LeastLoaded],
+            servers: vec![1, 2],
+        }
+    }
+
+    /// A deterministic synthetic objective: better accuracy with more
+    /// bits, better latency with shorter deadlines — a real trade-off
+    /// surface, no fleet run needed.
+    fn synthetic(p: &TunePoint) -> EvalOutcome {
+        EvalOutcome::Done(Objectives {
+            accuracy: 0.5 + 0.1 * p.bits as f64,
+            p99_latency_s: p.batch_deadline_us as f64 * 1e-6 + 0.001 * p.servers as f64,
+            goodput_bps: 1e6 / p.bits as f64,
+            server_seconds: p.servers as f64,
+        })
+    }
+
+    #[test]
+    fn same_seed_visits_the_same_points_in_the_same_order() {
+        let s = space();
+        let mut runs = Vec::new();
+        for _ in 0..2 {
+            let mut seen = Vec::new();
+            let done = run(&s, 42, 6, 20, &mut |p| {
+                seen.push(p.key());
+                Ok(Some(synthetic(p)))
+            })
+            .unwrap();
+            assert!(done);
+            assert_eq!(seen.len(), 20, "budget counts every evaluation");
+            runs.push(seen);
+        }
+        assert_eq!(runs[0], runs[1], "seeded search must be replayable");
+    }
+
+    #[test]
+    fn different_seeds_explore_differently() {
+        let s = space();
+        let mut fronts = Vec::new();
+        for seed in [1u64, 2] {
+            let mut seen = Vec::new();
+            run(&s, seed, 6, 20, &mut |p| {
+                seen.push(p.key());
+                Ok(Some(synthetic(p)))
+            })
+            .unwrap();
+            fronts.push(seen);
+        }
+        assert_ne!(fronts[0], fronts[1]);
+    }
+
+    #[test]
+    fn declining_evaluator_stops_the_search_incomplete() {
+        let s = space();
+        let mut calls = 0usize;
+        let done = run(&s, 7, 4, 50, &mut |p| {
+            calls += 1;
+            Ok(if calls <= 5 { Some(synthetic(p)) } else { None })
+        })
+        .unwrap();
+        assert!(!done);
+        assert_eq!(calls, 6);
+    }
+
+    #[test]
+    fn infeasible_members_lose_tournaments_to_feasible_ones() {
+        let s = space();
+        // everything with 2 servers is "rejected"
+        let mut feasible_evals = 0usize;
+        let done = run(&s, 3, 6, 30, &mut |p| {
+            Ok(Some(if p.servers > 1 {
+                EvalOutcome::Infeasible("no".into())
+            } else {
+                feasible_evals += 1;
+                synthetic(p)
+            }))
+        })
+        .unwrap();
+        assert!(done);
+        assert!(feasible_evals > 0, "the search still finds the feasible half");
+    }
+
+    #[test]
+    fn survivor_selection_keeps_the_non_dominated_members() {
+        let g = |i: usize| vec![i, 0, 0, 0, 0, 0];
+        let o = |acc: f64, p99: f64| {
+            EvalOutcome::Done(Objectives {
+                accuracy: acc,
+                p99_latency_s: p99,
+                goodput_bps: 1e6,
+                server_seconds: 1.0,
+            })
+        };
+        let mut pop = vec![
+            Member { genome: g(0), outcome: o(0.9, 0.02) }, // dominated by 2
+            Member { genome: g(1), outcome: o(0.8, 0.005) }, // front (fast)
+            Member { genome: g(2), outcome: o(0.95, 0.02) }, // front (accurate)
+            Member { genome: g(3), outcome: EvalOutcome::Infeasible("x".into()) },
+        ];
+        select_survivors(&mut pop, 2);
+        let genomes: Vec<&Vec<usize>> = pop.iter().map(|m| &m.genome).collect();
+        assert_eq!(genomes, vec![&g(2), &g(1)], "front members survive, best-first");
+    }
+}

@@ -1,0 +1,74 @@
+//! Search strategies: who decides which grid point to evaluate next.
+//!
+//! A strategy is a deterministic function of (configuration, seed,
+//! evaluation results). It never touches the clock, the filesystem, or
+//! ambient entropy — all randomness comes from a seeded xorshift64*
+//! stream — so re-running a strategy against cached evaluation results
+//! replays the exact decision sequence. That property is what makes the
+//! execution log a resume mechanism rather than just a record.
+//!
+//! Strategies see evaluations through one narrow oracle:
+//!
+//! ```text
+//! FnMut(&TunePoint) -> Result<Option<EvalOutcome>>
+//! ```
+//!
+//! `Ok(Some(_))` is a completed evaluation (possibly answered from the
+//! resume cache); `Ok(None)` means this invocation's `--stop-after`
+//! budget is spent — the strategy unwinds immediately and reports the
+//! search as incomplete; `Err` is a real failure and aborts.
+
+pub mod exhaustive;
+pub mod genetic;
+
+/// Which strategy drives the search, with its knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategyKind {
+    /// visit every grid point in index order
+    Exhaustive,
+    /// seeded genetic search: tournament selection over Pareto rank,
+    /// uniform crossover, per-axis mutation; stops after `budget`
+    /// evaluations
+    Genetic { seed: u64, population: usize, budget: usize },
+}
+
+impl StrategyKind {
+    /// Stable name for fingerprints, artifacts, and `--strategy`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Exhaustive => "exhaustive",
+            StrategyKind::Genetic { .. } => "genetic",
+        }
+    }
+}
+
+impl std::str::FromStr for StrategyKind {
+    type Err = anyhow::Error;
+
+    /// Parse a bare `--strategy` name with that strategy's default knobs
+    /// (the CLI overrides seed/population/budget separately).
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "exhaustive" | "grid" => Ok(StrategyKind::Exhaustive),
+            "genetic" | "ga" => {
+                Ok(StrategyKind::Genetic { seed: 1, population: 8, budget: 64 })
+            }
+            other => anyhow::bail!("unknown strategy {other:?} (exhaustive|genetic)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names_parse_back() {
+        assert_eq!("exhaustive".parse::<StrategyKind>().unwrap(), StrategyKind::Exhaustive);
+        assert_eq!("grid".parse::<StrategyKind>().unwrap(), StrategyKind::Exhaustive);
+        let g: StrategyKind = "genetic".parse().unwrap();
+        assert_eq!(g.name(), "genetic");
+        assert!(matches!(g, StrategyKind::Genetic { .. }));
+        assert!("simulated-annealing".parse::<StrategyKind>().is_err());
+    }
+}

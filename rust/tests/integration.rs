@@ -16,8 +16,12 @@ use agilenn::coordinator::{DeviceRuntime, RemoteServer};
 use agilenn::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
 use agilenn::net::{DeliveryPolicy, GilbertElliott};
 use agilenn::runtime::{make_backend, ReferenceBackend};
-use agilenn::serve::{ClockKind, Placement, PipelineReport, ServeBuilder, Service, SimEngine};
+use agilenn::serve::{
+    ClockKind, ConfigError, Placement, PipelineReport, ServeBuilder, Service, SimEngine,
+};
+use agilenn::tune::{self, ranking, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use agilenn::workload::{Arrival, TestSet};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// A path no artifacts tree will ever live at: every reference-backend
@@ -863,6 +867,142 @@ fn reference_fleet_scale_smoke() {
     assert_eq!(rep.shards.len(), 4);
     assert!(rep.accuracy > 0.9, "accuracy {}", rep.accuracy);
     assert!(rep.wall_s > 0.0 && rep.throughput_rps > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// the autotuner: fronts, resume, determinism, typed config errors
+// ---------------------------------------------------------------------------
+
+/// A small 8-point grid (2 deadlines x 2 bit widths x 2 server counts).
+fn tune_space() -> SearchSpace {
+    SearchSpace {
+        batch_deadline_us: vec![500, 2000],
+        packet_payload: vec![None],
+        bits: vec![2, 4],
+        delivery: vec![DeliveryPolicy::Arq],
+        placement: vec![Placement::Static],
+        servers: vec![1, 2],
+    }
+}
+
+/// A cheap evaluation world: 4 devices x 64 requests on the sim clock.
+fn tune_eval() -> EvalSpec {
+    EvalSpec {
+        artifacts_dir: Some(NO_ARTIFACTS.into()),
+        devices: 4,
+        requests: 64,
+        rate_hz: 200.0,
+        ..EvalSpec::default()
+    }
+}
+
+fn tune_cfg(state: Option<PathBuf>, stop_after: Option<usize>) -> TuneConfig {
+    TuneConfig {
+        space: tune_space(),
+        eval: tune_eval(),
+        strategy: StrategyKind::Exhaustive,
+        state,
+        out: None,
+        stop_after,
+    }
+}
+
+#[test]
+fn reference_tune_exhaustive_emits_a_front() {
+    let out = tune::run(&tune_cfg(None, None), |_| {}).unwrap();
+    assert!(out.completed);
+    assert_eq!(out.evaluated, 8);
+    assert_eq!(out.cached, 0);
+    assert_eq!(out.infeasible, 0);
+    assert!(!out.front.is_empty() && out.front.len() <= 8, "front size {}", out.front.len());
+    // front members are mutually non-dominated
+    for (i, (_, a)) in out.front.iter().enumerate() {
+        for (_, b) in out.front.iter().skip(i + 1) {
+            assert!(!ranking::dominates(a, b) && !ranking::dominates(b, a));
+        }
+    }
+    // the artifact is valid ordered JSON naming every front point
+    let v = agilenn::json::Value::parse(&out.front_json).unwrap();
+    assert_eq!(v.str_at("schema").unwrap(), "agilenn-tune-v1");
+    assert_eq!(v.usize_at("evaluations").unwrap(), 8);
+    assert_eq!(v.get("front").unwrap().as_arr().unwrap().len(), out.front.len());
+}
+
+#[test]
+fn reference_tune_resume_round_trip_bitwise() {
+    let dir = std::env::temp_dir().join(format!("agilenn_tune_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let state = dir.join("resume.state");
+    let _ = std::fs::remove_file(&state);
+    let _ = std::fs::remove_file(tune::state::log_path(&state));
+    // interrupt after 3 evaluations
+    let first = tune::run(&tune_cfg(Some(state.clone()), Some(3)), |_| {}).unwrap();
+    assert!(!first.completed);
+    assert_eq!(first.evaluated, 3);
+    // resume with the same state: the 3 logged points replay from cache
+    let resumed = tune::run(&tune_cfg(Some(state.clone()), None), |_| {}).unwrap();
+    assert!(resumed.completed);
+    assert_eq!(resumed.cached, 3);
+    assert_eq!(resumed.evaluated, 5);
+    // ...and the artifact is byte-identical to an uninterrupted run
+    let oneshot = tune::run(&tune_cfg(None, None), |_| {}).unwrap();
+    assert_eq!(resumed.front_json, oneshot.front_json, "resume must be bitwise transparent");
+    let _ = std::fs::remove_file(&state);
+    let _ = std::fs::remove_file(tune::state::log_path(&state));
+}
+
+#[test]
+fn reference_tune_genetic_same_seed_is_deterministic() {
+    let mk = || TuneConfig {
+        strategy: StrategyKind::Genetic { seed: 9, population: 4, budget: 6 },
+        ..tune_cfg(None, None)
+    };
+    let a = tune::run(&mk(), |_| {}).unwrap();
+    let b = tune::run(&mk(), |_| {}).unwrap();
+    assert!(a.completed);
+    assert!(a.evaluated > 0 && !a.front.is_empty());
+    assert_eq!(a.evaluated, b.evaluated);
+    assert_eq!(a.front_json, b.front_json, "same seed must reproduce the artifact bitwise");
+}
+
+#[test]
+fn reference_tune_skips_infeasible_points_gracefully() {
+    // servers > 1 on the threaded sim fabric is a typed ConfigError: the
+    // tuner records those points infeasible and keeps searching
+    let cfg = TuneConfig {
+        eval: EvalSpec { sim_engine: SimEngine::Threads, ..tune_eval() },
+        ..tune_cfg(None, None)
+    };
+    let out = tune::run(&cfg, |_| {}).unwrap();
+    assert!(out.completed);
+    assert_eq!(out.evaluated, 8);
+    assert_eq!(out.infeasible, 4, "the four servers=2 points are infeasible");
+    assert!(!out.front.is_empty());
+    assert!(out.front.iter().all(|(p, _)| p.servers == 1), "front must hold feasible points only");
+}
+
+#[test]
+fn reference_config_error_is_typed_and_downcastable() {
+    // unsupported batch size: caught at stream() time with a typed error
+    let err = reference_builder(Scheme::Agile)
+        .devices(2)
+        .requests(8)
+        .max_batch(3)
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap_err();
+    match err.downcast_ref::<ConfigError>() {
+        Some(ConfigError::UnsupportedMaxBatch { max_batch: 3 }) => {}
+        other => panic!("expected UnsupportedMaxBatch, got {other:?}"),
+    }
+    // multi-server off the event engine: same typed surface
+    let err =
+        fleet_builder(4, 16).clock(ClockKind::Wall).servers(2).build().unwrap().run().unwrap_err();
+    match err.downcast_ref::<ConfigError>() {
+        Some(ConfigError::MultiServerNeedsEventEngine { servers: 2, .. }) => {}
+        other => panic!("expected MultiServerNeedsEventEngine, got {other:?}"),
+    }
 }
 
 #[test]

@@ -10,6 +10,7 @@ use agilenn::net::{
 };
 use agilenn::simulator::{NetworkProfile, NetworkSim};
 use agilenn::tensor::{argmax, softmax, Tensor};
+use agilenn::tune::{ranking, Objectives};
 use agilenn::xai;
 
 /// xorshift64* — deterministic, seedable.
@@ -383,5 +384,85 @@ fn prop_natural_skewness_bounds_achieved() {
         if !xai::is_disordered(&imp, k) {
             assert!((nat - ach).abs() < 1e-9, "seed {seed}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tune: Pareto front invariants
+// ---------------------------------------------------------------------------
+
+/// Objective vectors drawn from small discrete grids, so exact ties and
+/// duplicate points occur constantly — the hard cases for front stability.
+fn rand_objectives(rng: &mut Rng, n: usize) -> Vec<Objectives> {
+    (0..n)
+        .map(|_| Objectives {
+            accuracy: rng.usize(4) as f64 * 0.25,
+            p99_latency_s: rng.usize(3) as f64 * 0.01,
+            goodput_bps: rng.usize(3) as f64 * 1e5,
+            server_seconds: rng.usize(3) as f64,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_pareto_front_members_are_mutually_non_dominated() {
+    for seed in 1..=200u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.usize(40);
+        let objs = rand_objectives(&mut rng, n);
+        let front = ranking::pareto_front(&objs);
+        assert!(!front.is_empty(), "seed {seed}: a non-empty set has a front");
+        for (k, &i) in front.iter().enumerate() {
+            for &j in front.iter().skip(k + 1) {
+                assert!(
+                    !ranking::dominates(&objs[i], &objs[j])
+                        && !ranking::dominates(&objs[j], &objs[i]),
+                    "seed {seed}: front members {i} and {j} dominate each other"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_pareto_excluded_points_are_dominated_by_a_front_member() {
+    for seed in 1..=200u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.usize(40);
+        let objs = rand_objectives(&mut rng, n);
+        let front = ranking::pareto_front(&objs);
+        for (i, o) in objs.iter().enumerate() {
+            if front.contains(&i) {
+                continue;
+            }
+            // dominance is transitive, so some front member witnesses
+            // every exclusion
+            assert!(
+                front.iter().any(|&f| ranking::dominates(&objs[f], o)),
+                "seed {seed}: excluded point {i} has no dominating front member"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pareto_front_is_stable_under_permutation() {
+    for seed in 1..=200u64 {
+        let mut rng = Rng::new(seed);
+        let n = 2 + rng.usize(30);
+        let objs = rand_objectives(&mut rng, n);
+        let mut perm: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            perm.swap(i, rng.usize(i + 1));
+        }
+        let shuffled: Vec<Objectives> = perm.iter().map(|&i| objs[i]).collect();
+        // compare fronts as ordered value sequences (compare() totally
+        // orders distinct vectors; ties are bit-identical duplicates)
+        let values = |set: &[Objectives], front: &[usize]| -> Vec<String> {
+            front.iter().map(|&i| set[i].to_ordered_json()).collect()
+        };
+        let a = values(&objs, &ranking::pareto_front(&objs));
+        let b = values(&shuffled, &ranking::pareto_front(&shuffled));
+        assert_eq!(a, b, "seed {seed}: the front must not depend on evaluation order");
     }
 }
