@@ -1,0 +1,70 @@
+//! `bench --figure breakdown`: per-phase serving-latency quantiles from
+//! the unified metrics registry.
+//!
+//! Fig 16 reports the *mean* of each lifecycle phase; this table shows the
+//! tails — p50/p95/p99 of local NN, compression, network, and remote time
+//! plus the end-to-end sojourn — per scheme, served under load through the
+//! batched multi-device pipeline on the sim clock. The numbers are read
+//! from the same [`MetricsRegistry`](crate::obs::MetricsRegistry) that
+//! backs `PipelineReport` ([`finish_full`](crate::serve::OutcomeStream::finish_full)),
+//! so the table is a direct view of what `serve --metrics-out` writes.
+
+use super::common::{eval_n, EvalCtx};
+use crate::config::Scheme;
+use crate::report::{ms, Table};
+use crate::serve::{ClockKind, Service};
+use crate::workload::Arrival;
+use anyhow::Result;
+
+/// Registry histogram name -> table label, in presentation order.
+const PHASES: &[(&str, &str)] = &[
+    ("phase_local_nn_s", "local_nn"),
+    ("phase_compression_s", "compress"),
+    ("phase_network_s", "network"),
+    ("phase_remote_s", "remote"),
+    ("latency_s", "total"),
+];
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds in &ctx.datasets {
+        for scheme in Scheme::all() {
+            let cfg = ctx.run_config(ds, scheme);
+            let meta = ctx.meta(ds)?;
+            let testset = ctx.testset(ds)?;
+            let mut stream = Service::from_parts(
+                cfg,
+                meta,
+                testset,
+                4,
+                eval_n(),
+                Arrival::Poisson { hz: 100.0, seed: 16 },
+            )?
+            .with_clock(ClockKind::Sim)
+            .stream()?;
+            for _ in stream.by_ref() {}
+            let (_, mut registry) = stream.finish_full()?;
+            let mut t = Table::new(
+                format!(
+                    "Breakdown [{ds}/{}]: per-phase latency quantiles \
+                     (4 devices, batched, sim clock)",
+                    scheme.name()
+                ),
+                &["phase", "count", "p50_ms", "p95_ms", "p99_ms", "mean_ms"],
+            );
+            for (name, label) in PHASES {
+                let h = registry.hist_mut(name);
+                t.row(vec![
+                    (*label).into(),
+                    h.count().to_string(),
+                    ms(h.p50()),
+                    ms(h.p95()),
+                    ms(h.p99()),
+                    ms(h.mean_s()),
+                ]);
+            }
+            tables.push(t);
+        }
+    }
+    Ok(tables)
+}

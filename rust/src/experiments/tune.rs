@@ -76,6 +76,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
         state: None,
         out: None,
         stop_after: None,
+        trace: crate::obs::Tracer::off(),
     };
     let grid = cfg.space.len();
     let out = tune::run(&cfg, |_| {})?;
@@ -104,6 +105,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
         state: None,
         out: None,
         stop_after: None,
+        trace: crate::obs::Tracer::off(),
     };
     let wide = cfg.space.len();
     let out = tune::run(&cfg, |_| {})?;

@@ -19,7 +19,9 @@
 //!   million-request multi-server sweeps with pluggable device→server
 //!   placement), a resumable serving autotuner ([`tune`]: exhaustive or
 //!   seeded-genetic search over the serving knobs, Pareto-ranked with the
-//!   fleet engine as its evaluator), a CI perf-regression gate
+//!   fleet engine as its evaluator), a structured observability layer
+//!   ([`obs`]: request-lifecycle tracing with Perfetto export and a
+//!   unified metrics registry), a CI perf-regression gate
 //!   ([`perfgate`]), and the bench harness regenerating every
 //!   figure/table in the paper's evaluation.
 //!   Python is never on the request path.
@@ -74,6 +76,7 @@ pub mod fixtures;
 pub mod json;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod perfgate;
 pub mod report;
 pub mod runtime;

@@ -9,6 +9,7 @@ use agilenn::baselines::SchemeRunner;
 use agilenn::config::{default_artifacts_dir, BackendKind, Manifest, Meta, RunConfig, Scheme};
 use agilenn::experiments::{all_ids, run_figure, EvalCtx};
 use agilenn::net::{BandwidthTrace, DeliveryPolicy, GilbertElliott, PacketOrder};
+use agilenn::obs::{chrome_trace_json, RecordingSink, Tracer};
 use agilenn::perfgate;
 use agilenn::report::{ms, pct};
 use agilenn::runtime::make_backend;
@@ -16,6 +17,7 @@ use agilenn::serve::{ClockKind, Placement, ServeBuilder, SimEngine};
 use agilenn::tune::{self, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Tiny `--flag [value]` parser. A flag followed by another `--flag` (or by
 /// nothing) is valueless and stores `"true"`, so boolean switches like
@@ -101,6 +103,12 @@ COMMANDS:
              --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
              --quiet   (suppress streaming per-request progress)
              --json    (print the report as deterministic JSON)
+             --trace-out FILE    write a Chrome/Perfetto trace of every
+                                 request lifecycle (open in ui.perfetto.dev;
+                                 bitwise-reproducible under --clock sim)
+             --metrics-out FILE  write the unified metrics registry
+                                 (counters + per-phase latency histograms)
+                                 as deterministic JSON
            channel (default: ideal link; all stochastic behavior is
            deterministic in --net-seed):
              --loss 0.3          packet-loss rate
@@ -115,7 +123,7 @@ COMMANDS:
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --backend pjrt|reference --index 0 --bits 4 [--alpha 0.3]
   bench    regenerate a paper figure/table (or a fleet-scale sweep)
-             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|all
+             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|tune|breakdown|all
              --backend pjrt|reference  (reference: artifact-free sweeps
                                  on the synthetic model family)
   tune     search the serving-knob space with the fleet engine as the
@@ -146,6 +154,9 @@ COMMANDS:
                              byte-identical to an uninterrupted run
              --stop-after K  pause this invocation after K new evaluations
              --out FILE      write the ordered-JSON front artifact
+             --trace-out FILE  write a Chrome/Perfetto trace of the search
+                             (a span per fresh evaluation, an instant per
+                             resume hit / infeasible point)
              --quiet         suppress per-evaluation progress
   perfgate run the CI perf-regression suite (fleet engine + serving hot
            paths + autotuner evaluator, reference backend), write
@@ -235,6 +246,12 @@ fn main() -> Result<()> {
                 let trace = BandwidthTrace::from_file(std::path::Path::new(path))?;
                 builder = builder.bandwidth_trace(trace);
             }
+            let trace_out = args.flags.get("trace-out").cloned();
+            let metrics_out = args.flags.get("metrics-out").cloned();
+            let sink = trace_out.as_ref().map(|_| Arc::new(RecordingSink::new()));
+            if let Some(s) = &sink {
+                builder = builder.trace_sink(s.clone());
+            }
             let mut stream = builder.build()?.stream()?;
             let mut served = 0usize;
             for out in stream.by_ref() {
@@ -248,7 +265,19 @@ fn main() -> Result<()> {
                     );
                 }
             }
-            let rep = stream.finish()?;
+            let (rep, mut registry) = stream.finish_full()?;
+            if let Some(path) = &metrics_out {
+                std::fs::write(path, registry.to_ordered_json() + "\n")?;
+                if !json_out {
+                    println!("wrote {path}");
+                }
+            }
+            if let (Some(path), Some(s)) = (&trace_out, &sink) {
+                std::fs::write(path, chrome_trace_json(&s.take()) + "\n")?;
+                if !json_out {
+                    println!("wrote {path}");
+                }
+            }
             if json_out {
                 println!("{}", rep.to_ordered_json());
                 return Ok(());
@@ -379,6 +408,8 @@ fn main() -> Result<()> {
                 Some(v) => Some(v.parse()?),
                 None => None,
             };
+            let trace_out = args.flags.get("trace-out").cloned();
+            let sink = trace_out.as_ref().map(|_| Arc::new(RecordingSink::new()));
             let cfg = TuneConfig {
                 space,
                 eval,
@@ -386,6 +417,10 @@ fn main() -> Result<()> {
                 state: args.flags.get("state").map(PathBuf::from),
                 out: args.flags.get("out").map(PathBuf::from),
                 stop_after,
+                trace: match &sink {
+                    Some(s) => Tracer::new(s.clone()),
+                    None => Tracer::off(),
+                },
             };
             println!(
                 "tune: {} strategy over a {}-point grid ({} backend, {} clock, {} engine)",
@@ -424,6 +459,10 @@ fn main() -> Result<()> {
             }
             if let Some(path) = &cfg.out {
                 println!("wrote {}", path.display());
+            }
+            if let (Some(path), Some(s)) = (&trace_out, &sink) {
+                std::fs::write(path, chrome_trace_json(&s.take()) + "\n")?;
+                println!("wrote {path}");
             }
         }
         "perfgate" => {

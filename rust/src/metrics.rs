@@ -1,144 +1,12 @@
-//! Serving metrics: latency histograms, energy ledger, throughput counters.
+//! Serving metrics: latency breakdown, energy ledger, accuracy counter.
+//!
+//! The streaming quantile estimator formerly defined here lives in
+//! [`crate::obs::hist`] as the crate-wide [`crate::obs::Histogram`] — the
+//! single histogram implementation shared by the serving report, the
+//! metrics registry, and the experiments. `LatencyStats` remains as an
+//! alias so existing call sites keep reading naturally.
 
-/// Exact-sample cap: below this, quantiles are exact (sorted samples);
-/// beyond it the stats spill into fixed log-scale buckets so million-
-/// request runs hold a few KB instead of every sample.
-const EXACT_MAX_SAMPLES: usize = 4096;
-
-/// Log-scale bucket layout: bucket 0 starts at 1 µs, each bucket is 5%
-/// wider than the last, covering up to ~10^6 s. Relative quantile error is
-/// bounded by the bucket ratio (±2.5%).
-const BUCKET_MIN_S: f64 = 1e-6;
-const BUCKET_RATIO: f64 = 1.05;
-const N_BUCKETS: usize = 568;
-
-fn bucket_index(seconds: f64) -> usize {
-    if seconds <= BUCKET_MIN_S {
-        return 0;
-    }
-    let idx = (seconds / BUCKET_MIN_S).ln() / BUCKET_RATIO.ln();
-    (idx as usize).min(N_BUCKETS - 1)
-}
-
-/// Streaming latency statistics with bounded memory: exact quantiles for
-/// small runs (the benches), fixed log-scale buckets once the sample count
-/// spills past [`EXACT_MAX_SAMPLES`] (million-request serving runs).
-///
-/// Non-finite samples (NaN, ±inf) are never folded into the quantiles:
-/// they are counted separately ([`LatencyStats::non_finite`]) so a single
-/// poisoned measurement can neither panic the sort nor skew the stats.
-#[derive(Debug, Clone, Default)]
-pub struct LatencyStats {
-    samples_s: Vec<f64>,
-    sorted: bool,
-    /// engaged lazily on spill; `N_BUCKETS` counters, log-scale
-    buckets: Option<Vec<u64>>,
-    count: usize,
-    non_finite: usize,
-    sum_s: f64,
-    min_s: f64,
-    max_s: f64,
-}
-
-impl LatencyStats {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn record(&mut self, seconds: f64) {
-        if !seconds.is_finite() {
-            self.non_finite += 1;
-            return;
-        }
-        if self.count == 0 {
-            self.min_s = seconds;
-            self.max_s = seconds;
-        } else {
-            self.min_s = self.min_s.min(seconds);
-            self.max_s = self.max_s.max(seconds);
-        }
-        self.count += 1;
-        self.sum_s += seconds;
-        match &mut self.buckets {
-            Some(buckets) => buckets[bucket_index(seconds)] += 1,
-            None => {
-                self.samples_s.push(seconds);
-                self.sorted = false;
-                if self.samples_s.len() > EXACT_MAX_SAMPLES {
-                    let mut buckets = vec![0u64; N_BUCKETS];
-                    for &s in &self.samples_s {
-                        buckets[bucket_index(s)] += 1;
-                    }
-                    self.buckets = Some(buckets);
-                    self.samples_s = Vec::new();
-                }
-            }
-        }
-    }
-
-    pub fn count(&self) -> usize {
-        self.count
-    }
-
-    /// Samples rejected by [`LatencyStats::record`] for being NaN or
-    /// infinite (0 in a healthy run).
-    pub fn non_finite(&self) -> usize {
-        self.non_finite
-    }
-
-    pub fn mean_s(&self) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        self.sum_s / self.count as f64
-    }
-
-    fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            // total_cmp: NaN-safe total order (record filters non-finite
-            // samples already; this can never panic regardless)
-            self.samples_s.sort_by(f64::total_cmp);
-            self.sorted = true;
-        }
-    }
-
-    pub fn quantile(&mut self, q: f64) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let target = ((self.count as f64 - 1.0) * q.clamp(0.0, 1.0)).round() as usize;
-        match &self.buckets {
-            None => {
-                self.ensure_sorted();
-                self.samples_s[target]
-            }
-            Some(buckets) => {
-                let mut cum = 0usize;
-                for (b, &n) in buckets.iter().enumerate() {
-                    cum += n as usize;
-                    if cum > target {
-                        // geometric bucket midpoint, clamped to observed range
-                        let mid = BUCKET_MIN_S * BUCKET_RATIO.powf(b as f64 + 0.5);
-                        return mid.clamp(self.min_s, self.max_s);
-                    }
-                }
-                self.max_s
-            }
-        }
-    }
-
-    pub fn p50(&mut self) -> f64 {
-        self.quantile(0.50)
-    }
-
-    pub fn p95(&mut self) -> f64 {
-        self.quantile(0.95)
-    }
-
-    pub fn p99(&mut self) -> f64 {
-        self.quantile(0.99)
-    }
-}
+pub use crate::obs::Histogram as LatencyStats;
 
 /// Per-request latency breakdown (paper §7.2's four components).
 #[derive(Debug, Clone, Copy, Default)]
@@ -212,83 +80,13 @@ mod tests {
     use super::*;
 
     #[test]
-    fn latency_quantiles() {
-        let mut s = LatencyStats::new();
-        for i in 1..=100 {
-            s.record(i as f64);
-        }
-        assert_eq!(s.count(), 100);
-        assert!((s.mean_s() - 50.5).abs() < 1e-9);
-        assert!((s.p50() - 50.0).abs() <= 1.0);
-        assert!((s.p99() - 99.0).abs() <= 1.0);
-    }
-
-    #[test]
-    fn empty_stats_are_zero() {
-        let mut s = LatencyStats::new();
-        assert_eq!(s.mean_s(), 0.0);
-        assert_eq!(s.p95(), 0.0);
-    }
-
-    #[test]
-    fn non_finite_samples_are_flagged_not_fatal() {
-        let mut s = LatencyStats::new();
-        s.record(f64::NAN);
-        s.record(1.0);
-        s.record(f64::INFINITY);
-        s.record(f64::NEG_INFINITY);
-        s.record(3.0);
+    fn latency_stats_alias_is_the_obs_histogram() {
+        // the alias and the canonical type are one implementation
+        let mut s: LatencyStats = crate::obs::Histogram::new();
+        s.record(0.010);
+        s.record(0.020);
         assert_eq!(s.count(), 2);
-        assert_eq!(s.non_finite(), 3);
-        assert!((s.mean_s() - 2.0).abs() < 1e-12);
-        // the sort that used to panic on partial_cmp(NaN) is now safe
-        assert_eq!(s.quantile(1.0), 3.0);
-        assert_eq!(s.quantile(0.0), 1.0);
-    }
-
-    #[test]
-    fn spills_to_bounded_buckets_with_accurate_quantiles() {
-        let mut s = LatencyStats::new();
-        let n = 200_000usize;
-        for i in 0..n {
-            // latencies spread over 1 ms .. 201 ms
-            s.record(1e-3 + (i as f64 / n as f64) * 0.2);
-        }
-        assert_eq!(s.count(), n);
-        // memory is bounded: the exact sample vec was dropped on spill
-        assert!(s.samples_s.is_empty());
-        assert_eq!(s.buckets.as_ref().map(Vec::len), Some(N_BUCKETS));
-        assert!((s.mean_s() - 0.101).abs() < 1e-4);
-        // bucketed quantiles land within the bucket ratio of the truth
-        let p50 = s.p50();
-        assert!((p50 - 0.101).abs() / 0.101 < 0.06, "p50 {p50}");
-        let p99 = s.p99();
-        assert!((p99 - 0.199).abs() / 0.199 < 0.06, "p99 {p99}");
-    }
-
-    #[test]
-    fn bucketed_quantiles_respect_observed_range() {
-        let mut s = LatencyStats::new();
-        for _ in 0..(EXACT_MAX_SAMPLES + 10) {
-            s.record(0.005);
-        }
-        // every sample identical: all quantiles collapse to it exactly
-        // (bucket midpoint is clamped to [min, max])
-        assert_eq!(s.p50(), 0.005);
-        assert_eq!(s.p99(), 0.005);
-        assert_eq!(s.count(), EXACT_MAX_SAMPLES + 10);
-    }
-
-    #[test]
-    fn exact_path_unchanged_below_the_spill_threshold() {
-        let mut s = LatencyStats::new();
-        for i in (1..=1000).rev() {
-            s.record(i as f64 * 1e-3);
-        }
-        assert!(s.buckets.is_none());
-        assert!((s.p50() - 0.5).abs() <= 2e-3);
-        assert!((s.quantile(1.0) - 1.0).abs() < 1e-12);
-        assert!((s.quantile(0.0) - 1e-3).abs() < 1e-12);
+        assert!((s.mean_s() - 0.015).abs() < 1e-12);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 use super::channel::Channel;
 use super::packetizer::Packet;
+use crate::obs::{EventKind, Lane, Tracer};
 
 /// Retransmission-round cap: with any loss rate below ~50% the residual
 /// probability of an undelivered packet after this many rounds is
@@ -84,6 +85,23 @@ pub fn transmit_packets(
     packets: &[Packet],
     t0: f64,
 ) -> (Vec<Packet>, NetStats) {
+    transmit_packets_traced(channel, policy, packets, t0, &Tracer::off(), Lane::Device(0), 0)
+}
+
+/// [`transmit_packets`] with per-packet trace emission: a `Packet` span
+/// per serialization (value = app bytes), a `PacketLost` instant at the
+/// would-be arrival of each dropped packet, and a `RetransmitRound`
+/// instant (value = round number) when a NACK round begins. `lane`/`id`
+/// stamp the emitting device and request.
+pub fn transmit_packets_traced(
+    channel: &mut Channel,
+    policy: &DeliveryPolicy,
+    packets: &[Packet],
+    t0: f64,
+    tracer: &Tracer,
+    lane: Lane,
+    id: u64,
+) -> (Vec<Packet>, NetStats) {
     let deadline = match policy {
         DeliveryPolicy::Arq => f64::INFINITY,
         DeliveryPolicy::Anytime { deadline_s } => t0 + deadline_s.max(0.0),
@@ -107,6 +125,7 @@ pub fn transmit_packets(
             }
             t += channel.rtt_s();
             stats.retransmit_rounds += 1;
+            tracer.instant(lane, EventKind::RetransmitRound, id, t, rounds as f64);
         }
         let mut still = Vec::new();
         for &i in &pending {
@@ -114,10 +133,12 @@ pub fn transmit_packets(
                 still.push(i);
                 continue;
             }
+            let t_tx = t;
             let tx = channel.send_packet(t, packets[i].app_bytes());
             stats.packets_sent += 1;
             stats.airtime_s += tx.t_end - t;
             t = tx.t_end;
+            tracer.span(lane, EventKind::Packet, id, t_tx, t, packets[i].app_bytes() as f64);
             match tx.arrival_s {
                 Some(a) if a <= deadline => {
                     last_arrival = last_arrival.max(a);
@@ -128,6 +149,8 @@ pub fn transmit_packets(
                 Some(_) => still.push(i), // arrived too late to decode
                 None => {
                     stats.packets_lost += 1;
+                    let bytes = packets[i].app_bytes() as f64;
+                    tracer.instant(lane, EventKind::PacketLost, id, t, bytes);
                     still.push(i);
                 }
             }
@@ -154,6 +177,19 @@ pub fn transmit_packets(
 /// reproduces the closed-form `transfer_s` exactly: one round, same wire
 /// bytes, same serialization.
 pub fn transmit_frame(channel: &mut Channel, app_bytes: usize, t0: f64) -> NetStats {
+    transmit_frame_traced(channel, app_bytes, t0, &Tracer::off(), Lane::Device(0), 0)
+}
+
+/// [`transmit_frame`] with the same per-packet trace emission as
+/// [`transmit_packets_traced`].
+pub fn transmit_frame_traced(
+    channel: &mut Channel,
+    app_bytes: usize,
+    t0: f64,
+    tracer: &Tracer,
+    lane: Lane,
+    id: u64,
+) -> NetStats {
     let mtu = channel.mtu();
     let mut chunks: Vec<usize> = Vec::with_capacity(channel.packets(app_bytes));
     let mut left = app_bytes;
@@ -178,13 +214,16 @@ pub fn transmit_frame(channel: &mut Channel, app_bytes: usize, t0: f64) -> NetSt
         if rounds > 0 {
             t += channel.rtt_s();
             stats.retransmit_rounds += 1;
+            tracer.instant(lane, EventKind::RetransmitRound, id, t, rounds as f64);
         }
         let mut still = Vec::new();
         for &i in &pending {
+            let t_tx = t;
             let tx = channel.send_packet(t, chunks[i]);
             stats.packets_sent += 1;
             stats.airtime_s += tx.t_end - t;
             t = tx.t_end;
+            tracer.span(lane, EventKind::Packet, id, t_tx, t, chunks[i] as f64);
             match tx.arrival_s {
                 Some(a) => {
                     last_arrival = last_arrival.max(a);
@@ -192,6 +231,7 @@ pub fn transmit_frame(channel: &mut Channel, app_bytes: usize, t0: f64) -> NetSt
                 }
                 None => {
                     stats.packets_lost += 1;
+                    tracer.instant(lane, EventKind::PacketLost, id, t, chunks[i] as f64);
                     still.push(i);
                 }
             }
@@ -205,11 +245,14 @@ pub fn transmit_frame(channel: &mut Channel, app_bytes: usize, t0: f64) -> NetSt
     // always decodes a complete frame, and the accounting says so
     if !pending.is_empty() {
         stats.retransmit_rounds += 1;
+        tracer.instant(lane, EventKind::RetransmitRound, id, t, MAX_ARQ_ROUNDS as f64);
         for &i in &pending {
             let ser = channel.airtime_s(t, chunks[i]);
             stats.packets_sent += 1;
             stats.airtime_s += ser;
+            let t_tx = t;
             t += ser;
+            tracer.span(lane, EventKind::Packet, id, t_tx, t, chunks[i] as f64);
             stats.app_bytes_delivered += chunks[i];
             last_arrival = last_arrival.max(t + channel.rtt_s() / 2.0);
         }

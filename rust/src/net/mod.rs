@@ -29,7 +29,8 @@ pub mod packetizer;
 
 pub use channel::{BandwidthTrace, Channel, GilbertElliott, PacketTx};
 pub use delivery::{
-    transmit_frame, transmit_packets, DeliveryPolicy, LinkOutcome, NetStats, MAX_ARQ_ROUNDS,
+    transmit_frame, transmit_frame_traced, transmit_packets, transmit_packets_traced,
+    DeliveryPolicy, LinkOutcome, NetStats, MAX_ARQ_ROUNDS,
 };
 pub use packetizer::{
     importance_order, reassemble_symbols, Packet, PacketOrder, Packetizer, PACKET_HEADER_BYTES,

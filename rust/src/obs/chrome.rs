@@ -1,0 +1,133 @@
+//! Chrome-trace-event (Perfetto-ready) JSON export.
+//!
+//! Output is the JSON-array flavor of the Chrome trace format: metadata
+//! ("M") events naming one process per lane group (devices / servers /
+//! tuner) and one thread per lane, then "X" complete events for spans and
+//! "i" instants, timestamps in microseconds. Load the file directly in
+//! `ui.perfetto.dev` or `chrome://tracing`.
+//!
+//! Emission goes through the insertion-ordered [`JsonObj`] writer with
+//! shortest-roundtrip floats, and events are first put into the total
+//! order of [`sort_events`] — so under `--clock sim` the exported bytes
+//! are a pure function of the run configuration: bitwise-reproducible
+//! across invocations and invariant to recording order.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::event::{sort_events, Lane, TraceEvent};
+use crate::report::{json_array, JsonObj};
+
+/// Seconds → Chrome-trace microseconds.
+fn us(seconds: f64) -> f64 {
+    seconds * 1e6
+}
+
+fn metadata(name: &str, pid: u64, tid: u64, label: &str) -> String {
+    JsonObj::new()
+        .field_str("name", name)
+        .field_str("ph", "M")
+        .field_f64("ts", 0.0)
+        .field_u64("pid", pid)
+        .field_u64("tid", tid)
+        .field_raw("args", &JsonObj::new().field_str("name", label).finish())
+        .finish()
+}
+
+/// Serialize events as a Chrome trace JSON array (one line, no trailing
+/// newline). The input slice is not required to be ordered.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut evs = events.to_vec();
+    sort_events(&mut evs);
+
+    let lanes: BTreeSet<Lane> = evs.iter().map(|e| e.lane).collect();
+    let mut pids: BTreeMap<u64, &'static str> = BTreeMap::new();
+    for lane in &lanes {
+        pids.insert(lane.pid(), lane.group_name());
+    }
+
+    let mut items = Vec::with_capacity(evs.len() + lanes.len() + pids.len());
+    for (pid, group) in &pids {
+        items.push(metadata("process_name", *pid, 0, group));
+    }
+    for lane in &lanes {
+        items.push(metadata("thread_name", lane.pid(), lane.tid(), &lane.label()));
+    }
+    for e in &evs {
+        let args = JsonObj::new().field_u64("id", e.id).field_f64("value", e.value).finish();
+        let mut obj = JsonObj::new()
+            .field_str("name", e.kind.name())
+            .field_str("ph", if e.kind.is_span() { "X" } else { "i" })
+            .field_f64("ts", us(e.t_s));
+        if e.kind.is_span() {
+            obj = obj.field_f64("dur", us(e.dur_s));
+        } else {
+            // instant scope: thread
+            obj = obj.field_str("s", "t");
+        }
+        items.push(
+            obj.field_u64("pid", e.lane.pid())
+                .field_u64("tid", e.lane.tid())
+                .field_raw("args", &args)
+                .finish(),
+        );
+    }
+    json_array(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+    use crate::obs::EventKind;
+
+    fn sample_events() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::instant(Lane::Device(0), EventKind::Arrival, 0, 0.0, 0.0),
+            TraceEvent::span(Lane::Device(0), EventKind::Encode, 0, 0.0, 0.25e-3, 0.0),
+            TraceEvent::span(Lane::Server(1), EventKind::ServerQueue, 0, 0.5e-3, 1.5e-3, 0.0),
+            TraceEvent::instant(Lane::Server(1), EventKind::BatchDispatch, 1, 1.5e-3, 4.0),
+            TraceEvent::instant(Lane::Device(0), EventKind::Done, 0, 2.0e-3, 1.0),
+        ]
+    }
+
+    #[test]
+    fn export_shape_is_chrome_trace() {
+        let text = chrome_trace_json(&sample_events());
+        let v = Value::parse(&text).unwrap();
+        let arr = v.as_arr().unwrap();
+        // 2 process_name + 2 thread_name + 5 events
+        assert_eq!(arr.len(), 9);
+        for item in arr {
+            assert!(item.get("ph").is_ok());
+            assert!(item.get("ts").is_ok());
+            assert!(item.get("pid").is_ok());
+            assert!(item.get("tid").is_ok());
+        }
+        assert_eq!(arr[0].str_at("ph").unwrap(), "M");
+        assert_eq!(arr[0].str_at("name").unwrap(), "process_name");
+        // the encode span exports in microseconds
+        let encode = arr
+            .iter()
+            .find(|i| i.str_at("name").map(|n| n == "encode").unwrap_or(false))
+            .unwrap();
+        assert_eq!(encode.str_at("ph").unwrap(), "X");
+        assert!((encode.f64_at("dur").unwrap() - 250.0).abs() < 1e-9);
+        let done =
+            arr.iter().find(|i| i.str_at("name").map(|n| n == "done").unwrap_or(false)).unwrap();
+        assert_eq!(done.str_at("ph").unwrap(), "i");
+        assert_eq!(done.str_at("s").unwrap(), "t");
+    }
+
+    #[test]
+    fn export_is_invariant_to_recording_order() {
+        let evs = sample_events();
+        let mut rev = evs.clone();
+        rev.reverse();
+        assert_eq!(chrome_trace_json(&evs), chrome_trace_json(&rev));
+    }
+
+    #[test]
+    fn empty_input_is_an_empty_array() {
+        assert_eq!(chrome_trace_json(&[]), "[]");
+    }
+}

@@ -1,0 +1,233 @@
+//! Typed trace events: the request-lifecycle and fleet-level vocabulary
+//! every sink receives. One `Copy` struct, no strings on the hot path.
+
+/// Where an event happened: one Perfetto lane per device, server shard,
+/// or the tuner's search loop.
+///
+/// The derived `Ord` (devices < servers < tuner, then index) is the lane
+/// grouping used by the deterministic export sort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Lane {
+    /// A device by fleet index.
+    Device(u32),
+    /// A server shard by index (0 for the single-server threaded path).
+    Server(u32),
+    /// The autotuner's evaluation loop (virtual time = evaluation index).
+    Tuner,
+}
+
+impl Lane {
+    /// Chrome-trace process id: devices, servers, and the tuner render as
+    /// three processes so Perfetto groups their lanes.
+    pub fn pid(&self) -> u64 {
+        match self {
+            Lane::Device(_) => 1,
+            Lane::Server(_) => 2,
+            Lane::Tuner => 3,
+        }
+    }
+
+    /// Chrome-trace thread id within the process (the lane index).
+    pub fn tid(&self) -> u64 {
+        match self {
+            Lane::Device(i) | Lane::Server(i) => *i as u64,
+            Lane::Tuner => 0,
+        }
+    }
+
+    /// Process label for trace metadata.
+    pub fn group_name(&self) -> &'static str {
+        match self {
+            Lane::Device(_) => "devices",
+            Lane::Server(_) => "servers",
+            Lane::Tuner => "tuner",
+        }
+    }
+
+    /// Thread label for trace metadata.
+    pub fn label(&self) -> String {
+        match self {
+            Lane::Device(i) => format!("device {i}"),
+            Lane::Server(i) => format!("server {i}"),
+            Lane::Tuner => "search".to_string(),
+        }
+    }
+}
+
+/// The event vocabulary. Span kinds carry a duration; instant kinds mark
+/// a point in time. The derived `Ord` is only used as a deterministic
+/// tie-break in the export sort.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventKind {
+    /// Instant: a request entered the device's schedule (priced arrival).
+    Arrival,
+    /// Span: device-side feature extractor + local NN + quantize/compress.
+    Encode,
+    /// Span: the encoded frame waiting for the device radio to free up.
+    RadioWait,
+    /// Span: one packet's airtime on the channel (value = payload bytes).
+    Packet,
+    /// Instant: a packet observed lost at its would-be arrival time.
+    PacketLost,
+    /// Instant: an ARQ retransmission round began (value = round number).
+    RetransmitRound,
+    /// Span: the whole uplink transfer (value = app bytes offered).
+    Uplink,
+    /// Instant, server lane: the placer routed a request to this shard
+    /// (value = device index). Emitted by the event engine, where
+    /// placement decisions exist.
+    Placement,
+    /// Span, server lane: a request sitting in the batch queue.
+    ServerQueue,
+    /// Instant, server lane: a batch fired (id = batch sequence number,
+    /// value = batch size).
+    BatchDispatch,
+    /// Span: uplink-complete → batch-dispatch as seen by the device
+    /// (queue wait + remote NN; `LatencyBreakdown::remote_s`).
+    Remote,
+    /// Span: the reply's downlink transfer back to the device.
+    Downlink,
+    /// Instant: the request finished on-device — fuse/impute done and the
+    /// prediction emitted (value = 1 if the prediction was correct).
+    Done,
+    /// Span, tuner lane: one fresh configuration evaluation.
+    TuneEval,
+    /// Instant, tuner lane: an evaluation answered from the resume log.
+    TuneCached,
+    /// Instant, tuner lane: a configuration rejected as infeasible.
+    TuneInfeasible,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Arrival => "arrival",
+            EventKind::Encode => "encode",
+            EventKind::RadioWait => "radio_wait",
+            EventKind::Packet => "packet",
+            EventKind::PacketLost => "packet_lost",
+            EventKind::RetransmitRound => "retransmit_round",
+            EventKind::Uplink => "uplink",
+            EventKind::Placement => "placement",
+            EventKind::ServerQueue => "server_queue",
+            EventKind::BatchDispatch => "batch_dispatch",
+            EventKind::Remote => "remote",
+            EventKind::Downlink => "downlink",
+            EventKind::Done => "done",
+            EventKind::TuneEval => "tune_eval",
+            EventKind::TuneCached => "tune_cached",
+            EventKind::TuneInfeasible => "tune_infeasible",
+        }
+    }
+
+    /// True for kinds that carry a duration (Chrome "X" events); instants
+    /// export as "i".
+    pub fn is_span(&self) -> bool {
+        matches!(
+            self,
+            EventKind::Encode
+                | EventKind::RadioWait
+                | EventKind::Packet
+                | EventKind::Uplink
+                | EventKind::ServerQueue
+                | EventKind::Remote
+                | EventKind::Downlink
+                | EventKind::TuneEval
+        )
+    }
+}
+
+/// One trace event. Timestamps are the run's clock — virtual seconds
+/// under `--clock sim` (bit-reproducible), host seconds since run start
+/// under the wall clock (best effort).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub lane: Lane,
+    pub kind: EventKind,
+    /// What the event is about: request id on device/server lanes, batch
+    /// sequence for [`EventKind::BatchDispatch`], evaluation index on the
+    /// tuner lane.
+    pub id: u64,
+    /// Start time, seconds on the run's clock.
+    pub t_s: f64,
+    /// Duration in seconds; 0 for instant kinds.
+    pub dur_s: f64,
+    /// Kind-specific payload (bytes, batch size, 0/1 correctness, …).
+    pub value: f64,
+}
+
+impl TraceEvent {
+    pub fn span(lane: Lane, kind: EventKind, id: u64, t0_s: f64, t1_s: f64, value: f64) -> Self {
+        Self { lane, kind, id, t_s: t0_s, dur_s: t1_s - t0_s, value }
+    }
+
+    pub fn instant(lane: Lane, kind: EventKind, id: u64, t_s: f64, value: f64) -> Self {
+        Self { lane, kind, id, t_s, dur_s: 0.0, value }
+    }
+
+    pub fn end_s(&self) -> f64 {
+        self.t_s + self.dur_s
+    }
+}
+
+/// The total, deterministic event order used by the exporter: time, then
+/// lane, then kind, id, duration, value as tie-breaks. Two event sets
+/// with the same members always serialize identically regardless of
+/// recording order.
+pub fn sort_events(events: &mut [TraceEvent]) {
+    events.sort_by(|a, b| {
+        a.t_s
+            .total_cmp(&b.t_s)
+            .then_with(|| a.lane.cmp(&b.lane))
+            .then_with(|| a.kind.cmp(&b.kind))
+            .then_with(|| a.id.cmp(&b.id))
+            .then_with(|| a.dur_s.total_cmp(&b.dur_s))
+            .then_with(|| a.value.total_cmp(&b.value))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_duration_and_end() {
+        let e = TraceEvent::span(Lane::Device(3), EventKind::Uplink, 7, 1.0, 1.5, 128.0);
+        assert_eq!(e.dur_s, 0.5);
+        assert_eq!(e.end_s(), 1.5);
+        assert!(e.kind.is_span());
+        let i = TraceEvent::instant(Lane::Server(0), EventKind::BatchDispatch, 1, 2.0, 4.0);
+        assert_eq!(i.dur_s, 0.0);
+        assert!(!i.kind.is_span());
+    }
+
+    #[test]
+    fn lanes_map_to_stable_pids() {
+        assert_eq!(Lane::Device(9).pid(), 1);
+        assert_eq!(Lane::Device(9).tid(), 9);
+        assert_eq!(Lane::Server(2).pid(), 2);
+        assert_eq!(Lane::Tuner.pid(), 3);
+        assert!(Lane::Device(u32::MAX) < Lane::Server(0));
+        assert!(Lane::Server(u32::MAX) < Lane::Tuner);
+    }
+
+    #[test]
+    fn sort_is_total_and_deterministic() {
+        let mk = |t, lane, id| TraceEvent::instant(lane, EventKind::Done, id, t, 0.0);
+        let mut a = vec![
+            mk(2.0, Lane::Device(1), 4),
+            mk(1.0, Lane::Server(0), 2),
+            mk(1.0, Lane::Device(0), 1),
+            mk(1.0, Lane::Device(0), 0),
+        ];
+        let mut b = a.clone();
+        b.reverse();
+        sort_events(&mut a);
+        sort_events(&mut b);
+        assert_eq!(a, b);
+        assert_eq!(a[0].id, 0);
+        assert_eq!(a[1].id, 1);
+        assert_eq!(a[2].lane, Lane::Server(0));
+        assert_eq!(a[3].t_s, 2.0);
+    }
+}

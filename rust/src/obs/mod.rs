@@ -1,0 +1,35 @@
+//! `agilenn::obs` — structured observability for the serving stack.
+//!
+//! Three pieces, threaded through `serve::engine`, `serve::service`,
+//! `net`, and `tune`:
+//!
+//! 1. **Event tracing** ([`TraceSink`] / [`Tracer`]): typed
+//!    request-lifecycle spans (arrival → encode → radio wait → per-packet
+//!    uplink → server queue → batch dispatch → remote NN → downlink →
+//!    done) plus fleet-level events (placement decisions, retransmission
+//!    rounds, tuner evaluations), stamped with the run's clock. The
+//!    disabled default ([`Tracer::off`]) costs one branch per would-be
+//!    event; [`RecordingSink`] buffers everything for export.
+//! 2. **Chrome/Perfetto export** ([`chrome_trace_json`]): device, server,
+//!    and tuner lanes in virtual time, bitwise-reproducible under
+//!    `--clock sim` (`serve --trace-out`, `tune --trace-out`).
+//! 3. **Metrics** ([`MetricsRegistry`] over the unified [`Histogram`]):
+//!    named counters + log-bucketed histograms; `PipelineReport` is a
+//!    field-for-field-compatible view over the registry, and per-phase
+//!    latency breakdowns surface via `serve --metrics-out` and
+//!    `bench --figure breakdown`.
+//!
+//! See `docs/observability.md` for the event taxonomy, schemas, and the
+//! Perfetto how-to.
+
+pub mod chrome;
+pub mod event;
+pub mod hist;
+pub mod registry;
+pub mod sink;
+
+pub use chrome::chrome_trace_json;
+pub use event::{sort_events, EventKind, Lane, TraceEvent};
+pub use hist::Histogram;
+pub use registry::{MetricsRegistry, METRICS_SCHEMA};
+pub use sink::{NoopSink, RecordingSink, TraceSink, Tracer};

@@ -1,0 +1,146 @@
+//! The unified metrics registry: named counters, float sums, and
+//! log-bucketed histograms (the crate's single [`Histogram`] type).
+//!
+//! The serving stack accumulates into typed per-run aggregates on the hot
+//! path (no map lookups per request) and folds them into a registry at
+//! stream finish; [`crate::serve::PipelineReport::from_registry`] then
+//! derives every report field from registry entries — the report is a
+//! view over the registry, field-for-field compatible with the
+//! pre-registry implementation.
+
+use std::collections::BTreeMap;
+
+use super::hist::Histogram;
+use crate::report::JsonObj;
+
+pub const METRICS_SCHEMA: &str = "agilenn-metrics-v1";
+
+/// Named counters + sums + histograms. Keys are `&'static str` by design:
+/// metric names are a fixed vocabulary, not runtime data.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    sums: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&mut self, name: &'static str, v: u64) {
+        *self.counters.entry(name).or_insert(0) += v;
+    }
+
+    /// Counter value; 0 when never written.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn sum_add(&mut self, name: &'static str, v: f64) {
+        *self.sums.entry(name).or_insert(0.0) += v;
+    }
+
+    /// Sum value; 0.0 when never written.
+    pub fn sum(&self, name: &str) -> f64 {
+        self.sums.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// The named histogram, created empty on first access.
+    pub fn hist_mut(&mut self, name: &'static str) -> &mut Histogram {
+        self.hists.entry(name).or_default()
+    }
+
+    /// Move an externally accumulated histogram into the registry.
+    pub fn insert_hist(&mut self, name: &'static str, h: Histogram) {
+        self.hists.insert(name, h);
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    pub fn hist_names(&self) -> impl Iterator<Item = &'static str> + '_ {
+        self.hists.keys().copied()
+    }
+
+    /// Deterministic JSON: schema tag, then counters / sums / histogram
+    /// summaries each as a key-sorted object (BTreeMap order) with
+    /// shortest-roundtrip floats. `&mut` because quantiles sort lazily.
+    pub fn to_ordered_json(&mut self) -> String {
+        let mut counters = JsonObj::new();
+        for (k, v) in &self.counters {
+            counters = counters.field_u64(k, *v);
+        }
+        let mut sums = JsonObj::new();
+        for (k, v) in &self.sums {
+            sums = sums.field_f64(k, *v);
+        }
+        let mut hists = JsonObj::new();
+        for (k, h) in &mut self.hists {
+            let summary = JsonObj::new()
+                .field_usize("count", h.count())
+                .field_usize("non_finite", h.non_finite())
+                .field_f64("mean_s", h.mean_s())
+                .field_f64("p50_s", h.p50())
+                .field_f64("p95_s", h.p95())
+                .field_f64("p99_s", h.p99())
+                .field_f64("min_s", h.min_s())
+                .field_f64("max_s", h.max_s())
+                .finish();
+            hists = hists.field_raw(k, &summary);
+        }
+        JsonObj::new()
+            .field_str("schema", METRICS_SCHEMA)
+            .field_raw("counters", &counters.finish())
+            .field_raw("sums", &sums.finish())
+            .field_raw("histograms", &hists.finish())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+
+    #[test]
+    fn registry_accumulates_and_reads_back() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("requests_total", 2);
+        m.counter_add("requests_total", 3);
+        m.sum_add("airtime_s", 0.5);
+        m.sum_add("airtime_s", 0.25);
+        m.hist_mut("latency_s").record(0.010);
+        m.hist_mut("latency_s").record(0.030);
+        assert_eq!(m.counter("requests_total"), 5);
+        assert_eq!(m.counter("never_written"), 0);
+        assert!((m.sum("airtime_s") - 0.75).abs() < 1e-12);
+        assert_eq!(m.hist("latency_s").unwrap().count(), 2);
+        assert!(m.hist("missing").is_none());
+    }
+
+    #[test]
+    fn json_is_deterministic_and_parseable() {
+        let build = || {
+            let mut m = MetricsRegistry::new();
+            m.counter_add("b_counter", 7);
+            m.counter_add("a_counter", 1);
+            m.sum_add("radio_wait_s", 0.125);
+            let h = m.hist_mut("phase_network_s");
+            for i in 1..=10 {
+                h.record(i as f64 * 1e-3);
+            }
+            m.to_ordered_json()
+        };
+        let a = build();
+        assert_eq!(a, build());
+        let v = Value::parse(&a).unwrap();
+        assert_eq!(v.str_at("schema").unwrap(), METRICS_SCHEMA);
+        assert_eq!(v.get("counters").unwrap().usize_at("a_counter").unwrap(), 1);
+        let h = v.get("histograms").unwrap().get("phase_network_s").unwrap();
+        assert_eq!(h.usize_at("count").unwrap(), 10);
+        assert!((h.f64_at("max_s").unwrap() - 0.010).abs() < 1e-12);
+    }
+}

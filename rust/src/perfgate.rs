@@ -24,10 +24,12 @@ use crate::config::{BackendKind, Scheme};
 use crate::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
 use crate::json::Value;
 use crate::net::{transmit_frame, Channel, GilbertElliott};
+use crate::obs::{NoopSink, RecordingSink};
 use crate::report::{json_array, json_str, JsonObj};
 use crate::runtime::ReferenceBackend;
 use crate::serve::{make_device_side, ClockKind, Placement, ServeBuilder};
 use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Schema tag carried by every emitted report, so a future format change
@@ -195,7 +197,10 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
 
     // 1) the fleet engine: the 1M-request × 10k-device reference sweep.
     //    Gated on served requests per host second; the sim quantiles ride
-    //    along as (deterministic) info fields.
+    //    along as (deterministic) info fields. A NoopSink is attached on
+    //    purpose: the run exercises the full trace-emission path with a
+    //    discarding sink and must stay inside the same fleet_engine floor,
+    //    proving disabled tracing costs nothing measurable.
     let (rep, wall) = timed(handicap, || {
         ServeBuilder::new(SYNTHETIC_DATASET)
             .backend(BackendKind::Reference)
@@ -207,6 +212,7 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
             .arrival_seed(11)
             .servers(cfg.servers)
             .placement(Placement::LeastLoaded)
+            .trace_sink(Arc::new(NoopSink))
             .build()?
             .run()
     })?;
@@ -295,6 +301,7 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
         state: None,
         out: None,
         stop_after: None,
+        trace: crate::obs::Tracer::off(),
     };
     let grid = tune_cfg.space.len();
     let (outcome, wall) = timed(handicap, || crate::tune::run(&tune_cfg, |_| {}))?;
@@ -311,6 +318,41 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
         info: vec![
             ("grid_points".into(), grid as f64),
             ("front_size".into(), outcome.front.len() as f64),
+        ],
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    // 5) the fleet engine with a *recording* sink: the same headline
+    //    sweep as (1) but every request-lifecycle event is materialized
+    //    in memory — the worst-case tracing overhead, gated separately so
+    //    a regression in the emission path cannot hide inside the
+    //    fleet_engine tolerance.
+    let sink = Arc::new(RecordingSink::new());
+    let (rep, wall) = timed(handicap, || {
+        ServeBuilder::new(SYNTHETIC_DATASET)
+            .backend(BackendKind::Reference)
+            .scheme(Scheme::Agile)
+            .clock(ClockKind::Sim)
+            .devices(cfg.devices)
+            .requests(cfg.requests)
+            .rate_hz(20.0)
+            .arrival_seed(11)
+            .servers(cfg.servers)
+            .placement(Placement::LeastLoaded)
+            .trace_sink(sink.clone())
+            .build()?
+            .run()
+    })?;
+    ensure!(rep.requests == cfg.requests, "traced sweep served {} requests", rep.requests);
+    ensure!(!sink.is_empty(), "traced sweep recorded no events");
+    let entry = PerfEntry {
+        name: "fleet_engine_traced".into(),
+        throughput: cfg.requests as f64 / wall,
+        wall_s: wall,
+        info: vec![
+            ("events".into(), sink.len() as f64),
+            ("sim_wall_s".into(), rep.wall_s),
         ],
     };
     progress(&entry);

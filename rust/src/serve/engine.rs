@@ -61,9 +61,10 @@
 use crate::config::{Meta, RunConfig};
 use crate::coordinator::batcher::BatchQueue;
 use crate::net::{
-    importance_order, transmit_frame, transmit_packets, Channel, DeliveryPolicy, LinkOutcome,
-    PacketOrder, Packetizer,
+    importance_order, transmit_frame_traced, transmit_packets_traced, Channel, DeliveryPolicy,
+    LinkOutcome, PacketOrder, Packetizer,
 };
+use crate::obs::{self, Lane, Tracer};
 use crate::runtime::Backend;
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, reply_bytes, DeviceSide,
@@ -338,6 +339,10 @@ struct Fleet<'a> {
     t_end: f64,
     /// the stream consumer is gone; stop producing, like device threads do
     stopped: bool,
+    /// request-lifecycle trace sink; emissions mirror the threaded
+    /// `device_loop`/`server_loop` expression for expression, so sim
+    /// traces agree between the two paths on tie-free configurations
+    tracer: Tracer,
 }
 
 /// Run the fleet to completion, streaming outcomes into `tx_done`.
@@ -348,6 +353,7 @@ pub(crate) fn run_fleet(
     testset: &TestSet,
     spec: &FleetSpec,
     tx_done: &Sender<ServedOutcome>,
+    tracer: &Tracer,
 ) -> Result<EngineRun> {
     ensure!(spec.servers >= 1, "need at least one server");
     let device_side = make_device_side(backend, cfg, meta)?;
@@ -392,6 +398,7 @@ pub(crate) fn run_fleet(
         decoded: (0..testset.len()).map(|_| None).collect(),
         t_end: 0.0,
         stopped: false,
+        tracer: tracer.clone(),
     };
     for d in 0..spec.devices {
         let (ids, times) = device_schedule(&spec.arrival, spec.devices, spec.requests, d);
@@ -458,6 +465,9 @@ impl Fleet<'_> {
             let st = &self.devices[d];
             (st.next, st.ids[st.next], st.times[st.next])
         };
+        let lane = Lane::Device(d as u32);
+        let rid = id as u64;
+        self.tracer.instant(lane, obs::EventKind::Arrival, rid, t_arrival, 0.0);
         let idx = id % self.testset.len();
         let mut local = self.encode(idx)?;
         let timings_total = local.timings.total_s();
@@ -474,22 +484,37 @@ impl Fleet<'_> {
                 // radio has finished the previous exchange (schedule-
                 // anchored, identical to the threaded pipeline)
                 let compute_done = t_arrival + timings_total;
+                self.tracer.span(lane, obs::EventKind::Encode, rid, t_arrival, compute_done, 0.0);
                 let tx_start = compute_done.max(st.radio_free);
+                if tx_start > compute_done {
+                    self.tracer
+                        .span(lane, obs::EventKind::RadioWait, rid, compute_done, tx_start, 0.0);
+                }
                 let (body, mut stats) = match (&self.cfg.net.delivery, symbols) {
                     (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
                         let bits = frame.bits;
                         let pkts = self.packetizer.packetize(id as u64, &symbols, bits)?;
-                        let (arrived, stats) = transmit_packets(
+                        let (arrived, stats) = transmit_packets_traced(
                             &mut st.chan,
                             &self.cfg.net.delivery,
                             &pkts,
                             tx_start,
+                            &self.tracer,
+                            lane,
+                            rid,
                         );
                         let count = symbols.len();
                         (UplinkBody::Packets { packets: arrived, count, bits }, stats)
                     }
                     _ => {
-                        let stats = transmit_frame(&mut st.chan, frame.wire_bytes(), tx_start);
+                        let stats = transmit_frame_traced(
+                            &mut st.chan,
+                            frame.wire_bytes(),
+                            tx_start,
+                            &self.tracer,
+                            lane,
+                            rid,
+                        );
                         (UplinkBody::Whole(frame), stats)
                     }
                 };
@@ -497,6 +522,8 @@ impl Fleet<'_> {
                 let tx_bytes = stats.app_bytes_offered;
                 let t_reply = tx_start + stats.uplink_s;
                 let downlink_s = st.chan.transfer_s(t_reply, self.reply);
+                self.tracer
+                    .span(lane, obs::EventKind::Uplink, rid, tx_start, t_reply, tx_bytes as f64);
                 st.radio_free = t_reply + downlink_s;
                 let link = LinkOutcome {
                     network_s: stats.uplink_s + downlink_s,
@@ -521,6 +548,7 @@ impl Fleet<'_> {
             None => {
                 // resolved on device: the local timeline alone
                 let t_done = t + timings_total;
+                self.tracer.span(lane, obs::EventKind::Encode, rid, t, t_done, 0.0);
                 self.emit(d, j, id, &local, None, 0, 0.0, None, t_done)?;
             }
         }
@@ -539,6 +567,9 @@ impl Fleet<'_> {
             (aw.id, aw.body.take().ok_or_else(|| anyhow!("offload body already consumed"))?)
         };
         let shard = self.placer.pick(d, |s| self.servers[s].queue.len());
+        // fleet-level placement decision: which shard got this offload
+        let placed = Lane::Server(shard as u32);
+        self.tracer.instant(placed, obs::EventKind::Placement, id as u64, t, d as f64);
         let idx = id % self.testset.len();
         let feats = match &body {
             UplinkBody::Whole(frame) => {
@@ -594,9 +625,13 @@ impl Fleet<'_> {
         let agg = &mut self.servers[shard].agg;
         agg.batched += batch.len();
         agg.batches += 1;
+        let lane = Lane::Server(shard as u32);
         for p in &batch {
             agg.queue_wait.record(t - p.enqueued);
+            self.tracer.span(lane, obs::EventKind::ServerQueue, p.id, p.enqueued, t, 0.0);
         }
+        let seq = agg.batches as u64;
+        self.tracer.instant(lane, obs::EventKind::BatchDispatch, seq, t, batch.len() as f64);
         for (p, row) in batch.into_iter().zip(rows) {
             let d = p.payload.0;
             let aw = self.devices[d]
@@ -605,6 +640,10 @@ impl Fleet<'_> {
                 .ok_or_else(|| anyhow!("reply for device {d} with nothing in flight"))?;
             let remote_s = t - aw.t_send;
             let t_done = t + aw.downlink_s;
+            let dlane = Lane::Device(d as u32);
+            let rid = aw.id as u64;
+            self.tracer.span(dlane, obs::EventKind::Remote, rid, aw.t_send, t, 0.0);
+            self.tracer.span(dlane, obs::EventKind::Downlink, rid, t, t_done, 0.0);
             self.emit(
                 d,
                 aw.j,
@@ -648,6 +687,9 @@ impl Fleet<'_> {
             link,
             self.num_classes,
         )?;
+        let lane = Lane::Device(d as u32);
+        let correct = outcome.correct as u64 as f64;
+        self.tracer.instant(lane, obs::EventKind::Done, id as u64, t_done, correct);
         let served = ServedOutcome {
             id: id as u64,
             device: d,

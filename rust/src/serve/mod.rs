@@ -46,6 +46,16 @@
 //! batch queue across N servers under a static / round-robin /
 //! least-loaded device→server [`Placement`] policy, with per-shard
 //! load/latency in [`PipelineReport::shards`].
+//!
+//! Observability ([`crate::obs`]): `ServeBuilder::trace_sink` attaches a
+//! [`TraceSink`](crate::obs::TraceSink) that receives every
+//! request-lifecycle span (arrival → encode → radio wait → per-packet
+//! uplink → server queue → batch dispatch → remote NN → downlink → done)
+//! stamped in the run's clock domain — exported to Chrome/Perfetto JSON
+//! via [`crate::obs::chrome_trace_json`], bitwise-reproducible under the
+//! sim clock. [`OutcomeStream::finish_full`] additionally returns the
+//! [`MetricsRegistry`](crate::obs::MetricsRegistry) the
+//! [`PipelineReport`] is derived from. See `docs/observability.md`.
 
 pub mod clock;
 pub mod engine;

@@ -28,9 +28,10 @@ use crate::config::{default_artifacts_dir, BackendKind, Meta, RunConfig, Scheme}
 use crate::coordinator::batcher::{BatchQueue, Pending, REMOTE_BATCH_SIZES};
 use crate::metrics::{AccuracyCounter, LatencyStats};
 use crate::net::{
-    importance_order, transmit_frame, transmit_packets, BandwidthTrace, Channel, DeliveryPolicy,
-    GilbertElliott, LinkOutcome, Packet, PacketOrder, Packetizer,
+    importance_order, transmit_frame_traced, transmit_packets_traced, BandwidthTrace, Channel,
+    DeliveryPolicy, GilbertElliott, LinkOutcome, Packet, PacketOrder, Packetizer,
 };
+use crate::obs::{EventKind, Lane, MetricsRegistry, TraceSink, Tracer};
 use crate::runtime::{make_backend, Backend};
 use crate::serve::clock::{Clock, ClockKind};
 use crate::serve::engine::{self, FleetSpec, Placement, SimEngine};
@@ -148,6 +149,73 @@ impl PipelineReport {
             .field_f64("p99_net_s", self.p99_net_s)
             .field_f64("mean_radio_wait_s", self.mean_radio_wait_s)
             .finish()
+    }
+
+    /// Build the report as a view over the metrics registry: every field
+    /// derives from named counters/sums/histograms with the same formulas
+    /// the pre-registry accumulation used, so reports computed this way
+    /// are field-for-field (bit-for-bit on the deterministic fields)
+    /// identical to the pre-refactor implementation — the equivalence the
+    /// golden snapshot pins. See `docs/observability.md` for the metric
+    /// names.
+    pub fn from_registry(
+        m: &mut MetricsRegistry,
+        clock: ClockKind,
+        wall_s: f64,
+        shards: Vec<ShardReport>,
+    ) -> PipelineReport {
+        let requests = m.counter("requests_total") as usize;
+        let correct = m.counter("requests_correct");
+        let batches = m.counter("batches") as usize;
+        let batched = m.counter("batched_requests");
+        let uplinks = m.counter("uplinks");
+        let features_total = m.counter("features_total");
+        let features_delivered = m.counter("features_delivered");
+        let bytes_delivered = m.counter("bytes_delivered");
+        let airtime_s = m.sum("airtime_s");
+        let radio_wait_s = m.sum("radio_wait_s");
+        let (mean_latency_s, p95_latency_s, p99_latency_s) = {
+            let h = m.hist_mut("latency_s");
+            (h.mean_s(), h.p95(), h.p99())
+        };
+        let (mean_net_s, p99_net_s) = {
+            let h = m.hist_mut("net_s");
+            (h.mean_s(), h.p99())
+        };
+        PipelineReport {
+            requests,
+            clock,
+            wall_s,
+            throughput_rps: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
+            accuracy: if requests == 0 { 0.0 } else { correct as f64 / requests as f64 },
+            mean_latency_s,
+            p95_latency_s,
+            p99_latency_s,
+            mean_batch_size: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+            batches,
+            shards,
+            packets_sent: m.counter("packets_sent"),
+            packets_lost: m.counter("packets_lost"),
+            retransmit_rounds: m.counter("retransmit_rounds"),
+            incomplete_frames: m.counter("incomplete_frames") as usize,
+            delivered_feature_rate: if features_total == 0 {
+                1.0
+            } else {
+                features_delivered as f64 / features_total as f64
+            },
+            goodput_bps: if airtime_s <= 0.0 {
+                0.0
+            } else {
+                bytes_delivered as f64 * 8.0 / airtime_s
+            },
+            mean_net_s,
+            p99_net_s,
+            mean_radio_wait_s: if uplinks == 0 {
+                0.0
+            } else {
+                radio_wait_s / uplinks as f64
+            },
+        }
     }
 }
 
@@ -342,6 +410,7 @@ pub struct ServeBuilder {
     servers: usize,
     placement: Placement,
     sim_engine: SimEngine,
+    trace: Tracer,
 }
 
 impl ServeBuilder {
@@ -366,6 +435,7 @@ impl ServeBuilder {
             servers: 1,
             placement: Placement::default(),
             sim_engine: SimEngine::default(),
+            trace: Tracer::off(),
         }
     }
 
@@ -460,6 +530,16 @@ impl ServeBuilder {
     /// No effect on the wall clock.
     pub fn sim_engine(mut self, engine: SimEngine) -> Self {
         self.sim_engine = engine;
+        self
+    }
+
+    /// Attach a trace sink receiving the typed request-lifecycle events
+    /// (arrival → encode → radio wait → per-packet uplink → server queue
+    /// → batch dispatch → remote → downlink → done) plus fleet-level
+    /// events, stamped with the run's clock. Default: tracing off — a
+    /// single branch per would-be event. See [`crate::obs`].
+    pub fn trace_sink(mut self, sink: Arc<dyn TraceSink>) -> Self {
+        self.trace = Tracer::new(sink);
         self
     }
 
@@ -585,7 +665,8 @@ impl ServeBuilder {
         Ok(Service::from_parts(cfg, meta, testset, self.devices, self.requests, arrival)?
             .with_clock(self.clock)
             .with_servers(self.servers, self.placement)
-            .with_sim_engine(self.sim_engine))
+            .with_sim_engine(self.sim_engine)
+            .with_tracer(self.trace))
     }
 }
 
@@ -601,6 +682,7 @@ pub struct Service {
     servers: usize,
     placement: Placement,
     sim_engine: SimEngine,
+    tracer: Tracer,
 }
 
 impl Service {
@@ -636,6 +718,7 @@ impl Service {
             servers: 1,
             placement: Placement::default(),
             sim_engine: SimEngine::default(),
+            tracer: Tracer::off(),
         })
     }
 
@@ -655,6 +738,13 @@ impl Service {
     /// Select the sim execution engine (default: the event engine).
     pub fn with_sim_engine(mut self, engine: SimEngine) -> Self {
         self.sim_engine = engine;
+        self
+    }
+
+    /// Attach a trace handle (default: [`Tracer::off`]); see
+    /// [`ServeBuilder::trace_sink`].
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
         self
     }
 
@@ -729,8 +819,9 @@ impl Service {
             Some(server) => {
                 let (tx, rx) = channel::<OffloadMsg>();
                 let clock = clock.clone();
+                let tracer = self.tracer.clone();
                 let handle = std::thread::spawn(move || {
-                    server_loop(server, rx, max_batch, deadline_s, clock)
+                    server_loop(server, rx, max_batch, deadline_s, clock, tracer)
                 });
                 (Some(tx), Some(handle))
             }
@@ -747,6 +838,7 @@ impl Service {
             let tx_offload = tx_offload.clone();
             let tx_done = tx_done.clone();
             let clock = clock.clone();
+            let tracer = self.tracer.clone();
             // break exact cross-device event-time ties deterministically:
             // lockstep periodic sensors get a vanishing per-device phase
             // of (device index) ppm of the period, so the server never
@@ -769,6 +861,7 @@ impl Service {
                     tx_offload,
                     tx_done,
                     clock,
+                    tracer,
                 )
             }));
         }
@@ -778,10 +871,7 @@ impl Service {
         Ok(OutcomeStream {
             rx: rx_done,
             handle: RunHandle::Threads { device_handles, server_handle, clock },
-            acc: AccuracyCounter::default(),
-            lat: LatencyStats::new(),
-            net_lat: LatencyStats::new(),
-            net: NetAgg::default(),
+            agg: StreamAgg::default(),
         })
     }
 
@@ -800,6 +890,7 @@ impl Service {
             servers: self.servers,
             placement: self.placement,
         };
+        let tracer = self.tracer.clone();
         let handle = std::thread::spawn(move || {
             engine::run_fleet(
                 backend.as_ref(),
@@ -808,15 +899,13 @@ impl Service {
                 &self.testset,
                 &spec,
                 &tx_done,
+                &tracer,
             )
         });
         Ok(OutcomeStream {
             rx: rx_done,
             handle: RunHandle::Engine { handle },
-            acc: AccuracyCounter::default(),
-            lat: LatencyStats::new(),
-            net_lat: LatencyStats::new(),
-            net: NetAgg::default(),
+            agg: StreamAgg::default(),
         })
     }
 }
@@ -870,16 +959,73 @@ impl NetAgg {
     }
 }
 
-/// Streaming handle over a running [`Service`]: iterate per-request
-/// outcomes as devices finish them, then call [`OutcomeStream::finish`]
-/// for the aggregate [`PipelineReport`].
-pub struct OutcomeStream {
-    rx: Receiver<ServedOutcome>,
-    handle: RunHandle,
+/// Per-run metric accumulation behind [`OutcomeStream`]: typed fields on
+/// the hot path (no name lookups per request), folded into the
+/// [`MetricsRegistry`] once at finish. The four `phase_*` histograms are
+/// the per-phase latency breakdown surfaced by `serve --metrics-out` and
+/// `bench --figure breakdown`.
+#[derive(Debug, Default)]
+struct StreamAgg {
     acc: AccuracyCounter,
     lat: LatencyStats,
     net_lat: LatencyStats,
+    phase_local_nn: LatencyStats,
+    phase_compression: LatencyStats,
+    phase_network: LatencyStats,
+    phase_remote: LatencyStats,
     net: NetAgg,
+}
+
+impl StreamAgg {
+    fn record(&mut self, out: &ServedOutcome) {
+        self.acc.record(out.outcome.correct);
+        self.lat.record(out.wall_s);
+        let b = &out.outcome.breakdown;
+        self.net_lat.record(b.network_s);
+        self.phase_local_nn.record(b.local_nn_s);
+        self.phase_compression.record(b.compression_s);
+        self.phase_network.record(b.network_s);
+        self.phase_remote.record(b.remote_s);
+        self.net.record(&out.outcome);
+    }
+
+    /// Fold the typed accumulators into named registry entries (see
+    /// `docs/observability.md` for the vocabulary).
+    fn into_registry(self, batches: usize, batched: usize) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("requests_total", self.acc.total as u64);
+        m.counter_add("requests_correct", self.acc.correct as u64);
+        m.counter_add("uplinks", self.net.uplinks as u64);
+        m.counter_add("incomplete_frames", self.net.incomplete_frames as u64);
+        m.counter_add("packets_sent", self.net.packets_sent);
+        m.counter_add("packets_lost", self.net.packets_lost);
+        m.counter_add("retransmit_rounds", self.net.retransmit_rounds);
+        m.counter_add("features_total", self.net.features_total);
+        m.counter_add("features_delivered", self.net.features_delivered);
+        m.counter_add("bytes_delivered", self.net.bytes_delivered);
+        m.counter_add("batches", batches as u64);
+        m.counter_add("batched_requests", batched as u64);
+        m.sum_add("airtime_s", self.net.airtime_s);
+        m.sum_add("radio_wait_s", self.net.radio_wait_s);
+        m.insert_hist("latency_s", self.lat);
+        m.insert_hist("net_s", self.net_lat);
+        m.insert_hist("phase_local_nn_s", self.phase_local_nn);
+        m.insert_hist("phase_compression_s", self.phase_compression);
+        m.insert_hist("phase_network_s", self.phase_network);
+        m.insert_hist("phase_remote_s", self.phase_remote);
+        m
+    }
+}
+
+/// Streaming handle over a running [`Service`]: iterate per-request
+/// outcomes as devices finish them, then call [`OutcomeStream::finish`]
+/// for the aggregate [`PipelineReport`] (or
+/// [`OutcomeStream::finish_full`] for the report plus the full
+/// [`MetricsRegistry`]).
+pub struct OutcomeStream {
+    rx: Receiver<ServedOutcome>,
+    handle: RunHandle,
+    agg: StreamAgg,
 }
 
 /// The worker fabric behind an [`OutcomeStream`]: the threaded pipeline
@@ -901,10 +1047,7 @@ impl Iterator for OutcomeStream {
     fn next(&mut self) -> Option<ServedOutcome> {
         match self.rx.recv() {
             Ok(out) => {
-                self.acc.record(out.outcome.correct);
-                self.lat.record(out.wall_s);
-                self.net_lat.record(out.outcome.breakdown.network_s);
-                self.net.record(&out.outcome);
+                self.agg.record(&out);
                 Some(out)
             }
             Err(_) => None,
@@ -916,7 +1059,15 @@ impl OutcomeStream {
     /// Drain any remaining outcomes, join the worker threads (or the
     /// engine thread), and return the aggregate report. Worker errors
     /// surface here.
-    pub fn finish(mut self) -> Result<PipelineReport> {
+    pub fn finish(self) -> Result<PipelineReport> {
+        Ok(self.finish_full()?.0)
+    }
+
+    /// Like [`OutcomeStream::finish`], additionally returning the full
+    /// [`MetricsRegistry`] the report is a view over — including the
+    /// per-phase breakdown histograms (`phase_*_s`) that have no report
+    /// field. This is what `serve --metrics-out` writes.
+    pub fn finish_full(mut self) -> Result<(PipelineReport, MetricsRegistry)> {
         while self.next().is_some() {}
         let (clock_kind, wall, shard_aggs) = match self.handle {
             RunHandle::Threads { device_handles, server_handle, clock } => {
@@ -944,36 +1095,9 @@ impl OutcomeStream {
         let batches: usize = shard_aggs.iter().map(|a| a.batches).sum();
         let shards: Vec<ShardReport> =
             shard_aggs.into_iter().enumerate().map(|(i, a)| a.into_report(i)).collect();
-        Ok(PipelineReport {
-            requests: self.acc.total,
-            clock: clock_kind,
-            wall_s: wall,
-            throughput_rps: if wall > 0.0 { self.acc.total as f64 / wall } else { 0.0 },
-            accuracy: self.acc.accuracy(),
-            mean_latency_s: self.lat.mean_s(),
-            p95_latency_s: self.lat.p95(),
-            p99_latency_s: self.lat.p99(),
-            mean_batch_size: if batches == 0 {
-                0.0
-            } else {
-                total_batched as f64 / batches as f64
-            },
-            batches,
-            shards,
-            packets_sent: self.net.packets_sent,
-            packets_lost: self.net.packets_lost,
-            retransmit_rounds: self.net.retransmit_rounds,
-            incomplete_frames: self.net.incomplete_frames,
-            delivered_feature_rate: self.net.delivered_feature_rate(),
-            goodput_bps: self.net.goodput_bps(),
-            mean_net_s: self.net_lat.mean_s(),
-            p99_net_s: self.net_lat.p99(),
-            mean_radio_wait_s: if self.net.uplinks == 0 {
-                0.0
-            } else {
-                self.net.radio_wait_s / self.net.uplinks as f64
-            },
-        })
+        let mut registry = self.agg.into_registry(batches, total_batched);
+        let report = PipelineReport::from_registry(&mut registry, clock_kind, wall, shards);
+        Ok((report, registry))
     }
 }
 
@@ -1028,8 +1152,10 @@ fn server_loop(
     max_batch: usize,
     deadline_s: f64,
     clock: Clock,
+    tracer: Tracer,
 ) -> ShardAgg {
     let _participant = clock.participant();
+    let lane = Lane::Server(0);
     let mut queue: BatchQueue<BatchItem> = BatchQueue::new(max_batch, deadline_s);
     let mut agg = ShardAgg::default();
     let mut run_batch = |batch: Vec<Pending<BatchItem>>, server: &mut dyn ServerSide| {
@@ -1045,7 +1171,10 @@ fn server_loop(
                 agg.batches += 1;
                 for p in &batch {
                     agg.queue_wait.record(dispatched - p.enqueued);
+                    tracer.span(lane, EventKind::ServerQueue, p.id, p.enqueued, dispatched, 0.0);
                 }
+                let seq = agg.batches as u64;
+                tracer.instant(lane, EventKind::BatchDispatch, seq, dispatched, feats.len() as f64);
                 for (p, row) in batch.into_iter().zip(rows) {
                     send_reply(&clock, &p.payload.1, Ok(row));
                 }
@@ -1157,6 +1286,7 @@ fn device_loop(
     offload_tx: Option<Sender<OffloadMsg>>,
     done_tx: Sender<ServedOutcome>,
     clock: Clock,
+    tracer: Tracer,
 ) -> Result<()> {
     let _participant = clock.participant();
     // Rebind the channel ends as locals *after* the participant guard:
@@ -1203,6 +1333,9 @@ fn device_loop(
         }
         let req_start = Instant::now();
         let t_start = clock.now();
+        let lane = Lane::Device(device_index as u32);
+        let rid = i as u64;
+        tracer.instant(lane, EventKind::Arrival, rid, times[j], 0.0);
         let idx = i % testset.len();
         let img = testset.image(idx)?;
         let mut local = device.encode(&img)?;
@@ -1222,17 +1355,35 @@ fn device_loop(
             // radio has finished the previous exchange — under high rates
             // requests queue for the radio instead of overlapping on air
             let compute_done = times[j] + local.timings.total_s();
+            tracer.span(lane, EventKind::Encode, rid, times[j], compute_done, 0.0);
             let tx_start = compute_done.max(radio_free);
+            if tx_start > compute_done {
+                tracer.span(lane, EventKind::RadioWait, rid, compute_done, tx_start, 0.0);
+            }
             let (body, mut stats) = match (&cfg.net.delivery, local.symbols.take()) {
                 (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
                     let bits = frame.bits;
                     let pkts = packetizer.packetize(i as u64, &symbols, bits)?;
-                    let (arrived, stats) =
-                        transmit_packets(&mut chan, &cfg.net.delivery, &pkts, tx_start);
+                    let (arrived, stats) = transmit_packets_traced(
+                        &mut chan,
+                        &cfg.net.delivery,
+                        &pkts,
+                        tx_start,
+                        &tracer,
+                        lane,
+                        rid,
+                    );
                     (UplinkBody::Packets { packets: arrived, count: symbols.len(), bits }, stats)
                 }
                 _ => {
-                    let stats = transmit_frame(&mut chan, frame.wire_bytes(), tx_start);
+                    let stats = transmit_frame_traced(
+                        &mut chan,
+                        frame.wire_bytes(),
+                        tx_start,
+                        &tracer,
+                        lane,
+                        rid,
+                    );
                     (UplinkBody::Whole(frame), stats)
                 }
             };
@@ -1243,6 +1394,7 @@ fn device_loop(
             let reply = crate::serve::scheme::reply_bytes(meta.num_classes);
             let t_reply = tx_start + stats.uplink_s;
             let downlink_s = chan.transfer_s(t_reply, reply);
+            tracer.span(lane, EventKind::Uplink, rid, tx_start, t_reply, tx_bytes as f64);
             // the radio frees up on the *priced* timeline (downlink at
             // t_reply, server queueing excluded) — the same convention
             // assemble_outcome uses for network_s, and the only anchoring
@@ -1279,7 +1431,12 @@ fn device_loop(
                 t_remote_wall.elapsed().as_secs_f64()
             };
             remote = Some(row);
+            tracer.span(lane, EventKind::Remote, rid, t_remote, t_remote + remote_s, 0.0);
             t_done = clock.now() + downlink_s;
+            tracer.span(lane, EventKind::Downlink, rid, t_done - downlink_s, t_done, 0.0);
+        } else {
+            // no uplink: the whole request is the device-side encode
+            tracer.span(lane, EventKind::Encode, rid, t_start, t_done, 0.0);
         }
         // sim only: the device stays busy (MCU compute + radio exchange)
         // until t_done, serializing its virtual timeline so a saturated
@@ -1302,6 +1459,7 @@ fn device_loop(
             link.as_ref(),
             meta.num_classes,
         )?;
+        tracer.instant(lane, EventKind::Done, rid, t_done, outcome.correct as u64 as f64);
         let served = ServedOutcome {
             id: i as u64,
             device: device_index,

@@ -40,6 +40,7 @@ pub use strategies::StrategyKind;
 
 use crate::config::{BackendKind, Scheme};
 use crate::net::GilbertElliott;
+use crate::obs::{EventKind, Lane, Tracer};
 use crate::report::{json_array, JsonObj};
 use crate::serve::{ClockKind, ConfigError, ServeBuilder, SimEngine};
 use anyhow::{Context, Result};
@@ -166,6 +167,13 @@ pub struct TuneConfig {
     /// stop this invocation after N *new* evaluations (the search resumes
     /// from the log next time); `None` runs to completion
     pub stop_after: Option<usize>,
+    /// per-evaluation progress trace on the tuner lane: a `TuneEval`
+    /// span per fresh evaluation, a `TuneCached` instant per resume hit,
+    /// a `TuneInfeasible` instant per rejected point. Virtual time is
+    /// the visit index (the tuner has no serving clock). Off by default;
+    /// deliberately excluded from [`TuneConfig::fingerprint`] — tracing
+    /// is observational and must not invalidate saved state.
+    pub trace: Tracer,
 }
 
 impl TuneConfig {
@@ -227,6 +235,10 @@ pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> Result<TuneOutco
     let mut fresh_keys: HashSet<String> = HashSet::new();
     let mut evaluated = 0usize;
     let mut cached = 0usize;
+    // tuner-lane virtual time: the visit index, counting resume hits and
+    // fresh evaluations alike, so a resumed search's trace lines up with
+    // an uninterrupted run's visit order
+    let mut visit_seq = 0u64;
 
     let completed = {
         let mut eval = |point: &TunePoint| -> Result<Option<EvalOutcome>> {
@@ -236,6 +248,9 @@ pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> Result<TuneOutco
                     if !fresh_keys.contains(&key) {
                         cached += 1;
                         progress(&format!("cached {key}"));
+                        let t = visit_seq as f64;
+                        cfg.trace.instant(Lane::Tuner, EventKind::TuneCached, visit_seq, t, 0.0);
+                        visit_seq += 1;
                     }
                     visited.push((point.clone(), hit.clone()));
                 }
@@ -260,11 +275,17 @@ pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> Result<TuneOutco
                              server-seconds {:.2}",
                             obj.accuracy, obj.p99_latency_s, obj.goodput_bps, obj.server_seconds
                         ));
+                        let t = visit_seq as f64;
+                        let k = EventKind::TuneEval;
+                        cfg.trace.span(Lane::Tuner, k, visit_seq, t, t + 1.0, obj.accuracy);
                         let o = EvalOutcome::Done(obj);
                         st.record(point, &o, Some(&rep.to_ordered_json()))?;
                         o
                     } else {
                         progress(&format!("skip {key}: non-finite objectives"));
+                        let t = visit_seq as f64;
+                        let k = EventKind::TuneInfeasible;
+                        cfg.trace.instant(Lane::Tuner, k, visit_seq, t, 0.0);
                         let o = EvalOutcome::Infeasible("non-finite objectives".to_string());
                         st.record(point, &o, Some(&rep.to_ordered_json()))?;
                         o
@@ -273,6 +294,9 @@ pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> Result<TuneOutco
                 Err(e) => match e.downcast_ref::<ConfigError>() {
                     Some(ce) => {
                         progress(&format!("skip {key}: {ce}"));
+                        let t = visit_seq as f64;
+                        let k = EventKind::TuneInfeasible;
+                        cfg.trace.instant(Lane::Tuner, k, visit_seq, t, 0.0);
                         let o = EvalOutcome::Infeasible(ce.to_string());
                         st.record(point, &o, None)?;
                         o
@@ -281,6 +305,7 @@ pub fn run(cfg: &TuneConfig, mut progress: impl FnMut(&str)) -> Result<TuneOutco
                 },
             };
             evaluated += 1;
+            visit_seq += 1;
             fresh_keys.insert(key.clone());
             if visited_keys.insert(key) {
                 visited.push((point.clone(), outcome.clone()));
@@ -361,6 +386,7 @@ mod tests {
             state: None,
             out: None,
             stop_after: None,
+            trace: Tracer::off(),
         }
     }
 

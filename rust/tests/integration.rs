@@ -15,6 +15,9 @@ use agilenn::config::{BackendKind, Meta, RunConfig, Scheme};
 use agilenn::coordinator::{DeviceRuntime, RemoteServer};
 use agilenn::fixtures::{SyntheticSpec, SYNTHETIC_DATASET};
 use agilenn::net::{DeliveryPolicy, GilbertElliott};
+use agilenn::obs::{
+    chrome_trace_json, EventKind, Lane, NoopSink, RecordingSink, TraceEvent, Tracer,
+};
 use agilenn::runtime::{make_backend, ReferenceBackend};
 use agilenn::serve::{
     ClockKind, ConfigError, Placement, PipelineReport, ServeBuilder, Service, SimEngine,
@@ -904,6 +907,7 @@ fn tune_cfg(state: Option<PathBuf>, stop_after: Option<usize>) -> TuneConfig {
         state,
         out: None,
         stop_after,
+        trace: Tracer::off(),
     }
 }
 
@@ -969,8 +973,10 @@ fn reference_tune_genetic_same_seed_is_deterministic() {
 fn reference_tune_skips_infeasible_points_gracefully() {
     // servers > 1 on the threaded sim fabric is a typed ConfigError: the
     // tuner records those points infeasible and keeps searching
+    let sink = Arc::new(RecordingSink::new());
     let cfg = TuneConfig {
         eval: EvalSpec { sim_engine: SimEngine::Threads, ..tune_eval() },
+        trace: Tracer::new(sink.clone()),
         ..tune_cfg(None, None)
     };
     let out = tune::run(&cfg, |_| {}).unwrap();
@@ -979,6 +985,17 @@ fn reference_tune_skips_infeasible_points_gracefully() {
     assert_eq!(out.infeasible, 4, "the four servers=2 points are infeasible");
     assert!(!out.front.is_empty());
     assert!(out.front.iter().all(|(p, _)| p.servers == 1), "front must hold feasible points only");
+    // the tuner lane mirrors the outcome split: infeasible points are
+    // instants, evaluated points are unit-duration spans in visit order
+    let evs = sink.take();
+    assert_eq!(evs.len(), 8);
+    assert!(evs.iter().all(|e| e.lane == Lane::Tuner));
+    assert_eq!(evs.iter().filter(|e| e.kind == EventKind::TuneInfeasible).count(), 4);
+    assert_eq!(evs.iter().filter(|e| e.kind == EventKind::TuneEval).count(), 4);
+    for (i, e) in evs.iter().enumerate() {
+        assert_eq!(e.id, i as u64, "tuner events carry the visit sequence");
+        assert_eq!(e.t_s, i as f64, "the tuner lane runs in visit-index virtual time");
+    }
 }
 
 #[test]
@@ -1090,6 +1107,231 @@ fn golden_sim_pipeline_report_is_bit_stable() {
         std::fs::write(&path, &sa).unwrap();
         eprintln!("blessed golden snapshot at {} — commit this file", path.display());
     }
+}
+
+// ---------------------------------------------------------------------------
+// observability: request-lifecycle traces + the unified metrics registry
+// ---------------------------------------------------------------------------
+
+/// The golden serving config with a recording sink attached; returns the
+/// report and the recorded events (in recording order).
+fn golden_traced_run() -> (PipelineReport, Vec<TraceEvent>) {
+    let sink = Arc::new(RecordingSink::new());
+    let rep = golden_builder().trace_sink(sink.clone()).build().unwrap().run().unwrap();
+    (rep, sink.take())
+}
+
+#[test]
+fn golden_sim_trace_is_bit_stable() {
+    // (1) the exported Chrome trace of the golden sim run must be
+    // byte-identical across consecutive runs — tracing inherits the sim
+    // clock's reproducibility contract
+    let (_, ea) = golden_traced_run();
+    let (_, eb) = golden_traced_run();
+    let (ja, jb) = (chrome_trace_json(&ea), chrome_trace_json(&eb));
+    assert_eq!(ja, jb, "sim-clock trace must be bit-stable across consecutive runs");
+
+    // (2) and match the committed snapshot, like the report golden above.
+    // Bless (create/update) with AGILENN_BLESS=1, then commit.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/serve_sim_reference_trace.json");
+    if path.exists() && std::env::var_os("AGILENN_BLESS").is_none() {
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            ja,
+            want.trim_end_matches('\n'),
+            "golden sim trace drifted from the committed snapshot at {}; if the \
+             change is intentional, re-bless with `AGILENN_BLESS=1 cargo test golden` \
+             and commit the file",
+            path.display()
+        );
+    } else {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{ja}\n")).unwrap();
+        eprintln!("blessed golden trace at {} — commit this file", path.display());
+    }
+}
+
+#[test]
+fn reference_noop_sink_leaves_the_report_bit_identical() {
+    // attaching the disabled sink exercises the full emission path but
+    // must not perturb a single reported bit
+    let plain = golden_run();
+    let noop =
+        golden_builder().trace_sink(Arc::new(NoopSink)).build().unwrap().run().unwrap();
+    assert_eq!(plain.to_ordered_json(), noop.to_ordered_json());
+}
+
+#[test]
+fn reference_golden_trace_spans_are_well_formed() {
+    let (rep, evs) = golden_traced_run();
+    assert!(!evs.is_empty());
+    // every request produces exactly one Arrival and one Done instant
+    let count = |k: EventKind| evs.iter().filter(|e| e.kind == k).count();
+    assert_eq!(count(EventKind::Arrival), rep.requests);
+    assert_eq!(count(EventKind::Done), rep.requests);
+    assert_eq!(count(EventKind::BatchDispatch), rep.batches);
+
+    for e in &evs {
+        assert!(e.t_s.is_finite() && e.t_s >= 0.0, "bad timestamp in {e:?}");
+        assert!(e.dur_s.is_finite() && e.dur_s >= 0.0, "negative duration in {e:?}");
+        if !e.kind.is_span() {
+            assert_eq!(e.dur_s, 0.0, "instant kinds must have zero duration: {e:?}");
+        }
+    }
+
+    // per-request lifecycle nesting on each device lane: arrival opens the
+    // encode span, and each priced phase begins no earlier than the
+    // previous one ended (radio wait and server-side queueing are the only
+    // gaps the pricing model allows)
+    // `end_s()` recomputes t0 + (t1 - t0), so butt-joined phases may differ
+    // from the next phase's stored start by a rounding ulp
+    const EPS: f64 = 1e-9;
+    let arrivals: Vec<&TraceEvent> =
+        evs.iter().filter(|e| e.kind == EventKind::Arrival).collect();
+    for a in arrivals {
+        let chain: Vec<&TraceEvent> =
+            evs.iter().filter(|e| e.lane == a.lane && e.id == a.id).collect();
+        let find = |k: EventKind| chain.iter().find(|e| e.kind == k);
+        let encode = find(EventKind::Encode).expect("every request encodes");
+        assert_eq!(encode.t_s, a.t_s, "encode starts at arrival");
+        let done = find(EventKind::Done).expect("every request finishes");
+        assert!(done.t_s >= encode.end_s() - EPS);
+        if let Some(up) = find(EventKind::Uplink) {
+            assert!(up.t_s >= encode.end_s() - EPS, "uplink after encode in {chain:?}");
+            if let Some(w) = find(EventKind::RadioWait) {
+                assert!((w.t_s - encode.end_s()).abs() < EPS);
+                assert!(
+                    (w.end_s() - up.t_s).abs() < EPS,
+                    "radio wait fills the encode→uplink gap in {chain:?}"
+                );
+            }
+            if let Some(remote) = find(EventKind::Remote) {
+                assert!(remote.t_s >= up.end_s() - EPS, "remote after uplink in {chain:?}");
+                let down = find(EventKind::Downlink).expect("remote implies downlink");
+                assert!((down.t_s - remote.end_s()).abs() < EPS);
+                assert!(
+                    (done.t_s - down.end_s()).abs() < EPS,
+                    "done stamps the downlink end in {chain:?}"
+                );
+            }
+        }
+    }
+
+    // the half-duplex radio serializes each device's uplinks
+    let lanes: std::collections::BTreeSet<Lane> = evs.iter().map(|e| e.lane).collect();
+    for lane in &lanes {
+        let mut ups: Vec<&TraceEvent> =
+            evs.iter().filter(|e| e.lane == *lane && e.kind == EventKind::Uplink).collect();
+        ups.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
+        for w in ups.windows(2) {
+            assert!(w[1].t_s >= w[0].end_s() - EPS, "overlapping uplinks on {lane:?}");
+        }
+        // a device serves its requests serially: Done instants are
+        // monotone in recording order
+        let dones: Vec<&TraceEvent> =
+            evs.iter().filter(|e| e.lane == *lane && e.kind == EventKind::Done).collect();
+        for w in dones.windows(2) {
+            assert!(w[1].t_s >= w[0].t_s, "device Done times must be monotone");
+        }
+        // batch dispatches on a server lane carry an increasing sequence
+        let fires: Vec<&TraceEvent> = evs
+            .iter()
+            .filter(|e| e.lane == *lane && e.kind == EventKind::BatchDispatch)
+            .collect();
+        for w in fires.windows(2) {
+            assert!(w[1].id == w[0].id + 1 && w[1].t_s >= w[0].t_s);
+        }
+    }
+}
+
+#[test]
+fn reference_report_fields_match_the_metrics_registry() {
+    // finish_full exposes the registry the report is a view over: every
+    // shared field must match bitwise
+    let mut stream = golden_builder().build().unwrap().stream().unwrap();
+    for _ in stream.by_ref() {}
+    let (rep, mut m) = stream.finish_full().unwrap();
+    assert_eq!(rep.requests, m.counter("requests_total") as usize);
+    assert_eq!(rep.batches, m.counter("batches") as usize);
+    assert_eq!(rep.packets_sent, m.counter("packets_sent"));
+    assert_eq!(rep.packets_lost, m.counter("packets_lost"));
+    assert_eq!(rep.retransmit_rounds, m.counter("retransmit_rounds"));
+    assert_eq!(rep.incomplete_frames, m.counter("incomplete_frames") as usize);
+    let acc = m.counter("requests_correct") as f64 / m.counter("requests_total") as f64;
+    assert_eq!(rep.accuracy.to_bits(), acc.to_bits());
+    assert_eq!(rep.mean_latency_s.to_bits(), m.hist_mut("latency_s").mean_s().to_bits());
+    assert_eq!(rep.p95_latency_s.to_bits(), m.hist_mut("latency_s").p95().to_bits());
+    assert_eq!(rep.p99_net_s.to_bits(), m.hist_mut("net_s").p99().to_bits());
+    // ...and the registry serializes deterministically, with the per-phase
+    // histograms the breakdown figure reads
+    let json = m.to_ordered_json();
+    assert_eq!(json, m.to_ordered_json());
+    let v = agilenn::json::Value::parse(&json).unwrap();
+    assert_eq!(v.str_at("schema").unwrap(), "agilenn-metrics-v1");
+    for name in ["latency_s", "net_s", "phase_network_s", "phase_remote_s"] {
+        let h = v.get("histograms").unwrap().get(name).unwrap();
+        assert!(h.f64_at("p95_s").is_ok(), "histogram {name} must export quantiles");
+    }
+}
+
+#[test]
+fn reference_threaded_sim_fabric_emits_traces_too() {
+    // the legacy thread-per-device fabric routes through the same sink
+    let sink = Arc::new(RecordingSink::new());
+    let rep = reference_builder(Scheme::Agile)
+        .devices(4)
+        .requests(64)
+        .rate_hz(200.0)
+        .clock(ClockKind::Sim)
+        .sim_engine(SimEngine::Threads)
+        .trace_sink(sink.clone())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let evs = sink.take();
+    assert_eq!(evs.iter().filter(|e| e.kind == EventKind::Done).count(), rep.requests);
+    assert!(evs.iter().any(|e| e.kind == EventKind::ServerQueue));
+    let v = agilenn::json::Value::parse(&chrome_trace_json(&evs)).unwrap();
+    assert!(!v.as_arr().unwrap().is_empty());
+}
+
+#[test]
+fn reference_tune_trace_replays_cached_points_as_instants() {
+    let dir = std::env::temp_dir().join(format!("agilenn_tune_trace_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let state = dir.join("resume.state");
+    let _ = std::fs::remove_file(&state);
+    let _ = std::fs::remove_file(tune::state::log_path(&state));
+    // interrupt after 3 evaluations: 3 TuneEval spans, nothing cached
+    let sink = Arc::new(RecordingSink::new());
+    let cfg = TuneConfig {
+        trace: Tracer::new(sink.clone()),
+        ..tune_cfg(Some(state.clone()), Some(3))
+    };
+    assert_eq!(tune::run(&cfg, |_| {}).unwrap().evaluated, 3);
+    let evs = sink.take();
+    assert_eq!(evs.iter().filter(|e| e.kind == EventKind::TuneEval).count(), 3);
+    assert!(evs.iter().all(|e| e.kind != EventKind::TuneCached));
+    // the resumed run replays those 3 points as TuneCached instants — no
+    // re-evaluation spans — then finishes the remaining 5 fresh
+    let cfg = TuneConfig {
+        trace: Tracer::new(sink.clone()),
+        ..tune_cfg(Some(state.clone()), None)
+    };
+    let out = tune::run(&cfg, |_| {}).unwrap();
+    assert!(out.completed);
+    let evs = sink.take();
+    assert_eq!(evs.iter().filter(|e| e.kind == EventKind::TuneCached).count(), 3);
+    assert_eq!(evs.iter().filter(|e| e.kind == EventKind::TuneEval).count(), 5);
+    // visit-index virtual time covers cached and fresh visits alike, so a
+    // resumed trace lines up with an uninterrupted one
+    for (i, e) in evs.iter().enumerate() {
+        assert_eq!(e.id, i as u64);
+    }
+    let _ = std::fs::remove_file(&state);
+    let _ = std::fs::remove_file(tune::state::log_path(&state));
 }
 
 // ---------------------------------------------------------------------------

@@ -8,6 +8,7 @@ use agilenn::coordinator::batcher::{pad_batch_size, BatchQueue, REMOTE_BATCH_SIZ
 use agilenn::net::{
     reassemble_symbols, Channel, GilbertElliott, Packetizer, PACKET_HEADER_BYTES,
 };
+use agilenn::obs::{chrome_trace_json, EventKind, Lane, TraceEvent};
 use agilenn::simulator::{NetworkProfile, NetworkSim};
 use agilenn::tensor::{argmax, softmax, Tensor};
 use agilenn::tune::{ranking, Objectives};
@@ -464,5 +465,53 @@ fn prop_pareto_front_is_stable_under_permutation() {
         let a = values(&objs, &ranking::pareto_front(&objs));
         let b = values(&shuffled, &ranking::pareto_front(&shuffled));
         assert_eq!(a, b, "seed {seed}: the front must not depend on evaluation order");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// observability: the Chrome trace export is a pure function of the event SET
+// ---------------------------------------------------------------------------
+
+fn rand_events(rng: &mut Rng, n: usize) -> Vec<TraceEvent> {
+    use EventKind::*;
+    const SPANS: [EventKind; 5] = [Encode, RadioWait, Uplink, ServerQueue, Remote];
+    const INSTANTS: [EventKind; 4] = [Arrival, Done, BatchDispatch, PacketLost];
+    (0..n)
+        .map(|_| {
+            let lane = match rng.usize(3) {
+                0 => Lane::Device(rng.usize(4) as u32),
+                1 => Lane::Server(rng.usize(2) as u32),
+                _ => Lane::Tuner,
+            };
+            let id = rng.usize(16) as u64;
+            let t = rng.f32() as f64;
+            if rng.usize(2) == 0 {
+                let kind = SPANS[rng.usize(SPANS.len())];
+                TraceEvent::span(lane, kind, id, t, t + rng.f32() as f64, rng.f32() as f64)
+            } else {
+                let kind = INSTANTS[rng.usize(INSTANTS.len())];
+                TraceEvent::instant(lane, kind, id, t, rng.f32() as f64)
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_chrome_trace_export_is_recording_order_invariant() {
+    // the exporter sorts by the total (time, lane, kind, ...) order, so any
+    // permutation of the same events serializes byte-identically — the
+    // property behind the golden trace's bitwise reproducibility
+    for seed in 1..=200u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.usize(60);
+        let evs = rand_events(&mut rng, n);
+        let mut shuffled = evs.clone();
+        for i in (1..n).rev() {
+            shuffled.swap(i, rng.usize(i + 1));
+        }
+        let (a, b) = (chrome_trace_json(&evs), chrome_trace_json(&shuffled));
+        assert_eq!(a, b, "seed {seed}: export must not depend on recording order");
+        let v = agilenn::json::Value::parse(&a).expect("export must be valid JSON");
+        assert!(v.as_arr().unwrap().len() >= n, "metadata + one entry per event");
     }
 }
