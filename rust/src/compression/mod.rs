@@ -9,8 +9,15 @@ pub mod quantizer;
 use anyhow::Result;
 use quantizer::Codebook;
 
+/// Frame header as serialized by the wire protocol
+/// (`crate::net::wire::encode_frame`): magic + version + bits + reserved +
+/// count (u32) = 8 bytes. [`Frame::wire_bytes`] prices these same bytes on
+/// the simulated link, so the simulator and the TCP transport agree on
+/// what a frame costs.
+pub const FRAME_HEADER_BYTES: usize = 8;
+
 /// One compressed feature frame as it would go on the wire.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Frame {
     /// LZW-compressed bit-packed code indices.
     pub payload: Vec<u8>,
@@ -21,9 +28,10 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// On-wire size in bytes (payload + 4-byte header carrying count/bits).
+    /// On-wire size in bytes (payload + [`FRAME_HEADER_BYTES`]-byte header
+    /// carrying magic/version/bits/count).
     pub fn wire_bytes(&self) -> usize {
-        self.payload.len() + 4
+        self.payload.len() + FRAME_HEADER_BYTES
     }
 }
 
@@ -136,6 +144,6 @@ mod tests {
         let cb = Codebook::new(vec![0.0, 1.0]).unwrap();
         let mut tx = TxEncoder::new(cb);
         let frame = tx.encode(&[0.0, 1.0, 0.0]);
-        assert_eq!(frame.wire_bytes(), frame.payload.len() + 4);
+        assert_eq!(frame.wire_bytes(), frame.payload.len() + FRAME_HEADER_BYTES);
     }
 }

@@ -6,19 +6,17 @@
 //!   fixed-shape batched remote NN.
 //! * [`batcher`] — deadline-driven dynamic batching policy.
 //! * [`combiner`] — alpha-weighted local/remote prediction fusion (§3.3).
-//! * [`pipeline`] — deprecated shims over [`crate::serve`], the
-//!   scheme-agnostic threaded multi-device serving loop.
+//!
+//! The multi-device serving loop itself lives in [`crate::serve`]
+//! (`ServeBuilder`); the pre-redesign `run_pipeline`/`run_single` shims
+//! that used to live here are gone.
 
 pub mod batcher;
 pub mod combiner;
 pub mod device_runtime;
-pub mod pipeline;
 pub mod server;
 
 pub use batcher::{BatchQueue, EDGE_BATCH_SIZES, REMOTE_BATCH_SIZES};
 pub use combiner::Combiner;
 pub use device_runtime::{DeviceOutput, DeviceRuntime};
-#[allow(deprecated)]
-pub use pipeline::{run_pipeline, run_single};
-pub use pipeline::PipelineReport;
 pub use server::RemoteServer;

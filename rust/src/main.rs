@@ -1,6 +1,8 @@
-//! AgileNN CLI: serve (multi-device batched pipeline, any scheme), infer
-//! (single request, verbose), bench (regenerate a paper figure/table),
-//! tune (Pareto autotuner over the serving knobs), report (summary).
+//! AgileNN CLI: serve (multi-device batched pipeline, any scheme; with
+//! `--listen`, a real TCP serving daemon), device (a device client for a
+//! remote daemon), infer (single request, verbose), bench (regenerate a
+//! paper figure/table), tune (Pareto autotuner over the serving knobs),
+//! report (summary).
 //!
 //! Argument parsing is hand-rolled (`Args` below) — the build environment
 //! vendors only the xla dependency tree.
@@ -13,7 +15,7 @@ use agilenn::obs::{chrome_trace_json, RecordingSink, Tracer};
 use agilenn::perfgate;
 use agilenn::report::{ms, pct};
 use agilenn::runtime::make_backend;
-use agilenn::serve::{ClockKind, Placement, ServeBuilder, SimEngine};
+use agilenn::serve::{send_shutdown, ClockKind, Daemon, Placement, ServeBuilder, SimEngine};
 use agilenn::tune::{self, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -119,6 +121,23 @@ COMMANDS:
              --packet-payload N  anytime packet payload cap, bytes
              --trace FILE        bandwidth trace (lines: duration_s bps)
              --net-seed 42       channel loss-process seed
+           real sockets:
+             --listen ADDR       host the server half behind a TCP
+                                 listener instead of running a pipeline
+                                 (e.g. --listen 127.0.0.1:7431); serves
+                                 `device --connect` clients until one
+                                 sends --shutdown. The scheme/backend/
+                                 batching flags configure the hosted
+                                 server; dataset/scheme/bits are pinned
+                                 at the client handshake.
+  device   run the device half against a remote serving daemon; same
+           flags as serve (devices, requests, rate, channel, reporting),
+           plus:
+             --connect ADDR      the daemon's --listen address (required)
+             --shutdown          just ask the daemon to shut down
+           the simulated lossy channel stays on the device side, so a
+           loopback daemon run reproduces every seed-deterministic report
+           field of `serve --clock sim` bit for bit (docs/daemon.md)
   infer    process one request, print the full breakdown
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --backend pjrt|reference --index 0 --bits 4 [--alpha 0.3]
@@ -191,138 +210,24 @@ fn main() -> Result<()> {
         .unwrap_or_else(default_artifacts_dir);
     match args.cmd.as_str() {
         "serve" => {
-            let dataset = args.get_str("dataset", "svhns");
-            let scheme: Scheme = args.get_str("scheme", "agile").parse()?;
-            let devices: usize = args.get("devices", 4)?;
-            let requests: usize = args.get("requests", 256)?;
-            let json_out: bool = args.get("json", false)?;
-            // --json owns stdout: progress lines would corrupt the
-            // machine-readable output, so it implies --quiet
-            let quiet: bool = args.get("quiet", false)? || json_out;
-            let mut builder = ServeBuilder::new(&dataset)
-                .artifacts_dir(artifacts)
-                .scheme(scheme)
-                .backend(args.get("backend", BackendKind::Pjrt)?)
-                .devices(devices)
-                .requests(requests)
-                .rate_hz(args.get("rate-hz", 30.0)?)
-                .clock(args.get("clock", ClockKind::Wall)?)
-                .servers(args.get("servers", 1)?)
-                .placement(args.get("placement", Placement::Static)?)
-                .sim_engine(args.get("sim-engine", SimEngine::Event)?)
-                .max_batch(args.get("max-batch", 8)?)
-                .batch_deadline_us(args.get("deadline-us", 2000)?)
-                .bits(args.get("bits", 4)?);
-            if let Some(alpha) = args.get_opt_f64("alpha")? {
-                builder = builder.alpha(alpha);
+            let cli = ServeCli::from_args(&args, artifacts)?;
+            match args.flags.get("listen").cloned() {
+                Some(addr) => cli.run_daemon(&addr)?,
+                None => cli.run_client()?,
             }
-            if args.flags.contains_key("arrival-seed") {
-                builder = builder.arrival_seed(args.get("arrival-seed", 42u64)?);
+        }
+        "device" => {
+            let addr = args.get_str("connect", "");
+            if addr.is_empty() {
+                bail!("device needs --connect <addr> (the daemon's --listen address)");
             }
-            if let Some(loss) = args.get_opt_f64("loss")? {
-                let burst: f64 = args.get("burst", 1.0)?;
-                builder = builder.loss(if burst > 1.0 {
-                    GilbertElliott::bursty(loss, burst)
-                } else {
-                    GilbertElliott::uniform(loss)
-                });
-            }
-            let delivery = args.get_str("delivery", "arq");
-            match delivery.as_str() {
-                "arq" => builder = builder.delivery(DeliveryPolicy::Arq),
-                "anytime" => {
-                    let deadline_ms: f64 = args.get("net-deadline-ms", 5.0)?;
-                    builder = builder
-                        .delivery(DeliveryPolicy::Anytime { deadline_s: deadline_ms * 1e-3 });
-                }
-                other => bail!("unknown --delivery {other:?} (arq|anytime)"),
-            }
-            let order: PacketOrder = args.get("order", PacketOrder::Importance)?;
-            builder = builder.packet_order(order).net_seed(args.get("net-seed", 42u64)?);
-            if let Some(payload) = args.flags.get("packet-payload") {
-                builder = builder.packet_payload(payload.parse()?);
-            }
-            if let Some(path) = args.flags.get("trace") {
-                let trace = BandwidthTrace::from_file(std::path::Path::new(path))?;
-                builder = builder.bandwidth_trace(trace);
-            }
-            let trace_out = args.flags.get("trace-out").cloned();
-            let metrics_out = args.flags.get("metrics-out").cloned();
-            let sink = trace_out.as_ref().map(|_| Arc::new(RecordingSink::new()));
-            if let Some(s) = &sink {
-                builder = builder.trace_sink(s.clone());
-            }
-            let mut stream = builder.build()?.stream()?;
-            let mut served = 0usize;
-            for out in stream.by_ref() {
-                served += 1;
-                if !quiet && (served % 32 == 0 || served == requests) {
-                    println!(
-                        "  .. {served}/{requests} served (request {} on device {}: {} ms)",
-                        out.id,
-                        out.device,
-                        ms(out.wall_s),
-                    );
-                }
-            }
-            let (rep, mut registry) = stream.finish_full()?;
-            if let Some(path) = &metrics_out {
-                std::fs::write(path, registry.to_ordered_json() + "\n")?;
-                if !json_out {
-                    println!("wrote {path}");
-                }
-            }
-            if let (Some(path), Some(s)) = (&trace_out, &sink) {
-                std::fs::write(path, chrome_trace_json(&s.take()) + "\n")?;
-                if !json_out {
-                    println!("wrote {path}");
-                }
-            }
-            if json_out {
-                println!("{}", rep.to_ordered_json());
-                return Ok(());
-            }
-            println!(
-                "{}: {} requests over {} devices ({} clock)",
-                scheme.name(),
-                rep.requests,
-                devices,
-                rep.clock.name()
-            );
-            let elapsed_label =
-                if rep.clock == ClockKind::Sim { "virtual time" } else { "wall time" };
-            println!("  {elapsed_label:<15}: {:.2} s", rep.wall_s);
-            println!("  throughput     : {:.1} req/s", rep.throughput_rps);
-            println!("  accuracy       : {}", pct(rep.accuracy));
-            println!("  latency mean   : {} ms", ms(rep.mean_latency_s));
-            println!("  latency p95    : {} ms", ms(rep.p95_latency_s));
-            println!("  batches        : {} (mean size {:.2})", rep.batches, rep.mean_batch_size);
-            println!(
-                "  link           : {} pkts sent, {} lost, {} retx rounds",
-                rep.packets_sent, rep.packets_lost, rep.retransmit_rounds
-            );
-            println!(
-                "  link           : p99 {} ms, goodput {:.1} kbps, \
-                 features delivered {:.1}%, {} partial frames",
-                ms(rep.p99_net_s),
-                rep.goodput_bps / 1e3,
-                rep.delivered_feature_rate * 100.0,
-                rep.incomplete_frames
-            );
-            println!("  radio queueing : mean {} ms", ms(rep.mean_radio_wait_s));
-            if rep.shards.len() > 1 {
-                for s in &rep.shards {
-                    println!(
-                        "  server {:<2}      : {} reqs in {} batches (mean {:.2}), \
-                         queue mean {} ms / p95 {} ms",
-                        s.server,
-                        s.requests,
-                        s.batches,
-                        s.mean_batch_size,
-                        ms(s.mean_queue_s),
-                        ms(s.p95_queue_s)
-                    );
-                }
+            if args.get("shutdown", false)? {
+                send_shutdown(&addr)?;
+                println!("sent shutdown to {addr}");
+            } else {
+                let mut cli = ServeCli::from_args(&args, artifacts)?;
+                cli.builder = cli.builder.connect(&addr);
+                cli.run_client()?;
             }
         }
         "infer" => {
@@ -535,6 +440,202 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// The parsed serving configuration shared by the three socket roles of
+/// the `serve`/`device` commands: in-process run (`serve`), daemon host
+/// (`serve --listen`), and remote device client (`device --connect`). One
+/// parser means one set of defaults, so a client and a daemon started
+/// with the same flags always agree on the world they serve.
+struct ServeCli {
+    builder: ServeBuilder,
+    scheme: Scheme,
+    devices: usize,
+    requests: usize,
+    json_out: bool,
+    quiet: bool,
+    trace_out: Option<String>,
+    metrics_out: Option<String>,
+    sink: Option<Arc<RecordingSink>>,
+}
+
+impl ServeCli {
+    fn from_args(args: &Args, artifacts: PathBuf) -> Result<Self> {
+        let dataset = args.get_str("dataset", "svhns");
+        let scheme: Scheme = args.get_str("scheme", "agile").parse()?;
+        let devices: usize = args.get("devices", 4)?;
+        let requests: usize = args.get("requests", 256)?;
+        let json_out: bool = args.get("json", false)?;
+        // --json owns stdout: progress lines would corrupt the
+        // machine-readable output, so it implies --quiet
+        let quiet: bool = args.get("quiet", false)? || json_out;
+        let mut builder = ServeBuilder::new(&dataset)
+            .artifacts_dir(artifacts)
+            .scheme(scheme)
+            .backend(args.get("backend", BackendKind::Pjrt)?)
+            .devices(devices)
+            .requests(requests)
+            .rate_hz(args.get("rate-hz", 30.0)?)
+            .clock(args.get("clock", ClockKind::Wall)?)
+            .servers(args.get("servers", 1)?)
+            .placement(args.get("placement", Placement::Static)?)
+            .sim_engine(args.get("sim-engine", SimEngine::Event)?)
+            .max_batch(args.get("max-batch", 8)?)
+            .batch_deadline_us(args.get("deadline-us", 2000)?)
+            .bits(args.get("bits", 4)?);
+        if let Some(alpha) = args.get_opt_f64("alpha")? {
+            builder = builder.alpha(alpha);
+        }
+        if args.flags.contains_key("arrival-seed") {
+            builder = builder.arrival_seed(args.get("arrival-seed", 42u64)?);
+        }
+        if let Some(loss) = args.get_opt_f64("loss")? {
+            let burst: f64 = args.get("burst", 1.0)?;
+            builder = builder.loss(if burst > 1.0 {
+                GilbertElliott::bursty(loss, burst)
+            } else {
+                GilbertElliott::uniform(loss)
+            });
+        }
+        let delivery = args.get_str("delivery", "arq");
+        match delivery.as_str() {
+            "arq" => builder = builder.delivery(DeliveryPolicy::Arq),
+            "anytime" => {
+                let deadline_ms: f64 = args.get("net-deadline-ms", 5.0)?;
+                builder =
+                    builder.delivery(DeliveryPolicy::Anytime { deadline_s: deadline_ms * 1e-3 });
+            }
+            other => bail!("unknown --delivery {other:?} (arq|anytime)"),
+        }
+        let order: PacketOrder = args.get("order", PacketOrder::Importance)?;
+        builder = builder.packet_order(order).net_seed(args.get("net-seed", 42u64)?);
+        if let Some(payload) = args.flags.get("packet-payload") {
+            builder = builder.packet_payload(payload.parse()?);
+        }
+        if let Some(path) = args.flags.get("trace") {
+            let trace = BandwidthTrace::from_file(std::path::Path::new(path))?;
+            builder = builder.bandwidth_trace(trace);
+        }
+        let trace_out = args.flags.get("trace-out").cloned();
+        let metrics_out = args.flags.get("metrics-out").cloned();
+        let sink = trace_out.as_ref().map(|_| Arc::new(RecordingSink::new()));
+        if let Some(s) = &sink {
+            builder = builder.trace_sink(s.clone());
+        }
+        Ok(Self {
+            builder,
+            scheme,
+            devices,
+            requests,
+            json_out,
+            quiet,
+            trace_out,
+            metrics_out,
+            sink,
+        })
+    }
+
+    /// Host the server half behind a TCP listener until a client sends
+    /// shutdown (`agilenn device --connect <addr> --shutdown`).
+    fn run_daemon(self, addr: &str) -> Result<()> {
+        let daemon = Daemon::bind(addr, self.builder)?;
+        let local = daemon.local_addr()?;
+        println!("{}: serving daemon listening on {local}", self.scheme.name());
+        let summary = daemon.run()?;
+        if let (Some(path), Some(s)) = (&self.trace_out, &self.sink) {
+            std::fs::write(path, chrome_trace_json(&s.take()) + "\n")?;
+            println!("wrote {path}");
+        }
+        println!(
+            "daemon done: {} connections; {} requests in {} batches (mean size {:.2}), \
+             queue mean {} ms / p95 {} ms",
+            summary.connections,
+            summary.shard.requests,
+            summary.shard.batches,
+            summary.shard.mean_batch_size,
+            ms(summary.shard.mean_queue_s),
+            ms(summary.shard.p95_queue_s)
+        );
+        Ok(())
+    }
+
+    /// Run the serving pipeline (in-process, or against a remote daemon
+    /// when the builder has a connect address) and print the report.
+    fn run_client(self) -> Result<()> {
+        let (requests, quiet, json_out) = (self.requests, self.quiet, self.json_out);
+        let mut stream = self.builder.build()?.stream()?;
+        let mut served = 0usize;
+        for out in stream.by_ref() {
+            served += 1;
+            if !quiet && (served % 32 == 0 || served == requests) {
+                println!(
+                    "  .. {served}/{requests} served (request {} on device {}: {} ms)",
+                    out.id,
+                    out.device,
+                    ms(out.wall_s),
+                );
+            }
+        }
+        let (rep, mut registry) = stream.finish_full()?;
+        if let Some(path) = &self.metrics_out {
+            std::fs::write(path, registry.to_ordered_json() + "\n")?;
+            if !json_out {
+                println!("wrote {path}");
+            }
+        }
+        if let (Some(path), Some(s)) = (&self.trace_out, &self.sink) {
+            std::fs::write(path, chrome_trace_json(&s.take()) + "\n")?;
+            if !json_out {
+                println!("wrote {path}");
+            }
+        }
+        if json_out {
+            println!("{}", rep.to_ordered_json());
+            return Ok(());
+        }
+        println!(
+            "{}: {} requests over {} devices ({} clock)",
+            self.scheme.name(),
+            rep.requests,
+            self.devices,
+            rep.clock.name()
+        );
+        let elapsed_label = if rep.clock == ClockKind::Sim { "virtual time" } else { "wall time" };
+        println!("  {elapsed_label:<15}: {:.2} s", rep.wall_s);
+        println!("  throughput     : {:.1} req/s", rep.throughput_rps);
+        println!("  accuracy       : {}", pct(rep.accuracy));
+        println!("  latency mean   : {} ms", ms(rep.mean_latency_s));
+        println!("  latency p95    : {} ms", ms(rep.p95_latency_s));
+        println!("  batches        : {} (mean size {:.2})", rep.batches, rep.mean_batch_size);
+        println!(
+            "  link           : {} pkts sent, {} lost, {} retx rounds",
+            rep.packets_sent, rep.packets_lost, rep.retransmit_rounds
+        );
+        println!(
+            "  link           : p99 {} ms, goodput {:.1} kbps, \
+             features delivered {:.1}%, {} partial frames",
+            ms(rep.p99_net_s),
+            rep.goodput_bps / 1e3,
+            rep.delivered_feature_rate * 100.0,
+            rep.incomplete_frames
+        );
+        println!("  radio queueing : mean {} ms", ms(rep.mean_radio_wait_s));
+        if rep.shards.len() > 1 {
+            for s in &rep.shards {
+                println!(
+                    "  server {:<2}      : {} reqs in {} batches (mean {:.2}), \
+                     queue mean {} ms / p95 {} ms",
+                    s.server,
+                    s.requests,
+                    s.batches,
+                    s.mean_batch_size,
+                    ms(s.mean_queue_s),
+                    ms(s.p95_queue_s)
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::Args;
@@ -592,6 +693,21 @@ mod tests {
         assert_eq!(a.get("backend", BackendKind::Pjrt).unwrap(), BackendKind::Pjrt);
         let a = parse(&["serve", "--backend", "gpu"]);
         assert!(a.get("backend", BackendKind::Pjrt).is_err());
+    }
+
+    #[test]
+    fn device_and_listen_flags_parse_through_args() {
+        let a = parse(&["device", "--connect", "127.0.0.1:7431", "--requests", "1500"]);
+        assert_eq!(a.cmd, "device");
+        assert_eq!(a.get_str("connect", ""), "127.0.0.1:7431");
+        assert_eq!(a.get::<usize>("requests", 0).unwrap(), 1500);
+        assert!(!a.get::<bool>("shutdown", false).unwrap());
+        let s = parse(&["device", "--connect", "127.0.0.1:7431", "--shutdown"]);
+        assert!(s.get::<bool>("shutdown", false).unwrap());
+        // --listen takes an address value; a following --flag stays a flag
+        let d = parse(&["serve", "--listen", "127.0.0.1:0", "--quiet"]);
+        assert_eq!(d.get_str("listen", ""), "127.0.0.1:0");
+        assert!(d.get::<bool>("quiet", false).unwrap());
     }
 
     #[test]

@@ -3,10 +3,7 @@
 //! The streaming quantile estimator formerly defined here lives in
 //! [`crate::obs::hist`] as the crate-wide [`crate::obs::Histogram`] — the
 //! single histogram implementation shared by the serving report, the
-//! metrics registry, and the experiments. `LatencyStats` remains as an
-//! alias so existing call sites keep reading naturally.
-
-pub use crate::obs::Histogram as LatencyStats;
+//! metrics registry, and the experiments.
 
 /// Per-request latency breakdown (paper §7.2's four components).
 #[derive(Debug, Clone, Copy, Default)]
@@ -78,16 +75,6 @@ impl AccuracyCounter {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn latency_stats_alias_is_the_obs_histogram() {
-        // the alias and the canonical type are one implementation
-        let mut s: LatencyStats = crate::obs::Histogram::new();
-        s.record(0.010);
-        s.record(0.020);
-        assert_eq!(s.count(), 2);
-        assert!((s.mean_s() - 0.015).abs() < 1e-12);
-    }
 
     #[test]
     fn breakdown_total() {

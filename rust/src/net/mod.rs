@@ -19,6 +19,11 @@
 //!   the deadline, imputing missing features; accuracy degrades
 //!   gracefully — and *most* gracefully when the most important features
 //!   were sent first). Selected via `ServeBuilder::delivery`.
+//! * [`wire`] — the versioned, length-prefixed envelope the cross-process
+//!   transports (the TCP serving daemon and device client,
+//!   [`crate::serve::daemon`]) speak. Frame and packet headers carry a
+//!   protocol magic + version byte; mismatched peers are rejected with a
+//!   typed [`WireError`] instead of garbage-decoded.
 //!
 //! All stochastic behavior is seed-deterministic: the same
 //! [`NetConfig::seed`] yields the same loss pattern, byte for byte.
@@ -26,6 +31,7 @@
 pub mod channel;
 pub mod delivery;
 pub mod packetizer;
+pub mod wire;
 
 pub use channel::{BandwidthTrace, Channel, GilbertElliott, PacketTx};
 pub use delivery::{
@@ -35,6 +41,7 @@ pub use delivery::{
 pub use packetizer::{
     importance_order, reassemble_symbols, Packet, PacketOrder, Packetizer, PACKET_HEADER_BYTES,
 };
+pub use wire::{Hello, WireError, WireMsg, WIRE_MAGIC, WIRE_VERSION};
 
 /// Channel-facing knobs of one serving run (lives in `RunConfig.net`; the
 /// defaults are the ideal link, making the pre-channel behavior the

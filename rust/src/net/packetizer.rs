@@ -13,12 +13,16 @@
 
 use crate::compression::quantizer::{bitpack, bitunpack};
 use crate::config::{Meta, Scheme};
+use crate::net::wire::{WireError, WIRE_MAGIC, WIRE_VERSION};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
 
-/// Packet header: frame id (u64) + seq/total (u16 each) + order-space
-/// range start/len (u32 each) = 16 bytes on the wire.
-pub const PACKET_HEADER_BYTES: usize = 16;
+/// Packet header, a real serialized layout since the wire protocol landed
+/// (see [`crate::net::wire`]): magic (u8) + version (u8) + frame id (u64)
+/// + seq/total (u16 each) + order-space range start/len (u32 each) = 22
+/// bytes. [`Packet::encode_wire`] emits exactly these bytes, and the
+/// simulated channel prices the same header the TCP transport carries.
+pub const PACKET_HEADER_BYTES: usize = 22;
 
 /// How uplink packets are ordered on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,7 +49,7 @@ impl std::str::FromStr for PacketOrder {
 /// One uplink packet: an independently decodable bit-packed chunk of the
 /// quantized symbol stream, covering `range_start..range_start+range_len`
 /// of the transmit-order permutation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Packet {
     pub frame_id: u64,
     pub seq: u16,
@@ -61,6 +65,42 @@ impl Packet {
     /// Application-layer bytes this packet puts on the wire.
     pub fn app_bytes(&self) -> usize {
         self.payload.len() + PACKET_HEADER_BYTES
+    }
+
+    /// Serialize header + payload ([`PACKET_HEADER_BYTES`] +
+    /// `payload.len()` = [`Packet::app_bytes`] bytes, little-endian).
+    pub fn encode_wire(&self, buf: &mut Vec<u8>) {
+        buf.push(WIRE_MAGIC);
+        buf.push(WIRE_VERSION);
+        buf.extend_from_slice(&self.frame_id.to_le_bytes());
+        buf.extend_from_slice(&self.seq.to_le_bytes());
+        buf.extend_from_slice(&self.total.to_le_bytes());
+        buf.extend_from_slice(&self.range_start.to_le_bytes());
+        buf.extend_from_slice(&self.range_len.to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+    }
+
+    /// Decode one packet blob (everything after the header is payload).
+    /// Wrong magic or version is a typed [`WireError`], so a cross-process
+    /// peer speaking another encoding is rejected, never garbage-decoded.
+    pub fn decode_wire(buf: &[u8]) -> Result<Packet, WireError> {
+        if buf.len() < PACKET_HEADER_BYTES {
+            return Err(WireError::Truncated { context: "packet header" });
+        }
+        if buf[0] != WIRE_MAGIC {
+            return Err(WireError::BadMagic { found: buf[0] });
+        }
+        if buf[1] != WIRE_VERSION {
+            return Err(WireError::VersionMismatch { found: buf[1] });
+        }
+        Ok(Packet {
+            frame_id: u64::from_le_bytes(buf[2..10].try_into().expect("8-byte slice")),
+            seq: u16::from_le_bytes([buf[10], buf[11]]),
+            total: u16::from_le_bytes([buf[12], buf[13]]),
+            range_start: u32::from_le_bytes(buf[14..18].try_into().expect("4-byte slice")),
+            range_len: u32::from_le_bytes(buf[18..22].try_into().expect("4-byte slice")),
+            payload: buf[PACKET_HEADER_BYTES..].to_vec(),
+        })
     }
 }
 
@@ -254,6 +294,31 @@ mod tests {
         let first_len = 64 - delivered;
         assert!(back[..first_len].iter().all(|&s| s == 0), "missing range imputed");
         assert_eq!(&back[first_len..], &symbols[first_len..]);
+    }
+
+    #[test]
+    fn wire_codec_round_trips_and_rejects_foreign_bytes() {
+        let pz = Packetizer::new(16 + PACKET_HEADER_BYTES, None);
+        let symbols: Vec<u8> = (0..50u8).map(|i| i % 16).collect();
+        for p in pz.packetize(0xDEAD_BEEF, &symbols, 4).unwrap() {
+            let mut buf = Vec::new();
+            p.encode_wire(&mut buf);
+            assert_eq!(buf.len(), p.app_bytes(), "header constant matches the real layout");
+            assert_eq!(Packet::decode_wire(&buf).unwrap(), p);
+            let mut bad = buf.clone();
+            bad[0] ^= 0xFF;
+            assert!(matches!(Packet::decode_wire(&bad), Err(WireError::BadMagic { .. })));
+            let mut bad = buf.clone();
+            bad[1] = WIRE_VERSION + 9;
+            assert!(matches!(
+                Packet::decode_wire(&bad),
+                Err(WireError::VersionMismatch { found }) if found == WIRE_VERSION + 9
+            ));
+        }
+        assert!(matches!(
+            Packet::decode_wire(&[WIRE_MAGIC, WIRE_VERSION, 0]),
+            Err(WireError::Truncated { .. })
+        ));
     }
 
     #[test]

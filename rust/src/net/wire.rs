@@ -1,0 +1,524 @@
+//! The versioned wire protocol shared by every cross-process transport.
+//!
+//! In-process serving hands `UplinkBody` values over an `mpsc` channel and
+//! never serializes anything; the TCP daemon ([`crate::serve::daemon`])
+//! and device client speak *this* format instead: a length-prefixed
+//! envelope (magic, version, message type, payload length) around the
+//! existing packetized frame format. Frames and packets carry their own
+//! magic + version bytes too ([`FRAME_HEADER_BYTES`],
+//! [`PACKET_HEADER_BYTES`]), so a peer speaking a different encoding is
+//! rejected with a typed [`WireError`] instead of garbage-decoding — and
+//! the simulated channel prices exactly the header bytes the real wire
+//! carries.
+//!
+//! Everything is little-endian and deliberately dependency-free (no serde
+//! in the build environment): each message is a hand-rolled codec with a
+//! round-trip unit test, and `perfgate` times the encode/decode loop
+//! (`wire_codec`) so the codecs stay off the serving hot path's budget.
+//!
+//! [`PACKET_HEADER_BYTES`]: crate::net::PACKET_HEADER_BYTES
+
+use crate::compression::{Frame, FRAME_HEADER_BYTES};
+use crate::net::packetizer::Packet;
+use anyhow::Result;
+use std::io::{Read, Write};
+
+/// First byte of every envelope, frame header, and packet header.
+pub const WIRE_MAGIC: u8 = 0xA6;
+/// Protocol version; peers reject anything else with
+/// [`WireError::VersionMismatch`].
+pub const WIRE_VERSION: u8 = 1;
+/// Envelope header: magic + version + message type + reserved + payload
+/// length (u32).
+pub const ENVELOPE_HEADER_BYTES: usize = 8;
+/// Hard cap on one envelope payload — far above any real frame, small
+/// enough that a corrupt length prefix cannot allocate the host away.
+pub const MAX_PAYLOAD_BYTES: u32 = 64 << 20;
+
+const MSG_HELLO: u8 = 1;
+const MSG_HELLO_ACK: u8 = 2;
+const MSG_REJECT: u8 = 3;
+const MSG_OFFLOAD_FRAME: u8 = 4;
+const MSG_OFFLOAD_PACKETS: u8 = 5;
+const MSG_REPLY: u8 = 6;
+const MSG_SHUTDOWN: u8 = 7;
+
+/// A protocol violation on the wire: the bytes parsed, but not as this
+/// protocol (wrong magic), not as this version, or not as a well-formed
+/// message. Typed (and downcastable through `anyhow`) so cross-process
+/// peers can tell an incompatible peer from an I/O failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// the first header byte was not [`WIRE_MAGIC`]
+    BadMagic { found: u8 },
+    /// magic matched but the version byte was not [`WIRE_VERSION`]
+    VersionMismatch { found: u8 },
+    /// the message-type byte names no known message
+    BadMessageType { found: u8 },
+    /// the stream ended inside a header or declared payload
+    Truncated { context: &'static str },
+    /// the payload length prefix exceeds [`MAX_PAYLOAD_BYTES`]
+    Oversized { len: u32 },
+    /// the payload decoded structurally but violates an invariant
+    Malformed { context: &'static str },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic { found } => {
+                write!(f, "bad wire magic {found:#04x} (expected {WIRE_MAGIC:#04x}) — peer is not speaking the agilenn protocol")
+            }
+            WireError::VersionMismatch { found } => {
+                write!(f, "wire protocol version {found} (this build speaks version {WIRE_VERSION})")
+            }
+            WireError::BadMessageType { found } => write!(f, "unknown wire message type {found}"),
+            WireError::Truncated { context } => write!(f, "truncated wire data in {context}"),
+            WireError::Oversized { len } => {
+                write!(f, "wire payload of {len} bytes exceeds the {MAX_PAYLOAD_BYTES}-byte cap")
+            }
+            WireError::Malformed { context } => write!(f, "malformed wire payload: {context}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// The device↔daemon handshake: the client declares the world it was
+/// built against; the daemon rejects any mismatch before serving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub dataset: String,
+    pub scheme: String,
+    pub bits: u32,
+}
+
+/// Every message the TCP transport exchanges. One request–reply pair per
+/// in-flight offload, strictly ordered per connection (each simulated
+/// device is half-duplex, so its transport never pipelines).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireMsg {
+    /// connection opener (client → daemon)
+    Hello(Hello),
+    /// handshake accepted; carries the server world's class count
+    HelloAck { num_classes: u32 },
+    /// handshake or request rejected with a reason (daemon → client)
+    Reject { reason: String },
+    /// an intact LZW frame offload (the ARQ transport)
+    OffloadFrame { id: u64, frame: Frame },
+    /// whatever packets survived the simulated channel (anytime transport)
+    OffloadPackets { id: u64, count: u32, bits: u32, packets: Vec<Packet> },
+    /// remote logits (or the remote failure) plus the server's current
+    /// batch-queue depth — the advertisement adaptive-split policies key on
+    Reply { id: u64, queue_depth: u32, result: Result<Vec<f32>, String> },
+    /// stop the daemon once in-flight connections drain
+    Shutdown,
+}
+
+impl WireMsg {
+    fn msg_type(&self) -> u8 {
+        match self {
+            WireMsg::Hello(_) => MSG_HELLO,
+            WireMsg::HelloAck { .. } => MSG_HELLO_ACK,
+            WireMsg::Reject { .. } => MSG_REJECT,
+            WireMsg::OffloadFrame { .. } => MSG_OFFLOAD_FRAME,
+            WireMsg::OffloadPackets { .. } => MSG_OFFLOAD_PACKETS,
+            WireMsg::Reply { .. } => MSG_REPLY,
+            WireMsg::Shutdown => MSG_SHUTDOWN,
+        }
+    }
+
+    fn encode_payload(&self, buf: &mut Vec<u8>) {
+        match self {
+            WireMsg::Hello(h) => {
+                put_str(buf, &h.dataset);
+                put_str(buf, &h.scheme);
+                buf.extend_from_slice(&h.bits.to_le_bytes());
+            }
+            WireMsg::HelloAck { num_classes } => buf.extend_from_slice(&num_classes.to_le_bytes()),
+            WireMsg::Reject { reason } => buf.extend_from_slice(reason.as_bytes()),
+            WireMsg::OffloadFrame { id, frame } => {
+                buf.extend_from_slice(&id.to_le_bytes());
+                encode_frame(frame, buf);
+            }
+            WireMsg::OffloadPackets { id, count, bits, packets } => {
+                buf.extend_from_slice(&id.to_le_bytes());
+                buf.extend_from_slice(&count.to_le_bytes());
+                buf.extend_from_slice(&bits.to_le_bytes());
+                buf.extend_from_slice(&(packets.len() as u16).to_le_bytes());
+                for p in packets {
+                    buf.extend_from_slice(&(p.app_bytes() as u32).to_le_bytes());
+                    p.encode_wire(buf);
+                }
+            }
+            WireMsg::Reply { id, queue_depth, result } => {
+                buf.extend_from_slice(&id.to_le_bytes());
+                buf.extend_from_slice(&queue_depth.to_le_bytes());
+                match result {
+                    Ok(row) => {
+                        buf.push(0);
+                        for v in row {
+                            buf.extend_from_slice(&v.to_le_bytes());
+                        }
+                    }
+                    Err(e) => {
+                        buf.push(1);
+                        buf.extend_from_slice(e.as_bytes());
+                    }
+                }
+            }
+            WireMsg::Shutdown => {}
+        }
+    }
+
+    /// Serialize the full envelope (header + payload) into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        self.encode_payload(&mut payload);
+        let mut buf = Vec::with_capacity(ENVELOPE_HEADER_BYTES + payload.len());
+        buf.push(WIRE_MAGIC);
+        buf.push(WIRE_VERSION);
+        buf.push(self.msg_type());
+        buf.push(0); // reserved
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+        buf
+    }
+
+    /// Write the full envelope to a stream (one `write_all`; callers flush).
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.encode())
+    }
+
+    /// Read one envelope off a stream. `Ok(None)` is a clean end-of-stream
+    /// (the peer closed between messages); EOF *inside* a message is
+    /// [`WireError::Truncated`]. Protocol violations come back as typed
+    /// [`WireError`]s (downcastable), I/O failures as `std::io::Error`.
+    pub fn read_from(r: &mut impl Read) -> Result<Option<WireMsg>> {
+        let mut header = [0u8; ENVELOPE_HEADER_BYTES];
+        let mut got = 0usize;
+        while got < header.len() {
+            let n = r.read(&mut header[got..])?;
+            if n == 0 {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(WireError::Truncated { context: "envelope header" }.into());
+            }
+            got += n;
+        }
+        if header[0] != WIRE_MAGIC {
+            return Err(WireError::BadMagic { found: header[0] }.into());
+        }
+        if header[1] != WIRE_VERSION {
+            return Err(WireError::VersionMismatch { found: header[1] }.into());
+        }
+        let msg_type = header[2];
+        let len = u32::from_le_bytes([header[4], header[5], header[6], header[7]]);
+        if len > MAX_PAYLOAD_BYTES {
+            return Err(WireError::Oversized { len }.into());
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)
+            .map_err(|_| WireError::Truncated { context: "envelope payload" })?;
+        Ok(Some(decode_payload(msg_type, &payload)?))
+    }
+
+    /// Decode one full envelope from a byte slice (the streaming form is
+    /// [`WireMsg::read_from`]).
+    pub fn decode(buf: &[u8]) -> Result<WireMsg> {
+        let mut r = buf;
+        WireMsg::read_from(&mut r)?
+            .ok_or_else(|| WireError::Truncated { context: "envelope header" }.into())
+    }
+}
+
+fn decode_payload(msg_type: u8, payload: &[u8]) -> Result<WireMsg, WireError> {
+    let mut r = Reader { buf: payload, pos: 0 };
+    let msg = match msg_type {
+        MSG_HELLO => {
+            let dataset = r.take_str("hello dataset")?;
+            let scheme = r.take_str("hello scheme")?;
+            let bits = r.take_u32("hello bits")?;
+            WireMsg::Hello(Hello { dataset, scheme, bits })
+        }
+        MSG_HELLO_ACK => WireMsg::HelloAck { num_classes: r.take_u32("hello-ack")? },
+        MSG_REJECT => WireMsg::Reject { reason: r.take_rest_str("reject reason")? },
+        MSG_OFFLOAD_FRAME => {
+            let id = r.take_u64("frame offload id")?;
+            let frame = decode_frame(r.rest())?;
+            r.pos = r.buf.len();
+            WireMsg::OffloadFrame { id, frame }
+        }
+        MSG_OFFLOAD_PACKETS => {
+            let id = r.take_u64("packet offload id")?;
+            let count = r.take_u32("packet offload count")?;
+            let bits = r.take_u32("packet offload bits")?;
+            if !(1..=8).contains(&bits) {
+                return Err(WireError::Malformed { context: "offload bits outside 1..=8" });
+            }
+            let n = r.take_u16("packet offload packet count")? as usize;
+            let mut packets = Vec::with_capacity(n);
+            for _ in 0..n {
+                let blob_len = r.take_u32("packet blob length")? as usize;
+                let blob = r.take_bytes(blob_len, "packet blob")?;
+                let p = Packet::decode_wire(blob)?;
+                let expect = (p.range_len as usize * bits as usize).div_ceil(8);
+                if p.payload.len() != expect {
+                    return Err(WireError::Malformed {
+                        context: "packet payload length does not match its symbol range",
+                    });
+                }
+                packets.push(p);
+            }
+            WireMsg::OffloadPackets { id, count, bits, packets }
+        }
+        MSG_REPLY => {
+            let id = r.take_u64("reply id")?;
+            let queue_depth = r.take_u32("reply queue depth")?;
+            let status = r.take_u8("reply status")?;
+            let rest = r.rest();
+            r.pos = r.buf.len();
+            let result = match status {
+                0 => {
+                    if rest.len() % 4 != 0 {
+                        return Err(WireError::Malformed {
+                            context: "reply logits are not a whole number of f32s",
+                        });
+                    }
+                    Ok(rest
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect())
+                }
+                1 => Err(String::from_utf8_lossy(rest).into_owned()),
+                _ => return Err(WireError::Malformed { context: "reply status byte" }),
+            };
+            WireMsg::Reply { id, queue_depth, result }
+        }
+        MSG_SHUTDOWN => WireMsg::Shutdown,
+        other => return Err(WireError::BadMessageType { found: other }),
+    };
+    if r.pos != r.buf.len() {
+        return Err(WireError::Malformed { context: "trailing bytes after message payload" });
+    }
+    Ok(msg)
+}
+
+/// Serialize a [`Frame`] blob: the [`FRAME_HEADER_BYTES`]-byte header
+/// (magic, version, bits, reserved, count) followed by the LZW payload —
+/// exactly the bytes [`Frame::wire_bytes`] prices on the simulated link.
+pub fn encode_frame(frame: &Frame, buf: &mut Vec<u8>) {
+    buf.push(WIRE_MAGIC);
+    buf.push(WIRE_VERSION);
+    buf.push(frame.bits.min(u8::MAX as u32) as u8);
+    buf.push(0); // reserved
+    buf.extend_from_slice(&(frame.count as u32).to_le_bytes());
+    buf.extend_from_slice(&frame.payload);
+}
+
+/// Decode a [`Frame`] blob (everything after the header is payload).
+pub fn decode_frame(buf: &[u8]) -> Result<Frame, WireError> {
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Err(WireError::Truncated { context: "frame header" });
+    }
+    if buf[0] != WIRE_MAGIC {
+        return Err(WireError::BadMagic { found: buf[0] });
+    }
+    if buf[1] != WIRE_VERSION {
+        return Err(WireError::VersionMismatch { found: buf[1] });
+    }
+    let bits = buf[2] as u32;
+    if !(1..=8).contains(&bits) {
+        return Err(WireError::Malformed { context: "frame bits outside 1..=8" });
+    }
+    let count = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    Ok(Frame { payload: buf[FRAME_HEADER_BYTES..].to_vec(), count, bits })
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    buf.extend_from_slice(&(bytes.len().min(u16::MAX as usize) as u16).to_le_bytes());
+    buf.extend_from_slice(&bytes[..bytes.len().min(u16::MAX as usize)]);
+}
+
+/// Bounds-checked little-endian reader over one payload slice; every
+/// overrun is a typed [`WireError::Truncated`] naming the field.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take_bytes(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.buf.len() {
+            return Err(WireError::Truncated { context });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn take_u8(&mut self, context: &'static str) -> Result<u8, WireError> {
+        Ok(self.take_bytes(1, context)?[0])
+    }
+
+    fn take_u16(&mut self, context: &'static str) -> Result<u16, WireError> {
+        let b = self.take_bytes(2, context)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn take_u32(&mut self, context: &'static str) -> Result<u32, WireError> {
+        let b = self.take_bytes(4, context)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn take_u64(&mut self, context: &'static str) -> Result<u64, WireError> {
+        let b = self.take_bytes(8, context)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn take_str(&mut self, context: &'static str) -> Result<String, WireError> {
+        let len = self.take_u16(context)? as usize;
+        let b = self.take_bytes(len, context)?;
+        Ok(String::from_utf8_lossy(b).into_owned())
+    }
+
+    fn take_rest_str(&mut self, _context: &'static str) -> Result<String, WireError> {
+        let rest = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        Ok(String::from_utf8_lossy(rest).into_owned())
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::packetizer::Packetizer;
+    use crate::net::PACKET_HEADER_BYTES;
+
+    fn roundtrip(msg: WireMsg) {
+        let bytes = msg.encode();
+        let back = WireMsg::decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+        // streaming form agrees with the slice form
+        let mut r = &bytes[..];
+        assert_eq!(WireMsg::read_from(&mut r).unwrap(), Some(msg));
+        assert_eq!(WireMsg::read_from(&mut r).unwrap(), None, "clean EOF after one message");
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        roundtrip(WireMsg::Hello(Hello {
+            dataset: "synthetic".into(),
+            scheme: "agile".into(),
+            bits: 4,
+        }));
+        roundtrip(WireMsg::HelloAck { num_classes: 10 });
+        roundtrip(WireMsg::Reject { reason: "scheme mismatch".into() });
+        roundtrip(WireMsg::OffloadFrame {
+            id: 7,
+            frame: Frame { payload: vec![1, 2, 3, 4, 5], count: 1216, bits: 4 },
+        });
+        let pz = Packetizer::new(16 + PACKET_HEADER_BYTES, None);
+        let symbols: Vec<u8> = (0..100u8).map(|i| i % 16).collect();
+        let packets = pz.packetize(9, &symbols, 4).unwrap();
+        roundtrip(WireMsg::OffloadPackets { id: 9, count: 100, bits: 4, packets });
+        roundtrip(WireMsg::Reply {
+            id: 3,
+            queue_depth: 5,
+            result: Ok(vec![0.25, -1.5, f32::MIN_POSITIVE]),
+        });
+        roundtrip(WireMsg::Reply { id: 4, queue_depth: 0, result: Err("remote failed".into()) });
+        roundtrip(WireMsg::Shutdown);
+    }
+
+    #[test]
+    fn frame_blob_length_is_wire_bytes() {
+        let frame = Frame { payload: vec![9; 37], count: 120, bits: 2 };
+        let mut buf = Vec::new();
+        encode_frame(&frame, &mut buf);
+        assert_eq!(buf.len(), frame.wire_bytes());
+        assert_eq!(decode_frame(&buf).unwrap(), frame);
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = WireMsg::Shutdown.encode();
+        bytes[0] = 0x00;
+        let err = WireMsg::decode(&bytes).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<WireError>(),
+            Some(&WireError::BadMagic { found: 0x00 })
+        );
+    }
+
+    #[test]
+    fn version_mismatch_is_typed() {
+        let mut bytes = WireMsg::HelloAck { num_classes: 10 }.encode();
+        bytes[1] = WIRE_VERSION + 1;
+        let err = WireMsg::decode(&bytes).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<WireError>(),
+            Some(&WireError::VersionMismatch { found: WIRE_VERSION + 1 })
+        );
+        // ...and on the embedded frame header too
+        let msg = WireMsg::OffloadFrame {
+            id: 1,
+            frame: Frame { payload: vec![1], count: 2, bits: 4 },
+        };
+        let mut bytes = msg.encode();
+        bytes[ENVELOPE_HEADER_BYTES + 8 + 1] = WIRE_VERSION + 1; // frame header version byte
+        let err = WireMsg::decode(&bytes).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<WireError>(),
+            Some(&WireError::VersionMismatch { found: WIRE_VERSION + 1 })
+        );
+    }
+
+    #[test]
+    fn truncation_and_unknown_types_are_typed() {
+        let bytes = WireMsg::Reply { id: 1, queue_depth: 0, result: Ok(vec![1.0]) }.encode();
+        let err = WireMsg::decode(&bytes[..bytes.len() - 2]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<WireError>(),
+            Some(&WireError::Truncated { context: "envelope payload" })
+        );
+        let mut bytes = WireMsg::Shutdown.encode();
+        bytes[2] = 200;
+        let err = WireMsg::decode(&bytes).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<WireError>(),
+            Some(&WireError::BadMessageType { found: 200 })
+        );
+    }
+
+    #[test]
+    fn packet_payload_must_match_its_range() {
+        let pz = Packetizer::new(16 + PACKET_HEADER_BYTES, None);
+        let symbols: Vec<u8> = (0..32u8).map(|i| i % 16).collect();
+        let mut packets = pz.packetize(1, &symbols, 4).unwrap();
+        packets[0].payload.push(0xFF); // one byte too many for its range
+        let bytes = WireMsg::OffloadPackets { id: 1, count: 32, bits: 4, packets }.encode();
+        let err = WireMsg::decode(&bytes).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<WireError>(),
+            Some(WireError::Malformed { .. })
+        ));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut bytes = WireMsg::Shutdown.encode();
+        bytes[4..8].copy_from_slice(&(MAX_PAYLOAD_BYTES + 1).to_le_bytes());
+        let err = WireMsg::decode(&bytes).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<WireError>(),
+            Some(&WireError::Oversized { len: MAX_PAYLOAD_BYTES + 1 })
+        );
+    }
+}

@@ -1,10 +1,9 @@
 //! The crate's single quantile estimator: a streaming histogram with
 //! bounded memory, moved here from `metrics.rs` so the serving report,
 //! the metrics registry, and every experiment share one implementation
-//! (and one set of NaN/total_cmp guarantees).
-//!
-//! `metrics::LatencyStats` remains as a re-export alias for existing
-//! call sites; there is exactly one histogram type in the crate.
+//! (and one set of NaN/total_cmp guarantees). There is exactly one
+//! histogram type in the crate; the old `metrics::LatencyStats` alias is
+//! gone.
 
 /// Exact-sample cap: below this, quantiles are exact (sorted samples);
 /// beyond it the stats spill into fixed log-scale buckets so million-

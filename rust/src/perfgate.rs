@@ -288,7 +288,42 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
     progress(&entry);
     entries.push(entry);
 
-    // 4) the autotuner evaluator: an exhaustive tune over the default
+    // 4) the wire codec: envelope encode + decode of both uplink bodies
+    //    (whole LZW frame / importance-ordered packet subset) — what every
+    //    request pays twice on the real-socket path (device client encodes,
+    //    daemon decodes, and the reply rides the same envelope).
+    let symbols: Vec<u8> = (0..1216).map(|i| (i % 13) as u8 & 0x0F).collect();
+    let pkts = crate::net::Packetizer::new(128, None).packetize(9, &symbols, 4)?;
+    let frame = crate::compression::Frame { payload: vec![0xA5; 300], count: 1216, bits: 4 };
+    let (iters, wall) = timed(handicap, || {
+        let mut iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(250) {
+            for _ in 0..64 {
+                let msg = crate::net::WireMsg::OffloadPackets {
+                    id: iters,
+                    count: symbols.len() as u32,
+                    bits: 4,
+                    packets: pkts.clone(),
+                };
+                std::hint::black_box(crate::net::WireMsg::decode(&msg.encode())?);
+                let msg = crate::net::WireMsg::OffloadFrame { id: iters, frame: frame.clone() };
+                std::hint::black_box(crate::net::WireMsg::decode(&msg.encode())?);
+                iters += 2;
+            }
+        }
+        Ok(iters)
+    })?;
+    let entry = PerfEntry {
+        name: "wire_codec".into(),
+        throughput: iters as f64 / wall,
+        wall_s: wall,
+        info: vec![("packets_per_msg".into(), pkts.len() as f64)],
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    // 5) the autotuner evaluator: an exhaustive tune over the default
     //    8-point grid, every point a fresh fleet-engine run. Gated on
     //    config evaluations per host second.
     let tune_cfg = crate::tune::TuneConfig {
@@ -323,7 +358,7 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
     progress(&entry);
     entries.push(entry);
 
-    // 5) the fleet engine with a *recording* sink: the same headline
+    // 6) the fleet engine with a *recording* sink: the same headline
     //    sweep as (1) but every request-lifecycle event is materialized
     //    in memory — the worst-case tracing overhead, gated separately so
     //    a regression in the emission path cannot hide inside the

@@ -1,0 +1,332 @@
+//! The real-socket serving daemon: `agilenn serve --listen <addr>`.
+//!
+//! Hosts the server half of a scheme behind a TCP listener speaking the
+//! versioned wire envelope ([`crate::net::wire`]). Each accepted
+//! connection is one device client ([`super::fabric::TcpTransport`]):
+//! after a `Hello`/`HelloAck` handshake pinning dataset, scheme, bit-width
+//! and protocol version, the connection carries offload requests in
+//! lockstep — uplink body out, logits back — all feeding the *same*
+//! deadline-batched [`server_loop`] the in-process pipeline runs.
+//!
+//! Division of labor (and why loopback runs verify bitwise): the simulated
+//! lossy channel, packetization, retransmission accounting and outcome
+//! assembly all stay on the device client — the daemon only ever sees what
+//! *survived* the simulated link, exactly like the in-process server loop.
+//! TCP is carriage, not the channel model; the channel model prices the
+//! wire. So a device client run against a loopback daemon reproduces every
+//! seed-deterministic report field of an in-process run bit for bit (the
+//! contract `docs/daemon.md` spells out and CI enforces).
+//!
+//! The daemon runs on the wall clock only — virtual time cannot
+//! coordinate across processes — and stops when a client sends
+//! [`WireMsg::Shutdown`] (`agilenn device --shutdown`, or
+//! [`send_shutdown`]).
+//!
+//! [`server_loop`]: super::service
+
+use crate::config::{Meta, RunConfig};
+use crate::net::wire::{Hello, WireMsg};
+use crate::obs::Tracer;
+use crate::runtime::make_backend;
+use crate::serve::clock::Clock;
+use crate::serve::fabric::{OffloadMsg, UplinkBody};
+use crate::serve::scheme::{make_server_side, ServerSide};
+use crate::serve::service::{server_loop, ServeBuilder, ShardReport};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+/// What one daemon lifetime did, reported after shutdown: how many
+/// connections were accepted, plus the server loop's own batch/queue
+/// accounting (the same [`ShardReport`] an in-process run puts in
+/// `PipelineReport::shards`).
+#[derive(Debug, Clone)]
+pub struct DaemonSummary {
+    /// accepted connections (device clients, plus the shutdown control
+    /// connection that ended the run)
+    pub connections: usize,
+    pub shard: ShardReport,
+}
+
+/// A bound, not-yet-running serving daemon. [`Daemon::bind`] resolves the
+/// world and loads the scheme's server half eagerly so configuration
+/// errors surface before the first client connects; [`Daemon::run`] then
+/// serves until a [`WireMsg::Shutdown`] arrives.
+pub struct Daemon {
+    listener: TcpListener,
+    cfg: RunConfig,
+    meta: Meta,
+    tracer: Tracer,
+    server: Box<dyn ServerSide>,
+    max_batch: usize,
+}
+
+impl Daemon {
+    /// Bind `addr` and assemble the server half described by `builder`
+    /// (scheme, backend, batching knobs). Schemes without a server half
+    /// (local-only) have nothing to host and are rejected here.
+    pub fn bind(addr: &str, builder: ServeBuilder) -> Result<Self> {
+        let (cfg, tracer) = builder.daemon_parts();
+        let (meta, _testset) = crate::fixtures::load_world(&cfg)?;
+        let backend = make_backend(&cfg, &meta)?;
+        let server = make_server_side(backend.as_ref(), &cfg, &meta)?.ok_or_else(|| {
+            anyhow!("{} runs entirely on-device; there is no server half to host", cfg.scheme.name())
+        })?;
+        let max_batch = cfg.max_batch.min(server.max_batch());
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding serving daemon listener on {addr}"))?;
+        Ok(Self { listener, cfg, meta, tracer, server, max_batch })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0` to the actual
+    /// port, for tests and logs).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until shutdown. Spawns the shared deadline-batched
+    /// [`server_loop`] once, then one lightweight handler thread per
+    /// accepted connection; handlers funnel decoded offload requests into
+    /// the server loop over the same `mpsc` fabric the in-process pipeline
+    /// uses, so batching dynamics are identical.
+    ///
+    /// [`server_loop`]: super::service
+    pub fn run(self) -> Result<DaemonSummary> {
+        let deadline_s = self.cfg.batch_deadline_us as f64 * 1e-6;
+        let clock = Clock::wall();
+        let depth = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel::<OffloadMsg>();
+        let server_handle = {
+            let clock = clock.clone();
+            let tracer = self.tracer.clone();
+            let depth = depth.clone();
+            let server = self.server;
+            let max_batch = self.max_batch;
+            std::thread::spawn(move || {
+                server_loop(server, rx, max_batch, deadline_s, clock, tracer, depth)
+            })
+        };
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let local = self.listener.local_addr()?;
+        let world = Arc::new(WorldKey {
+            dataset: self.cfg.dataset.clone(),
+            scheme: self.cfg.scheme.name().to_string(),
+            bits: self.cfg.bits,
+            num_classes: self.meta.num_classes as u32,
+        });
+        let mut handlers = Vec::new();
+        let mut connections = 0usize;
+        for stream in self.listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    continue;
+                }
+            };
+            connections += 1;
+            let tx = tx.clone();
+            let depth = depth.clone();
+            let stop = stop.clone();
+            let world = world.clone();
+            handlers.push(std::thread::spawn(move || {
+                if let Err(e) = handle_connection(stream, &world, &tx, &depth, &stop, local) {
+                    eprintln!("connection handler: {e:#}");
+                }
+            }));
+        }
+        // master sender gone; the server loop drains once every handler's
+        // clone has dropped too
+        drop(tx);
+        for h in handlers {
+            let _ = h.join();
+        }
+        let agg = server_handle.join().map_err(|_| anyhow!("server loop panicked"))?;
+        Ok(DaemonSummary { connections, shard: agg.into_report(0) })
+    }
+}
+
+/// The identity a client must match to be served: handshake validation is
+/// exact, so a client built against a different world fails fast with a
+/// reason instead of producing silently-wrong logits.
+struct WorldKey {
+    dataset: String,
+    scheme: String,
+    bits: u32,
+    num_classes: u32,
+}
+
+impl WorldKey {
+    fn check(&self, hello: &Hello) -> std::result::Result<(), String> {
+        if hello.dataset != self.dataset || hello.scheme != self.scheme || hello.bits != self.bits {
+            return Err(format!(
+                "daemon serves {}/{} at {} bits; client asked for {}/{} at {} bits",
+                self.dataset, self.scheme, self.bits, hello.dataset, hello.scheme, hello.bits
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One connection: handshake, then offload requests in lockstep until the
+/// client disconnects or sends `Shutdown`. Protocol violations get a
+/// best-effort `Reject` before the connection closes.
+fn handle_connection(
+    stream: TcpStream,
+    world: &WorldKey,
+    tx: &Sender<OffloadMsg>,
+    depth: &AtomicUsize,
+    stop: &AtomicBool,
+    local: SocketAddr,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = BufWriter::new(stream.try_clone()?);
+    let mut reader = BufReader::new(stream);
+
+    // handshake — or an immediate Shutdown from the control client
+    match read_or_reject(&mut reader, &mut writer)? {
+        Some(WireMsg::Hello(hello)) => match world.check(&hello) {
+            Ok(()) => {
+                WireMsg::HelloAck { num_classes: world.num_classes }.write_to(&mut writer)?;
+                writer.flush()?;
+            }
+            Err(reason) => {
+                WireMsg::Reject { reason: reason.clone() }.write_to(&mut writer)?;
+                writer.flush()?;
+                bail!("rejected handshake: {reason}");
+            }
+        },
+        Some(WireMsg::Shutdown) => {
+            request_stop(stop, local);
+            return Ok(());
+        }
+        Some(other) => {
+            let reason = format!("expected Hello, got {other:?}");
+            let _ = WireMsg::Reject { reason: reason.clone() }.write_to(&mut writer);
+            let _ = writer.flush();
+            bail!("{reason}");
+        }
+        None => return Ok(()), // probe connection: opened and closed
+    }
+
+    while let Some(msg) = read_or_reject(&mut reader, &mut writer)? {
+        let (id, body) = match msg {
+            WireMsg::OffloadFrame { id, frame } => (id, UplinkBody::Whole(frame)),
+            WireMsg::OffloadPackets { id, count, bits, packets } => {
+                (id, UplinkBody::Packets { packets, count: count as usize, bits })
+            }
+            WireMsg::Shutdown => {
+                request_stop(stop, local);
+                return Ok(());
+            }
+            other => {
+                let reason = format!("expected an offload request, got {other:?}");
+                let _ = WireMsg::Reject { reason: reason.clone() }.write_to(&mut writer);
+                let _ = writer.flush();
+                bail!("{reason}");
+            }
+        };
+        let (rtx, rrx) = channel();
+        tx.send(OffloadMsg { id, body, reply: rtx })
+            .map_err(|_| anyhow!("server loop gone while serving request {id}"))?;
+        let result = rrx
+            .recv()
+            .map_err(|_| anyhow!("server loop dropped the reply for request {id}"))?
+            .map_err(|e| e.0);
+        WireMsg::Reply { id, queue_depth: depth.load(Ordering::Relaxed) as u32, result }
+            .write_to(&mut writer)?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Read the next message; on a malformed/foreign byte stream, send a
+/// best-effort `Reject` naming the parse error before surfacing it.
+fn read_or_reject(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+) -> Result<Option<WireMsg>> {
+    match WireMsg::read_from(reader) {
+        Ok(m) => Ok(m),
+        Err(e) => {
+            let _ = WireMsg::Reject { reason: format!("{e:#}") }.write_to(writer);
+            let _ = writer.flush();
+            Err(e)
+        }
+    }
+}
+
+/// Flag the accept loop to stop and wake it with a throwaway connection
+/// (accept has no timeout; the self-connection is the wakeup).
+fn request_stop(stop: &AtomicBool, local: SocketAddr) {
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(local);
+}
+
+/// Ask the daemon at `addr` to shut down after finishing in-flight work
+/// (what `agilenn device --connect <addr> --shutdown` calls).
+pub fn send_shutdown(addr: &str) -> Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to serving daemon at {addr}"))?;
+    let mut writer = BufWriter::new(stream);
+    WireMsg::Shutdown.write_to(&mut writer)?;
+    writer.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, Scheme};
+    use crate::serve::fabric::TcpTransport;
+
+    fn daemon(dataset: &str) -> Daemon {
+        Daemon::bind(
+            "127.0.0.1:0",
+            ServeBuilder::new(dataset).backend(BackendKind::Reference).scheme(Scheme::Agile),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn daemon_rejects_a_local_only_scheme() {
+        let err = Daemon::bind(
+            "127.0.0.1:0",
+            ServeBuilder::new("svhns").backend(BackendKind::Reference).scheme(Scheme::Mcunet),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no server half"), "{err:#}");
+    }
+
+    #[test]
+    fn daemon_acks_a_matching_hello_and_rejects_a_mismatched_one() {
+        let d = daemon("svhns");
+        let addr = d.local_addr().unwrap().to_string();
+        let run = std::thread::spawn(move || d.run().unwrap());
+
+        // matching world: handshake succeeds and reports the class count
+        let good = Hello { dataset: "svhns".into(), scheme: "agile".into(), bits: 4 };
+        let t = TcpTransport::connect(&addr, &good).unwrap();
+        assert_eq!(t.num_classes(), 10);
+        drop(t);
+
+        // mismatched bit-width: typed rejection naming both sides
+        let bad = Hello { dataset: "svhns".into(), scheme: "agile".into(), bits: 2 };
+        let err = TcpTransport::connect(&addr, &bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("4 bits") && msg.contains("2 bits"), "{msg}");
+
+        send_shutdown(&addr).unwrap();
+        let summary = run.join().unwrap();
+        // the good client, the bad client, and the shutdown connection
+        assert_eq!(summary.connections, 3);
+        assert_eq!(summary.shard.requests, 0);
+    }
+}

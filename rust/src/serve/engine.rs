@@ -70,7 +70,8 @@ use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, reply_bytes, DeviceSide,
     Fuser, LocalResult, ServerSide,
 };
-use crate::serve::service::{device_schedule, ServedOutcome, ShardAgg, UplinkBody};
+use crate::serve::fabric::UplinkBody;
+use crate::serve::service::{device_schedule, ServedOutcome, ShardAgg};
 use crate::simulator::{DeviceSim, NetworkSim};
 use crate::tensor::Tensor;
 use crate::workload::{Arrival, TestSet};

@@ -47,6 +47,15 @@
 //! least-loaded device→server [`Placement`] policy, with per-shard
 //! load/latency in [`PipelineReport::shards`].
 //!
+//! Real sockets ([`fabric`], [`daemon`]): device↔server communication
+//! flows through the [`Transport`] trait, so the same `device_loop` that
+//! drives the in-process `mpsc` path can instead speak a versioned wire
+//! protocol ([`crate::net::wire`]) over TCP to an `agilenn serve --listen`
+//! daemon ([`Daemon`]), with `ServeBuilder::connect` selecting the remote
+//! path on the client. The simulated channel stays device-side, so a
+//! loopback daemon run reproduces every seed-deterministic report field
+//! of an in-process run bit for bit (see `docs/daemon.md`).
+//!
 //! Observability ([`crate::obs`]): `ServeBuilder::trace_sink` attaches a
 //! [`TraceSink`](crate::obs::TraceSink) that receives every
 //! request-lifecycle span (arrival → encode → radio wait → per-packet
@@ -58,12 +67,16 @@
 //! [`PipelineReport`] is derived from. See `docs/observability.md`.
 
 pub mod clock;
+pub mod daemon;
 pub mod engine;
+pub mod fabric;
 pub mod scheme;
 pub mod service;
 
 pub use clock::{Clock, ClockKind};
+pub use daemon::{send_shutdown, Daemon, DaemonSummary};
 pub use engine::{Placement, SimEngine};
+pub use fabric::{TcpTransport, Transport, UplinkBody};
 pub use scheme::{
     make_device_side, make_fuser, make_server_side, reply_bytes, AgileDevice, AlphaFuser,
     DeepcodDevice, DeviceSide, EdgeDevice, Fuser, LocalArgmaxFuser, LocalResult, McunetDevice,

@@ -23,26 +23,30 @@
 //! [`Fuser`]: super::scheme::Fuser
 
 use crate::baselines::RequestOutcome;
-use crate::compression::Frame;
 use crate::config::{default_artifacts_dir, BackendKind, Meta, RunConfig, Scheme};
 use crate::coordinator::batcher::{BatchQueue, Pending, REMOTE_BATCH_SIZES};
-use crate::metrics::{AccuracyCounter, LatencyStats};
+use crate::metrics::AccuracyCounter;
+use crate::net::wire::Hello;
 use crate::net::{
     importance_order, transmit_frame_traced, transmit_packets_traced, BandwidthTrace, Channel,
-    DeliveryPolicy, GilbertElliott, LinkOutcome, Packet, PacketOrder, Packetizer,
+    DeliveryPolicy, GilbertElliott, LinkOutcome, PacketOrder, Packetizer,
 };
-use crate::obs::{EventKind, Lane, MetricsRegistry, TraceSink, Tracer};
+use crate::obs::{EventKind, Histogram, Lane, MetricsRegistry, TraceSink, Tracer};
 use crate::runtime::{make_backend, Backend};
 use crate::serve::clock::{Clock, ClockKind};
 use crate::serve::engine::{self, FleetSpec, Placement, SimEngine};
+use crate::serve::fabric::{
+    send_reply, ChannelTransport, OffloadMsg, Reply, TcpTransport, Transport, UplinkBody,
+};
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
 };
 use crate::simulator::{DeviceProfile, DeviceSim, NetworkProfile, NetworkSim};
 use crate::tensor::Tensor;
 use crate::workload::{Arrival, TestSet};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -238,11 +242,11 @@ pub struct ShardReport {
 pub(crate) struct ShardAgg {
     pub batched: usize,
     pub batches: usize,
-    pub queue_wait: LatencyStats,
+    pub queue_wait: Histogram,
 }
 
 impl ShardAgg {
-    fn into_report(mut self, server: usize) -> ShardReport {
+    pub(crate) fn into_report(mut self, server: usize) -> ShardReport {
         ShardReport {
             server,
             requests: self.batched,
@@ -332,6 +336,12 @@ pub enum ConfigError {
     /// `servers > 1` off the sim clock's event engine (the threaded paths
     /// have no server sharding)
     MultiServerNeedsEventEngine { servers: usize, clock: ClockKind, engine: SimEngine },
+    /// `connect` (a remote serving daemon) off the wall clock — virtual
+    /// time cannot coordinate across processes
+    RemoteNeedsWallClock { clock: ClockKind },
+    /// `connect` with a multi-server topology: the remote daemon *is* the
+    /// one server this client can reach
+    RemoteConflictsWithServers { servers: usize },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -353,35 +363,26 @@ impl std::fmt::Display for ConfigError {
                 clock.name(),
                 engine.name()
             ),
+            ConfigError::RemoteNeedsWallClock { clock } => write!(
+                f,
+                "connecting to a remote serving daemon requires the wall clock \
+                 (virtual time cannot coordinate across processes), not the {} clock",
+                clock.name()
+            ),
+            ConfigError::RemoteConflictsWithServers { servers } => write!(
+                f,
+                "{servers} servers conflict with a remote daemon connection \
+                 (the daemon is the one server this client can reach)"
+            ),
         }
     }
 }
 
 impl std::error::Error for ConfigError {}
 
-type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
-
 /// What the batcher queues per offloaded request: the decoded features and
 /// the waiting device's reply channel.
 type BatchItem = (Tensor, Sender<Reply>);
-
-/// What actually crossed the (simulated) wire for one offload. Shared
-/// with the event engine ([`super::engine`]), which builds the same
-/// bodies from the same transmit calls.
-pub(crate) enum UplinkBody {
-    /// intact LZW frame (ARQ transport: only decodable when complete)
-    Whole(Frame),
-    /// whatever packets arrived in time (anytime transport: the server
-    /// reconstructs and imputes the rest)
-    Packets { packets: Vec<Packet>, count: usize, bits: u32 },
-}
-
-/// One in-flight offload awaiting its remote logits.
-struct OffloadMsg {
-    id: u64,
-    body: UplinkBody,
-    reply: Sender<Reply>,
-}
 
 /// Builder for a scheme-agnostic serving [`Service`].
 ///
@@ -411,6 +412,7 @@ pub struct ServeBuilder {
     placement: Placement,
     sim_engine: SimEngine,
     trace: Tracer,
+    connect: Option<String>,
 }
 
 impl ServeBuilder {
@@ -436,6 +438,7 @@ impl ServeBuilder {
             placement: Placement::default(),
             sim_engine: SimEngine::default(),
             trace: Tracer::off(),
+            connect: None,
         }
     }
 
@@ -530,6 +533,20 @@ impl ServeBuilder {
     /// No effect on the wall clock.
     pub fn sim_engine(mut self, engine: SimEngine) -> Self {
         self.sim_engine = engine;
+        self
+    }
+
+    /// Serve against a remote daemon (`agilenn serve --listen <addr>`)
+    /// over TCP instead of an in-process server half: every device opens
+    /// its own connection and speaks the versioned wire envelope
+    /// ([`crate::net::wire`]). Wall clock only — the run is rejected with
+    /// a typed [`ConfigError`] otherwise. The report's server-side batch
+    /// accounting (`shards`, `batches`) lives in the daemon's summary, not
+    /// the client report; every device-side deterministic field is
+    /// bit-identical to an in-process run of the same config (see
+    /// `docs/daemon.md`).
+    pub fn connect(mut self, addr: impl Into<String>) -> Self {
+        self.connect = Some(addr.into());
         self
     }
 
@@ -666,7 +683,16 @@ impl ServeBuilder {
             .with_clock(self.clock)
             .with_servers(self.servers, self.placement)
             .with_sim_engine(self.sim_engine)
-            .with_tracer(self.trace))
+            .with_tracer(self.trace)
+            .with_connect(self.connect))
+    }
+
+    /// Resolve the pieces the serving daemon needs: the run configuration
+    /// (scheme, backend, bits, batcher knobs) and the trace handle. The
+    /// client-only knobs (devices, arrival, channel) are simply unused on
+    /// the daemon side.
+    pub(crate) fn daemon_parts(self) -> (RunConfig, Tracer) {
+        (self.to_config(), self.trace)
     }
 }
 
@@ -683,6 +709,7 @@ pub struct Service {
     placement: Placement,
     sim_engine: SimEngine,
     tracer: Tracer,
+    connect: Option<String>,
 }
 
 impl Service {
@@ -719,6 +746,7 @@ impl Service {
             placement: Placement::default(),
             sim_engine: SimEngine::default(),
             tracer: Tracer::off(),
+            connect: None,
         })
     }
 
@@ -745,6 +773,13 @@ impl Service {
     /// [`ServeBuilder::trace_sink`].
     pub fn with_tracer(mut self, tracer: Tracer) -> Self {
         self.tracer = tracer;
+        self
+    }
+
+    /// Serve against a remote daemon instead of an in-process server half
+    /// (default: `None`); see [`ServeBuilder::connect`].
+    pub fn with_connect(mut self, connect: Option<String>) -> Self {
+        self.connect = connect;
         self
     }
 
@@ -781,6 +816,14 @@ impl Service {
                 engine: self.sim_engine,
             });
         }
+        if self.connect.is_some() {
+            if self.clock != ClockKind::Wall {
+                return Err(ConfigError::RemoteNeedsWallClock { clock: self.clock });
+            }
+            if self.servers > 1 {
+                return Err(ConfigError::RemoteConflictsWithServers { servers: self.servers });
+            }
+        }
         Ok(())
     }
 
@@ -801,6 +844,9 @@ impl Service {
             return self.stream_engine();
         }
         let backend: Arc<dyn Backend> = make_backend(&self.cfg, &self.meta)?;
+        if self.connect.is_some() {
+            return self.stream_remote(backend);
+        }
         let server = make_server_side(backend.as_ref(), &self.cfg, &self.meta)?;
         // some schemes export fewer remote batch sizes (edge-only: max 4)
         let max_batch = match &server {
@@ -815,13 +861,17 @@ impl Service {
             ClockKind::Sim => Clock::sim(self.devices + server.is_some() as usize),
         };
 
+        // live batch-queue depth, published by the server loop and read
+        // back through Transport::queue_depth
+        let depth = Arc::new(AtomicUsize::new(0));
         let (tx_offload, server_handle) = match server {
             Some(server) => {
                 let (tx, rx) = channel::<OffloadMsg>();
                 let clock = clock.clone();
                 let tracer = self.tracer.clone();
+                let depth = depth.clone();
                 let handle = std::thread::spawn(move || {
-                    server_loop(server, rx, max_batch, deadline_s, clock, tracer)
+                    server_loop(server, rx, max_batch, deadline_s, clock, tracer, depth)
                 });
                 (Some(tx), Some(handle))
             }
@@ -835,7 +885,10 @@ impl Service {
             let meta = self.meta.clone();
             let backend = backend.clone();
             let testset = self.testset.clone();
-            let tx_offload = tx_offload.clone();
+            let transport: Option<Box<dyn Transport>> = tx_offload.as_ref().map(|tx| {
+                Box::new(ChannelTransport::new(tx.clone(), clock.clone(), depth.clone()))
+                    as Box<dyn Transport>
+            });
             let tx_done = tx_done.clone();
             let clock = clock.clone();
             let tracer = self.tracer.clone();
@@ -858,7 +911,7 @@ impl Service {
                     &testset,
                     &ids,
                     &times,
-                    tx_offload,
+                    transport,
                     tx_done,
                     clock,
                     tracer,
@@ -871,6 +924,69 @@ impl Service {
         Ok(OutcomeStream {
             rx: rx_done,
             handle: RunHandle::Threads { device_handles, server_handle, clock },
+            agg: StreamAgg::default(),
+        })
+    }
+
+    /// The remote path: every device opens its own [`TcpTransport`] to the
+    /// daemon named by [`ServeBuilder::connect`] and runs the identical
+    /// `device_loop` — same simulated channel, same schedule, same
+    /// outcome assembly — so every device-side deterministic report field
+    /// is bit-equal to an in-process run of the same config. The server
+    /// half (and its batch accounting) lives in the daemon.
+    fn stream_remote(self, backend: Arc<dyn Backend>) -> Result<OutcomeStream> {
+        let addr = self.connect.clone().expect("stream_remote requires connect");
+        let clock = Clock::wall();
+        let hello = Hello {
+            dataset: self.cfg.dataset.clone(),
+            scheme: self.cfg.scheme.name().to_string(),
+            bits: self.cfg.bits,
+        };
+        // connect every device up front so handshake rejections (version,
+        // scheme, bit-width mismatches) surface from stream(), typed, not
+        // from inside a spawned worker
+        let mut transports = Vec::with_capacity(self.devices);
+        for _ in 0..self.devices {
+            let t = TcpTransport::connect(&addr, &hello)?;
+            ensure!(
+                t.num_classes() == self.meta.num_classes,
+                "daemon at {addr} serves {} classes, this client's world has {}",
+                t.num_classes(),
+                self.meta.num_classes
+            );
+            transports.push(t);
+        }
+        let (tx_done, rx_done) = channel::<ServedOutcome>();
+        let mut device_handles = Vec::new();
+        for (d, transport) in transports.into_iter().enumerate() {
+            let cfg = self.cfg.clone();
+            let meta = self.meta.clone();
+            let backend = backend.clone();
+            let testset = self.testset.clone();
+            let tx_done = tx_done.clone();
+            let clock = clock.clone();
+            let tracer = self.tracer.clone();
+            let (ids, times) = device_schedule(&self.arrival, self.devices, self.requests, d);
+            device_handles.push(std::thread::spawn(move || {
+                device_loop(
+                    d,
+                    backend.as_ref(),
+                    &cfg,
+                    &meta,
+                    &testset,
+                    &ids,
+                    &times,
+                    Some(Box::new(transport) as Box<dyn Transport>),
+                    tx_done,
+                    clock,
+                    tracer,
+                )
+            }));
+        }
+        drop(tx_done);
+        Ok(OutcomeStream {
+            rx: rx_done,
+            handle: RunHandle::Threads { device_handles, server_handle: None, clock },
             agg: StreamAgg::default(),
         })
     }
@@ -967,12 +1083,12 @@ impl NetAgg {
 #[derive(Debug, Default)]
 struct StreamAgg {
     acc: AccuracyCounter,
-    lat: LatencyStats,
-    net_lat: LatencyStats,
-    phase_local_nn: LatencyStats,
-    phase_compression: LatencyStats,
-    phase_network: LatencyStats,
-    phase_remote: LatencyStats,
+    lat: Histogram,
+    net_lat: Histogram,
+    phase_local_nn: Histogram,
+    phase_compression: Histogram,
+    phase_network: Histogram,
+    phase_remote: Histogram,
     net: NetAgg,
 }
 
@@ -1101,15 +1217,6 @@ impl OutcomeStream {
     }
 }
 
-/// Reply to one waiting device thread, keeping the sim clock's in-flight
-/// accounting balanced even if the device is already gone.
-fn send_reply(clock: &Clock, tx: &Sender<Reply>, reply: Reply) {
-    clock.msg_sent();
-    if tx.send(reply).is_err() {
-        clock.msg_cancelled();
-    }
-}
-
 /// Decode one uplink and enqueue it for batching (timestamped with the
 /// serving clock); decode failures reply to the device immediately.
 fn decode_and_enqueue(
@@ -1146,13 +1253,18 @@ fn decode_and_enqueue(
 /// loop blocks in `recv_timeout` exactly as before; on the sim clock it
 /// registers its next deadline with the virtual clock, which advances to
 /// it once every device is likewise blocked.
-fn server_loop(
+///
+/// `depth` is the fabric's queue-depth advertisement: the loop publishes
+/// the live batch-queue length after every enqueue/dispatch so transports
+/// ([`Transport::queue_depth`]) can expose it to split policies.
+pub(crate) fn server_loop(
     mut server: Box<dyn ServerSide>,
     rx: Receiver<OffloadMsg>,
     max_batch: usize,
     deadline_s: f64,
     clock: Clock,
     tracer: Tracer,
+    depth: Arc<AtomicUsize>,
 ) -> ShardAgg {
     let _participant = clock.participant();
     let lane = Lane::Server(0);
@@ -1201,10 +1313,12 @@ fn server_loop(
                     {
                         run_batch(batch, server.as_mut());
                     }
+                    depth.store(queue.len(), Ordering::Relaxed);
                 }
                 Err(TryRecvError::Empty) => {
                     if let Some(batch) = queue.poll_deadline(clock.now()) {
                         run_batch(batch, server.as_mut());
+                        depth.store(queue.len(), Ordering::Relaxed);
                         continue;
                     }
                     clock.wait(queue.next_deadline_at(), epoch);
@@ -1224,10 +1338,12 @@ fn server_loop(
                     {
                         run_batch(batch, server.as_mut());
                     }
+                    depth.store(queue.len(), Ordering::Relaxed);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if let Some(batch) = queue.poll_deadline(clock.now()) {
                         run_batch(batch, server.as_mut());
+                        depth.store(queue.len(), Ordering::Relaxed);
                     }
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
@@ -1238,28 +1354,8 @@ fn server_loop(
     if !tail.is_empty() {
         run_batch(tail, server.as_mut());
     }
+    depth.store(0, Ordering::Relaxed);
     agg
-}
-
-/// Receive the server reply: a plain blocking `recv` under the wall clock,
-/// a virtual-time wait (woken by the server's notify) under the sim clock.
-fn recv_reply(clock: &Clock, rx: &Receiver<Reply>) -> Option<Reply> {
-    if !clock.is_sim() {
-        return rx.recv().ok();
-    }
-    loop {
-        let epoch = clock.epoch();
-        match rx.try_recv() {
-            Ok(r) => {
-                clock.msg_received();
-                return Some(r);
-            }
-            Err(TryRecvError::Empty) => {
-                clock.wait(None, epoch);
-            }
-            Err(TryRecvError::Disconnected) => return None,
-        }
-    }
 }
 
 /// One simulated device: build the scheme's device half + fuser, pace
@@ -1283,20 +1379,21 @@ fn device_loop(
     testset: &TestSet,
     ids: &[usize],
     times: &[f64],
-    offload_tx: Option<Sender<OffloadMsg>>,
+    transport: Option<Box<dyn Transport>>,
     done_tx: Sender<ServedOutcome>,
     clock: Clock,
     tracer: Tracer,
 ) -> Result<()> {
     let _participant = clock.participant();
-    // Rebind the channel ends as locals *after* the participant guard:
-    // locals drop in reverse declaration order (and parameters only after
-    // all locals), so on any exit path the senders disconnect BEFORE the
-    // guard deregisters. The deregistration's epoch bump is the only
-    // thing that wakes a sim server blocked in a clock wait — if the
-    // guard dropped first, the server could re-block in the tiny window
-    // while the sender was still live and then sleep forever.
-    let tx_offload = offload_tx;
+    // Rebind the server-facing ends as locals *after* the participant
+    // guard: locals drop in reverse declaration order (and parameters only
+    // after all locals), so on any exit path the transport's sender and
+    // the outcome sender disconnect BEFORE the guard deregisters. The
+    // deregistration's epoch bump is the only thing that wakes a sim
+    // server blocked in a clock wait — if the guard dropped first, the
+    // server could re-block in the tiny window while the sender was still
+    // live and then sleep forever.
+    let mut transport = transport;
     let tx_done = done_tx;
     let mut device = make_device_side(backend, cfg, meta)?;
     let fuser = make_fuser(cfg, meta)?;
@@ -1348,7 +1445,7 @@ fn device_loop(
         // the remote exchange below when the request offloads
         let mut t_done = t_start + local.timings.total_s();
         if let Some(frame) = local.frame.take() {
-            let sender = tx_offload.as_ref().ok_or_else(|| {
+            let transport = transport.as_mut().ok_or_else(|| {
                 anyhow!("{} produced an uplink frame but has no server half", cfg.scheme.name())
             })?;
             // the uplink starts when the device phase is done AND the
@@ -1413,18 +1510,9 @@ fn device_loop(
             if clock.is_sim() {
                 clock.sleep_until(t_reply);
             }
-            let (reply_tx, reply_rx) = channel();
             let t_remote_wall = Instant::now();
             let t_remote = clock.now();
-            clock.msg_sent();
-            if sender.send(OffloadMsg { id: i as u64, body, reply: reply_tx }).is_err() {
-                clock.msg_cancelled();
-                return Err(anyhow!("server thread gone"));
-            }
-            clock.notify();
-            let row = recv_reply(&clock, &reply_rx)
-                .ok_or_else(|| anyhow!("reply dropped for request {i}"))?
-                .map_err(|e| anyhow!("remote inference failed for request {i}: {}", e.0))?;
+            let row = transport.exchange(rid, body)?;
             remote_s = if clock.is_sim() {
                 clock.now() - t_remote
             } else {

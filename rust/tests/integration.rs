@@ -20,7 +20,7 @@ use agilenn::obs::{
 };
 use agilenn::runtime::{make_backend, ReferenceBackend};
 use agilenn::serve::{
-    ClockKind, ConfigError, Placement, PipelineReport, ServeBuilder, Service, SimEngine,
+    ClockKind, ConfigError, Daemon, Placement, PipelineReport, ServeBuilder, Service, SimEngine,
 };
 use agilenn::tune::{self, ranking, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use agilenn::workload::{Arrival, TestSet};
@@ -296,23 +296,6 @@ fn reference_streaming_outcomes_are_observable_per_request() {
 }
 
 #[test]
-#[allow(deprecated)]
-fn reference_deprecated_run_pipeline_shim_still_serves() {
-    let c = ref_ctx(Scheme::Agile);
-    let spec = SyntheticSpec::new(SYNTHETIC_DATASET);
-    let rep = agilenn::coordinator::run_pipeline(
-        &c.cfg,
-        &c.meta,
-        Arc::new(spec.testset(16).unwrap()),
-        2,
-        8,
-        Arrival::Periodic { hz: 1e9 },
-    )
-    .unwrap();
-    assert_eq!(rep.requests, 8);
-}
-
-#[test]
 fn serve_builder_reference_needs_no_artifacts_directory() {
     // Meta::load on the same config must fail — and the builder must not
     // care, because the synthetic world replaces the artifacts tree
@@ -490,6 +473,193 @@ fn reference_wall_and_sim_clocks_agree_on_the_seed_deterministic_fields() {
     assert_eq!(w.p99_net_s, s.p99_net_s, "link quantiles derive from the same multiset");
     assert!((w.mean_net_s - s.mean_net_s).abs() < 1e-9);
     assert!((w.mean_radio_wait_s - s.mean_radio_wait_s).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------------
+// the real-socket serving daemon: loopback runs verify against the simulator
+// ---------------------------------------------------------------------------
+
+/// Spawn a loopback daemon hosting the agile scheme, returning its
+/// address and the running thread.
+fn spawn_loopback_daemon() -> (String, std::thread::JoinHandle<agilenn::serve::DaemonSummary>) {
+    let daemon = Daemon::bind("127.0.0.1:0", reference_builder(Scheme::Agile)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    (addr, std::thread::spawn(move || daemon.run().unwrap()))
+}
+
+#[test]
+fn reference_loopback_daemon_matches_the_event_engine_bitwise() {
+    // THE verification contract of the socket path (docs/daemon.md): the
+    // same workload run (a) in-process on the sim clock's event engine and
+    // (b) on the wall clock against a real TCP daemon over loopback must
+    // agree bit for bit on every seed-deterministic report field. The
+    // simulated channel stays on the device client, so swapping the mpsc
+    // fabric for a socket may not move a single schedule-anchored bit.
+    // Both delivery policies, so both wire bodies (whole frame / packet
+    // subset) cross the real socket.
+    for delivery in [DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.004 }] {
+        let configure = |b: ServeBuilder| {
+            b.devices(3)
+                .requests(24)
+                .arrival(Arrival::Periodic { hz: 1e9 }) // unpaced: wall run is instant
+                .max_batch(4)
+                .loss(GilbertElliott::bursty(0.25, 4.0))
+                .delivery(delivery.clone())
+                .net_seed(5)
+        };
+        let label = delivery.name();
+        let mut engine_stream = configure(reference_builder(Scheme::Agile))
+            .clock(ClockKind::Sim)
+            .build()
+            .unwrap()
+            .stream()
+            .unwrap();
+        engine_stream.by_ref().for_each(drop);
+        let (engine, mut engine_reg) = engine_stream.finish_full().unwrap();
+
+        let (addr, daemon) = spawn_loopback_daemon();
+        let mut loop_stream = configure(reference_builder(Scheme::Agile))
+            .connect(&addr)
+            .build()
+            .unwrap()
+            .stream()
+            .unwrap();
+        loop_stream.by_ref().for_each(drop);
+        let (loopback, mut loop_reg) = loop_stream.finish_full().unwrap();
+        agilenn::serve::send_shutdown(&addr).unwrap();
+        let summary = daemon.join().unwrap();
+
+        assert_eq!(loopback.accuracy.to_bits(), engine.accuracy.to_bits(), "{label}: accuracy");
+        assert_eq!(loopback.packets_sent, engine.packets_sent, "{label}: packets sent");
+        assert_eq!(loopback.packets_lost, engine.packets_lost, "{label}: packets lost");
+        assert_eq!(loopback.retransmit_rounds, engine.retransmit_rounds, "{label}: retx");
+        assert_eq!(loopback.incomplete_frames, engine.incomplete_frames, "{label}: partial");
+        assert_eq!(
+            loopback.delivered_feature_rate.to_bits(),
+            engine.delivered_feature_rate.to_bits(),
+            "{label}: delivered rate"
+        );
+        assert_eq!(
+            loopback.p99_net_s.to_bits(),
+            engine.p99_net_s.to_bits(),
+            "{label}: link p99 derives from the same schedule-anchored multiset"
+        );
+        // the registries behind the reports agree on every wire counter
+        for c in ["uplinks", "bytes_delivered", "features_total", "features_delivered"] {
+            assert_eq!(loop_reg.counter(c), engine_reg.counter(c), "{label}: counter {c}");
+        }
+        // latency histograms match in shape: same request population
+        assert_eq!(
+            loop_reg.hist_mut("latency_s").count(),
+            engine_reg.hist_mut("latency_s").count(),
+            "{label}: latency sample count"
+        );
+        // every offload the client sent was batched by the daemon's loop
+        assert_eq!(summary.shard.requests, 24, "{label}: daemon batched count");
+    }
+}
+
+#[test]
+fn reference_remote_client_requires_wall_clock_and_one_server() {
+    let err = reference_builder(Scheme::Agile)
+        .connect("127.0.0.1:1")
+        .clock(ClockKind::Sim)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("requires the wall clock"), "{err:#}");
+    let err = reference_builder(Scheme::Agile)
+        .connect("127.0.0.1:1")
+        .servers(2)
+        .clock(ClockKind::Sim) // servers>1 needs sim; the remote check must still win
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("requires the wall clock") || msg.contains("conflict"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn reference_daemon_handshake_rejects_a_mismatched_client() {
+    // client built with bits=2 against a daemon serving bits=4: the
+    // handshake must fail with the daemon's reason, before any request
+    let (addr, daemon) = spawn_loopback_daemon();
+    let err = reference_builder(Scheme::Agile)
+        .bits(2)
+        .devices(1)
+        .requests(2)
+        .connect(&addr)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rejected the handshake"), "{msg}");
+    assert!(msg.contains("2 bits"), "{msg}");
+    agilenn::serve::send_shutdown(&addr).unwrap();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn wall_pacing_anchor_holds_on_both_transports() {
+    // Periodic pacing is per device: 4 requests per device at 100 Hz puts
+    // the last scheduled arrival at 30 ms, so a wall-clock run can never
+    // finish earlier — whether offloads ride the in-process channel
+    // transport or a real loopback socket.
+    let schedule_end = 3.0 / 100.0;
+    let paced =
+        |b: ServeBuilder| b.devices(2).requests(8).arrival(Arrival::Periodic { hz: 100.0 });
+    let in_process =
+        paced(reference_builder(Scheme::Agile)).build().unwrap().run().unwrap();
+    assert!(
+        in_process.wall_s >= schedule_end,
+        "channel transport finished before the schedule: {} < {schedule_end}",
+        in_process.wall_s
+    );
+    let (addr, daemon) = spawn_loopback_daemon();
+    let remote = paced(reference_builder(Scheme::Agile))
+        .connect(&addr)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(
+        remote.wall_s >= schedule_end,
+        "tcp transport finished before the schedule: {} < {schedule_end}",
+        remote.wall_s
+    );
+    agilenn::serve::send_shutdown(&addr).unwrap();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn dropping_the_stream_shuts_down_both_transports_cleanly() {
+    // a consumer that walks away mid-run must not wedge either fabric:
+    // device loops notice the closed outcome channel and stop producing,
+    // worker threads unwind, and (for the socket path) the daemon survives
+    // the abandoned connections and still honors a later shutdown
+    let slow = |b: ServeBuilder| b.devices(2).requests(200).rate_hz(50.0);
+    let mut stream =
+        slow(reference_builder(Scheme::Agile)).build().unwrap().stream().unwrap();
+    assert!(stream.by_ref().take(2).count() == 2);
+    drop(stream); // joins nothing; threads exit on the dead channel
+
+    let (addr, daemon) = spawn_loopback_daemon();
+    let mut stream = slow(reference_builder(Scheme::Agile))
+        .connect(&addr)
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap();
+    assert!(stream.by_ref().take(2).count() == 2);
+    drop(stream);
+    agilenn::serve::send_shutdown(&addr).unwrap();
+    daemon.join().unwrap();
 }
 
 #[test]
@@ -1807,21 +1977,5 @@ mod pjrt_artifact_tests {
             saturated.p99_net_s,
             relaxed.p99_net_s
         );
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_pipeline_shim_still_serves() {
-        let c = require_artifacts!();
-        let rep = agilenn::coordinator::run_pipeline(
-            &c.cfg,
-            &c.meta,
-            Arc::new(TestSet::load(&c.cfg.dataset_dir().join("test.bin")).unwrap()),
-            2,
-            8,
-            Arrival::Periodic { hz: 1e9 },
-        )
-        .unwrap();
-        assert_eq!(rep.requests, 8);
     }
 }
