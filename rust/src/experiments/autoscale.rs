@@ -1,0 +1,153 @@
+//! Closed-loop autoscaling under diurnal fleet load (`bench --figure
+//! autoscale`): the SLO control plane's headline experiment.
+//!
+//! One million requests from ten thousand devices whose per-device rate
+//! follows a raised-cosine day/night cycle (0.4 → 4 Hz), served under a
+//! virtual per-batch service-time model. Two tables:
+//!
+//! 1. provisioning comparison — a fleet fixed at the diurnal peak, a
+//!    fleet fixed at the trough-sized initial fleet, and the autoscaled
+//!    fleet (SLO controller, 1..8 servers). The autoscaled run should
+//!    hold p99 near the peak-fixed fleet while spending measurably fewer
+//!    integrated server-seconds (a retired shard stops billing);
+//! 2. the autoscaled fleet's per-shard breakdown, whose `active_s`
+//!    column shows which shards the controller ever woke and for how
+//!    long.
+//!
+//! Scale knobs: `AGILENN_FLEET_N` / `AGILENN_FLEET_DEVICES` override the
+//! request/device counts (the CI smoke runs a reduced trace); the PJRT
+//! backend defaults two orders of magnitude smaller.
+
+use super::common::EvalCtx;
+use crate::config::{BackendKind, Scheme};
+use crate::report::{ms, pct, Table};
+use crate::serve::{
+    AutoscaleConfig, ClockKind, Placement, PipelineReport, Service, ServiceModel,
+};
+use crate::workload::Arrival;
+use anyhow::Result;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// (requests, devices) for the diurnal sweep.
+fn scale(ctx: &EvalCtx) -> (usize, usize) {
+    let (n, d) = match ctx.backend_kind {
+        BackendKind::Reference => (1_000_000, 10_000),
+        BackendKind::Pjrt => (2_000, 16),
+    };
+    (env_usize("AGILENN_FLEET_N", n), env_usize("AGILENN_FLEET_DEVICES", d))
+}
+
+/// Day/night cycle: per-device rate swings 0.4 → 4 Hz over 20 virtual
+/// seconds, so the ~45 s run crosses two peaks and two troughs.
+const DIURNAL: Arrival =
+    Arrival::Diurnal { period_s: 20.0, base_hz: 0.4, peak_hz: 4.0, seed: 16 };
+/// Virtual batch cost: 0.5 ms + 0.1 ms/sample (~6 150 req/s per server
+/// at the default batch size of 8).
+const SERVICE: (f64, f64) = (0.5e-3, 0.1e-3);
+const SLO_P99_S: f64 = 50e-3;
+const MAX_SERVERS: usize = 8;
+const INITIAL_SERVERS: usize = 2;
+
+struct FleetRun {
+    rep: PipelineReport,
+    host_s: f64,
+}
+
+fn run_fleet(
+    ctx: &EvalCtx,
+    dataset: &str,
+    requests: usize,
+    devices: usize,
+    servers: usize,
+    autoscale: Option<AutoscaleConfig>,
+) -> Result<FleetRun> {
+    let cfg = ctx.run_config(dataset, Scheme::Agile);
+    let meta = ctx.meta(dataset)?;
+    let testset = ctx.testset(dataset)?;
+    let t0 = Instant::now();
+    let rep = Service::from_parts(cfg, meta, testset, devices, requests, DIURNAL)?
+        .with_clock(ClockKind::Sim)
+        .with_servers(servers, Placement::WeightedLeastLoaded)
+        .with_service_model(ServiceModel {
+            base_s: SERVICE.0,
+            per_sample_s: SERVICE.1,
+            capacities: Vec::new(),
+        })
+        .with_autoscale(autoscale)
+        .with_slo_p99(SLO_P99_S)
+        .run()?;
+    Ok(FleetRun { rep, host_s: t0.elapsed().as_secs_f64() })
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    let (requests, devices) = scale(ctx);
+    let ds = ctx.datasets.first().cloned().unwrap_or_else(|| "synthetic".into());
+
+    let configs: [(&str, usize, Option<AutoscaleConfig>); 3] = [
+        ("fixed@peak", MAX_SERVERS, None),
+        ("fixed@initial", INITIAL_SERVERS, None),
+        ("autoscaled", INITIAL_SERVERS, Some(AutoscaleConfig::new(1, MAX_SERVERS))),
+    ];
+    let mut t = Table::new(
+        format!(
+            "Autoscale [{ds}]: diurnal load, {requests} requests x {devices} devices \
+             (0.4-4 Hz/device over 20 s virtual, weighted placement, \
+             p99 SLO {} ms)",
+            ms(SLO_P99_S)
+        ),
+        &[
+            "config",
+            "p99_ms",
+            "slo_attained",
+            "server_seconds",
+            "scale_outs",
+            "scale_ins",
+            "host_s",
+        ],
+    );
+    let mut autoscaled: Option<FleetRun> = None;
+    for (name, servers, scale_cfg) in configs {
+        let run = run_fleet(ctx, &ds, requests, devices, servers, scale_cfg.clone())?;
+        t.row(vec![
+            name.into(),
+            ms(run.rep.p99_latency_s),
+            pct(run.rep.slo_attainment),
+            format!("{:.1}", run.rep.server_seconds),
+            run.rep.scale_outs.to_string(),
+            run.rep.scale_ins.to_string(),
+            format!("{:.1}", run.host_s),
+        ]);
+        if scale_cfg.is_some() {
+            autoscaled = Some(run);
+        }
+    }
+    tables.push(t);
+
+    // 2) where the controller actually spent the fleet: per-shard
+    //    lifetimes of the autoscaled run
+    let auto = autoscaled.expect("the autoscaled config ran");
+    let mut t2 = Table::new(
+        format!(
+            "Autoscale [{ds}]: autoscaled per-shard breakdown — {} scale-outs, \
+             {} scale-ins over {:.1} s virtual",
+            auto.rep.scale_outs, auto.rep.scale_ins, auto.rep.wall_s
+        ),
+        &["server", "requests", "batches", "queue_p95_ms", "active_s"],
+    );
+    for s in &auto.rep.shards {
+        t2.row(vec![
+            s.server.to_string(),
+            s.requests.to_string(),
+            s.batches.to_string(),
+            ms(s.p95_queue_s),
+            format!("{:.2}", s.active_s),
+        ]);
+    }
+    tables.push(t2);
+    Ok(tables)
+}

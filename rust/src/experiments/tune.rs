@@ -99,6 +99,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
             delivery: vec![DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.005 }],
             placement: vec![Placement::Static],
             servers: vec![1, 2],
+            autoscale: vec![false],
         },
         eval: eval_spec(ctx, &ds),
         strategy: StrategyKind::Genetic { seed: 7, population: 8, budget: 24 },

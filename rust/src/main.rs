@@ -15,8 +15,11 @@ use agilenn::obs::{chrome_trace_json, RecordingSink, Tracer};
 use agilenn::perfgate;
 use agilenn::report::{ms, pct};
 use agilenn::runtime::make_backend;
-use agilenn::serve::{send_shutdown, ClockKind, Daemon, Placement, ServeBuilder, SimEngine};
+use agilenn::serve::{
+    send_shutdown, AutoscaleConfig, ClockKind, Daemon, Placement, ServeBuilder, SimEngine,
+};
 use agilenn::tune::{self, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
+use agilenn::workload::Arrival;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -96,12 +99,36 @@ COMMANDS:
                                  seconds)
              --servers 1         remote servers, each with its own batch
                                  queue (needs --clock sim)
-             --placement static|rr|least
+             --placement static|rr|least|weighted
                                  device->server placement policy
+                                 (weighted: least normalized load, i.e.
+                                 outstanding/capacity)
              --sim-engine event|threads
                                  sim execution engine (threads: the
                                  legacy fabric, bitwise-equivalent)
              --arrival-seed 42   base seed for per-device Poisson arrivals
+             --diurnal P,BASE,PEAK
+                                 diurnal arrivals: raised-cosine rate from
+                                 BASE to PEAK Hz per device over a P-second
+                                 period (e.g. --diurnal 60,0.4,4)
+           virtual service time + SLO autoscaling (needs --clock sim on
+           the event engine):
+             --service-base-us 500   per-batch service-time floor
+             --service-per-sample-us 100  added service time per sample
+             --capacities 4,1,1  per-server speed weights (scale service
+                                 time down; pad/truncate to the fleet)
+             --autoscale MIN,MAX hand fleet sizing to the SLO controller
+                                 (active servers stay in [MIN,MAX];
+                                 --servers is the initial size)
+             --slo-queue-ms 20   queue-wait p95 the controller defends
+             --scale-window-s 2 --scale-interval-s 0.5
+             --scale-cooldown-s 2 --scale-sustain 2
+                                 controller observation window, decision
+                                 cadence, post-action cooldown, and how
+                                 many consecutive breaching ticks arm an
+                                 action
+             --slo-p99-ms 50     end-to-end p99 target; the report gains
+                                 slo_attainment against it
              --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
              --quiet   (suppress streaming per-request progress)
              --json    (print the report as deterministic JSON)
@@ -130,6 +157,10 @@ COMMANDS:
                                  batching flags configure the hosted
                                  server; dataset/scheme/bits are pinned
                                  at the client handshake.
+             --io-timeout-s 30   per-connection socket read/write timeout;
+                                 a stalled client disconnects with a typed
+                                 TimedOut instead of pinning its handler
+                                 (0 = blocking reads, never time out)
   device   run the device half against a remote serving daemon; same
            flags as serve (devices, requests, rate, channel, reporting),
            plus:
@@ -142,7 +173,7 @@ COMMANDS:
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --backend pjrt|reference --index 0 --bits 4 [--alpha 0.3]
   bench    regenerate a paper figure/table (or a fleet-scale sweep)
-             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|tune|breakdown|all
+             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|tune|autoscale|breakdown|all
              --backend pjrt|reference  (reference: artifact-free sweeps
                                  on the synthetic model family)
   tune     search the serving-knob space with the fleet engine as the
@@ -154,8 +185,12 @@ COMMANDS:
              --bits 2,4              quantizer widths
              --delivery arq          uplink transports (arq,anytime)
              --net-deadline-ms 5     anytime decode deadline
-             --placements static     device->server policies (static,rr,least)
+             --placements static     device->server policies
+                                     (static,rr,least,weighted)
              --servers 1,2           server counts
+             --autoscale false       false,true — true evaluates the point
+                                     under the SLO autoscaler (one initial
+                                     server, servers axis as the ceiling)
            evaluation (shared by every point; defaults are the fast
            deterministic path — reference backend on the sim clock's
            event engine):
@@ -284,6 +319,7 @@ fn main() -> Result<()> {
                 )?,
                 placement: tune::space::parse_placements(&args.get_str("placements", "static"))?,
                 servers: tune::space::parse_list(&args.get_str("servers", "1,2"))?,
+                autoscale: tune::space::parse_list(&args.get_str("autoscale", "false"))?,
             };
             let eval = EvalSpec {
                 artifacts_dir: Some(artifacts),
@@ -455,6 +491,8 @@ struct ServeCli {
     trace_out: Option<String>,
     metrics_out: Option<String>,
     sink: Option<Arc<RecordingSink>>,
+    /// Daemon-mode socket read/write timeout, seconds (0 disables).
+    io_timeout_s: f64,
 }
 
 impl ServeCli {
@@ -484,8 +522,39 @@ impl ServeCli {
         if let Some(alpha) = args.get_opt_f64("alpha")? {
             builder = builder.alpha(alpha);
         }
+        if let Some(spec) = args.flags.get("diurnal") {
+            let parts = tune::space::parse_list::<f64>(spec)?;
+            let [period_s, base_hz, peak_hz] = parts[..] else {
+                bail!("--diurnal wants PERIOD_S,BASE_HZ,PEAK_HZ (got {spec:?})");
+            };
+            builder = builder.arrival(Arrival::Diurnal { period_s, base_hz, peak_hz, seed: 42 });
+        }
         if args.flags.contains_key("arrival-seed") {
             builder = builder.arrival_seed(args.get("arrival-seed", 42u64)?);
+        }
+        let base_us: f64 = args.get("service-base-us", 0.0)?;
+        let per_sample_us: f64 = args.get("service-per-sample-us", 0.0)?;
+        if base_us != 0.0 || per_sample_us != 0.0 {
+            builder = builder.service_model(base_us * 1e-6, per_sample_us * 1e-6);
+        }
+        if let Some(caps) = args.flags.get("capacities") {
+            builder = builder.capacities(tune::space::parse_list(caps)?);
+        }
+        if let Some(range) = args.flags.get("autoscale") {
+            let parts = tune::space::parse_list::<usize>(range)?;
+            let [min, max] = parts[..] else {
+                bail!("--autoscale wants MIN,MAX (got {range:?})");
+            };
+            let mut scale = AutoscaleConfig::new(min, max);
+            scale.slo_queue_p95_s = args.get("slo-queue-ms", scale.slo_queue_p95_s * 1e3)? * 1e-3;
+            scale.window_s = args.get("scale-window-s", scale.window_s)?;
+            scale.interval_s = args.get("scale-interval-s", scale.interval_s)?;
+            scale.cooldown_s = args.get("scale-cooldown-s", scale.cooldown_s)?;
+            scale.sustain = args.get("scale-sustain", scale.sustain)?;
+            builder = builder.autoscale(scale);
+        }
+        if let Some(slo_ms) = args.get_opt_f64("slo-p99-ms")? {
+            builder = builder.slo_p99(slo_ms * 1e-3);
         }
         if let Some(loss) = args.get_opt_f64("loss")? {
             let burst: f64 = args.get("burst", 1.0)?;
@@ -530,13 +599,17 @@ impl ServeCli {
             trace_out,
             metrics_out,
             sink,
+            io_timeout_s: args.get("io-timeout-s", 30.0)?,
         })
     }
 
     /// Host the server half behind a TCP listener until a client sends
     /// shutdown (`agilenn device --connect <addr> --shutdown`).
     fn run_daemon(self, addr: &str) -> Result<()> {
-        let daemon = Daemon::bind(addr, self.builder)?;
+        let mut daemon = Daemon::bind(addr, self.builder)?;
+        if self.io_timeout_s > 0.0 {
+            daemon = daemon.io_timeout(std::time::Duration::from_secs_f64(self.io_timeout_s));
+        }
         let local = daemon.local_addr()?;
         println!("{}: serving daemon listening on {local}", self.scheme.name());
         let summary = daemon.run()?;
@@ -618,17 +691,32 @@ impl ServeCli {
             rep.incomplete_frames
         );
         println!("  radio queueing : mean {} ms", ms(rep.mean_radio_wait_s));
+        println!("  fleet cost     : {:.2} server-seconds", rep.server_seconds);
+        if rep.slo_p99_s > 0.0 {
+            println!(
+                "  SLO            : {} of requests within p99 target {} ms",
+                pct(rep.slo_attainment),
+                ms(rep.slo_p99_s)
+            );
+        }
+        if rep.scale_outs + rep.scale_ins > 0 {
+            println!(
+                "  autoscaler     : {} scale-outs, {} scale-ins",
+                rep.scale_outs, rep.scale_ins
+            );
+        }
         if rep.shards.len() > 1 {
             for s in &rep.shards {
                 println!(
                     "  server {:<2}      : {} reqs in {} batches (mean {:.2}), \
-                     queue mean {} ms / p95 {} ms",
+                     queue mean {} ms / p95 {} ms, active {:.2} s",
                     s.server,
                     s.requests,
                     s.batches,
                     s.mean_batch_size,
                     ms(s.mean_queue_s),
-                    ms(s.p95_queue_s)
+                    ms(s.p95_queue_s),
+                    s.active_s
                 );
             }
         }

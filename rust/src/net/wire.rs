@@ -61,6 +61,10 @@ pub enum WireError {
     Oversized { len: u32 },
     /// the payload decoded structurally but violates an invariant
     Malformed { context: &'static str },
+    /// the peer stopped sending mid-conversation and the socket's
+    /// configured read/write timeout expired — a stalled or half-open
+    /// connection, disconnected instead of pinning its handler forever
+    TimedOut { context: &'static str },
 }
 
 impl std::fmt::Display for WireError {
@@ -78,6 +82,9 @@ impl std::fmt::Display for WireError {
                 write!(f, "wire payload of {len} bytes exceeds the {MAX_PAYLOAD_BYTES}-byte cap")
             }
             WireError::Malformed { context } => write!(f, "malformed wire payload: {context}"),
+            WireError::TimedOut { context } => {
+                write!(f, "peer stalled (socket timeout) in {context}")
+            }
         }
     }
 }

@@ -90,6 +90,12 @@ pub enum EventKind {
     /// Instant: the request finished on-device — fuse/impute done and the
     /// prediction emitted (value = 1 if the prediction was correct).
     Done,
+    /// Instant, server lane: the autoscale controller activated this
+    /// shard (value = active server count after the event).
+    ScaleOut,
+    /// Instant, server lane: the autoscale controller retired this shard
+    /// after drain (value = active server count after the event).
+    ScaleIn,
     /// Span, tuner lane: one fresh configuration evaluation.
     TuneEval,
     /// Instant, tuner lane: an evaluation answered from the resume log.
@@ -114,6 +120,8 @@ impl EventKind {
             EventKind::Remote => "remote",
             EventKind::Downlink => "downlink",
             EventKind::Done => "done",
+            EventKind::ScaleOut => "scale_out",
+            EventKind::ScaleIn => "scale_in",
             EventKind::TuneEval => "tune_eval",
             EventKind::TuneCached => "tune_cached",
             EventKind::TuneInfeasible => "tune_infeasible",

@@ -27,7 +27,8 @@ use crate::net::{transmit_frame, Channel, GilbertElliott};
 use crate::obs::{NoopSink, RecordingSink};
 use crate::report::{json_array, json_str, JsonObj};
 use crate::runtime::ReferenceBackend;
-use crate::serve::{make_device_side, ClockKind, Placement, ServeBuilder};
+use crate::serve::{make_device_side, AutoscaleConfig, ClockKind, Placement, ServeBuilder};
+use crate::workload::Arrival;
 use anyhow::{ensure, Context, Result};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -388,6 +389,44 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
         info: vec![
             ("events".into(), sink.len() as f64),
             ("sim_wall_s".into(), rep.wall_s),
+        ],
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    // 7) the autoscaled fleet: the same headline scale but diurnal
+    //    arrivals, a virtual service-time model, and the SLO controller
+    //    resizing the fleet mid-run. The control plane rides the dispatch
+    //    hot path (per-batch window append + periodic p95 over the rolling
+    //    window), so it is gated separately from fleet_engine.
+    let (rep, wall) = timed(handicap, || {
+        ServeBuilder::new(SYNTHETIC_DATASET)
+            .backend(BackendKind::Reference)
+            .scheme(Scheme::Agile)
+            .clock(ClockKind::Sim)
+            .devices(cfg.devices)
+            .requests(cfg.requests)
+            .arrival(Arrival::Diurnal { period_s: 20.0, base_hz: 0.4, peak_hz: 4.0, seed: 16 })
+            .arrival_seed(11)
+            .servers(2)
+            .placement(Placement::WeightedLeastLoaded)
+            .service_model(0.5e-3, 0.1e-3)
+            .autoscale(AutoscaleConfig::new(1, 8))
+            .slo_p99(50e-3)
+            .build()?
+            .run()
+    })?;
+    ensure!(rep.requests == cfg.requests, "autoscaled sweep served {} requests", rep.requests);
+    let entry = PerfEntry {
+        name: "autoscaled_fleet".into(),
+        throughput: cfg.requests as f64 / wall,
+        wall_s: wall,
+        info: vec![
+            ("sim_wall_s".into(), rep.wall_s),
+            ("server_seconds".into(), rep.server_seconds),
+            ("scale_outs".into(), rep.scale_outs as f64),
+            ("scale_ins".into(), rep.scale_ins as f64),
+            ("slo_attainment".into(), rep.slo_attainment),
         ],
     };
     progress(&entry);

@@ -1,0 +1,510 @@
+//! `serve::autoscale` — the virtual-time SLO control plane.
+//!
+//! The fleet engine (`super::engine`) simulates a fixed server set; this
+//! module adds the three pieces a closed scaling loop needs, all of them
+//! deterministic functions of the virtual timeline:
+//!
+//! * [`ServiceModel`] — a per-batch virtual service-time model
+//!   (`base + per_sample · batch_size`, divided by a per-server capacity
+//!   weight) so scaling curves reflect remote *compute*, not only
+//!   queueing. The default model prices every batch at zero seconds,
+//!   which leaves the engine's timeline bit-identical to the pre-model
+//!   engine — the equivalence contract extends through this module.
+//! * [`Controller`] — a deterministic feedback controller that observes
+//!   the rolling per-shard queue-wait p95 over a virtual-time window and
+//!   decides, on fixed control ticks, whether to grow or shrink the
+//!   active server set: scale **out** on sustained SLO pressure, scale
+//!   **in** on sustained idle, with a cooldown between actions. The
+//!   engine applies the decision (activation, drain-before-retire); the
+//!   controller never touches engine state, so its decision sequence is
+//!   unit-testable from synthetic observations.
+//! * [`ShardLifetime`] — integrated per-shard active-lifetime accounting
+//!   (activation → retirement intervals), the corrected basis for the
+//!   `server_seconds` fleet-cost objective: an idle-but-provisioned
+//!   server is billed, a retired or never-activated one is not.
+//!
+//! Scale actions surface as [`ScaleEvent`] records and as
+//! `obs::EventKind::{ScaleOut, ScaleIn}` trace instants on the server
+//! lanes; `PipelineReport` carries the counts plus SLO attainment vs
+//! integrated server-seconds. See `docs/serving.md`, "Autoscaling & SLO
+//! control".
+
+use std::collections::VecDeque;
+
+/// Virtual cost of one remote batch inference. The engine holds the
+/// dispatched batch in service for `batch_service_s` virtual seconds
+/// (batches on one shard serialize), so under offered load beyond a
+/// shard's capacity the queue wait grows without bound — the signal the
+/// [`Controller`] scales on.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServiceModel {
+    /// fixed per-batch cost, seconds (kernel launch, weights touch)
+    pub base_s: f64,
+    /// marginal per-sample cost, seconds
+    pub per_sample_s: f64,
+    /// per-server capacity weights (service time divides by the weight;
+    /// weighted placement divides load by it). Empty = every server 1.0.
+    pub capacities: Vec<f64>,
+}
+
+impl ServiceModel {
+    /// True when every batch is free — the pre-model engine timeline.
+    pub fn is_zero(&self) -> bool {
+        self.base_s == 0.0 && self.per_sample_s == 0.0
+    }
+
+    /// Capacity weight of one shard (1.0 where unspecified).
+    pub fn capacity(&self, shard: usize) -> f64 {
+        self.capacities.get(shard).copied().unwrap_or(1.0)
+    }
+
+    /// Virtual service time of a `batch`-sample batch on `shard`.
+    pub fn batch_service_s(&self, shard: usize, batch: usize) -> f64 {
+        if self.is_zero() {
+            return 0.0;
+        }
+        (self.base_s + self.per_sample_s * batch as f64) / self.capacity(shard)
+    }
+
+    /// Reject non-finite or negative parameters with a message.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, v) in [("base_s", self.base_s), ("per_sample_s", self.per_sample_s)] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("service model {name} must be finite and >= 0, got {v}"));
+            }
+        }
+        for (i, c) in self.capacities.iter().enumerate() {
+            if !c.is_finite() || *c <= 0.0 {
+                return Err(format!("capacity weight for server {i} must be finite and > 0, got {c}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Controller knobs. Defaults via [`AutoscaleConfig::new`] suit the
+/// default 2 ms batch deadline: the low watermark (25% of a 20 ms queue
+/// SLO = 5 ms) sits safely above the deadline-bound idle queue wait, so
+/// an idle fleet reads as scale-in pressure rather than noise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    /// never drain below this many accepting servers
+    pub min_servers: usize,
+    /// shard slots provisioned (and the activation ceiling)
+    pub max_servers: usize,
+    /// scale-out threshold on the rolling queue-wait p95, seconds
+    pub slo_queue_p95_s: f64,
+    /// scale-in threshold as a fraction of `slo_queue_p95_s`
+    pub low_watermark: f64,
+    /// rolling observation window, virtual seconds
+    pub window_s: f64,
+    /// control tick period, virtual seconds
+    pub interval_s: f64,
+    /// minimum virtual time between scale actions
+    pub cooldown_s: f64,
+    /// consecutive over/under ticks required before acting
+    pub sustain: u32,
+}
+
+impl AutoscaleConfig {
+    pub fn new(min_servers: usize, max_servers: usize) -> Self {
+        Self {
+            min_servers,
+            max_servers,
+            slo_queue_p95_s: 20e-3,
+            low_watermark: 0.25,
+            window_s: 2.0,
+            interval_s: 0.5,
+            cooldown_s: 2.0,
+            sustain: 2,
+        }
+    }
+
+    /// Reject inconsistent bounds/thresholds with a message; `initial`
+    /// is the builder's starting server count.
+    pub fn validate(&self, initial: usize) -> Result<(), String> {
+        if self.min_servers < 1 {
+            return Err("autoscale min_servers must be >= 1".into());
+        }
+        if self.max_servers < self.min_servers {
+            return Err(format!(
+                "autoscale max_servers {} below min_servers {}",
+                self.max_servers, self.min_servers
+            ));
+        }
+        if initial < self.min_servers || initial > self.max_servers {
+            return Err(format!(
+                "initial server count {initial} outside the autoscale bounds [{}, {}]",
+                self.min_servers, self.max_servers
+            ));
+        }
+        for (name, v) in [
+            ("slo_queue_p95_s", self.slo_queue_p95_s),
+            ("window_s", self.window_s),
+            ("interval_s", self.interval_s),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("autoscale {name} must be finite and > 0, got {v}"));
+            }
+        }
+        if !self.cooldown_s.is_finite() || self.cooldown_s < 0.0 {
+            return Err(format!("autoscale cooldown_s must be finite and >= 0, got {}", self.cooldown_s));
+        }
+        if !(0.0..1.0).contains(&self.low_watermark) {
+            return Err(format!("autoscale low_watermark must be in [0, 1), got {}", self.low_watermark));
+        }
+        if self.sustain == 0 {
+            return Err("autoscale sustain must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Which way a [`ScaleEvent`] moved the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleKind {
+    Out,
+    In,
+}
+
+/// One applied scale action, stamped in virtual time. Scale-outs take
+/// effect at the decision tick; scale-ins are stamped when the drained
+/// shard actually retires (drain-before-retire), with the pressure the
+/// controller saw at the decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleEvent {
+    /// virtual instant the action took effect
+    pub t_s: f64,
+    /// the shard activated or retired
+    pub shard: usize,
+    pub kind: ScaleKind,
+    /// accepting server count after the action
+    pub active_after: usize,
+    /// the controller's pressure (max accepting-shard window p95) at the
+    /// decision instant
+    pub pressure_s: f64,
+}
+
+/// What one control tick asks the engine to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// activate one more shard (or cancel an in-progress drain)
+    Out,
+    /// start draining one shard toward retirement
+    In,
+}
+
+/// Integrated active lifetime of one shard: the sum of its activation →
+/// retirement intervals. Open intervals are closed at the run's final
+/// virtual time by [`ShardLifetime::total`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardLifetime {
+    accumulated_s: f64,
+    since: Option<f64>,
+}
+
+impl ShardLifetime {
+    pub fn activate(&mut self, t: f64) {
+        if self.since.is_none() {
+            self.since = Some(t);
+        }
+    }
+
+    pub fn retire(&mut self, t: f64) {
+        if let Some(s) = self.since.take() {
+            self.accumulated_s += t - s;
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.since.is_some()
+    }
+
+    /// Total active seconds with any open interval closed at `t_end`.
+    pub fn total(&self, t_end: f64) -> f64 {
+        self.accumulated_s + self.since.map(|s| t_end - s).unwrap_or(0.0)
+    }
+}
+
+/// The deterministic scaling controller. Pure state over virtual-time
+/// observations: the engine feeds it per-shard queue waits as batches
+/// start service ([`Controller::observe`]) and asks for a decision on
+/// each control tick ([`Controller::on_tick`]); it never reads engine
+/// state, so identical observation sequences produce bit-identical
+/// decision sequences.
+#[derive(Debug)]
+pub struct Controller {
+    pub cfg: AutoscaleConfig,
+    /// per-shard rolling (t, queue_wait_s) samples, pruned to `window_s`
+    windows: Vec<VecDeque<(f64, f64)>>,
+    over_ticks: u32,
+    under_ticks: u32,
+    last_action_s: f64,
+    /// pressure computed by the latest tick (recorded into scale events)
+    pub last_pressure_s: f64,
+}
+
+impl Controller {
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        let shards = cfg.max_servers;
+        Self {
+            cfg,
+            windows: (0..shards).map(|_| VecDeque::new()).collect(),
+            over_ticks: 0,
+            under_ticks: 0,
+            last_action_s: f64::NEG_INFINITY,
+            last_pressure_s: 0.0,
+        }
+    }
+
+    /// Record one queue wait observed on `shard` at virtual time `t`.
+    pub fn observe(&mut self, shard: usize, t: f64, wait_s: f64) {
+        let w = &mut self.windows[shard];
+        w.push_back((t, wait_s));
+    }
+
+    fn prune(&mut self, t: f64) {
+        let horizon = t - self.cfg.window_s;
+        for w in &mut self.windows {
+            while w.front().is_some_and(|(ts, _)| *ts < horizon) {
+                w.pop_front();
+            }
+        }
+    }
+
+    /// Exact p95 of one shard's rolling window. **A 0-sample window is
+    /// 0.0, not NaN** — a shard that scales in before serving anything
+    /// must still report defined quantiles (the same convention as
+    /// `obs::Histogram` on empty data).
+    pub fn window_p95(&self, shard: usize) -> f64 {
+        let w = &self.windows[shard];
+        if w.is_empty() {
+            return 0.0;
+        }
+        let mut vals: Vec<f64> = w.iter().map(|(_, v)| *v).collect();
+        vals.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((vals.len() - 1) as f64 * 0.95).round() as usize;
+        vals[idx]
+    }
+
+    /// Fleet pressure: the worst accepting shard's window p95.
+    pub fn pressure(&self, accepting: &[bool]) -> f64 {
+        let mut p = 0.0f64;
+        for (s, acc) in accepting.iter().enumerate() {
+            if *acc {
+                p = p.max(self.window_p95(s));
+            }
+        }
+        p
+    }
+
+    /// One control tick at virtual time `t`. `accepting[s]` is true for
+    /// shards currently taking placements (active and not draining).
+    pub fn on_tick(&mut self, t: f64, accepting: &[bool]) -> ScaleDecision {
+        self.prune(t);
+        let accepting_count = accepting.iter().filter(|a| **a).count();
+        let p = self.pressure(accepting);
+        self.last_pressure_s = p;
+        let cooled = t - self.last_action_s >= self.cfg.cooldown_s;
+        if p > self.cfg.slo_queue_p95_s {
+            self.over_ticks += 1;
+            self.under_ticks = 0;
+            if self.over_ticks >= self.cfg.sustain && cooled && accepting_count < self.cfg.max_servers
+            {
+                self.over_ticks = 0;
+                self.last_action_s = t;
+                return ScaleDecision::Out;
+            }
+        } else if p < self.cfg.slo_queue_p95_s * self.cfg.low_watermark {
+            self.under_ticks += 1;
+            self.over_ticks = 0;
+            if self.under_ticks >= self.cfg.sustain
+                && cooled
+                && accepting_count > self.cfg.min_servers
+            {
+                self.under_ticks = 0;
+                self.last_action_s = t;
+                return ScaleDecision::In;
+            }
+        } else {
+            self.over_ticks = 0;
+            self.under_ticks = 0;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_service_model_prices_every_batch_at_zero() {
+        let m = ServiceModel::default();
+        assert!(m.is_zero());
+        assert_eq!(m.batch_service_s(0, 8), 0.0);
+        assert_eq!(m.capacity(3), 1.0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn service_time_scales_with_batch_and_divides_by_capacity() {
+        let m = ServiceModel {
+            base_s: 2e-3,
+            per_sample_s: 0.5e-3,
+            capacities: vec![1.0, 2.0],
+        };
+        assert!(!m.is_zero());
+        assert!((m.batch_service_s(0, 8) - 6e-3).abs() < 1e-15);
+        assert!((m.batch_service_s(1, 8) - 3e-3).abs() < 1e-15, "double capacity halves it");
+        // unspecified shards fall back to weight 1.0
+        assert!((m.batch_service_s(5, 1) - 2.5e-3).abs() < 1e-15);
+        m.validate().unwrap();
+        let bad = ServiceModel { base_s: -1.0, ..ServiceModel::default() };
+        assert!(bad.validate().unwrap_err().contains("base_s"));
+        let bad = ServiceModel { capacities: vec![0.0], ..ServiceModel::default() };
+        assert!(bad.validate().unwrap_err().contains("server 0"));
+    }
+
+    #[test]
+    fn config_validation_rejects_inconsistent_bounds() {
+        AutoscaleConfig::new(1, 4).validate(2).unwrap();
+        assert!(AutoscaleConfig::new(0, 4).validate(1).is_err());
+        assert!(AutoscaleConfig::new(3, 2).validate(3).is_err());
+        assert!(AutoscaleConfig::new(2, 4).validate(1).is_err(), "initial below min");
+        assert!(AutoscaleConfig::new(1, 4).validate(5).is_err(), "initial above max");
+        let mut c = AutoscaleConfig::new(1, 4);
+        c.sustain = 0;
+        assert!(c.validate(1).is_err());
+        let mut c = AutoscaleConfig::new(1, 4);
+        c.low_watermark = 1.0;
+        assert!(c.validate(1).is_err());
+        let mut c = AutoscaleConfig::new(1, 4);
+        c.interval_s = 0.0;
+        assert!(c.validate(1).is_err());
+    }
+
+    #[test]
+    fn lifetime_integrates_activation_intervals() {
+        let mut l = ShardLifetime::default();
+        assert!(!l.is_active());
+        assert_eq!(l.total(10.0), 0.0, "never activated -> zero server-seconds");
+        l.activate(1.0);
+        assert!(l.is_active());
+        l.activate(2.0); // re-activation while active is a no-op
+        l.retire(4.0);
+        assert!(!l.is_active());
+        assert!((l.total(100.0) - 3.0).abs() < 1e-12);
+        l.retire(5.0); // retire while retired is a no-op
+        l.activate(10.0);
+        assert!((l.total(12.0) - 5.0).abs() < 1e-12, "open interval closes at t_end");
+    }
+
+    #[test]
+    fn empty_window_quantile_is_zero_not_nan() {
+        // regression (satellite of PR 9): a shard that scales in before
+        // serving any request has a 0-sample window; its quantile must be
+        // a defined value, never NaN leaking into ordered JSON
+        let c = Controller::new(AutoscaleConfig::new(1, 2));
+        let p = c.window_p95(1);
+        assert_eq!(p, 0.0);
+        assert!(!p.is_nan());
+        assert_eq!(c.pressure(&[true, true]), 0.0);
+    }
+
+    #[test]
+    fn window_prunes_and_takes_the_worst_accepting_shard() {
+        let mut cfg = AutoscaleConfig::new(1, 3);
+        cfg.window_s = 1.0;
+        let mut c = Controller::new(cfg);
+        c.observe(0, 0.1, 0.5); // will age out of the window by t=2
+        c.observe(0, 1.8, 0.001);
+        c.observe(1, 1.9, 0.040);
+        c.observe(2, 1.9, 0.500); // worst shard, but not accepting
+        c.on_tick(2.0, &[true, true, false]);
+        assert!((c.last_pressure_s - 0.040).abs() < 1e-12);
+        assert_eq!(c.window_p95(0), 0.001, "the 0.5 sample aged out");
+    }
+
+    fn tick_n(c: &mut Controller, t0: f64, n: usize, accepting: &[bool], wait: f64) -> Vec<ScaleDecision> {
+        (0..n)
+            .map(|i| {
+                let t = t0 + i as f64 * c.cfg.interval_s;
+                for (s, acc) in accepting.iter().enumerate() {
+                    if *acc {
+                        c.observe(s, t, wait);
+                    }
+                }
+                c.on_tick(t, accepting)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sustained_pressure_scales_out_and_cooldown_spaces_actions() {
+        let mut cfg = AutoscaleConfig::new(1, 4);
+        cfg.sustain = 2;
+        cfg.interval_s = 0.5;
+        cfg.cooldown_s = 2.0;
+        let mut c = Controller::new(cfg);
+        // heavy waits, one accepting shard: first tick arms, second fires
+        let d = tick_n(&mut c, 0.0, 2, &[true, false, false, false], 0.100);
+        assert_eq!(d, vec![ScaleDecision::Hold, ScaleDecision::Out]);
+        // cooldown: the next ticks hold even under sustained pressure
+        let d = tick_n(&mut c, 1.0, 2, &[true, true, false, false], 0.100);
+        assert_eq!(d, vec![ScaleDecision::Hold, ScaleDecision::Hold]);
+        // once cooled (2.5 - 0.5 >= cooldown), it fires again immediately:
+        // the over-streak kept accumulating through the cooldown
+        let d = tick_n(&mut c, 2.5, 2, &[true, true, false, false], 0.100);
+        assert_eq!(d[0], ScaleDecision::Out);
+    }
+
+    #[test]
+    fn sustained_idle_scales_in_but_never_below_min() {
+        let mut cfg = AutoscaleConfig::new(1, 4);
+        cfg.sustain = 2;
+        cfg.interval_s = 0.5;
+        cfg.cooldown_s = 0.0;
+        let mut c = Controller::new(cfg);
+        // idle waits (deadline-bound 2 ms, below the 5 ms low watermark)
+        let d = tick_n(&mut c, 0.0, 4, &[true, true, false, false], 0.002);
+        assert!(d.contains(&ScaleDecision::In));
+        // at the floor the controller holds forever
+        let d = tick_n(&mut c, 10.0, 4, &[true, false, false, false], 0.002);
+        assert!(d.iter().all(|d| *d == ScaleDecision::Hold));
+    }
+
+    #[test]
+    fn mid_band_pressure_resets_the_sustain_counters() {
+        let mut cfg = AutoscaleConfig::new(1, 4);
+        cfg.sustain = 2;
+        cfg.cooldown_s = 0.0;
+        cfg.window_s = 0.4; // shorter than the tick interval: each tick
+                            // sees only its own observation
+        let mut c = Controller::new(cfg.clone());
+        // over, then mid-band, then over again: the streak restarts, so
+        // the second "over" tick does not fire
+        assert_eq!(tick_n(&mut c, 0.0, 1, &[true], 0.100), vec![ScaleDecision::Hold]);
+        assert_eq!(tick_n(&mut c, 0.5, 1, &[true], 0.010), vec![ScaleDecision::Hold]);
+        assert_eq!(tick_n(&mut c, 1.0, 1, &[true], 0.100), vec![ScaleDecision::Hold]);
+        assert_eq!(tick_n(&mut c, 1.5, 1, &[true], 0.100), vec![ScaleDecision::Out]);
+    }
+
+    #[test]
+    fn identical_observation_sequences_give_identical_decisions() {
+        let cfg = AutoscaleConfig::new(1, 3);
+        let run = || {
+            let mut c = Controller::new(cfg.clone());
+            let mut out = Vec::new();
+            for i in 0..40 {
+                let t = i as f64 * 0.5;
+                let wait = if i % 10 < 5 { 0.080 } else { 0.001 };
+                c.observe(i % 3, t, wait);
+                out.push(c.on_tick(t, &[true, true, i % 2 == 0]));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -25,7 +25,7 @@
 //! [`server_loop`]: super::service
 
 use crate::config::{Meta, RunConfig};
-use crate::net::wire::{Hello, WireMsg};
+use crate::net::wire::{Hello, WireError, WireMsg};
 use crate::obs::Tracer;
 use crate::runtime::make_backend;
 use crate::serve::clock::Clock;
@@ -38,6 +38,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// What one daemon lifetime did, reported after shutdown: how many
 /// connections were accepted, plus the server loop's own batch/queue
@@ -62,6 +63,7 @@ pub struct Daemon {
     tracer: Tracer,
     server: Box<dyn ServerSide>,
     max_batch: usize,
+    io_timeout: Option<Duration>,
 }
 
 impl Daemon {
@@ -78,7 +80,17 @@ impl Daemon {
         let max_batch = cfg.max_batch.min(server.max_batch());
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding serving daemon listener on {addr}"))?;
-        Ok(Self { listener, cfg, meta, tracer, server, max_batch })
+        Ok(Self { listener, cfg, meta, tracer, server, max_batch, io_timeout: None })
+    }
+
+    /// Per-connection socket read/write timeout (default: none — blocking
+    /// reads, the pre-timeout behavior). With a timeout set, a half-open
+    /// or stalled client trips [`WireError::TimedOut`] and its handler
+    /// disconnects instead of pinning a thread forever and blocking
+    /// `Shutdown` drain. The CLI daemon sets 30 s.
+    pub fn io_timeout(mut self, timeout: Duration) -> Self {
+        self.io_timeout = Some(timeout);
+        self
     }
 
     /// The bound address (resolves `--listen 127.0.0.1:0` to the actual
@@ -95,6 +107,8 @@ impl Daemon {
     ///
     /// [`server_loop`]: super::service
     pub fn run(self) -> Result<DaemonSummary> {
+        let t0 = Instant::now();
+        let io_timeout = self.io_timeout;
         let deadline_s = self.cfg.batch_deadline_us as f64 * 1e-6;
         let clock = Clock::wall();
         let depth = Arc::new(AtomicUsize::new(0));
@@ -137,7 +151,8 @@ impl Daemon {
             let stop = stop.clone();
             let world = world.clone();
             handlers.push(std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, &world, &tx, &depth, &stop, local) {
+                if let Err(e) = handle_connection(stream, io_timeout, &world, &tx, &depth, &stop, local)
+                {
                     eprintln!("connection handler: {e:#}");
                 }
             }));
@@ -149,7 +164,7 @@ impl Daemon {
             let _ = h.join();
         }
         let agg = server_handle.join().map_err(|_| anyhow!("server loop panicked"))?;
-        Ok(DaemonSummary { connections, shard: agg.into_report(0) })
+        Ok(DaemonSummary { connections, shard: agg.into_report(0, t0.elapsed().as_secs_f64()) })
     }
 }
 
@@ -180,6 +195,7 @@ impl WorldKey {
 /// best-effort `Reject` before the connection closes.
 fn handle_connection(
     stream: TcpStream,
+    io_timeout: Option<Duration>,
     world: &WorldKey,
     tx: &Sender<OffloadMsg>,
     depth: &AtomicUsize,
@@ -187,6 +203,11 @@ fn handle_connection(
     local: SocketAddr,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // None (the default) keeps blocking reads; with a timeout a stalled
+    // peer surfaces as WireError::TimedOut below instead of pinning this
+    // handler thread forever
+    stream.set_read_timeout(io_timeout)?;
+    stream.set_write_timeout(io_timeout)?;
     let mut writer = BufWriter::new(stream.try_clone()?);
     let mut reader = BufReader::new(stream);
 
@@ -248,7 +269,10 @@ fn handle_connection(
 }
 
 /// Read the next message; on a malformed/foreign byte stream, send a
-/// best-effort `Reject` naming the parse error before surfacing it.
+/// best-effort `Reject` naming the parse error before surfacing it. A
+/// socket timeout (stalled or half-open peer) becomes a typed
+/// [`WireError::TimedOut`] with *no* Reject attempt — writing to a peer
+/// that stopped reading could stall this handler right back.
 fn read_or_reject(
     reader: &mut BufReader<TcpStream>,
     writer: &mut BufWriter<TcpStream>,
@@ -256,6 +280,16 @@ fn read_or_reject(
     match WireMsg::read_from(reader) {
         Ok(m) => Ok(m),
         Err(e) => {
+            if let Some(io) = e.downcast_ref::<std::io::Error>() {
+                if matches!(
+                    io.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) {
+                    return Err(
+                        WireError::TimedOut { context: "waiting for the next message" }.into()
+                    );
+                }
+            }
             let _ = WireMsg::Reject { reason: format!("{e:#}") }.write_to(writer);
             let _ = writer.flush();
             Err(e)
@@ -328,5 +362,24 @@ mod tests {
         // the good client, the bad client, and the shutdown connection
         assert_eq!(summary.connections, 3);
         assert_eq!(summary.shard.requests, 0);
+    }
+
+    #[test]
+    fn stalled_client_times_out_instead_of_blocking_shutdown() {
+        // regression (PR 9 satellite): without socket timeouts a half-open
+        // client pinned its handler thread in a blocking read forever, and
+        // Shutdown drain (which joins every handler) hung with it
+        let d = daemon("svhns").io_timeout(Duration::from_millis(100));
+        let addr = d.local_addr().unwrap().to_string();
+        let run = std::thread::spawn(move || d.run().unwrap());
+        // connect and send nothing, keeping the socket open: the handler
+        // must trip its read timeout and disconnect on its own
+        let stalled = TcpStream::connect(&addr).unwrap();
+        send_shutdown(&addr).unwrap();
+        // joins the stalled handler too — hangs forever if the timeout
+        // path regresses
+        let summary = run.join().unwrap();
+        assert_eq!(summary.connections, 2);
+        drop(stalled);
     }
 }

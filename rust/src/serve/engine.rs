@@ -66,6 +66,9 @@ use crate::net::{
 };
 use crate::obs::{self, Lane, Tracer};
 use crate::runtime::Backend;
+use crate::serve::autoscale::{
+    AutoscaleConfig, Controller, ScaleDecision, ScaleEvent, ScaleKind, ServiceModel, ShardLifetime,
+};
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, reply_bytes, DeviceSide,
     Fuser, LocalResult, ServerSide,
@@ -136,6 +139,15 @@ pub enum Placement {
     /// round-robin when depths are flat and water-fills when they are
     /// not.
     LeastLoaded,
+    /// Least-loaded normalized by per-server capacity weight
+    /// ([`ServiceModel::capacities`]): each offload goes to the server
+    /// minimizing `queued / capacity`, so a 2× server absorbs 2× the
+    /// depth before losing a placement. With uniform weights this is
+    /// exactly [`Placement::LeastLoaded`]. Ties rotate for the same
+    /// reason least-loaded's do.
+    ///
+    /// [`ServiceModel::capacities`]: super::autoscale::ServiceModel
+    WeightedLeastLoaded,
 }
 
 impl Placement {
@@ -144,6 +156,7 @@ impl Placement {
             Placement::Static => "static",
             Placement::RoundRobin => "rr",
             Placement::LeastLoaded => "least",
+            Placement::WeightedLeastLoaded => "weighted",
         }
     }
 }
@@ -156,7 +169,8 @@ impl FromStr for Placement {
             "static" | "shard" => Ok(Placement::Static),
             "rr" | "round-robin" | "roundrobin" => Ok(Placement::RoundRobin),
             "least" | "least-loaded" | "leastloaded" => Ok(Placement::LeastLoaded),
-            other => anyhow::bail!("unknown placement {other:?} (static|rr|least)"),
+            "weighted" | "wleast" | "weighted-least-loaded" => Ok(Placement::WeightedLeastLoaded),
+            other => anyhow::bail!("unknown placement {other:?} (static|rr|least|weighted)"),
         }
     }
 }
@@ -175,30 +189,73 @@ impl Placer {
         Self { policy, servers, rr_next: 0 }
     }
 
-    /// Shard for one offload from `device`; `load` reports a shard's
-    /// currently queued requests.
-    pub(crate) fn pick(&mut self, device: usize, load: impl Fn(usize) -> usize) -> usize {
+    /// Shard for one offload from `device`. `accepting` marks shards
+    /// currently taking placements (a draining or inactive autoscale
+    /// shard is skipped; fixed fleets pass `|_| true`, on which every
+    /// policy reduces to its pre-autoscale behavior), `load` reports a
+    /// shard's outstanding requests, and
+    /// `capacity` its weight for [`Placement::WeightedLeastLoaded`]. At
+    /// least one shard must be accepting.
+    pub(crate) fn pick(
+        &mut self,
+        device: usize,
+        accepting: impl Fn(usize) -> bool,
+        load: impl Fn(usize) -> usize,
+        capacity: impl Fn(usize) -> f64,
+    ) -> usize {
         match self.policy {
-            Placement::Static => device % self.servers,
-            Placement::RoundRobin => {
+            Placement::Static => {
+                // `device % accepting_count`, mapped onto the accepting
+                // list — identical to `device % servers` when all accept
+                let n = (0..self.servers).filter(|&s| accepting(s)).count();
+                assert!(n > 0, "no accepting shard for placement");
+                let k = device % n;
+                (0..self.servers)
+                    .filter(|&s| accepting(s))
+                    .nth(k)
+                    .expect("k-th accepting shard exists")
+            }
+            Placement::RoundRobin => loop {
                 let s = self.rr_next;
                 self.rr_next = (s + 1) % self.servers;
-                s
-            }
+                if accepting(s) {
+                    break s;
+                }
+            },
             Placement::LeastLoaded => {
                 // strict minimum scanned from the rotation cursor: flat
                 // depths degenerate to round-robin instead of piling every
                 // tie onto server 0
-                let mut best = self.rr_next;
-                let mut best_load = load(best);
-                for k in 1..self.servers {
+                let mut best: Option<(usize, usize)> = None;
+                for k in 0..self.servers {
                     let s = (self.rr_next + k) % self.servers;
+                    if !accepting(s) {
+                        continue;
+                    }
                     let l = load(s);
-                    if l < best_load {
-                        best = s;
-                        best_load = l;
+                    match best {
+                        Some((_, bl)) if l >= bl => {}
+                        _ => best = Some((s, l)),
                     }
                 }
+                let (best, _) = best.expect("no accepting shard for placement");
+                self.rr_next = (best + 1) % self.servers;
+                best
+            }
+            Placement::WeightedLeastLoaded => {
+                let mut best: Option<(usize, f64)> = None;
+                for k in 0..self.servers {
+                    let s = (self.rr_next + k) % self.servers;
+                    if !accepting(s) {
+                        continue;
+                    }
+                    let l = load(s) as f64 / capacity(s);
+                    match best {
+                        Some((_, bl)) if l >= bl => {}
+                        _ => best = Some((s, l)),
+                    }
+                }
+                let (best, _) = best.expect("no accepting shard for placement");
                 self.rr_next = (best + 1) % self.servers;
                 best
             }
@@ -213,16 +270,28 @@ pub(crate) struct EngineRun {
     pub wall_s: f64,
     /// per-server batch/queue accounting, indexed by server
     pub shards: Vec<ShardAgg>,
+    /// applied autoscale actions in virtual-time order (empty when the
+    /// controller is off)
+    pub scale_events: Vec<ScaleEvent>,
 }
 
 /// Everything that parameterizes one fleet run (identical to what the
-/// threaded `Service::stream` consumes, plus the server topology).
+/// threaded `Service::stream` consumes, plus the server topology and the
+/// autoscale control plane).
 pub(crate) struct FleetSpec {
     pub devices: usize,
     pub requests: usize,
     pub arrival: Arrival,
+    /// initial active server count (the full fleet when `autoscale` is
+    /// off; the starting set, growable to `max_servers`, when on)
     pub servers: usize,
     pub placement: Placement,
+    /// per-batch remote service-time pricing; the zero default leaves
+    /// the timeline bit-identical to the pre-model engine
+    pub service: ServiceModel,
+    /// the SLO control plane; `None` = fixed fleet, the pre-autoscale
+    /// engine code path
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 // ---------------------------------------------------------------------------
@@ -238,6 +307,11 @@ enum EventKind {
     /// batch-deadline wake-up for one shard; stale wake-ups are no-ops,
     /// exactly like the threaded clock's deadline waits
     Deadline { shard: usize },
+    /// a dispatched batch finishes its virtual service time on one shard
+    /// (only scheduled when the service model prices batches above zero)
+    BatchDone { shard: usize },
+    /// autoscale control tick (only scheduled when the controller is on)
+    ControlTick,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -303,10 +377,46 @@ struct DeviceState {
     awaiting: Option<Awaiting>,
 }
 
+/// One batch held in virtual service: inference already ran (results are
+/// time-independent), the devices resume when the service time elapses.
+struct InService {
+    batch: Vec<crate::coordinator::batcher::Pending<(usize, Tensor)>>,
+    rows: Vec<Vec<f32>>,
+    t_finish: f64,
+}
+
 struct ServerState {
     side: Box<dyn ServerSide>,
     queue: BatchQueue<(usize, Tensor)>,
     agg: ShardAgg,
+    /// virtual instant this shard's in-service batches all complete;
+    /// batches on one shard serialize (service starts at
+    /// `max(dispatch, busy_until)`)
+    busy_until: f64,
+    /// FIFO of batches currently paying their virtual service time
+    in_service: std::collections::VecDeque<InService>,
+    /// provisioned and taking placements
+    active: bool,
+    /// scale-in decided: no new placements, retires once drained
+    draining: bool,
+    /// controller pressure at the drain decision (recorded into the
+    /// retirement's [`ScaleEvent`])
+    drain_pressure: f64,
+    /// integrated activation → retirement intervals
+    lifetime: ShardLifetime,
+}
+
+impl ServerState {
+    fn accepting(&self) -> bool {
+        self.active && !self.draining
+    }
+
+    /// Outstanding work: queued plus in-service requests. The load signal
+    /// placement policies scan — equal to `queue.len()` whenever the
+    /// service model is zero (nothing ever sits in service).
+    fn outstanding(&self) -> usize {
+        self.queue.len() + self.in_service.iter().map(|b| b.batch.len()).sum::<usize>()
+    }
 }
 
 /// The assembled fleet: every state machine plus the event heap.
@@ -340,6 +450,15 @@ struct Fleet<'a> {
     t_end: f64,
     /// the stream consumer is gone; stop producing, like device threads do
     stopped: bool,
+    /// per-batch virtual service-time pricing (zero by default)
+    service: ServiceModel,
+    /// the SLO control plane; `None` runs the fixed-fleet code path
+    controller: Option<Controller>,
+    /// applied scale actions, in virtual-time order
+    scale_events: Vec<ScaleEvent>,
+    /// requests not yet emitted — control ticks stop rescheduling when
+    /// this reaches zero so the event heap can drain
+    remaining: usize,
     /// request-lifecycle trace sink; emissions mirror the threaded
     /// `device_loop`/`server_loop` expression for expression, so sim
     /// traces agree between the two paths on tie-free configurations
@@ -359,16 +478,31 @@ pub(crate) fn run_fleet(
     ensure!(spec.servers >= 1, "need at least one server");
     let device_side = make_device_side(backend, cfg, meta)?;
     let fuser = make_fuser(cfg, meta)?;
+    // with the controller on, every shard slot up to max_servers is
+    // provisioned (model instantiated) but only the first `spec.servers`
+    // start active; a fixed fleet provisions exactly `spec.servers`
+    let slots = spec.autoscale.as_ref().map(|a| a.max_servers).unwrap_or(spec.servers);
     let mut servers = Vec::new();
-    for _ in 0..spec.servers {
+    for i in 0..slots {
         match make_server_side(backend, cfg, meta)? {
             Some(side) => {
                 let max_batch = cfg.max_batch.min(side.max_batch());
                 let deadline_s = cfg.batch_deadline_us as f64 * 1e-6;
+                let active = i < spec.servers;
+                let mut lifetime = ShardLifetime::default();
+                if active {
+                    lifetime.activate(0.0);
+                }
                 servers.push(ServerState {
                     side,
                     queue: BatchQueue::new(max_batch, deadline_s),
                     agg: ShardAgg::default(),
+                    busy_until: 0.0,
+                    in_service: std::collections::VecDeque::new(),
+                    active,
+                    draining: false,
+                    drain_pressure: 0.0,
+                    lifetime,
                 });
             }
             // local-only schemes have no server half; the topology is moot
@@ -379,13 +513,14 @@ pub(crate) fn run_fleet(
         PacketOrder::Importance => importance_order(meta, cfg.scheme),
         PacketOrder::Index => None,
     };
+    let placer_slots = servers.len().max(1);
     let mut fleet = Fleet {
         cfg,
         testset,
         tx_done,
         devices: Vec::with_capacity(spec.devices),
         servers,
-        placer: Placer::new(spec.placement, spec.servers),
+        placer: Placer::new(spec.placement, placer_slots),
         heap: BinaryHeap::with_capacity(spec.devices + 1),
         seq: 0,
         device_side,
@@ -399,11 +534,16 @@ pub(crate) fn run_fleet(
         decoded: (0..testset.len()).map(|_| None).collect(),
         t_end: 0.0,
         stopped: false,
+        service: spec.service.clone(),
+        controller: spec.autoscale.clone().map(Controller::new),
+        scale_events: Vec::new(),
+        remaining: 0,
         tracer: tracer.clone(),
     };
     for d in 0..spec.devices {
         let (ids, times) = device_schedule(&spec.arrival, spec.devices, spec.requests, d);
         let first = times.first().copied();
+        fleet.remaining += ids.len();
         fleet.devices.push(DeviceState {
             ids,
             times,
@@ -420,6 +560,10 @@ pub(crate) fn run_fleet(
         if let Some(t0) = first {
             fleet.schedule(t0, EventKind::Device { device: d });
         }
+    }
+    if let Some(ctl) = &fleet.controller {
+        let t0 = ctl.cfg.interval_s;
+        fleet.schedule(t0, EventKind::ControlTick);
     }
     fleet.run()
 }
@@ -440,11 +584,29 @@ impl Fleet<'_> {
                 EventKind::Device { device } => self.handle_device(ev.t, device)?,
                 EventKind::Offload { device } => self.handle_offload(ev.t, device)?,
                 EventKind::Deadline { shard } => self.handle_deadline(ev.t, shard)?,
+                EventKind::BatchDone { shard } => self.handle_batch_done(ev.t, shard)?,
+                EventKind::ControlTick => self.handle_control_tick(ev.t)?,
             }
         }
+        let autoscaled = self.controller.is_some();
+        let t_end = self.t_end;
         Ok(EngineRun {
-            wall_s: self.t_end,
-            shards: self.servers.drain(..).map(|s| s.agg).collect(),
+            wall_s: t_end,
+            shards: self
+                .servers
+                .drain(..)
+                .map(|s| {
+                    let mut agg = s.agg;
+                    // integrated active lifetime, open intervals closed at
+                    // the makespan; fixed fleets keep the sentinel, which
+                    // `finish_full` resolves to the whole run
+                    if autoscaled {
+                        agg.active_s = s.lifetime.total(t_end);
+                    }
+                    agg
+                })
+                .collect(),
+            scale_events: std::mem::take(&mut self.scale_events),
         })
     }
 
@@ -567,7 +729,12 @@ impl Fleet<'_> {
                 .ok_or_else(|| anyhow!("offload event for device {d} with nothing in flight"))?;
             (aw.id, aw.body.take().ok_or_else(|| anyhow!("offload body already consumed"))?)
         };
-        let shard = self.placer.pick(d, |s| self.servers[s].queue.len());
+        let shard = self.placer.pick(
+            d,
+            |s| self.servers[s].accepting(),
+            |s| self.servers[s].outstanding(),
+            |s| self.service.capacity(s),
+        );
         // fleet-level placement decision: which shard got this offload
         let placed = Lane::Server(shard as u32);
         self.tracer.instant(placed, obs::EventKind::Placement, id as u64, t, d as f64);
@@ -605,13 +772,34 @@ impl Fleet<'_> {
 
     fn handle_deadline(&mut self, t: f64, shard: usize) -> Result<()> {
         if let Some(batch) = self.servers[shard].queue.poll_deadline(t) {
-            return self.dispatch(shard, batch, t);
+            self.dispatch(shard, batch, t)?;
         }
+        self.maybe_retire(shard, t);
         Ok(())
     }
 
-    /// Run one batch through the shard's remote NN and resume every
-    /// waiting device — the threaded `run_batch` + reply delivery.
+    /// A batch's virtual service time elapsed: resume its devices.
+    /// Completions are FIFO per shard (service starts serialize on
+    /// `busy_until`), so pop every front batch whose finish time has
+    /// arrived; later wake-ups for the same shard are no-ops.
+    fn handle_batch_done(&mut self, t: f64, shard: usize) -> Result<()> {
+        while let Some(front) = self.servers[shard].in_service.front() {
+            if front.t_finish > t {
+                break;
+            }
+            let b = self.servers[shard].in_service.pop_front().expect("front exists");
+            self.complete(b.batch, b.rows, b.t_finish)?;
+        }
+        self.maybe_retire(shard, t);
+        Ok(())
+    }
+
+    /// Run one batch through the shard's remote NN and start its virtual
+    /// service — the threaded `run_batch` + reply delivery. With the zero
+    /// service model on an idle shard the batch completes inline at `t`,
+    /// the pre-autoscale code path expression for expression; otherwise
+    /// the completion is deferred to a [`EventKind::BatchDone`] event at
+    /// `max(t, busy_until) + service_s`.
     fn dispatch(
         &mut self,
         shard: usize,
@@ -623,28 +811,55 @@ impl Fleet<'_> {
             .side
             .infer_batch(&feats)
             .with_context(|| format!("remote batch of {} failed on server {shard}", batch.len()))?;
+        let start = t.max(self.servers[shard].busy_until);
+        let service_s = self.service.batch_service_s(shard, batch.len());
+        let t_finish = start + service_s;
         let agg = &mut self.servers[shard].agg;
         agg.batched += batch.len();
         agg.batches += 1;
         let lane = Lane::Server(shard as u32);
         for p in &batch {
-            agg.queue_wait.record(t - p.enqueued);
-            self.tracer.span(lane, obs::EventKind::ServerQueue, p.id, p.enqueued, t, 0.0);
+            // queue wait runs until service *starts*: on a busy shard the
+            // backlog is visible here, which is exactly the congestion
+            // signal the autoscale controller watches
+            let wait = start - p.enqueued;
+            agg.queue_wait.record(wait);
+            self.tracer.span(lane, obs::EventKind::ServerQueue, p.id, p.enqueued, start, 0.0);
+            if let Some(ctl) = self.controller.as_mut() {
+                ctl.observe(shard, t, wait);
+            }
         }
         let seq = agg.batches as u64;
         self.tracer.instant(lane, obs::EventKind::BatchDispatch, seq, t, batch.len() as f64);
+        if t_finish <= t {
+            self.complete(batch, rows, t)
+        } else {
+            self.servers[shard].busy_until = t_finish;
+            self.servers[shard].in_service.push_back(InService { batch, rows, t_finish });
+            self.schedule(t_finish, EventKind::BatchDone { shard });
+            Ok(())
+        }
+    }
+
+    /// Resume every device whose request rode one serviced batch.
+    fn complete(
+        &mut self,
+        batch: Vec<crate::coordinator::batcher::Pending<(usize, Tensor)>>,
+        rows: Vec<Vec<f32>>,
+        t_finish: f64,
+    ) -> Result<()> {
         for (p, row) in batch.into_iter().zip(rows) {
             let d = p.payload.0;
             let aw = self.devices[d]
                 .awaiting
                 .take()
                 .ok_or_else(|| anyhow!("reply for device {d} with nothing in flight"))?;
-            let remote_s = t - aw.t_send;
-            let t_done = t + aw.downlink_s;
+            let remote_s = t_finish - aw.t_send;
+            let t_done = t_finish + aw.downlink_s;
             let dlane = Lane::Device(d as u32);
             let rid = aw.id as u64;
-            self.tracer.span(dlane, obs::EventKind::Remote, rid, aw.t_send, t, 0.0);
-            self.tracer.span(dlane, obs::EventKind::Downlink, rid, t, t_done, 0.0);
+            self.tracer.span(dlane, obs::EventKind::Remote, rid, aw.t_send, t_finish, 0.0);
+            self.tracer.span(dlane, obs::EventKind::Downlink, rid, t_finish, t_done, 0.0);
             self.emit(
                 d,
                 aw.j,
@@ -658,6 +873,79 @@ impl Fleet<'_> {
             )?;
         }
         Ok(())
+    }
+
+    /// One autoscale control tick: feed the accepting mask to the
+    /// controller and apply its decision. Ticks stop rescheduling once
+    /// every request has been emitted, letting the event heap drain.
+    fn handle_control_tick(&mut self, t: f64) -> Result<()> {
+        if self.stopped || self.remaining == 0 {
+            return Ok(());
+        }
+        let accepting: Vec<bool> = self.servers.iter().map(|s| s.accepting()).collect();
+        let ctl = self.controller.as_mut().expect("control tick without a controller");
+        let decision = ctl.on_tick(t, &accepting);
+        let pressure = ctl.last_pressure_s;
+        let interval = ctl.cfg.interval_s;
+        match decision {
+            ScaleDecision::Hold => {}
+            ScaleDecision::Out => {
+                // prefer cancelling the most recent drain (the shard is
+                // still provisioned and billing); otherwise activate the
+                // lowest-index inactive slot
+                let target = (0..self.servers.len())
+                    .rev()
+                    .find(|&s| self.servers[s].draining)
+                    .or_else(|| (0..self.servers.len()).find(|&s| !self.servers[s].active));
+                if let Some(s) = target {
+                    let st = &mut self.servers[s];
+                    st.draining = false;
+                    st.active = true;
+                    st.lifetime.activate(t);
+                    let after = self.servers.iter().filter(|s| s.accepting()).count();
+                    self.record_scale(ScaleKind::Out, s, t, after, pressure);
+                }
+            }
+            ScaleDecision::In => {
+                // drain the highest-index accepting shard: no new
+                // placements from this instant, retirement once its queue
+                // and in-service batches empty (drain-before-retire — no
+                // request is ever dropped)
+                if let Some(s) = (0..self.servers.len()).rev().find(|&s| self.servers[s].accepting())
+                {
+                    self.servers[s].draining = true;
+                    self.servers[s].drain_pressure = pressure;
+                    self.maybe_retire(s, t);
+                }
+            }
+        }
+        self.schedule(t + interval, EventKind::ControlTick);
+        Ok(())
+    }
+
+    /// Retire a fully drained shard: close its lifetime interval and
+    /// record the scale-in. No-op unless the shard is draining and empty.
+    fn maybe_retire(&mut self, shard: usize, t: f64) {
+        let st = &mut self.servers[shard];
+        if !st.draining || st.queue.len() != 0 || !st.in_service.is_empty() {
+            return;
+        }
+        st.draining = false;
+        st.active = false;
+        st.lifetime.retire(t);
+        let pressure = st.drain_pressure;
+        let after = self.servers.iter().filter(|s| s.accepting()).count();
+        self.record_scale(ScaleKind::In, shard, t, after, pressure);
+    }
+
+    /// Append one applied scale action and its trace instant.
+    fn record_scale(&mut self, kind: ScaleKind, shard: usize, t: f64, after: usize, pressure: f64) {
+        let ev_kind = match kind {
+            ScaleKind::Out => obs::EventKind::ScaleOut,
+            ScaleKind::In => obs::EventKind::ScaleIn,
+        };
+        self.tracer.instant(Lane::Server(shard as u32), ev_kind, shard as u64, t, after as f64);
+        self.scale_events.push(ScaleEvent { t_s: t, shard, kind, active_after: after, pressure_s: pressure });
     }
 
     /// Assemble and stream one finished request, then advance the device
@@ -699,6 +987,7 @@ impl Fleet<'_> {
             outcome,
         };
         self.t_end = self.t_end.max(t_done);
+        self.remaining = self.remaining.saturating_sub(1);
         if self.tx_done.send(served).is_err() {
             self.stopped = true;
         }
@@ -728,9 +1017,15 @@ mod tests {
         assert_eq!("rr".parse::<Placement>().unwrap(), Placement::RoundRobin);
         assert_eq!("round-robin".parse::<Placement>().unwrap(), Placement::RoundRobin);
         assert_eq!("least".parse::<Placement>().unwrap(), Placement::LeastLoaded);
+        assert_eq!("weighted".parse::<Placement>().unwrap(), Placement::WeightedLeastLoaded);
         assert!("hash".parse::<Placement>().is_err());
         assert_eq!(Placement::default(), Placement::Static);
-        for p in [Placement::Static, Placement::RoundRobin, Placement::LeastLoaded] {
+        for p in [
+            Placement::Static,
+            Placement::RoundRobin,
+            Placement::LeastLoaded,
+            Placement::WeightedLeastLoaded,
+        ] {
             assert_eq!(p.name().parse::<Placement>().unwrap(), p);
         }
     }
@@ -742,18 +1037,31 @@ mod tests {
         // renumbers its shard the same way every time
         for round in 0..3 {
             for d in 0..16 {
-                let shard = p.pick(d, |s| (s * 31 + round) % 7);
+                let shard = p.pick(d, |_| true, |s| (s * 31 + round) % 7, |_| 1.0);
                 assert_eq!(shard, d % 4, "device {d} round {round}");
             }
         }
     }
 
     #[test]
+    fn static_placement_maps_onto_the_accepting_set() {
+        // with shard 1 draining, `device % 3` walks the remaining shards
+        // {0, 2, 3} — deterministic and never lands on the drained one
+        let mut p = Placer::new(Placement::Static, 4);
+        let accepting = |s: usize| s != 1;
+        let picks: Vec<usize> = (0..6).map(|d| p.pick(d, accepting, |_| 0, |_| 1.0)).collect();
+        assert_eq!(picks, vec![0, 2, 3, 0, 2, 3]);
+    }
+
+    #[test]
     fn round_robin_cycles_regardless_of_device() {
         let mut p = Placer::new(Placement::RoundRobin, 3);
         let picks: Vec<usize> =
-            [7usize, 7, 7, 0, 1, 2, 9].iter().map(|&d| p.pick(d, |_| 0)).collect();
+            [7usize, 7, 7, 0, 1, 2, 9].iter().map(|&d| p.pick(d, |_| true, |_| 0, |_| 1.0)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+        // a non-accepting shard is skipped without stalling the cycle
+        let picks: Vec<usize> = (0..4).map(|d| p.pick(d, |s| s != 1, |_| 0, |_| 1.0)).collect();
+        assert_eq!(picks, vec![2, 0, 2, 0]);
     }
 
     #[test]
@@ -762,15 +1070,29 @@ mod tests {
         // cursor at 0: the strict minimum (two servers tie at 1) is taken
         // in rotation order -> server 1; cursor moves past it
         let loads = [3usize, 1, 4, 1];
-        assert_eq!(p.pick(0, |s| loads[s]), 1, "first minimum in rotation order");
+        assert_eq!(p.pick(0, |_| true, |s| loads[s], |_| 1.0), 1, "first minimum in rotation order");
         // flat depths degenerate to round-robin from the cursor (now 2)
         let uniform = [2usize, 2, 2, 2];
-        assert_eq!(p.pick(5, |s| uniform[s]), 2);
-        assert_eq!(p.pick(5, |s| uniform[s]), 3);
-        assert_eq!(p.pick(5, |s| uniform[s]), 0);
+        assert_eq!(p.pick(5, |_| true, |s| uniform[s], |_| 1.0), 2);
+        assert_eq!(p.pick(5, |_| true, |s| uniform[s], |_| 1.0), 3);
+        assert_eq!(p.pick(5, |_| true, |s| uniform[s], |_| 1.0), 0);
         // a strictly emptier server still wins over the rotation
         let empty_last = [5usize, 4, 3, 0];
-        assert_eq!(p.pick(1, |s| empty_last[s]), 3);
+        assert_eq!(p.pick(1, |_| true, |s| empty_last[s], |_| 1.0), 3);
+    }
+
+    #[test]
+    fn weighted_least_loaded_normalizes_by_capacity() {
+        let mut p = Placer::new(Placement::WeightedLeastLoaded, 3);
+        // loads 4/2/3 over capacities 4/1/1: normalized 1.0 / 2.0 / 3.0 —
+        // the big server wins despite holding the deepest raw queue
+        let loads = [4usize, 2, 3];
+        let caps = [4.0, 1.0, 1.0];
+        assert_eq!(p.pick(0, |_| true, |s| loads[s], |s| caps[s]), 0);
+        // with uniform capacity it is exactly least-loaded (min at 1)
+        assert_eq!(p.pick(0, |_| true, |s| loads[s], |_| 1.0), 1);
+        // non-accepting shards are excluded even when normalized-best
+        assert_eq!(p.pick(0, |s| s != 0, |s| loads[s], |s| caps[s]), 1);
     }
 
     #[test]
@@ -779,7 +1101,7 @@ mod tests {
         // A lowest-index tie-break would return 0 forever and overload one
         // shard; the rotation spreads the burst evenly.
         let mut p = Placer::new(Placement::LeastLoaded, 3);
-        let picks: Vec<usize> = (0..7).map(|d| p.pick(d, |_| 0)).collect();
+        let picks: Vec<usize> = (0..7).map(|d| p.pick(d, |_| true, |_| 0, |_| 1.0)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
     }
 

@@ -44,8 +44,17 @@
 //! of requests across tens of thousands of devices and adds the
 //! multi-server axis: `ServeBuilder::{servers,placement}` shards the
 //! batch queue across N servers under a static / round-robin /
-//! least-loaded device→server [`Placement`] policy, with per-shard
-//! load/latency in [`PipelineReport::shards`].
+//! least-loaded / capacity-weighted device→server [`Placement`] policy,
+//! with per-shard load/latency in [`PipelineReport::shards`].
+//!
+//! Autoscaling ([`autoscale`]): engine runs can model per-batch service
+//! time (`ServeBuilder::service_model`, [`ServiceModel`]) and hand fleet
+//! sizing to a deterministic SLO controller
+//! (`ServeBuilder::autoscale`, [`AutoscaleConfig`]) that watches rolling
+//! per-shard queue-wait p95 over a virtual-time window and grows or
+//! drains the active server set mid-run — every [`ScaleEvent`] lands in
+//! the trace, and the report gains integrated `server_seconds` plus SLO
+//! attainment against `ServeBuilder::slo_p99`. See `docs/serving.md`.
 //!
 //! Real sockets ([`fabric`], [`daemon`]): device↔server communication
 //! flows through the [`Transport`] trait, so the same `device_loop` that
@@ -66,6 +75,7 @@
 //! [`MetricsRegistry`](crate::obs::MetricsRegistry) the
 //! [`PipelineReport`] is derived from. See `docs/observability.md`.
 
+pub mod autoscale;
 pub mod clock;
 pub mod daemon;
 pub mod engine;
@@ -73,6 +83,7 @@ pub mod fabric;
 pub mod scheme;
 pub mod service;
 
+pub use autoscale::{AutoscaleConfig, ScaleEvent, ScaleKind, ServiceModel};
 pub use clock::{Clock, ClockKind};
 pub use daemon::{send_shutdown, Daemon, DaemonSummary};
 pub use engine::{Placement, SimEngine};

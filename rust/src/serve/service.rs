@@ -33,6 +33,7 @@ use crate::net::{
 };
 use crate::obs::{EventKind, Histogram, Lane, MetricsRegistry, TraceSink, Tracer};
 use crate::runtime::{make_backend, Backend};
+use crate::serve::autoscale::{AutoscaleConfig, ScaleKind, ServiceModel};
 use crate::serve::clock::{Clock, ClockKind};
 use crate::serve::engine::{self, FleetSpec, Placement, SimEngine};
 use crate::serve::fabric::{
@@ -112,6 +113,21 @@ pub struct PipelineReport {
     /// (deterministic; 0 when the offered load never contends the link or
     /// nothing offloaded)
     pub mean_radio_wait_s: f64,
+    /// integrated provisioned server time, Σ per-shard `active_s`:
+    /// activation → retirement intervals under autoscaling, the whole run
+    /// for a fixed fleet, 0 for local-only schemes. The corrected
+    /// fleet-cost basis for `TuneObjectives::server_seconds` (the old
+    /// `shards × wall_s` billed idle and never-activated servers).
+    pub server_seconds: f64,
+    /// configured end-to-end p99 latency SLO, seconds (0 = unset)
+    pub slo_p99_s: f64,
+    /// fraction of requests finishing within `slo_p99_s` (1.0 when no
+    /// SLO is configured)
+    pub slo_attainment: f64,
+    /// autoscale shard activations over the run (0 with the controller off)
+    pub scale_outs: usize,
+    /// autoscale shard retirements over the run (0 with the controller off)
+    pub scale_ins: usize,
 }
 
 impl PipelineReport {
@@ -129,6 +145,7 @@ impl PipelineReport {
                 .field_f64("mean_batch_size", s.mean_batch_size)
                 .field_f64("mean_queue_s", s.mean_queue_s)
                 .field_f64("p95_queue_s", s.p95_queue_s)
+                .field_f64("active_s", s.active_s)
                 .finish()
         }));
         JsonObj::new()
@@ -152,6 +169,11 @@ impl PipelineReport {
             .field_f64("mean_net_s", self.mean_net_s)
             .field_f64("p99_net_s", self.p99_net_s)
             .field_f64("mean_radio_wait_s", self.mean_radio_wait_s)
+            .field_f64("server_seconds", self.server_seconds)
+            .field_f64("slo_p99_s", self.slo_p99_s)
+            .field_f64("slo_attainment", self.slo_attainment)
+            .field_usize("scale_outs", self.scale_outs)
+            .field_usize("scale_ins", self.scale_ins)
             .finish()
     }
 
@@ -186,6 +208,8 @@ impl PipelineReport {
             let h = m.hist_mut("net_s");
             (h.mean_s(), h.p99())
         };
+        let slo_p99_s = m.sum("slo_p99_s");
+        let within_slo = m.counter("requests_within_slo");
         PipelineReport {
             requests,
             clock,
@@ -219,6 +243,15 @@ impl PipelineReport {
             } else {
                 radio_wait_s / uplinks as f64
             },
+            server_seconds: m.sum("server_seconds"),
+            slo_p99_s,
+            slo_attainment: if slo_p99_s <= 0.0 || requests == 0 {
+                1.0
+            } else {
+                within_slo as f64 / requests as f64
+            },
+            scale_outs: m.counter("scale_outs") as usize,
+            scale_ins: m.counter("scale_ins") as usize,
         }
     }
 }
@@ -234,19 +267,34 @@ pub struct ShardReport {
     /// batch-queue wait (enqueue → dispatch), deterministic in sim mode
     pub mean_queue_s: f64,
     pub p95_queue_s: f64,
+    /// integrated seconds this server was provisioned and active:
+    /// activation → retirement intervals under autoscaling, the whole run
+    /// otherwise. Summed into `PipelineReport::server_seconds`.
+    pub active_s: f64,
 }
 
 /// Accumulating form of [`ShardReport`], shared by the threaded server
 /// loop and the event engine.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub(crate) struct ShardAgg {
     pub batched: usize,
     pub batches: usize,
     pub queue_wait: Histogram,
+    /// integrated active seconds; the `-1.0` sentinel means "active for
+    /// the whole run" (fixed fleets and the threaded path, which have no
+    /// lifetime accounting) and resolves to the run's makespan in
+    /// [`ShardAgg::into_report`]
+    pub active_s: f64,
+}
+
+impl Default for ShardAgg {
+    fn default() -> Self {
+        Self { batched: 0, batches: 0, queue_wait: Histogram::default(), active_s: -1.0 }
+    }
 }
 
 impl ShardAgg {
-    pub(crate) fn into_report(mut self, server: usize) -> ShardReport {
+    pub(crate) fn into_report(mut self, server: usize, run_s: f64) -> ShardReport {
         ShardReport {
             server,
             requests: self.batched,
@@ -258,6 +306,7 @@ impl ShardAgg {
             },
             mean_queue_s: self.queue_wait.mean_s(),
             p95_queue_s: self.queue_wait.p95(),
+            active_s: if self.active_s < 0.0 { run_s } else { self.active_s },
         }
     }
 }
@@ -319,7 +368,7 @@ pub struct RemoteFailure(pub String);
 /// message from the calling thread instead of a panic inside a spawned
 /// worker. [`Service::stream`] runs [`Service::validate`] first, so every
 /// conflict below surfaces this way.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ConfigError {
     /// `devices == 0`
     NoDevices,
@@ -342,6 +391,16 @@ pub enum ConfigError {
     /// `connect` with a multi-server topology: the remote daemon *is* the
     /// one server this client can reach
     RemoteConflictsWithServers { servers: usize },
+    /// the autoscale controller off the sim clock's event engine — the
+    /// control plane runs on virtual time inside the fleet engine
+    AutoscaleNeedsEventEngine { clock: ClockKind, engine: SimEngine },
+    /// inconsistent autoscale bounds or thresholds
+    /// ([`AutoscaleConfig::validate`]), or a bad SLO knob
+    InvalidAutoscale { reason: String },
+    /// bad service-model parameters ([`ServiceModel::validate`]), or a
+    /// non-zero model off the event engine (batch pricing exists only
+    /// there)
+    InvalidServiceModel { reason: String },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -374,6 +433,15 @@ impl std::fmt::Display for ConfigError {
                 "{servers} servers conflict with a remote daemon connection \
                  (the daemon is the one server this client can reach)"
             ),
+            ConfigError::AutoscaleNeedsEventEngine { clock, engine } => write!(
+                f,
+                "the autoscale controller requires the sim clock's event engine \
+                 (clock sim + sim-engine event), not {} clock / {} engine",
+                clock.name(),
+                engine.name()
+            ),
+            ConfigError::InvalidAutoscale { reason } => write!(f, "{reason}"),
+            ConfigError::InvalidServiceModel { reason } => write!(f, "{reason}"),
         }
     }
 }
@@ -411,6 +479,9 @@ pub struct ServeBuilder {
     servers: usize,
     placement: Placement,
     sim_engine: SimEngine,
+    service_model: ServiceModel,
+    autoscale: Option<AutoscaleConfig>,
+    slo_p99_s: f64,
     trace: Tracer,
     connect: Option<String>,
 }
@@ -437,6 +508,9 @@ impl ServeBuilder {
             servers: 1,
             placement: Placement::default(),
             sim_engine: SimEngine::default(),
+            service_model: ServiceModel::default(),
+            autoscale: None,
+            slo_p99_s: 0.0,
             trace: Tracer::off(),
             connect: None,
         }
@@ -533,6 +607,46 @@ impl ServeBuilder {
     /// No effect on the wall clock.
     pub fn sim_engine(mut self, engine: SimEngine) -> Self {
         self.sim_engine = engine;
+        self
+    }
+
+    /// Per-batch virtual service-time pricing for the event engine's
+    /// remote phase: each dispatched batch holds its shard for
+    /// `(base_s + per_sample_s · batch_size) / capacity` virtual seconds,
+    /// and batches on one shard serialize — so offered load beyond a
+    /// shard's capacity shows up as unbounded queue wait, the signal the
+    /// autoscale controller watches. The default zero model keeps the
+    /// engine timeline bit-identical to the unpriced engine. Sim event
+    /// engine only; see [`ServiceModel`].
+    pub fn service_model(mut self, base_s: f64, per_sample_s: f64) -> Self {
+        self.service_model.base_s = base_s;
+        self.service_model.per_sample_s = per_sample_s;
+        self
+    }
+
+    /// Per-server capacity weights: a shard's service time divides by its
+    /// weight, and [`Placement::WeightedLeastLoaded`] divides its load by
+    /// it. Servers beyond the vector weigh 1.0.
+    pub fn capacities(mut self, weights: Vec<f64>) -> Self {
+        self.service_model.capacities = weights;
+        self
+    }
+
+    /// Enable the autoscale SLO control plane ([`AutoscaleConfig`]): the
+    /// [`ServeBuilder::servers`] count becomes the *initial* active set,
+    /// grown/shrunk by the controller within `[min_servers, max_servers]`.
+    /// Sim event engine only; see `docs/serving.md`, "Autoscaling & SLO
+    /// control".
+    pub fn autoscale(mut self, cfg: AutoscaleConfig) -> Self {
+        self.autoscale = Some(cfg);
+        self
+    }
+
+    /// End-to-end p99 latency SLO target, seconds, for the report's
+    /// SLO-attainment accounting (`slo_attainment` = fraction of requests
+    /// finishing within this bound). 0 (the default) disables it.
+    pub fn slo_p99(mut self, slo_s: f64) -> Self {
+        self.slo_p99_s = slo_s;
         self
     }
 
@@ -683,6 +797,9 @@ impl ServeBuilder {
             .with_clock(self.clock)
             .with_servers(self.servers, self.placement)
             .with_sim_engine(self.sim_engine)
+            .with_service_model(self.service_model)
+            .with_autoscale(self.autoscale)
+            .with_slo_p99(self.slo_p99_s)
             .with_tracer(self.trace)
             .with_connect(self.connect))
     }
@@ -708,6 +825,9 @@ pub struct Service {
     servers: usize,
     placement: Placement,
     sim_engine: SimEngine,
+    service_model: ServiceModel,
+    autoscale: Option<AutoscaleConfig>,
+    slo_p99_s: f64,
     tracer: Tracer,
     connect: Option<String>,
 }
@@ -745,6 +865,9 @@ impl Service {
             servers: 1,
             placement: Placement::default(),
             sim_engine: SimEngine::default(),
+            service_model: ServiceModel::default(),
+            autoscale: None,
+            slo_p99_s: 0.0,
             tracer: Tracer::off(),
             connect: None,
         })
@@ -766,6 +889,27 @@ impl Service {
     /// Select the sim execution engine (default: the event engine).
     pub fn with_sim_engine(mut self, engine: SimEngine) -> Self {
         self.sim_engine = engine;
+        self
+    }
+
+    /// Set the per-batch virtual service-time model (default: zero); see
+    /// [`ServeBuilder::service_model`].
+    pub fn with_service_model(mut self, model: ServiceModel) -> Self {
+        self.service_model = model;
+        self
+    }
+
+    /// Enable the autoscale control plane (default: off); see
+    /// [`ServeBuilder::autoscale`].
+    pub fn with_autoscale(mut self, autoscale: Option<AutoscaleConfig>) -> Self {
+        self.autoscale = autoscale;
+        self
+    }
+
+    /// Set the p99 latency SLO target for attainment accounting
+    /// (default: 0 = unset); see [`ServeBuilder::slo_p99`].
+    pub fn with_slo_p99(mut self, slo_s: f64) -> Self {
+        self.slo_p99_s = slo_s;
         self
     }
 
@@ -822,6 +966,35 @@ impl Service {
             }
             if self.servers > 1 {
                 return Err(ConfigError::RemoteConflictsWithServers { servers: self.servers });
+            }
+        }
+        if let Err(reason) = self.service_model.validate() {
+            return Err(ConfigError::InvalidServiceModel { reason });
+        }
+        if !self.service_model.is_zero() && !on_engine {
+            return Err(ConfigError::InvalidServiceModel {
+                reason: format!(
+                    "a non-zero service model requires the sim clock's event engine \
+                     (clock sim + sim-engine event), not {} clock / {} engine",
+                    self.clock.name(),
+                    self.sim_engine.name()
+                ),
+            });
+        }
+        if !self.slo_p99_s.is_finite() || self.slo_p99_s < 0.0 {
+            return Err(ConfigError::InvalidAutoscale {
+                reason: format!("slo_p99 must be finite and >= 0, got {}", self.slo_p99_s),
+            });
+        }
+        if let Some(a) = &self.autoscale {
+            if !on_engine {
+                return Err(ConfigError::AutoscaleNeedsEventEngine {
+                    clock: self.clock,
+                    engine: self.sim_engine,
+                });
+            }
+            if let Err(reason) = a.validate(self.servers) {
+                return Err(ConfigError::InvalidAutoscale { reason });
             }
         }
         Ok(())
@@ -924,7 +1097,7 @@ impl Service {
         Ok(OutcomeStream {
             rx: rx_done,
             handle: RunHandle::Threads { device_handles, server_handle, clock },
-            agg: StreamAgg::default(),
+            agg: StreamAgg::with_slo(self.slo_p99_s),
         })
     }
 
@@ -987,7 +1160,7 @@ impl Service {
         Ok(OutcomeStream {
             rx: rx_done,
             handle: RunHandle::Threads { device_handles, server_handle: None, clock },
-            agg: StreamAgg::default(),
+            agg: StreamAgg::with_slo(self.slo_p99_s),
         })
     }
 
@@ -999,12 +1172,15 @@ impl Service {
         // from stream() rather than at finish()
         let backend: Arc<dyn Backend> = make_backend(&self.cfg, &self.meta)?;
         let (tx_done, rx_done) = channel::<ServedOutcome>();
+        let slo_p99_s = self.slo_p99_s;
         let spec = FleetSpec {
             devices: self.devices,
             requests: self.requests,
             arrival: self.arrival,
             servers: self.servers,
             placement: self.placement,
+            service: self.service_model.clone(),
+            autoscale: self.autoscale.clone(),
         };
         let tracer = self.tracer.clone();
         let handle = std::thread::spawn(move || {
@@ -1021,7 +1197,7 @@ impl Service {
         Ok(OutcomeStream {
             rx: rx_done,
             handle: RunHandle::Engine { handle },
-            agg: StreamAgg::default(),
+            agg: StreamAgg::with_slo(slo_p99_s),
         })
     }
 }
@@ -1090,12 +1266,23 @@ struct StreamAgg {
     phase_network: Histogram,
     phase_remote: Histogram,
     net: NetAgg,
+    /// configured p99 latency SLO (0 = unset); requests at or under it
+    /// count into `within_slo`
+    slo_p99_s: f64,
+    within_slo: u64,
 }
 
 impl StreamAgg {
+    fn with_slo(slo_p99_s: f64) -> Self {
+        Self { slo_p99_s, ..Self::default() }
+    }
+
     fn record(&mut self, out: &ServedOutcome) {
         self.acc.record(out.outcome.correct);
         self.lat.record(out.wall_s);
+        if self.slo_p99_s > 0.0 && out.wall_s <= self.slo_p99_s {
+            self.within_slo += 1;
+        }
         let b = &out.outcome.breakdown;
         self.net_lat.record(b.network_s);
         self.phase_local_nn.record(b.local_nn_s);
@@ -1121,8 +1308,10 @@ impl StreamAgg {
         m.counter_add("bytes_delivered", self.net.bytes_delivered);
         m.counter_add("batches", batches as u64);
         m.counter_add("batched_requests", batched as u64);
+        m.counter_add("requests_within_slo", self.within_slo);
         m.sum_add("airtime_s", self.net.airtime_s);
         m.sum_add("radio_wait_s", self.net.radio_wait_s);
+        m.sum_add("slo_p99_s", self.slo_p99_s);
         m.insert_hist("latency_s", self.lat);
         m.insert_hist("net_s", self.net_lat);
         m.insert_hist("phase_local_nn_s", self.phase_local_nn);
@@ -1185,7 +1374,7 @@ impl OutcomeStream {
     /// field. This is what `serve --metrics-out` writes.
     pub fn finish_full(mut self) -> Result<(PipelineReport, MetricsRegistry)> {
         while self.next().is_some() {}
-        let (clock_kind, wall, shard_aggs) = match self.handle {
+        let (clock_kind, wall, shard_aggs, scale_events) = match self.handle {
             RunHandle::Threads { device_handles, server_handle, clock } => {
                 for h in device_handles {
                     h.join().map_err(|_| anyhow!("device thread panicked"))??;
@@ -1200,18 +1389,27 @@ impl OutcomeStream {
                 // the sim clock (all participants have deregistered by
                 // now, so this is the timestamp of the last simulated
                 // event)
-                (clock.kind(), clock.now(), aggs)
+                (clock.kind(), clock.now(), aggs, Vec::new())
             }
             RunHandle::Engine { handle } => {
                 let run = handle.join().map_err(|_| anyhow!("engine thread panicked"))??;
-                (ClockKind::Sim, run.wall_s, run.shards)
+                (ClockKind::Sim, run.wall_s, run.shards, run.scale_events)
             }
         };
         let total_batched: usize = shard_aggs.iter().map(|a| a.batched).sum();
         let batches: usize = shard_aggs.iter().map(|a| a.batches).sum();
         let shards: Vec<ShardReport> =
-            shard_aggs.into_iter().enumerate().map(|(i, a)| a.into_report(i)).collect();
+            shard_aggs.into_iter().enumerate().map(|(i, a)| a.into_report(i, wall)).collect();
+        // integrated fleet cost: Σ per-shard active seconds (the fixed
+        // fleets' sentinel already resolved to the makespan above) — the
+        // corrected basis for TuneObjectives::server_seconds
+        let server_seconds: f64 = shards.iter().map(|s| s.active_s).sum();
+        let scale_outs = scale_events.iter().filter(|e| e.kind == ScaleKind::Out).count();
+        let scale_ins = scale_events.len() - scale_outs;
         let mut registry = self.agg.into_registry(batches, total_batched);
+        registry.sum_add("server_seconds", server_seconds);
+        registry.counter_add("scale_outs", scale_outs as u64);
+        registry.counter_add("scale_ins", scale_ins as u64);
         let report = PipelineReport::from_registry(&mut registry, clock_kind, wall, shards);
         Ok((report, registry))
     }

@@ -380,6 +380,7 @@ mod tests {
                 delivery: vec![crate::net::DeliveryPolicy::Arq],
                 placement: vec![crate::serve::Placement::Static],
                 servers: vec![1],
+                autoscale: vec![false],
             },
             eval: EvalSpec { devices: 2, requests: 32, rate_hz: 200.0, ..EvalSpec::default() },
             strategy: StrategyKind::Exhaustive,

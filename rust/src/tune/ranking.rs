@@ -25,8 +25,11 @@ pub struct Objectives {
     pub p99_latency_s: f64,
     /// application-layer goodput, bits/s (maximize)
     pub goodput_bps: f64,
-    /// fleet cost: servers × virtual makespan, server-seconds (minimize;
-    /// 0 for local-only schemes, which keep no server half)
+    /// fleet cost: integrated per-shard active seconds (minimize; 0 for
+    /// local-only schemes, which keep no server half). Under autoscaling
+    /// a shard is only charged for its activation→retirement lifetime —
+    /// the old `shards × makespan` formula double-billed retired shards
+    /// and made every same-fleet point cost-identical.
     pub server_seconds: f64,
 }
 
@@ -37,7 +40,7 @@ impl Objectives {
             accuracy: rep.accuracy,
             p99_latency_s: rep.p99_latency_s,
             goodput_bps: rep.goodput_bps,
-            server_seconds: rep.shards.len() as f64 * rep.wall_s,
+            server_seconds: rep.server_seconds,
         }
     }
 

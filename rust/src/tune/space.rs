@@ -14,11 +14,11 @@
 
 use crate::net::DeliveryPolicy;
 use crate::report::{json_array, JsonObj};
-use crate::serve::{Placement, ServeBuilder};
+use crate::serve::{AutoscaleConfig, Placement, ServeBuilder};
 use anyhow::{bail, ensure, Result};
 
 /// Candidate values per serving knob; the search grid is the cross
-/// product of all six axes.
+/// product of all seven axes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchSpace {
     /// dynamic-batcher deadline, microseconds
@@ -33,6 +33,10 @@ pub struct SearchSpace {
     pub placement: Vec<Placement>,
     /// remote server count
     pub servers: Vec<usize>,
+    /// whether the SLO autoscaler runs (`true` starts one shard and lets
+    /// the controller grow toward the servers-axis value as a ceiling;
+    /// engine clock only)
+    pub autoscale: Vec<bool>,
 }
 
 impl Default for SearchSpace {
@@ -46,13 +50,14 @@ impl Default for SearchSpace {
             delivery: vec![DeliveryPolicy::Arq],
             placement: vec![Placement::Static],
             servers: vec![1, 2],
+            autoscale: vec![false],
         }
     }
 }
 
 impl SearchSpace {
     /// Per-axis lengths, least-significant axis first.
-    fn radices(&self) -> [usize; 6] {
+    fn radices(&self) -> [usize; 7] {
         [
             self.batch_deadline_us.len(),
             self.packet_payload.len(),
@@ -60,13 +65,14 @@ impl SearchSpace {
             self.delivery.len(),
             self.placement.len(),
             self.servers.len(),
+            self.autoscale.len(),
         ]
     }
 
     /// Every axis must offer at least one value.
     pub fn validate(&self) -> Result<()> {
         let names =
-            ["deadlines-us", "payloads", "bits", "delivery", "placements", "servers"];
+            ["deadlines-us", "payloads", "bits", "delivery", "placements", "servers", "autoscale"];
         for (n, name) in self.radices().iter().zip(names) {
             ensure!(*n > 0, "search axis --{name} is empty");
         }
@@ -120,6 +126,7 @@ impl SearchSpace {
             delivery: self.delivery[genome[3]].clone(),
             placement: self.placement[genome[4]],
             servers: self.servers[genome[5]],
+            autoscale: self.autoscale[genome[6]],
         }
     }
 
@@ -165,6 +172,7 @@ impl SearchSpace {
                 ),
             )
             .field_raw("servers", &json_array(self.servers.iter().map(|v| v.to_string())))
+            .field_raw("autoscale", &json_array(self.autoscale.iter().map(|v| v.to_string())))
             .finish()
     }
 }
@@ -178,6 +186,7 @@ pub struct TunePoint {
     pub delivery: DeliveryPolicy,
     pub placement: Placement,
     pub servers: usize,
+    pub autoscale: bool,
 }
 
 impl TunePoint {
@@ -191,6 +200,11 @@ impl TunePoint {
             .servers(self.servers);
         if let Some(bytes) = self.packet_payload {
             b = b.packet_payload(bytes);
+        }
+        if self.autoscale {
+            // the servers axis becomes the controller's ceiling: start
+            // from one shard and let SLO pressure grow the fleet
+            b = b.servers(1).autoscale(AutoscaleConfig::new(1, self.servers));
         }
         b
     }
@@ -210,6 +224,7 @@ impl TunePoint {
         }
         obj.field_str("placement", self.placement.name())
             .field_usize("servers", self.servers)
+            .field_bool("autoscale", self.autoscale)
             .finish()
     }
 
@@ -238,6 +253,7 @@ impl TunePoint {
             delivery,
             placement: v.str_at("placement")?.parse()?,
             servers: v.usize_at("servers")?,
+            autoscale: v.get("autoscale")?.as_bool()?,
         })
     }
 }
@@ -323,13 +339,14 @@ mod tests {
             delivery: vec![DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.005 }],
             placement: vec![Placement::Static, Placement::LeastLoaded],
             servers: vec![1, 2],
+            autoscale: vec![false, true],
         }
     }
 
     #[test]
     fn mixed_radix_indexing_is_a_bijection() {
         let s = space();
-        assert_eq!(s.len(), 64);
+        assert_eq!(s.len(), 128);
         let mut keys = std::collections::HashSet::new();
         for i in 0..s.len() {
             let g = s.genome(i);
@@ -357,7 +374,7 @@ mod tests {
     #[test]
     fn point_key_roundtrips_through_the_parser() {
         let s = space();
-        for i in [0, 13, 37, 63] {
+        for i in [0, 13, 37, 63, 101, 127] {
             let p = s.point(i);
             let v = crate::json::Value::parse(&p.key()).unwrap();
             let back = TunePoint::parse(&v).unwrap();
@@ -375,12 +392,34 @@ mod tests {
             delivery: DeliveryPolicy::Anytime { deadline_s: 0.004 },
             placement: Placement::RoundRobin,
             servers: 3,
+            autoscale: false,
         };
         let cfg = p.apply(ServeBuilder::new("x")).to_config();
         assert_eq!(cfg.batch_deadline_us, 750);
         assert_eq!(cfg.net.packet_payload, Some(96));
         assert_eq!(cfg.bits, 2);
         assert_eq!(cfg.net.delivery, DeliveryPolicy::Anytime { deadline_s: 0.004 });
+    }
+
+    #[test]
+    fn autoscale_point_turns_the_servers_axis_into_a_ceiling() {
+        let s = space();
+        // flip only the autoscale digit on a 2-server point
+        let mut g = vec![0; s.axes()];
+        g[5] = 1; // servers = 2
+        let p = s.point_of(&g);
+        assert!(!p.autoscale);
+        g[6] = 1;
+        let p = s.point_of(&g);
+        assert!(p.autoscale && p.servers == 2);
+        // keys differ only in the autoscale field, so the execution log
+        // never conflates the fixed and autoscaled variants
+        assert_ne!(s.point_of(&{
+            let mut g2 = g.clone();
+            g2[6] = 0;
+            g2
+        })
+        .key(), p.key());
     }
 
     #[test]

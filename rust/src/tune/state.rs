@@ -198,6 +198,7 @@ mod tests {
             delivery: DeliveryPolicy::Anytime { deadline_s: 1.0 / 3.0 },
             placement: Placement::Static,
             servers,
+            autoscale: false,
         }
     }
 

@@ -181,6 +181,7 @@ mod tests {
             delivery: vec![DeliveryPolicy::Arq],
             placement: vec![Placement::Static, Placement::LeastLoaded],
             servers: vec![1, 2],
+            autoscale: vec![false],
         }
     }
 

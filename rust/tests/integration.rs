@@ -20,7 +20,8 @@ use agilenn::obs::{
 };
 use agilenn::runtime::{make_backend, ReferenceBackend};
 use agilenn::serve::{
-    ClockKind, ConfigError, Daemon, Placement, PipelineReport, ServeBuilder, Service, SimEngine,
+    AutoscaleConfig, ClockKind, ConfigError, Daemon, Placement, PipelineReport, ServeBuilder,
+    Service, SimEngine,
 };
 use agilenn::tune::{self, ranking, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use agilenn::workload::{Arrival, TestSet};
@@ -1043,6 +1044,125 @@ fn reference_fleet_scale_smoke() {
 }
 
 // ---------------------------------------------------------------------------
+// the autoscale control plane: determinism, bit-identity, drain-before-retire
+// ---------------------------------------------------------------------------
+
+/// Controller knobs tightened for test scale: act on a single breached
+/// tick (sustain 1), 1 s cooldown, and a 10 ms queue-p95 SLO with the
+/// scale-in watermark at 60% of it.
+fn autoscale_cfg() -> AutoscaleConfig {
+    let mut cfg = AutoscaleConfig::new(1, 4);
+    cfg.slo_queue_p95_s = 10e-3;
+    cfg.low_watermark = 0.6;
+    cfg.window_s = 2.0;
+    cfg.interval_s = 0.5;
+    cfg.cooldown_s = 1.0;
+    cfg.sustain = 1;
+    cfg
+}
+
+/// A diurnal fleet sized so the controller must act both ways: the
+/// raised cosine starts at a near-idle trough (0.2 Hz/device — queue
+/// waits pinned to the 0.5 ms batch deadline, far under the scale-in
+/// watermark), so the 2-server initial fleet drains to 1; the priced
+/// service model (1 ms + 3 ms/sample, ~320 req/s per server at batch 8)
+/// then saturates that lone server well before the 60 Hz/device peak,
+/// and the sustained queue-p95 breach forces a scale-out.
+fn autoscaled_builder() -> ServeBuilder {
+    reference_builder(Scheme::Agile)
+        .devices(32)
+        .requests(6400)
+        .arrival(Arrival::Diurnal { period_s: 16.0, base_hz: 0.2, peak_hz: 60.0, seed: 7 })
+        .clock(ClockKind::Sim)
+        .servers(2)
+        .placement(Placement::WeightedLeastLoaded)
+        .batch_deadline_us(500)
+        .service_model(1e-3, 3e-3)
+        .autoscale(autoscale_cfg())
+        .slo_p99(200e-3)
+}
+
+#[test]
+fn reference_autoscaler_scales_both_ways_and_is_bitwise_deterministic() {
+    let run = || {
+        let sink = Arc::new(RecordingSink::new());
+        let rep =
+            autoscaled_builder().trace_sink(sink.clone()).build().unwrap().run().unwrap();
+        (rep, sink.take())
+    };
+    let (a, evs_a) = run();
+    assert_eq!(a.requests, 6400);
+    assert!(a.scale_ins >= 1, "the opening trough must drain the fleet ({} scale-ins)", a.scale_ins);
+    assert!(a.scale_outs >= 1, "the diurnal peak must grow the fleet ({} scale-outs)", a.scale_outs);
+    assert!(a.server_seconds > 0.0 && a.slo_attainment > 0.0);
+    // the whole report reproduces byte for byte across runs...
+    let (b, evs_b) = run();
+    assert_eq!(a.to_ordered_json(), b.to_ordered_json(), "autoscaled report must be bitwise stable");
+    // ...and so does the applied scale-action sequence: every
+    // ScaleOut/ScaleIn trace instant's (kind, shard, time, fleet-size)
+    // tuple, times compared bitwise
+    let scales = |evs: &[TraceEvent]| -> Vec<(EventKind, u64, u64, u64)> {
+        evs.iter()
+            .filter(|e| matches!(e.kind, EventKind::ScaleOut | EventKind::ScaleIn))
+            .map(|e| (e.kind, e.id, e.t_s.to_bits(), e.value.to_bits()))
+            .collect()
+    };
+    let (sa, sb) = (scales(&evs_a), scales(&evs_b));
+    assert_eq!(sa, sb, "scale-event sequences must be bitwise identical");
+    assert_eq!(sa.len(), a.scale_outs + a.scale_ins, "every applied action leaves one instant");
+}
+
+#[test]
+fn reference_controller_off_runs_the_fixed_fleet_code_path_bit_identically() {
+    // no autoscale, no service model: the engine executes the
+    // pre-autoscale fixed-fleet path — reproducible byte for byte, with
+    // the new report fields pinned to their fixed-fleet values
+    let run = |p: Placement| {
+        fleet_builder(8, 400).servers(2).placement(p).build().unwrap().run().unwrap()
+    };
+    let (a, b) = (run(Placement::LeastLoaded), run(Placement::LeastLoaded));
+    assert_eq!(a.to_ordered_json(), b.to_ordered_json());
+    assert_eq!((a.scale_outs, a.scale_ins), (0, 0), "controller off must apply no scale actions");
+    // fixed fleets bill every shard for the whole makespan: the
+    // integrated accounting degenerates to the old shards x wall formula
+    assert_eq!(a.server_seconds.to_bits(), (a.shards.len() as f64 * a.wall_s).to_bits());
+    for s in &a.shards {
+        assert_eq!(s.active_s.to_bits(), a.wall_s.to_bits(), "shard {} active lifetime", s.server);
+    }
+    // weighted placement with the default uniform capacities is the same
+    // decision procedure as least-loaded: the whole report matches
+    let w = run(Placement::WeightedLeastLoaded);
+    assert_eq!(w.to_ordered_json(), a.to_ordered_json(), "uniform weighted == least-loaded");
+}
+
+#[test]
+fn reference_autoscaler_drains_before_retiring() {
+    // a retiring shard stops accepting placements but serves out its
+    // queue and in-service batches: every request completes (a dropped
+    // reply would fail the run with a RemoteFailure surfaced from
+    // `finish`), and the retired shard's active lifetime — and with it
+    // the integrated fleet cost — stays strictly below the makespan
+    let rep = autoscaled_builder().build().unwrap().run().unwrap();
+    assert_eq!(rep.requests, 6400, "drain-before-retire must not drop requests");
+    let offloaded: usize = rep.shards.iter().map(|s| s.requests).sum();
+    assert_eq!(offloaded, 6400, "every offload lands on exactly one shard");
+    assert!(rep.scale_ins >= 1);
+    assert!(
+        rep.shards.iter().any(|s| s.active_s < rep.wall_s),
+        "a retired shard must bill less than the makespan"
+    );
+    assert!(
+        rep.server_seconds < rep.shards.len() as f64 * rep.wall_s,
+        "integrated cost {} must undercut the old shards x makespan formula {}",
+        rep.server_seconds,
+        rep.shards.len() as f64 * rep.wall_s
+    );
+    for s in &rep.shards {
+        assert!(s.active_s >= 0.0 && s.active_s <= rep.wall_s + 1e-9, "shard {} active_s", s.server);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // the autotuner: fronts, resume, determinism, typed config errors
 // ---------------------------------------------------------------------------
 
@@ -1055,6 +1175,7 @@ fn tune_space() -> SearchSpace {
         delivery: vec![DeliveryPolicy::Arq],
         placement: vec![Placement::Static],
         servers: vec![1, 2],
+        autoscale: vec![false],
     }
 }
 
