@@ -13,12 +13,12 @@ fn run(requests: usize, devices: usize, servers: usize) -> usize {
         .backend(BackendKind::Reference)
         .scheme(Scheme::Agile)
         .clock(ClockKind::Sim)
-        .devices(devices)
-        .requests(requests)
+        .fleet(|f| f.devices = devices)
+        .fleet(|f| f.requests = requests)
         .rate_hz(20.0)
         .arrival_seed(11)
-        .servers(servers)
-        .placement(Placement::LeastLoaded)
+        .fleet(|f| f.servers = servers)
+        .fleet(|f| f.placement = Placement::LeastLoaded)
         .build()
         .unwrap()
         .run()
@@ -38,8 +38,8 @@ fn main() {
         .scheme(Scheme::Agile)
         .clock(ClockKind::Sim)
         .sim_engine(SimEngine::Threads)
-        .devices(8)
-        .requests(2_000)
+        .fleet(|f| f.devices = 8)
+        .fleet(|f| f.requests = 2_000)
         .rate_hz(20.0)
         .arrival_seed(11);
     b.run("fleet_threads/2k_reqs_8_dev", || {

@@ -4,6 +4,7 @@
 
 use crate::json::Value;
 use crate::net::NetConfig;
+use crate::serve::policy::PolicyConfig;
 use crate::simulator::{DeviceProfile, NetworkProfile};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
@@ -297,6 +298,20 @@ impl Meta {
             .ok_or_else(|| anyhow!("no {}-bit codebook for {}", bits, scheme.name()))
     }
 
+    /// Quantizer widths with an exported codebook for a scheme, ascending
+    /// (empty for schemes that do not quantize features).
+    pub fn codebook_widths(&self, scheme: Scheme) -> Vec<u32> {
+        let table = match scheme {
+            Scheme::Agile => &self.codebooks,
+            Scheme::Deepcod => &self.deepcod_codebooks,
+            Scheme::Spinn => &self.spinn_codebooks,
+            _ => return Vec::new(),
+        };
+        let mut widths: Vec<u32> = table.keys().filter_map(|k| k.parse().ok()).collect();
+        widths.sort_unstable();
+        widths
+    }
+
     /// Transmitted feature-element count for a scheme (0 = no feature tx).
     pub fn tx_elements(&self, scheme: Scheme) -> usize {
         match scheme {
@@ -356,8 +371,31 @@ impl Manifest {
     }
 }
 
+/// Dynamic-batcher knobs, grouped (the PR-10 typed-config redesign
+/// collapsed the flat `max_batch`/`batch_deadline_us` pair into this).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchConfig {
+    /// max batch per dispatch (must be an exported remote batch size)
+    pub max_batch: usize,
+    /// max queueing delay before dispatch, microseconds
+    pub deadline_us: u64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, deadline_us: 2000 }
+    }
+}
+
+impl BatchConfig {
+    /// Deadline in seconds, the unit the server loops work in.
+    pub fn deadline_s(&self) -> f64 {
+        self.deadline_us as f64 * 1e-6
+    }
+}
+
 /// Fully-resolved runtime configuration for one serving setup.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
     pub artifacts_dir: PathBuf,
     pub dataset: String,
@@ -375,10 +413,11 @@ pub struct RunConfig {
     pub bits: u32,
     /// override the trained alpha (paper §3.3 runtime re-weighting)
     pub alpha_override: Option<f64>,
-    /// dynamic batcher: max batch (must be an exported remote batch size)
-    pub max_batch: usize,
-    /// dynamic batcher: max queueing delay before dispatch
-    pub batch_deadline_us: u64,
+    /// dynamic batcher knobs
+    pub batch: BatchConfig,
+    /// per-request adaptive split/rate policy (`serve::policy`);
+    /// `None` = static operating point, the pre-policy pipeline
+    pub policy: Option<PolicyConfig>,
 }
 
 impl RunConfig {
@@ -393,13 +432,26 @@ impl RunConfig {
             net: NetConfig::default(),
             bits: 4,
             alpha_override: None,
-            max_batch: 8,
-            batch_deadline_us: 2000,
+            batch: BatchConfig::default(),
+            policy: None,
         }
     }
 
     pub fn dataset_dir(&self) -> PathBuf {
         self.artifacts_dir.join(&self.dataset)
+    }
+
+    /// Every quantizer width this run may encode at: the static `bits`
+    /// plus the policy's candidate set. Each must name an exported
+    /// codebook (validated against the manifest before serving starts).
+    pub fn candidate_widths(&self) -> Vec<u32> {
+        let mut widths = vec![self.bits];
+        if let Some(p) = &self.policy {
+            widths.extend(p.widths.iter().copied());
+        }
+        widths.sort_unstable();
+        widths.dedup();
+        widths
     }
 }
 
@@ -427,9 +479,23 @@ pub(crate) mod tests {
     fn run_config_defaults() {
         let c = RunConfig::new("artifacts", "svhns", Scheme::Agile);
         assert_eq!(c.bits, 4);
-        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.batch, BatchConfig::default());
+        assert_eq!(c.batch.max_batch, 8);
+        assert_eq!(c.batch.deadline_us, 2000);
         assert_eq!(c.backend, BackendKind::Pjrt);
+        assert!(c.policy.is_none());
+        assert_eq!(c.candidate_widths(), vec![4]);
         assert!(c.dataset_dir().ends_with("artifacts/svhns"));
+    }
+
+    #[test]
+    fn candidate_widths_merge_static_bits_with_the_policy_set() {
+        let mut c = RunConfig::new("artifacts", "svhns", Scheme::Agile);
+        c.bits = 2;
+        c.policy = Some(PolicyConfig { widths: vec![1, 2, 4], ..PolicyConfig::default() });
+        assert_eq!(c.candidate_widths(), vec![1, 2, 4]);
+        c.bits = 6;
+        assert_eq!(c.candidate_widths(), vec![1, 2, 4, 6]);
     }
 
     #[test]

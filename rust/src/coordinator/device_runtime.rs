@@ -10,7 +10,8 @@ use crate::net::DeliveryPolicy;
 use crate::runtime::{Backend, Module};
 use crate::simulator::{DeviceSim, DeviceTimings};
 use crate::tensor::Tensor;
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Result of the on-device phase for one request.
@@ -34,6 +35,10 @@ pub struct DeviceOutput {
 pub struct DeviceRuntime {
     device_exe: Arc<dyn Module>,
     tx: TxEncoder,
+    /// active quantizer width; [`DeviceRuntime::set_bits`] swaps it
+    bits: u32,
+    /// spare encoders for the adaptive policy's other candidate widths
+    alt_tx: HashMap<u32, TxEncoder>,
     sim: DeviceSim,
     nn_macs: u64,
     num_classes: usize,
@@ -46,14 +51,43 @@ impl DeviceRuntime {
         ensure!(cfg.scheme == Scheme::Agile, "DeviceRuntime is the AgileNN device path");
         let device_exe = backend.load_module(&cfg.dataset_dir(), "agile_device_b1")?;
         let codebook = Codebook::new(meta.codebook(Scheme::Agile, cfg.bits)?)?;
+        let mut alt_tx = HashMap::new();
+        for w in cfg.candidate_widths() {
+            if w != cfg.bits {
+                alt_tx.insert(w, TxEncoder::new(Codebook::new(meta.codebook(Scheme::Agile, w)?)?));
+            }
+        }
         Ok(Self {
             device_exe,
             tx: TxEncoder::new(codebook),
+            bits: cfg.bits,
+            alt_tx,
             sim: DeviceSim::new(cfg.device.clone()),
             nn_macs: meta.macs.agile_device,
             num_classes: meta.num_classes,
-            capture_symbols: matches!(cfg.net.delivery, DeliveryPolicy::Anytime { .. }),
+            // an adaptive policy with an anytime rung can switch into the
+            // packetized transport mid-run, so it forces the capture too
+            capture_symbols: matches!(cfg.net.delivery, DeliveryPolicy::Anytime { .. })
+                || cfg.policy.as_ref().is_some_and(|p| p.has_anytime_rung()),
         })
+    }
+
+    /// Switch the quantizer to another pre-built candidate width (the
+    /// adaptive policy's rate actuator). O(1): the displaced encoder
+    /// parks in the spares map under its own width.
+    pub fn set_bits(&mut self, bits: u32) -> Result<()> {
+        if bits == self.bits {
+            return Ok(());
+        }
+        let mut next = self.alt_tx.remove(&bits).ok_or_else(|| {
+            anyhow!(
+                "no {bits}-bit encoder prepared (policy candidate widths are validated at build time)"
+            )
+        })?;
+        std::mem::swap(&mut self.tx, &mut next);
+        self.alt_tx.insert(self.bits, next);
+        self.bits = bits;
+        Ok(())
     }
 
     /// Run the device phase on one image (unit batch).

@@ -31,6 +31,10 @@ pub struct RemoteServer {
     /// exported batch sizes for this scheme's remote artifact, ascending
     sizes: Vec<usize>,
     decoder: FrameDecoder,
+    /// spare feature decoders for the adaptive policy's other candidate
+    /// widths, keyed by width (empty with the policy off and for the
+    /// raw-image path)
+    alt_rx: HashMap<u32, RxDecoder>,
     input_shape: Vec<usize>, // (1, h, w, c)
     num_classes: usize,
     /// shared transmit-order permutation for packetized frames (must match
@@ -92,10 +96,19 @@ impl RemoteServer {
             FrameDecoder::Features(rx) => rx.codebook().index_of(0.0),
             FrameDecoder::RawImage => 0,
         };
+        let mut alt_rx = HashMap::new();
+        if matches!(decoder, FrameDecoder::Features(_)) {
+            for w in cfg.candidate_widths() {
+                if w != cfg.bits {
+                    alt_rx.insert(w, RxDecoder::new(Codebook::new(meta.codebook(cfg.scheme, w)?)?));
+                }
+            }
+        }
         Ok(Self {
             exes,
             sizes,
             decoder,
+            alt_rx,
             input_shape,
             num_classes: meta.num_classes,
             tx_order,
@@ -111,10 +124,23 @@ impl RemoteServer {
         *self.sizes.last().expect("at least one exported batch size")
     }
 
+    /// Feature decoder for a given frame width: the default-width decoder,
+    /// or the pre-built spare for an adaptive-policy candidate width.
+    fn rx_for<'a>(&'a self, default: &'a RxDecoder, bits: u32) -> Result<&'a RxDecoder> {
+        if bits == default.codebook().bits() {
+            return Ok(default);
+        }
+        self.alt_rx.get(&bits).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no {bits}-bit decoder prepared (policy candidate widths are validated at build time)"
+            )
+        })
+    }
+
     /// Decode one frame back into a unit-batch input tensor.
     pub fn decode(&self, frame: &Frame) -> Result<Tensor> {
         let values = match &self.decoder {
-            FrameDecoder::Features(rx) => rx.decode(frame)?,
+            FrameDecoder::Features(rx) => self.rx_for(rx, frame.bits)?.decode(frame)?,
             FrameDecoder::RawImage => {
                 let bytes = lzw::decompress(&frame.payload)?;
                 ensure!(
@@ -140,11 +166,21 @@ impl RemoteServer {
     /// shared transmit-order permutation, everything missing is imputed
     /// with the stored reference symbol.
     pub fn decode_packets(&self, packets: &[Packet], count: usize, bits: u32) -> Result<Tensor> {
+        // the imputation symbol is codebook-specific (the codeword nearest
+        // 0.0 sits at a different index per width), so resolve the decoder
+        // for *this frame's* width before reassembly
+        let (rx, fill) = match &self.decoder {
+            FrameDecoder::Features(default) => {
+                let rx = self.rx_for(default, bits)?;
+                (Some(rx), rx.codebook().index_of(0.0))
+            }
+            FrameDecoder::RawImage => (None, self.fill_symbol),
+        };
         let (symbols, _delivered) =
-            reassemble_symbols(packets, count, bits, self.fill_symbol, self.tx_order.as_deref())?;
-        let values: Vec<f32> = match &self.decoder {
-            FrameDecoder::Features(rx) => rx.dequantize_symbols(&symbols),
-            FrameDecoder::RawImage => symbols.iter().map(|&b| b as f32 / 255.0).collect(),
+            reassemble_symbols(packets, count, bits, fill, self.tx_order.as_deref())?;
+        let values: Vec<f32> = match rx {
+            Some(rx) => rx.dequantize_symbols(&symbols),
+            None => symbols.iter().map(|&b| b as f32 / 255.0).collect(),
         };
         ensure!(
             values.len() == self.input_shape.iter().product::<usize>(),

@@ -1,0 +1,232 @@
+//! Adaptive split/rate policy (`bench --figure adaptive`): static
+//! operating points vs the per-request [`crate::serve::policy`] on the
+//! loss sweep (PR 2) and the diurnal fleet trace (PR 9).
+//!
+//! Three legs:
+//!
+//! 1. loss sweep — AgileNN accuracy and p99 link latency vs packet-loss
+//!    rate for two static widths (4-bit and 1-bit, both ARQ) and the
+//!    adaptive policy starting at 4 bits over the [1, 2, 4] ladder. The
+//!    policy should track the 4-bit column on a clean channel and move
+//!    toward the 1-bit column's latency as loss grows — matching or
+//!    dominating the static points at ≥ 30% loss;
+//! 2. what the policy actually did per loss point — switches, the mean
+//!    chosen width, and the chosen-width histogram;
+//! 3. diurnal trace — the PR-9 day/night arrival cycle over a priced
+//!    fleet with a lossy channel, static vs adaptive, where the server's
+//!    advertised queue depth (not just link stats) drives the ladder.
+//!
+//! All runs share channel seeds, so every comparison is paired.
+
+use super::common::{eval_n, serve_scheme, EvalCtx};
+use super::netsweep::LOSS_SWEEP;
+use crate::config::{BackendKind, RunConfig, Scheme};
+use crate::net::GilbertElliott;
+use crate::report::{ms, pct, Table};
+use crate::serve::{
+    ClockKind, Placement, PipelineReport, PolicyConfig, Service, ServiceModel,
+};
+use crate::workload::Arrival;
+use anyhow::Result;
+
+/// Anytime packet payload cap, matching the netsweep figure: small enough
+/// that a 4-bit AgileNN frame spans ~a dozen packets, so per-packet loss
+/// (and the policy's delivered-rate signal) is well exercised.
+const PAYLOAD_CAP: usize = 64;
+
+/// Unconteded per-device arrival rate for the loss sweep (free under the
+/// sim clock).
+const SWEEP_RATE_HZ: f64 = 30.0;
+const SWEEP_DEVICES: usize = 4;
+
+/// Diurnal leg: the PR-9 day/night cycle (0.4 → 4 Hz per device over 20
+/// virtual seconds) on a priced fleet, plus a bursty 30%-loss channel.
+const DIURNAL: Arrival =
+    Arrival::Diurnal { period_s: 20.0, base_hz: 0.4, peak_hz: 4.0, seed: 16 };
+const DIURNAL_LOSS: f64 = 0.3;
+const SERVICE: (f64, f64) = (0.5e-3, 0.1e-3);
+const SLO_P99_S: f64 = 50e-3;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// (requests, devices) for the diurnal leg (env-overridable like the
+/// autoscale figure; the CI smoke runs a reduced trace).
+fn diurnal_scale(ctx: &EvalCtx) -> (usize, usize) {
+    let (n, d) = match ctx.backend_kind {
+        BackendKind::Reference => (50_000, 200),
+        BackendKind::Pjrt => (2_000, 16),
+    };
+    (env_usize("AGILENN_FLEET_N", n), env_usize("AGILENN_FLEET_DEVICES", d))
+}
+
+/// The figure's policy: the default [1, 2, 4] ladder with the anytime
+/// rung armed, no local-only fallback (every request keeps the remote
+/// path, so accuracy columns compare like for like).
+fn figure_policy() -> PolicyConfig {
+    PolicyConfig::default()
+}
+
+fn base_config(ctx: &EvalCtx, ds: &str, loss_rate: f64, bits: u32) -> RunConfig {
+    let mut cfg = ctx.run_config(ds, Scheme::Agile);
+    cfg.batch.max_batch = 1; // b1 executable everywhere: bitwise-stable logits
+    cfg.bits = bits;
+    cfg.net.loss = if loss_rate > 0.0 {
+        GilbertElliott::bursty(loss_rate, 4.0)
+    } else {
+        GilbertElliott::lossless()
+    };
+    cfg.net.packet_payload = Some(PAYLOAD_CAP);
+    cfg.net.seed = 42; // shared across rows: paired loss patterns
+    cfg
+}
+
+fn run_sweep_point(
+    ctx: &EvalCtx,
+    ds: &str,
+    loss_rate: f64,
+    bits: u32,
+    adaptive: bool,
+    n: usize,
+) -> Result<PipelineReport> {
+    let mut cfg = base_config(ctx, ds, loss_rate, bits);
+    if adaptive {
+        cfg.policy = Some(figure_policy());
+    }
+    serve_scheme(
+        ctx,
+        &cfg,
+        SWEEP_DEVICES,
+        n,
+        Arrival::Periodic { hz: SWEEP_RATE_HZ },
+        ClockKind::Sim,
+    )
+}
+
+fn run_diurnal(
+    ctx: &EvalCtx,
+    ds: &str,
+    requests: usize,
+    devices: usize,
+    adaptive: bool,
+) -> Result<PipelineReport> {
+    let mut cfg = base_config(ctx, ds, DIURNAL_LOSS, 4);
+    cfg.batch.max_batch = 8;
+    if adaptive {
+        cfg.policy = Some(figure_policy());
+    }
+    let meta = ctx.meta(ds)?;
+    let testset = ctx.testset(ds)?;
+    Service::from_parts(cfg, meta, testset, devices, requests, DIURNAL)?
+        .with_clock(ClockKind::Sim)
+        .with_servers(2, Placement::WeightedLeastLoaded)
+        .with_service_model(ServiceModel {
+            base_s: SERVICE.0,
+            per_sample_s: SERVICE.1,
+            capacities: Vec::new(),
+        })
+        .with_slo_p99(SLO_P99_S)
+        .run()
+}
+
+struct SweepRow {
+    label: &'static str,
+    bits: u32,
+    adaptive: bool,
+}
+
+const SWEEP_ROWS: [SweepRow; 3] = [
+    SweepRow { label: "static/4-bit arq", bits: 4, adaptive: false },
+    SweepRow { label: "static/1-bit arq", bits: 1, adaptive: false },
+    SweepRow { label: "adaptive", bits: 4, adaptive: true },
+];
+
+fn policy_cells(rep: &PipelineReport) -> (String, String, String) {
+    match &rep.policy {
+        None => ("-".into(), "-".into(), "-".into()),
+        Some(p) => {
+            let widths: Vec<String> =
+                p.widths.iter().map(|(w, n)| format!("{w}b x{n}")).collect();
+            (p.switches.to_string(), format!("{:.2}", p.mean_bits), widths.join(" "))
+        }
+    }
+}
+
+pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    let Some(ds) = ctx.datasets.first().cloned() else {
+        return Ok(tables);
+    };
+    let n = eval_n();
+    let headers = ["config", "0%", "10%", "30%", "50%"];
+    let mut acc = Table::new(
+        format!("Adaptive [{ds}]: AgileNN accuracy vs packet loss ({n} reqs)"),
+        &headers,
+    );
+    let mut lat = Table::new(
+        format!("Adaptive [{ds}]: p99 simulated link latency (ms)"),
+        &headers,
+    );
+    let mut ops = Table::new(
+        format!("Adaptive [{ds}]: what the policy did per loss point"),
+        &["loss", "switches", "mean_bits", "chosen widths"],
+    );
+    let mut adaptive_reps: Vec<(f64, PipelineReport)> = Vec::new();
+    for row in &SWEEP_ROWS {
+        let mut acc_cells = vec![row.label.to_string()];
+        let mut lat_cells = vec![row.label.to_string()];
+        for loss_rate in LOSS_SWEEP {
+            let rep = run_sweep_point(ctx, &ds, loss_rate, row.bits, row.adaptive, n)?;
+            acc_cells.push(pct(rep.accuracy));
+            lat_cells.push(ms(rep.p99_net_s));
+            if row.adaptive {
+                adaptive_reps.push((loss_rate, rep));
+            }
+        }
+        acc.row(acc_cells);
+        lat.row(lat_cells);
+    }
+    for (loss_rate, rep) in &adaptive_reps {
+        let (switches, mean_bits, widths) = policy_cells(rep);
+        ops.row(vec![pct(*loss_rate), switches, mean_bits, widths]);
+    }
+    tables.push(acc);
+    tables.push(lat);
+    tables.push(ops);
+
+    // diurnal leg: queue-depth pressure, not just link stats
+    let (requests, devices) = diurnal_scale(ctx);
+    let mut t = Table::new(
+        format!(
+            "Adaptive [{ds}]: diurnal trace, {requests} requests x {devices} devices \
+             (0.4-4 Hz/device over 20 s virtual, {}% bursty loss, p99 SLO {} ms)",
+            (DIURNAL_LOSS * 100.0) as u32,
+            ms(SLO_P99_S)
+        ),
+        &[
+            "config",
+            "accuracy",
+            "p99_ms",
+            "slo_attained",
+            "switches",
+            "mean_bits",
+            "chosen widths",
+        ],
+    );
+    for (label, adaptive) in [("static/4-bit arq", false), ("adaptive", true)] {
+        let rep = run_diurnal(ctx, &ds, requests, devices, adaptive)?;
+        let (switches, mean_bits, widths) = policy_cells(&rep);
+        t.row(vec![
+            label.into(),
+            pct(rep.accuracy),
+            ms(rep.p99_latency_s),
+            pct(rep.slo_attainment),
+            switches,
+            mean_bits,
+            widths,
+        ]);
+    }
+    tables.push(t);
+    Ok(tables)
+}

@@ -74,7 +74,7 @@ fn run_point(
 ) -> Result<PipelineReport> {
     let meta = ctx.meta(ds)?;
     let mut cfg = ctx.run_config(ds, Scheme::Agile);
-    cfg.max_batch = 1; // b1 executable everywhere: bitwise-stable logits
+    cfg.batch.max_batch = 1; // b1 executable everywhere: bitwise-stable logits
     let deadline = DEADLINE_FRACTION * packetized_uplink_s(&cfg, meta.tx_elements(Scheme::Agile));
     cfg.net.loss = if loss_rate > 0.0 {
         GilbertElliott::bursty(loss_rate, 4.0)

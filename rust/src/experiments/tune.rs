@@ -100,6 +100,7 @@ pub fn run(ctx: &EvalCtx) -> Result<Vec<Table>> {
             placement: vec![Placement::Static],
             servers: vec![1, 2],
             autoscale: vec![false],
+            policy: vec![false],
         },
         eval: eval_spec(ctx, &ds),
         strategy: StrategyKind::Genetic { seed: 7, population: 8, budget: 24 },

@@ -46,8 +46,7 @@
 //!
 //! let service = ServeBuilder::new("svhns")
 //!     .scheme(Scheme::Agile)   // or Deepcod / Spinn / Mcunet / EdgeOnly
-//!     .devices(4)
-//!     .requests(256)
+//!     .fleet(|f| { f.devices = 4; f.requests = 256; })
 //!     .rate_hz(30.0)           // Poisson arrivals per device
 //!     .build()
 //!     .unwrap();

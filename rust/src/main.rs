@@ -16,7 +16,8 @@ use agilenn::perfgate;
 use agilenn::report::{ms, pct};
 use agilenn::runtime::make_backend;
 use agilenn::serve::{
-    send_shutdown, AutoscaleConfig, ClockKind, Daemon, Placement, ServeBuilder, SimEngine,
+    send_shutdown, AutoscaleConfig, ClockKind, Daemon, Placement, PolicyConfig, ServeBuilder,
+    SimEngine,
 };
 use agilenn::tune::{self, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use agilenn::workload::Arrival;
@@ -130,6 +131,21 @@ COMMANDS:
              --slo-p99-ms 50     end-to-end p99 target; the report gains
                                  slo_attainment against it
              --max-batch 8 --deadline-us 2000 --bits 4 [--alpha 0.3]
+           per-request adaptive split/rate policy (quantizing schemes;
+           see docs/policy.md — policy-off runs stay bit-identical):
+             --policy            arm the adaptive policy: each device
+                                 picks quantizer width / delivery /
+                                 local-only per request from an EWMA of
+                                 its link stats + the server's advertised
+                                 queue depth
+             --policy-widths 1,2,4   candidate quantizer widths (each
+                                 must have an exported codebook)
+             --policy-sustain 2  consecutive bad/good observations that
+                                 arm a ladder step
+             --policy-cooldown 8 decisions to hold after a switch
+             --policy-local-fallback
+                                 allow the local-only rung (skip the
+                                 uplink entirely; agile/spinn only)
              --quiet   (suppress streaming per-request progress)
              --json    (print the report as deterministic JSON)
              --trace-out FILE    write a Chrome/Perfetto trace of every
@@ -173,7 +189,7 @@ COMMANDS:
              --dataset svhns --scheme agile|deepcod|spinn|mcunet|edge
              --backend pjrt|reference --index 0 --bits 4 [--alpha 0.3]
   bench    regenerate a paper figure/table (or a fleet-scale sweep)
-             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|tune|autoscale|breakdown|all
+             --figure 2|16|t2|17|18|19|20|21|22|23|24|fleet|tune|autoscale|adaptive|breakdown|all
              --backend pjrt|reference  (reference: artifact-free sweeps
                                  on the synthetic model family)
   tune     search the serving-knob space with the fleet engine as the
@@ -191,6 +207,9 @@ COMMANDS:
              --autoscale false       false,true — true evaluates the point
                                      under the SLO autoscaler (one initial
                                      server, servers axis as the ceiling)
+             --policy false          false,true — true arms the default
+                                     adaptive split/rate policy at the
+                                     point's bit width
            evaluation (shared by every point; defaults are the fast
            deterministic path — reference backend on the sim clock's
            event engine):
@@ -320,6 +339,7 @@ fn main() -> Result<()> {
                 placement: tune::space::parse_placements(&args.get_str("placements", "static"))?,
                 servers: tune::space::parse_list(&args.get_str("servers", "1,2"))?,
                 autoscale: tune::space::parse_list(&args.get_str("autoscale", "false"))?,
+                policy: tune::space::parse_list(&args.get_str("policy", "false"))?,
             };
             let eval = EvalSpec {
                 artifacts_dir: Some(artifacts),
@@ -505,20 +525,38 @@ impl ServeCli {
         // --json owns stdout: progress lines would corrupt the
         // machine-readable output, so it implies --quiet
         let quiet: bool = args.get("quiet", false)? || json_out;
+        let servers: usize = args.get("servers", 1)?;
+        let placement: Placement = args.get("placement", Placement::Static)?;
+        let max_batch: usize = args.get("max-batch", 8)?;
+        let deadline_us: u64 = args.get("deadline-us", 2000)?;
         let mut builder = ServeBuilder::new(&dataset)
             .artifacts_dir(artifacts)
             .scheme(scheme)
             .backend(args.get("backend", BackendKind::Pjrt)?)
-            .devices(devices)
-            .requests(requests)
+            .fleet(|f| {
+                f.devices = devices;
+                f.requests = requests;
+                f.servers = servers;
+                f.placement = placement;
+            })
             .rate_hz(args.get("rate-hz", 30.0)?)
             .clock(args.get("clock", ClockKind::Wall)?)
-            .servers(args.get("servers", 1)?)
-            .placement(args.get("placement", Placement::Static)?)
             .sim_engine(args.get("sim-engine", SimEngine::Event)?)
-            .max_batch(args.get("max-batch", 8)?)
-            .batch_deadline_us(args.get("deadline-us", 2000)?)
+            .batch(|b| {
+                b.max_batch = max_batch;
+                b.deadline_us = deadline_us;
+            })
             .bits(args.get("bits", 4)?);
+        if args.get("policy", false)? {
+            let mut policy = PolicyConfig::default();
+            if let Some(widths) = args.flags.get("policy-widths") {
+                policy.widths = tune::space::parse_list(widths)?;
+            }
+            policy.sustain = args.get("policy-sustain", policy.sustain)?;
+            policy.cooldown = args.get("policy-cooldown", policy.cooldown)?;
+            policy.local_fallback = args.get("policy-local-fallback", policy.local_fallback)?;
+            builder = builder.policy(policy);
+        }
         if let Some(alpha) = args.get_opt_f64("alpha")? {
             builder = builder.alpha(alpha);
         }
@@ -535,10 +573,14 @@ impl ServeCli {
         let base_us: f64 = args.get("service-base-us", 0.0)?;
         let per_sample_us: f64 = args.get("service-per-sample-us", 0.0)?;
         if base_us != 0.0 || per_sample_us != 0.0 {
-            builder = builder.service_model(base_us * 1e-6, per_sample_us * 1e-6);
+            builder = builder.fleet(|f| {
+                f.service.base_s = base_us * 1e-6;
+                f.service.per_sample_s = per_sample_us * 1e-6;
+            });
         }
         if let Some(caps) = args.flags.get("capacities") {
-            builder = builder.capacities(tune::space::parse_list(caps)?);
+            let weights: Vec<f64> = tune::space::parse_list(caps)?;
+            builder = builder.fleet(|f| f.service.capacities = weights);
         }
         if let Some(range) = args.flags.get("autoscale") {
             let parts = tune::space::parse_list::<usize>(range)?;
@@ -551,37 +593,42 @@ impl ServeCli {
             scale.interval_s = args.get("scale-interval-s", scale.interval_s)?;
             scale.cooldown_s = args.get("scale-cooldown-s", scale.cooldown_s)?;
             scale.sustain = args.get("scale-sustain", scale.sustain)?;
-            builder = builder.autoscale(scale);
+            builder = builder.fleet(|f| f.autoscale = Some(scale));
         }
         if let Some(slo_ms) = args.get_opt_f64("slo-p99-ms")? {
-            builder = builder.slo_p99(slo_ms * 1e-3);
+            builder = builder.fleet(|f| f.slo_p99_s = slo_ms * 1e-3);
         }
         if let Some(loss) = args.get_opt_f64("loss")? {
             let burst: f64 = args.get("burst", 1.0)?;
-            builder = builder.loss(if burst > 1.0 {
+            let process = if burst > 1.0 {
                 GilbertElliott::bursty(loss, burst)
             } else {
                 GilbertElliott::uniform(loss)
-            });
+            };
+            builder = builder.net(|n| n.loss = process);
         }
-        let delivery = args.get_str("delivery", "arq");
-        match delivery.as_str() {
-            "arq" => builder = builder.delivery(DeliveryPolicy::Arq),
+        let delivery = match args.get_str("delivery", "arq").as_str() {
+            "arq" => DeliveryPolicy::Arq,
             "anytime" => {
                 let deadline_ms: f64 = args.get("net-deadline-ms", 5.0)?;
-                builder =
-                    builder.delivery(DeliveryPolicy::Anytime { deadline_s: deadline_ms * 1e-3 });
+                DeliveryPolicy::Anytime { deadline_s: deadline_ms * 1e-3 }
             }
             other => bail!("unknown --delivery {other:?} (arq|anytime)"),
-        }
+        };
         let order: PacketOrder = args.get("order", PacketOrder::Importance)?;
-        builder = builder.packet_order(order).net_seed(args.get("net-seed", 42u64)?);
+        let net_seed: u64 = args.get("net-seed", 42u64)?;
+        builder = builder.net(|n| {
+            n.delivery = delivery;
+            n.order = order;
+            n.seed = net_seed;
+        });
         if let Some(payload) = args.flags.get("packet-payload") {
-            builder = builder.packet_payload(payload.parse()?);
+            let bytes: usize = payload.parse()?;
+            builder = builder.net(|n| n.packet_payload = Some(bytes));
         }
         if let Some(path) = args.flags.get("trace") {
             let trace = BandwidthTrace::from_file(std::path::Path::new(path))?;
-            builder = builder.bandwidth_trace(trace);
+            builder = builder.net(|n| n.trace = Some(trace));
         }
         let trace_out = args.flags.get("trace-out").cloned();
         let metrics_out = args.flags.get("metrics-out").cloned();
@@ -697,6 +744,17 @@ impl ServeCli {
                 "  SLO            : {} of requests within p99 target {} ms",
                 pct(rep.slo_attainment),
                 ms(rep.slo_p99_s)
+            );
+        }
+        if let Some(p) = &rep.policy {
+            let widths: Vec<String> =
+                p.widths.iter().map(|(w, n)| format!("{w}b x{n}")).collect();
+            println!(
+                "  policy         : {} switches, {} local-only, mean {:.2} bits ({})",
+                p.switches,
+                p.local_only,
+                p.mean_bits,
+                widths.join(", ")
             );
         }
         if rep.scale_outs + rep.scale_ins > 0 {

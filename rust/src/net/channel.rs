@@ -40,7 +40,7 @@ impl Rng {
 /// and a Bad (burst) state with high loss, with per-packet state
 /// transitions. Captures the bursty losses of real wireless links that a
 /// single Bernoulli rate cannot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GilbertElliott {
     /// P(Good -> Bad) after each packet
     pub p_good_to_bad: f64,
@@ -103,7 +103,7 @@ impl GilbertElliott {
 /// Piecewise-constant bandwidth over time, replayed in a loop — e.g. a
 /// measured walk-through-a-building trace. Timestamps are seconds from the
 /// start of the run; the trace wraps at its total duration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct BandwidthTrace {
     /// (duration_s, bandwidth_bps) segments, in order
     segments: Vec<(f64, f64)>,

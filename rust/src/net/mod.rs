@@ -46,7 +46,7 @@ pub use wire::{Hello, WireError, WireMsg, WIRE_MAGIC, WIRE_VERSION};
 /// Channel-facing knobs of one serving run (lives in `RunConfig.net`; the
 /// defaults are the ideal link, making the pre-channel behavior the
 /// zero-loss special case).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetConfig {
     /// packet-loss process (default: lossless)
     pub loss: GilbertElliott,

@@ -27,7 +27,17 @@ use std::io::{Read, Write};
 pub const WIRE_MAGIC: u8 = 0xA6;
 /// Protocol version; peers reject anything else with
 /// [`WireError::VersionMismatch`].
-pub const WIRE_VERSION: u8 = 1;
+///
+/// **v2** — the `Reply` queue-depth advertisement is now stamped by the
+/// server loop at the instant it sends each reply (it was previously
+/// re-read by the forwarding thread, so clients could act on the queue
+/// state of a different moment). The byte layout of every message is
+/// unchanged — only the semantics of `Reply.queue_depth` tightened — but
+/// v1 and v2 peers make different freshness assumptions, so the version
+/// byte fences them apart. Golden wire captures need no re-bless: header
+/// byte *counts* are unchanged and goldens don't pin the version byte's
+/// value (see `tests/golden/README.md`).
+pub const WIRE_VERSION: u8 = 2;
 /// Envelope header: magic + version + message type + reserved + payload
 /// length (u32).
 pub const ENVELOPE_HEADER_BYTES: usize = 8;

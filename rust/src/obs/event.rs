@@ -96,6 +96,10 @@ pub enum EventKind {
     /// Instant, server lane: the autoscale controller retired this shard
     /// after drain (value = active server count after the event).
     ScaleIn,
+    /// Instant, device lane: the adaptive policy stepped its ladder —
+    /// the request where the new operating point first applies (value =
+    /// new quantizer width in bits, 0 for the local-only fallback).
+    PolicySwitch,
     /// Span, tuner lane: one fresh configuration evaluation.
     TuneEval,
     /// Instant, tuner lane: an evaluation answered from the resume log.
@@ -122,6 +126,7 @@ impl EventKind {
             EventKind::Done => "done",
             EventKind::ScaleOut => "scale_out",
             EventKind::ScaleIn => "scale_in",
+            EventKind::PolicySwitch => "policy_switch",
             EventKind::TuneEval => "tune_eval",
             EventKind::TuneCached => "tune_cached",
             EventKind::TuneInfeasible => "tune_infeasible",

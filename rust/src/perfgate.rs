@@ -207,12 +207,14 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
             .backend(BackendKind::Reference)
             .scheme(Scheme::Agile)
             .clock(ClockKind::Sim)
-            .devices(cfg.devices)
-            .requests(cfg.requests)
+            .fleet(|f| {
+                f.devices = cfg.devices;
+                f.requests = cfg.requests;
+                f.servers = cfg.servers;
+                f.placement = Placement::LeastLoaded;
+            })
             .rate_hz(20.0)
             .arrival_seed(11)
-            .servers(cfg.servers)
-            .placement(Placement::LeastLoaded)
             .trace_sink(Arc::new(NoopSink))
             .build()?
             .run()
@@ -370,12 +372,14 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
             .backend(BackendKind::Reference)
             .scheme(Scheme::Agile)
             .clock(ClockKind::Sim)
-            .devices(cfg.devices)
-            .requests(cfg.requests)
+            .fleet(|f| {
+                f.devices = cfg.devices;
+                f.requests = cfg.requests;
+                f.servers = cfg.servers;
+                f.placement = Placement::LeastLoaded;
+            })
             .rate_hz(20.0)
             .arrival_seed(11)
-            .servers(cfg.servers)
-            .placement(Placement::LeastLoaded)
             .trace_sink(sink.clone())
             .build()?
             .run()
@@ -404,15 +408,18 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
             .backend(BackendKind::Reference)
             .scheme(Scheme::Agile)
             .clock(ClockKind::Sim)
-            .devices(cfg.devices)
-            .requests(cfg.requests)
+            .fleet(|f| {
+                f.devices = cfg.devices;
+                f.requests = cfg.requests;
+                f.servers = 2;
+                f.placement = Placement::WeightedLeastLoaded;
+                f.service.base_s = 0.5e-3;
+                f.service.per_sample_s = 0.1e-3;
+                f.autoscale = Some(AutoscaleConfig::new(1, 8));
+                f.slo_p99_s = 50e-3;
+            })
             .arrival(Arrival::Diurnal { period_s: 20.0, base_hz: 0.4, peak_hz: 4.0, seed: 16 })
             .arrival_seed(11)
-            .servers(2)
-            .placement(Placement::WeightedLeastLoaded)
-            .service_model(0.5e-3, 0.1e-3)
-            .autoscale(AutoscaleConfig::new(1, 8))
-            .slo_p99(50e-3)
             .build()?
             .run()
     })?;
@@ -427,6 +434,49 @@ pub fn measure(cfg: &GateConfig, mut progress: impl FnMut(&PerfEntry)) -> Result
             ("scale_outs".into(), rep.scale_outs as f64),
             ("scale_ins".into(), rep.scale_ins as f64),
             ("slo_attainment".into(), rep.slo_attainment),
+        ],
+    };
+    progress(&entry);
+    entries.push(entry);
+
+    // 8) the adaptive policy: the headline sweep over a bursty lossy
+    //    channel with the per-request policy armed — every arrival pays a
+    //    policy decision, every completion an EWMA observation, and
+    //    multi-width encode/decode memoization replaces the single-width
+    //    Vec memos. Gated separately so the policy hot path cannot hide
+    //    inside the fleet_engine tolerance.
+    let (rep, wall) = timed(handicap, || {
+        ServeBuilder::new(SYNTHETIC_DATASET)
+            .backend(BackendKind::Reference)
+            .scheme(Scheme::Agile)
+            .clock(ClockKind::Sim)
+            .fleet(|f| {
+                f.devices = cfg.devices;
+                f.requests = cfg.requests;
+                f.servers = cfg.servers;
+                f.placement = Placement::LeastLoaded;
+            })
+            .rate_hz(20.0)
+            .arrival_seed(11)
+            .net(|n| {
+                n.loss = GilbertElliott::bursty(0.3, 4.0);
+                n.packet_payload = Some(64);
+                n.seed = 42;
+            })
+            .policy(crate::serve::PolicyConfig::default())
+            .build()?
+            .run()
+    })?;
+    ensure!(rep.requests == cfg.requests, "adaptive sweep served {} requests", rep.requests);
+    let pol = rep.policy.as_ref().map(|p| (p.switches, p.mean_bits)).unwrap_or((0, 0.0));
+    let entry = PerfEntry {
+        name: "adaptive_policy".into(),
+        throughput: cfg.requests as f64 / wall,
+        wall_s: wall,
+        info: vec![
+            ("sim_wall_s".into(), rep.wall_s),
+            ("policy_switches".into(), pol.0 as f64),
+            ("policy_mean_bits".into(), pol.1),
         ],
     };
     progress(&entry);

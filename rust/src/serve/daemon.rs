@@ -77,7 +77,7 @@ impl Daemon {
         let server = make_server_side(backend.as_ref(), &cfg, &meta)?.ok_or_else(|| {
             anyhow!("{} runs entirely on-device; there is no server half to host", cfg.scheme.name())
         })?;
-        let max_batch = cfg.max_batch.min(server.max_batch());
+        let max_batch = cfg.batch.max_batch.min(server.max_batch());
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding serving daemon listener on {addr}"))?;
         Ok(Self { listener, cfg, meta, tracer, server, max_batch, io_timeout: None })
@@ -109,7 +109,7 @@ impl Daemon {
     pub fn run(self) -> Result<DaemonSummary> {
         let t0 = Instant::now();
         let io_timeout = self.io_timeout;
-        let deadline_s = self.cfg.batch_deadline_us as f64 * 1e-6;
+        let deadline_s = self.cfg.batch.deadline_s();
         let clock = Clock::wall();
         let depth = Arc::new(AtomicUsize::new(0));
         let (tx, rx) = channel::<OffloadMsg>();
@@ -147,12 +147,10 @@ impl Daemon {
             };
             connections += 1;
             let tx = tx.clone();
-            let depth = depth.clone();
             let stop = stop.clone();
             let world = world.clone();
             handlers.push(std::thread::spawn(move || {
-                if let Err(e) = handle_connection(stream, io_timeout, &world, &tx, &depth, &stop, local)
-                {
+                if let Err(e) = handle_connection(stream, io_timeout, &world, &tx, &stop, local) {
                     eprintln!("connection handler: {e:#}");
                 }
             }));
@@ -198,7 +196,6 @@ fn handle_connection(
     io_timeout: Option<Duration>,
     world: &WorldKey,
     tx: &Sender<OffloadMsg>,
-    depth: &AtomicUsize,
     stop: &AtomicBool,
     local: SocketAddr,
 ) -> Result<()> {
@@ -257,12 +254,18 @@ fn handle_connection(
         let (rtx, rrx) = channel();
         tx.send(OffloadMsg { id, body, reply: rtx })
             .map_err(|_| anyhow!("server loop gone while serving request {id}"))?;
-        let result = rrx
+        // forward the depth the server loop stamped when it *sent* this
+        // reply — re-reading the shared counter here could advertise the
+        // queue state of a different moment (wire v2's stale-depth fix)
+        let reply = rrx
             .recv()
-            .map_err(|_| anyhow!("server loop dropped the reply for request {id}"))?
-            .map_err(|e| e.0);
-        WireMsg::Reply { id, queue_depth: depth.load(Ordering::Relaxed) as u32, result }
-            .write_to(&mut writer)?;
+            .map_err(|_| anyhow!("server loop dropped the reply for request {id}"))?;
+        WireMsg::Reply {
+            id,
+            queue_depth: reply.queue_depth,
+            result: reply.result.map_err(|e| e.0),
+        }
+        .write_to(&mut writer)?;
         writer.flush()?;
     }
     Ok(())

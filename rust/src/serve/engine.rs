@@ -74,13 +74,14 @@ use crate::serve::scheme::{
     Fuser, LocalResult, ServerSide,
 };
 use crate::serve::fabric::UplinkBody;
+use crate::serve::policy::{DevicePolicy, PolicyOutcome};
 use crate::serve::service::{device_schedule, ServedOutcome, ShardAgg};
 use crate::simulator::{DeviceSim, NetworkSim};
 use crate::tensor::Tensor;
 use crate::workload::{Arrival, TestSet};
 use anyhow::{anyhow, ensure, Context, Result};
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 use std::str::FromStr;
 use std::sync::mpsc::Sender;
 
@@ -363,6 +364,8 @@ struct Awaiting {
     /// virtual instant the offload left the device (= the threaded
     /// pipeline's channel-send time)
     t_send: f64,
+    /// what the adaptive policy chose for this request (`None` when off)
+    policy: Option<PolicyOutcome>,
 }
 
 struct DeviceState {
@@ -383,6 +386,9 @@ struct InService {
     batch: Vec<crate::coordinator::batcher::Pending<(usize, Tensor)>>,
     rows: Vec<Vec<f32>>,
     t_finish: f64,
+    /// queue depth at the dispatch instant — the advertisement the
+    /// threaded server stamps on every reply, fed to device policies
+    advert_depth: usize,
 }
 
 struct ServerState {
@@ -445,6 +451,19 @@ struct Fleet<'a> {
     /// per-sample memoized whole-frame decodes (ARQ path only; a partial
     /// packet set depends on the channel state and is never cached)
     decoded: Vec<Option<Tensor>>,
+    /// adaptive-policy state machines, one per device; empty with the
+    /// policy off, which keeps every branch below on the pre-policy
+    /// code path (the bit-identity contract)
+    policies: Vec<DevicePolicy>,
+    /// last width each device's encoder was set to (policy on only):
+    /// local-only requests encode at the previous uplink's width, exactly
+    /// like the threaded device whose encoder keeps its last `set_bits`
+    cur_bits: Vec<u32>,
+    /// encode memo keyed by (sample, width) — the policy-on counterpart
+    /// of `encoded`: the encode is pure per (sample, width)
+    encoded_multi: HashMap<(usize, u32), LocalResult>,
+    /// whole-frame decode memo keyed by (sample, width), policy on only
+    decoded_multi: HashMap<(usize, u32), Tensor>,
     /// completion timestamp of the latest finished request — the virtual
     /// makespan, matching the threaded sim clock's final `now()`
     t_end: f64,
@@ -486,8 +505,8 @@ pub(crate) fn run_fleet(
     for i in 0..slots {
         match make_server_side(backend, cfg, meta)? {
             Some(side) => {
-                let max_batch = cfg.max_batch.min(side.max_batch());
-                let deadline_s = cfg.batch_deadline_us as f64 * 1e-6;
+                let max_batch = cfg.batch.max_batch.min(side.max_batch());
+                let deadline_s = cfg.batch.deadline_s();
                 let active = i < spec.servers;
                 let mut lifetime = ShardLifetime::default();
                 if active {
@@ -532,6 +551,13 @@ pub(crate) fn run_fleet(
         num_classes: meta.num_classes,
         encoded: (0..testset.len()).map(|_| None).collect(),
         decoded: (0..testset.len()).map(|_| None).collect(),
+        policies: match &cfg.policy {
+            Some(p) => (0..spec.devices).map(|_| DevicePolicy::new(p.clone())).collect(),
+            None => Vec::new(),
+        },
+        cur_bits: vec![cfg.bits; spec.devices],
+        encoded_multi: HashMap::new(),
+        decoded_multi: HashMap::new(),
         t_end: 0.0,
         stopped: false,
         service: spec.service.clone(),
@@ -619,6 +645,21 @@ impl Fleet<'_> {
         Ok(self.encoded[idx].as_ref().expect("just memoized").clone())
     }
 
+    /// Memoized device encode at one candidate width (adaptive policy on).
+    /// The encode is pure per (sample, width), so each pair pays the
+    /// NN/quantize/LZW cost once; the shared device half is re-keyed only
+    /// on a memo miss.
+    fn encode_at(&mut self, idx: usize, bits: u32) -> Result<LocalResult> {
+        let key = (idx, bits);
+        if !self.encoded_multi.contains_key(&key) {
+            self.device_side.set_bits(bits)?;
+            let img = self.testset.image(idx)?;
+            let local = self.device_side.encode(&img)?;
+            self.encoded_multi.insert(key, local);
+        }
+        Ok(self.encoded_multi.get(&key).expect("just memoized").clone())
+    }
+
     /// The device phase of one request: the arithmetic of the threaded
     /// `device_loop`, expression for expression. The event fires at
     /// `max(t_free, times[j])` — the device's virtual cursor after arrival
@@ -631,8 +672,41 @@ impl Fleet<'_> {
         let lane = Lane::Device(d as u32);
         let rid = id as u64;
         self.tracer.instant(lane, obs::EventKind::Arrival, rid, t_arrival, 0.0);
+        // consult the adaptive policy before encoding — the threaded
+        // `device_loop` expression for expression: the encoder width only
+        // moves on non-local decisions, local-only requests reuse the
+        // previous uplink's width
+        let decision = if self.policies.is_empty() {
+            None
+        } else {
+            let dec = self.policies[d].decide();
+            if dec.switched {
+                let arg = if dec.local_only { 0.0 } else { dec.bits as f64 };
+                self.tracer.instant(lane, obs::EventKind::PolicySwitch, rid, t_arrival, arg);
+            }
+            if !dec.local_only {
+                self.cur_bits[d] = dec.bits;
+            }
+            Some(dec)
+        };
         let idx = id % self.testset.len();
-        let mut local = self.encode(idx)?;
+        let mut local = match &decision {
+            None => self.encode(idx)?,
+            Some(_) => self.encode_at(idx, self.cur_bits[d])?,
+        };
+        if decision.as_ref().is_some_and(|dec| dec.local_only) {
+            // resolve on device: drop the uplink and its pricing — a
+            // request the policy keeps local never quantizes/compresses
+            local.frame = None;
+            local.symbols = None;
+            local.timings.quantize_s = 0.0;
+            local.timings.compress_s = 0.0;
+        }
+        let policy_out = decision.as_ref().map(|dec| PolicyOutcome {
+            bits: dec.bits,
+            switched: dec.switched,
+            local_only: dec.local_only,
+        });
         let timings_total = local.timings.total_s();
         match local.frame.take() {
             Some(frame) => {
@@ -653,13 +727,20 @@ impl Fleet<'_> {
                     self.tracer
                         .span(lane, obs::EventKind::RadioWait, rid, compute_done, tx_start, 0.0);
                 }
-                let (body, mut stats) = match (&self.cfg.net.delivery, symbols) {
+                // the adaptive policy overrides the configured delivery
+                // for this request; without a policy this is
+                // `&cfg.net.delivery` and the match behaves as before
+                let delivery = match &decision {
+                    Some(dec) => &dec.delivery,
+                    None => &self.cfg.net.delivery,
+                };
+                let (body, mut stats) = match (delivery, symbols) {
                     (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
                         let bits = frame.bits;
                         let pkts = self.packetizer.packetize(id as u64, &symbols, bits)?;
                         let (arrived, stats) = transmit_packets_traced(
                             &mut st.chan,
-                            &self.cfg.net.delivery,
+                            delivery,
                             &pkts,
                             tx_start,
                             &self.tracer,
@@ -705,6 +786,7 @@ impl Fleet<'_> {
                     tx_bytes,
                     downlink_s,
                     t_send,
+                    policy: policy_out,
                 });
                 self.schedule(t_send, EventKind::Offload { device: d });
             }
@@ -712,7 +794,7 @@ impl Fleet<'_> {
                 // resolved on device: the local timeline alone
                 let t_done = t + timings_total;
                 self.tracer.span(lane, obs::EventKind::Encode, rid, t, t_done, 0.0);
-                self.emit(d, j, id, &local, None, 0, 0.0, None, t_done)?;
+                self.emit(d, j, id, &local, None, 0, 0.0, None, policy_out, t_done)?;
             }
         }
         Ok(())
@@ -741,14 +823,28 @@ impl Fleet<'_> {
         let idx = id % self.testset.len();
         let feats = match &body {
             UplinkBody::Whole(frame) => {
-                if self.decoded[idx].is_none() {
-                    let feats = self.servers[shard]
-                        .side
-                        .decode(frame)
-                        .with_context(|| format!("decoding request {id}"))?;
-                    self.decoded[idx] = Some(feats);
+                if self.policies.is_empty() {
+                    if self.decoded[idx].is_none() {
+                        let feats = self.servers[shard]
+                            .side
+                            .decode(frame)
+                            .with_context(|| format!("decoding request {id}"))?;
+                        self.decoded[idx] = Some(feats);
+                    }
+                    self.decoded[idx].as_ref().expect("just decoded").clone()
+                } else {
+                    // with the policy on, the decode depends on the frame's
+                    // width too — memo keyed by (sample, width)
+                    let key = (idx, frame.bits);
+                    if !self.decoded_multi.contains_key(&key) {
+                        let feats = self.servers[shard]
+                            .side
+                            .decode(frame)
+                            .with_context(|| format!("decoding request {id}"))?;
+                        self.decoded_multi.insert(key, feats);
+                    }
+                    self.decoded_multi.get(&key).expect("just memoized").clone()
                 }
-                self.decoded[idx].as_ref().expect("just decoded").clone()
             }
             UplinkBody::Packets { packets, count, bits } => self.servers[shard]
                 .side
@@ -788,7 +884,7 @@ impl Fleet<'_> {
                 break;
             }
             let b = self.servers[shard].in_service.pop_front().expect("front exists");
-            self.complete(b.batch, b.rows, b.t_finish)?;
+            self.complete(b.batch, b.rows, b.t_finish, b.advert_depth)?;
         }
         self.maybe_retire(shard, t);
         Ok(())
@@ -811,6 +907,10 @@ impl Fleet<'_> {
             .side
             .infer_batch(&feats)
             .with_context(|| format!("remote batch of {} failed on server {shard}", batch.len()))?;
+        // queue depth after this batch was pulled, at the dispatch instant
+        // — exactly what the threaded server stamps on every reply of the
+        // batch, the advertisement device policies observe
+        let advert_depth = self.servers[shard].queue.len();
         let start = t.max(self.servers[shard].busy_until);
         let service_s = self.service.batch_service_s(shard, batch.len());
         let t_finish = start + service_s;
@@ -832,10 +932,12 @@ impl Fleet<'_> {
         let seq = agg.batches as u64;
         self.tracer.instant(lane, obs::EventKind::BatchDispatch, seq, t, batch.len() as f64);
         if t_finish <= t {
-            self.complete(batch, rows, t)
+            self.complete(batch, rows, t, advert_depth)
         } else {
             self.servers[shard].busy_until = t_finish;
-            self.servers[shard].in_service.push_back(InService { batch, rows, t_finish });
+            self.servers[shard]
+                .in_service
+                .push_back(InService { batch, rows, t_finish, advert_depth });
             self.schedule(t_finish, EventKind::BatchDone { shard });
             Ok(())
         }
@@ -847,6 +949,7 @@ impl Fleet<'_> {
         batch: Vec<crate::coordinator::batcher::Pending<(usize, Tensor)>>,
         rows: Vec<Vec<f32>>,
         t_finish: f64,
+        advert_depth: usize,
     ) -> Result<()> {
         for (p, row) in batch.into_iter().zip(rows) {
             let d = p.payload.0;
@@ -860,6 +963,11 @@ impl Fleet<'_> {
             let rid = aw.id as u64;
             self.tracer.span(dlane, obs::EventKind::Remote, rid, aw.t_send, t_finish, 0.0);
             self.tracer.span(dlane, obs::EventKind::Downlink, rid, t_finish, t_done, 0.0);
+            // feed the EWMAs: this exchange's link stats plus the queue
+            // depth the dispatching shard advertised on the reply
+            if let Some(pol) = self.policies.get_mut(d) {
+                pol.observe(&aw.link.stats, advert_depth);
+            }
             self.emit(
                 d,
                 aw.j,
@@ -869,6 +977,7 @@ impl Fleet<'_> {
                 aw.tx_bytes,
                 remote_s,
                 Some(&aw.link),
+                aw.policy,
                 t_done,
             )?;
         }
@@ -961,6 +1070,7 @@ impl Fleet<'_> {
         tx_bytes: usize,
         remote_s: f64,
         link: Option<&LinkOutcome>,
+        policy: Option<PolicyOutcome>,
         t_done: f64,
     ) -> Result<()> {
         let idx = id % self.testset.len();
@@ -985,6 +1095,7 @@ impl Fleet<'_> {
             // sojourn from the scheduled arrival, the sim-clock convention
             wall_s: t_done - self.devices[d].times[j],
             outcome,
+            policy,
         };
         self.t_end = self.t_end.max(t_done);
         self.remaining = self.remaining.saturating_sub(1);

@@ -45,8 +45,17 @@ pub enum UplinkBody {
     Packets { packets: Vec<Packet>, count: usize, bits: u32 },
 }
 
-/// What a server half sends back per offload.
-pub(crate) type Reply = std::result::Result<Vec<f32>, RemoteFailure>;
+/// What a server half sends back per offload: the remote logits (or the
+/// remote failure) plus a queue-depth advertisement stamped by the server
+/// loop *at the instant it sent this reply* — not re-read later by
+/// whatever thread forwards it, which could observe a depth from a
+/// different moment entirely (the stale-advertisement bug wire v2 fixes;
+/// see `docs/daemon.md`).
+pub(crate) struct Reply {
+    pub(crate) result: std::result::Result<Vec<f32>, RemoteFailure>,
+    /// batch-queue depth when the server sent this reply
+    pub(crate) queue_depth: u32,
+}
 
 /// One in-flight offload awaiting its remote logits.
 pub(crate) struct OffloadMsg {
@@ -101,10 +110,13 @@ impl Transport for ChannelTransport {
         self.clock.notify();
         recv_reply(&self.clock, &reply_rx)
             .ok_or_else(|| anyhow!("reply dropped for request {id}"))?
+            .result
             .map_err(|e| anyhow!("remote inference failed for request {id}: {}", e.0))
     }
 
     fn queue_depth(&self) -> usize {
+        // in-process the live shared counter is at least as fresh as any
+        // per-reply stamp, so the advertisement is read straight from it
         self.depth.load(Ordering::Relaxed)
     }
 }
@@ -224,7 +236,7 @@ mod tests {
         let depth = Arc::new(AtomicUsize::new(0));
         let server = std::thread::spawn(move || {
             while let Ok(m) = rx.recv() {
-                let _ = m.reply.send(Ok(vec![m.id as f32]));
+                let _ = m.reply.send(Reply { result: Ok(vec![m.id as f32]), queue_depth: 5 });
             }
         });
         let mut t = ChannelTransport::new(tx, Clock::wall(), depth.clone());

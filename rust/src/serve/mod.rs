@@ -13,8 +13,7 @@
 //!
 //! let report = ServeBuilder::new("svhns")
 //!     .scheme(Scheme::Deepcod)   // any of the five schemes
-//!     .devices(4)
-//!     .requests(256)
+//!     .fleet(|f| { f.devices = 4; f.requests = 256; })
 //!     .rate_hz(30.0)
 //!     .build().unwrap()
 //!     .run().unwrap();
@@ -65,6 +64,14 @@
 //! loopback daemon run reproduces every seed-deterministic report field
 //! of an in-process run bit for bit (see `docs/daemon.md`).
 //!
+//! Adaptive offloading ([`policy`]): `ServeBuilder::policy` arms a
+//! deterministic per-request policy on each device half that picks the
+//! quantizer bit-width, degrades ARQ to deadline-bounded anytime
+//! delivery, or falls back to the device-local head entirely, driven by
+//! an EWMA of recent link stats plus the server's queue-depth
+//! advertisements, with hysteresis and cooldown. Policy-off runs are
+//! bit-identical to the static pipeline. See `docs/policy.md`.
+//!
 //! Observability ([`crate::obs`]): `ServeBuilder::trace_sink` attaches a
 //! [`TraceSink`](crate::obs::TraceSink) that receives every
 //! request-lifecycle span (arrival → encode → radio wait → per-packet
@@ -80,6 +87,7 @@ pub mod clock;
 pub mod daemon;
 pub mod engine;
 pub mod fabric;
+pub mod policy;
 pub mod scheme;
 pub mod service;
 
@@ -88,12 +96,13 @@ pub use clock::{Clock, ClockKind};
 pub use daemon::{send_shutdown, Daemon, DaemonSummary};
 pub use engine::{Placement, SimEngine};
 pub use fabric::{TcpTransport, Transport, UplinkBody};
+pub use policy::{Decision, DevicePolicy, PolicyConfig, PolicyOutcome};
 pub use scheme::{
     make_device_side, make_fuser, make_server_side, reply_bytes, AgileDevice, AlphaFuser,
     DeepcodDevice, DeviceSide, EdgeDevice, Fuser, LocalArgmaxFuser, LocalResult, McunetDevice,
     RemoteArgmaxFuser, ServerSide, SpinnDevice,
 };
 pub use service::{
-    ConfigError, OutcomeStream, PipelineReport, RemoteFailure, ServeBuilder, ServedOutcome,
-    Service, ShardReport,
+    ConfigError, FleetConfig, OutcomeStream, PipelineReport, PolicyReport, RemoteFailure,
+    ServeBuilder, ServedOutcome, Service, ShardReport,
 };

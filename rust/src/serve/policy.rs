@@ -1,0 +1,635 @@
+//! `serve::policy` — deterministic per-request adaptive offloading.
+//!
+//! The trained operating point (quantizer width, delivery policy) is
+//! static at runtime: every uplink ships the same number of bits under the
+//! same delivery policy no matter what the channel or the server queue is
+//! doing. DynO-style adaptation moves that decision to the device half,
+//! per request: an EWMA of recent per-device [`NetStats`] (delivered
+//! feature rate, goodput, retransmit rounds) plus the server's advertised
+//! queue depth drives a ladder of operating points
+//!
+//! ```text
+//!   widths[n-1] ARQ  ←→  …  ←→  widths[0] ARQ  ←→  widths[0] anytime  ←→  local-only
+//!   (best accuracy)                                (bounded latency)      (no uplink)
+//! ```
+//!
+//! with hysteresis so decisions don't flap: a *sustain* streak of
+//! consecutive bad (good) observations is required before stepping down
+//! (up), a *cooldown* freezes the ladder for a number of observations
+//! after every step, and the good/bad signal bands are disjoint
+//! (`rate_low < rate_high`, `depth_low < depth_high`), so a constant
+//! channel converges to one rung and stays there.
+//!
+//! **Determinism contract.** [`DevicePolicy`] is pure state-machine
+//! arithmetic: no clocks, no randomness, no floats read from the
+//! environment. The decision sequence is a function of the observation
+//! sequence alone, so two runs that feed it the same (seeded) channel
+//! outcomes make bit-identical decisions — and policy-off runs never
+//! construct one, leaving the static pipeline untouched.
+//!
+//! While local-only, no uplinks happen, so no observations arrive and the
+//! EWMA freezes; recovery is via deterministic *probes*: every
+//! `probe_every`-th decision is an uplink at the most conservative rung,
+//! whose observation can start a good streak and climb back out.
+
+use crate::net::{DeliveryPolicy, NetStats};
+
+/// Knobs of the per-request adaptation policy (`RunConfig::policy`;
+/// `None` = static operating point, the pre-policy pipeline bit for bit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyConfig {
+    /// candidate quantizer widths, strictly ascending; each must name a
+    /// codebook actually exported in the manifest (validated at build
+    /// time). The policy starts at the widest (most accurate) candidate.
+    pub widths: Vec<u32>,
+    /// EWMA smoothing factor in (0, 1]: weight of the newest observation
+    pub ewma_alpha: f64,
+    /// delivered-feature-rate floor: an EWMA below this reads as a bad
+    /// channel (only the anytime path delivers partial frames; under ARQ
+    /// the rate is 1 and pressure shows up as retransmit rounds instead)
+    pub rate_low: f64,
+    /// delivered-feature-rate ceiling required to read as a good channel
+    /// (must exceed `rate_low`: the gap is the hysteresis band)
+    pub rate_high: f64,
+    /// EWMA retransmit rounds per uplink above which the channel reads
+    /// as bad; "good" requires at most half of this
+    pub rounds_high: f64,
+    /// goodput floor, bits/s (0 disables the signal): an EWMA below this
+    /// reads as bad, and "good" requires at least twice it
+    pub goodput_low_bps: f64,
+    /// advertised server queue depth at or above which the signal is bad
+    pub depth_high: usize,
+    /// advertised depth at or below which the signal can read good
+    /// (must be below `depth_high`)
+    pub depth_low: usize,
+    /// consecutive bad (good) observations required before stepping the
+    /// ladder down (up)
+    pub sustain: u32,
+    /// observations after a step during which the ladder is frozen
+    pub cooldown: u32,
+    /// deadline handed to [`DeliveryPolicy::Anytime`] when the policy
+    /// degrades delivery at the narrowest width; 0 removes the anytime
+    /// rung entirely (the ladder is widths-only, then local fallback)
+    pub anytime_deadline_s: f64,
+    /// allow the bottom rung: answer from the device-local head alone,
+    /// skipping the uplink, until probes see a good channel again
+    pub local_fallback: bool,
+    /// while local-only, every `probe_every`-th decision is an uplink
+    /// probe at the most conservative rung
+    pub probe_every: u32,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self {
+            widths: vec![1, 2, 4],
+            ewma_alpha: 0.3,
+            rate_low: 0.90,
+            rate_high: 0.995,
+            rounds_high: 1.5,
+            goodput_low_bps: 0.0,
+            depth_high: 8,
+            depth_low: 2,
+            sustain: 2,
+            cooldown: 8,
+            anytime_deadline_s: 0.05,
+            local_fallback: false,
+            probe_every: 16,
+        }
+    }
+}
+
+impl PolicyConfig {
+    /// Structural validation (everything checkable without the manifest;
+    /// width-vs-exported-codebook checks happen in `Service::validate`,
+    /// which has the `Meta`). Returns the reason on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.widths.is_empty() {
+            return Err("widths must name at least one candidate".into());
+        }
+        if !self.widths.windows(2).all(|w| w[0] < w[1]) {
+            return Err(format!("widths must be strictly ascending, got {:?}", self.widths));
+        }
+        if self.widths.iter().any(|&w| w == 0 || w > 8) {
+            return Err(format!("widths must be in 1..=8, got {:?}", self.widths));
+        }
+        if !(self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0) {
+            return Err(format!("ewma_alpha must be in (0, 1], got {}", self.ewma_alpha));
+        }
+        if !(0.0..=1.0).contains(&self.rate_low)
+            || !(0.0..=1.0).contains(&self.rate_high)
+            || self.rate_low >= self.rate_high
+        {
+            return Err(format!(
+                "need 0 <= rate_low < rate_high <= 1, got {} / {}",
+                self.rate_low, self.rate_high
+            ));
+        }
+        if !self.rounds_high.is_finite() || self.rounds_high < 0.0 {
+            return Err(format!("rounds_high must be finite and >= 0, got {}", self.rounds_high));
+        }
+        if !self.goodput_low_bps.is_finite() || self.goodput_low_bps < 0.0 {
+            return Err(format!(
+                "goodput_low_bps must be finite and >= 0, got {}",
+                self.goodput_low_bps
+            ));
+        }
+        if self.depth_low >= self.depth_high {
+            return Err(format!(
+                "need depth_low < depth_high, got {} / {}",
+                self.depth_low, self.depth_high
+            ));
+        }
+        if self.sustain == 0 {
+            return Err("sustain must be >= 1".into());
+        }
+        if !self.anytime_deadline_s.is_finite() || self.anytime_deadline_s < 0.0 {
+            return Err(format!(
+                "anytime_deadline_s must be finite and >= 0, got {}",
+                self.anytime_deadline_s
+            ));
+        }
+        if self.local_fallback && self.probe_every == 0 {
+            return Err("probe_every must be >= 1 when local_fallback is on".into());
+        }
+        Ok(())
+    }
+
+    /// The anytime rung exists only when a positive deadline was given.
+    pub fn has_anytime_rung(&self) -> bool {
+        self.anytime_deadline_s > 0.0
+    }
+}
+
+/// What the device half does for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// quantizer width to encode at (meaningful even for `local_only`:
+    /// the width the policy would use if it were uplinking)
+    pub bits: u32,
+    /// delivery policy for this uplink
+    pub delivery: DeliveryPolicy,
+    /// answer from the local head alone; skip the uplink
+    pub local_only: bool,
+    /// this decision differs from the previous one (probe transitions
+    /// included) — drives the `PolicySwitch` trace instant
+    pub switched: bool,
+}
+
+/// Per-request summary of the policy's choice, carried on served
+/// outcomes so reporting can histogram widths and count switches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PolicyOutcome {
+    pub bits: u32,
+    pub switched: bool,
+    pub local_only: bool,
+}
+
+/// Ladder rung, best to worst.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// uplink under ARQ at `width_idx`
+    Arq,
+    /// uplink under the anytime deadline at the narrowest width
+    Anytime,
+    /// no uplink; local head only
+    LocalOnly,
+}
+
+/// Per-device adaptation state machine. One per device; single-threaded
+/// (the event engine owns all of them, the threaded path owns one per
+/// device thread).
+#[derive(Debug, Clone)]
+pub struct DevicePolicy {
+    cfg: PolicyConfig,
+    mode: Mode,
+    /// index into `cfg.widths` (only meaningful in `Mode::Arq`;
+    /// the anytime and local rungs pin the narrowest width)
+    width_idx: usize,
+    ewma_rate: f64,
+    ewma_rounds: f64,
+    ewma_goodput: f64,
+    /// no observation yet: EWMAs seed from the first sample
+    seen: bool,
+    bad_streak: u32,
+    good_streak: u32,
+    cooldown_left: u32,
+    /// decisions made since the last probe (local-only mode)
+    since_probe: u32,
+    /// ladder transitions (state changes, not per-request re-decisions)
+    steps: u64,
+    /// (bits, delivery name, local_only) of the previous decision
+    last: Option<(u32, &'static str, bool)>,
+}
+
+impl DevicePolicy {
+    /// `cfg` must have passed [`PolicyConfig::validate`].
+    pub fn new(cfg: PolicyConfig) -> Self {
+        let width_idx = cfg.widths.len() - 1;
+        Self {
+            cfg,
+            mode: Mode::Arq,
+            width_idx,
+            ewma_rate: 1.0,
+            ewma_rounds: 0.0,
+            ewma_goodput: 0.0,
+            seen: false,
+            bad_streak: 0,
+            good_streak: 0,
+            cooldown_left: 0,
+            since_probe: 0,
+            steps: 0,
+            last: None,
+        }
+    }
+
+    /// Decide what to do with the next request. Pure read of the ladder
+    /// state except for the probe counter: while local-only, every
+    /// `probe_every`-th call is an uplink probe at the most conservative
+    /// rung.
+    pub fn decide(&mut self) -> Decision {
+        let (bits, delivery, local_only) = match self.mode {
+            Mode::Arq => (self.cfg.widths[self.width_idx], DeliveryPolicy::Arq, false),
+            Mode::Anytime => (
+                self.cfg.widths[0],
+                DeliveryPolicy::Anytime { deadline_s: self.cfg.anytime_deadline_s },
+                false,
+            ),
+            Mode::LocalOnly => {
+                self.since_probe += 1;
+                if self.since_probe >= self.cfg.probe_every {
+                    self.since_probe = 0;
+                    (self.cfg.widths[0], self.probe_delivery(), false)
+                } else {
+                    (self.cfg.widths[0], DeliveryPolicy::Arq, true)
+                }
+            }
+        };
+        let key = (bits, delivery.name(), local_only);
+        let switched = self.last.is_some_and(|prev| prev != key);
+        self.last = Some(key);
+        Decision { bits, delivery, local_only, switched }
+    }
+
+    /// Feed back one uplink's transport accounting plus the queue depth
+    /// the server advertised on the reply. Updates the EWMAs, then — past
+    /// any cooldown — accumulates the sustain streaks and steps the
+    /// ladder. Local-only requests produce no observation (the EWMA
+    /// freezes until a probe).
+    pub fn observe(&mut self, stats: &NetStats, queue_depth: usize) {
+        let rate = if stats.features_total > 0 {
+            stats.features_delivered as f64 / stats.features_total as f64
+        } else if stats.complete {
+            1.0
+        } else {
+            0.0
+        };
+        let rounds = stats.retransmit_rounds as f64;
+        let goodput = if stats.uplink_s > 0.0 {
+            stats.app_bytes_delivered as f64 * 8.0 / stats.uplink_s
+        } else {
+            0.0
+        };
+        if self.seen {
+            let a = self.cfg.ewma_alpha;
+            self.ewma_rate = a * rate + (1.0 - a) * self.ewma_rate;
+            self.ewma_rounds = a * rounds + (1.0 - a) * self.ewma_rounds;
+            self.ewma_goodput = a * goodput + (1.0 - a) * self.ewma_goodput;
+        } else {
+            self.ewma_rate = rate;
+            self.ewma_rounds = rounds;
+            self.ewma_goodput = goodput;
+            self.seen = true;
+        }
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return;
+        }
+        let c = &self.cfg;
+        let bad = self.ewma_rate < c.rate_low
+            || self.ewma_rounds > c.rounds_high
+            || queue_depth >= c.depth_high
+            || (c.goodput_low_bps > 0.0 && self.ewma_goodput < c.goodput_low_bps);
+        let good = self.ewma_rate >= c.rate_high
+            && self.ewma_rounds <= c.rounds_high * 0.5
+            && queue_depth <= c.depth_low
+            && (c.goodput_low_bps == 0.0 || self.ewma_goodput >= 2.0 * c.goodput_low_bps);
+        if bad {
+            self.bad_streak += 1;
+            self.good_streak = 0;
+        } else if good {
+            self.good_streak += 1;
+            self.bad_streak = 0;
+        } else {
+            self.bad_streak = 0;
+            self.good_streak = 0;
+        }
+        if self.bad_streak >= self.cfg.sustain {
+            self.bad_streak = 0;
+            if self.step_down() {
+                self.steps += 1;
+                self.cooldown_left = self.cfg.cooldown;
+            }
+        } else if self.good_streak >= self.cfg.sustain {
+            self.good_streak = 0;
+            if self.step_up() {
+                self.steps += 1;
+                self.cooldown_left = self.cfg.cooldown;
+            }
+        }
+    }
+
+    /// Ladder transitions so far (state changes, not re-decisions).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Width the next uplink would encode at.
+    pub fn current_bits(&self) -> u32 {
+        match self.mode {
+            Mode::Arq => self.cfg.widths[self.width_idx],
+            _ => self.cfg.widths[0],
+        }
+    }
+
+    fn probe_delivery(&self) -> DeliveryPolicy {
+        if self.cfg.has_anytime_rung() {
+            DeliveryPolicy::Anytime { deadline_s: self.cfg.anytime_deadline_s }
+        } else {
+            DeliveryPolicy::Arq
+        }
+    }
+
+    /// One rung down; false at the bottom of the configured ladder.
+    fn step_down(&mut self) -> bool {
+        match self.mode {
+            Mode::Arq if self.width_idx > 0 => {
+                self.width_idx -= 1;
+                true
+            }
+            Mode::Arq if self.cfg.has_anytime_rung() => {
+                self.mode = Mode::Anytime;
+                true
+            }
+            Mode::Arq | Mode::Anytime if self.cfg.local_fallback => {
+                self.mode = Mode::LocalOnly;
+                self.since_probe = 0;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// One rung up; false at the top.
+    fn step_up(&mut self) -> bool {
+        match self.mode {
+            Mode::LocalOnly => {
+                self.mode =
+                    if self.cfg.has_anytime_rung() { Mode::Anytime } else { Mode::Arq };
+                self.width_idx = 0;
+                true
+            }
+            Mode::Anytime => {
+                self.mode = Mode::Arq;
+                self.width_idx = 0;
+                true
+            }
+            Mode::Arq if self.width_idx + 1 < self.cfg.widths.len() => {
+                self.width_idx += 1;
+                true
+            }
+            Mode::Arq => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bad_stats() -> NetStats {
+        NetStats {
+            features_total: 100,
+            features_delivered: 40,
+            retransmit_rounds: 4,
+            app_bytes_offered: 100,
+            app_bytes_delivered: 40,
+            uplink_s: 0.1,
+            complete: false,
+            ..NetStats::default()
+        }
+    }
+
+    fn good_stats() -> NetStats {
+        NetStats {
+            features_total: 100,
+            features_delivered: 100,
+            retransmit_rounds: 0,
+            app_bytes_offered: 100,
+            app_bytes_delivered: 100,
+            uplink_s: 0.01,
+            complete: true,
+            ..NetStats::default()
+        }
+    }
+
+    fn quick(cfg: &mut PolicyConfig) {
+        cfg.sustain = 2;
+        cfg.cooldown = 1;
+    }
+
+    #[test]
+    fn defaults_validate() {
+        assert_eq!(PolicyConfig::default().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_configs() {
+        let base = PolicyConfig::default;
+        let cases: Vec<(&str, PolicyConfig)> = vec![
+            ("empty widths", PolicyConfig { widths: vec![], ..base() }),
+            ("unsorted widths", PolicyConfig { widths: vec![4, 2], ..base() }),
+            ("duplicate widths", PolicyConfig { widths: vec![2, 2], ..base() }),
+            ("width 0", PolicyConfig { widths: vec![0, 2], ..base() }),
+            ("width 9", PolicyConfig { widths: vec![2, 9], ..base() }),
+            ("alpha 0", PolicyConfig { ewma_alpha: 0.0, ..base() }),
+            ("alpha > 1", PolicyConfig { ewma_alpha: 1.5, ..base() }),
+            ("rate band inverted", PolicyConfig { rate_low: 0.99, rate_high: 0.9, ..base() }),
+            ("depth band inverted", PolicyConfig { depth_low: 8, depth_high: 8, ..base() }),
+            ("sustain 0", PolicyConfig { sustain: 0, ..base() }),
+            ("negative deadline", PolicyConfig { anytime_deadline_s: -1.0, ..base() }),
+            (
+                "local fallback without probes",
+                PolicyConfig { local_fallback: true, probe_every: 0, ..base() },
+            ),
+        ];
+        for (what, cfg) in cases {
+            assert!(cfg.validate().is_err(), "{what} should be rejected");
+        }
+    }
+
+    #[test]
+    fn starts_at_the_widest_candidate_under_arq() {
+        let mut p = DevicePolicy::new(PolicyConfig::default());
+        let d = p.decide();
+        assert_eq!(d.bits, 4);
+        assert_eq!(d.delivery, DeliveryPolicy::Arq);
+        assert!(!d.local_only);
+        assert!(!d.switched, "the first decision is never a switch");
+    }
+
+    #[test]
+    fn sustained_bad_channel_steps_width_down_then_delivery() {
+        let mut cfg = PolicyConfig::default();
+        quick(&mut cfg);
+        let mut p = DevicePolicy::new(cfg);
+        let mut widths = vec![p.decide().bits];
+        for _ in 0..40 {
+            p.observe(&bad_stats(), 0);
+            widths.push(p.decide().bits);
+        }
+        // walked 4 -> 2 -> 1, then degraded delivery to anytime at width 1
+        assert!(widths.contains(&2) && widths.ends_with(&[1]));
+        let d = p.decide();
+        assert_eq!(d.delivery, DeliveryPolicy::Anytime { deadline_s: 0.05 });
+        assert!(p.steps() >= 3);
+    }
+
+    #[test]
+    fn one_bad_observation_does_not_switch() {
+        let mut p = DevicePolicy::new(PolicyConfig::default()); // sustain 2
+        p.observe(&bad_stats(), 0);
+        assert_eq!(p.decide().bits, 4);
+        assert_eq!(p.steps(), 0);
+    }
+
+    #[test]
+    fn cooldown_freezes_the_ladder_after_a_step() {
+        let mut cfg = PolicyConfig::default();
+        cfg.sustain = 1;
+        cfg.cooldown = 5;
+        let mut p = DevicePolicy::new(cfg);
+        p.observe(&bad_stats(), 0); // step 4 -> 2, cooldown starts
+        assert_eq!(p.decide().bits, 2);
+        for _ in 0..5 {
+            p.observe(&bad_stats(), 0); // absorbed by the cooldown
+        }
+        assert_eq!(p.decide().bits, 2);
+        p.observe(&bad_stats(), 0); // first counted observation
+        assert_eq!(p.decide().bits, 1);
+    }
+
+    #[test]
+    fn good_channel_climbs_back_to_the_widest_candidate() {
+        let mut cfg = PolicyConfig::default();
+        quick(&mut cfg);
+        let mut p = DevicePolicy::new(cfg);
+        for _ in 0..30 {
+            p.observe(&bad_stats(), 0);
+            p.decide();
+        }
+        assert_eq!(p.decide().bits, 1);
+        for _ in 0..60 {
+            p.observe(&good_stats(), 0);
+            p.decide();
+        }
+        let d = p.decide();
+        assert_eq!((d.bits, d.delivery), (4, DeliveryPolicy::Arq));
+    }
+
+    #[test]
+    fn queue_pressure_alone_degrades() {
+        let mut cfg = PolicyConfig::default();
+        quick(&mut cfg);
+        let mut p = DevicePolicy::new(cfg);
+        for _ in 0..10 {
+            p.observe(&good_stats(), 20); // perfect channel, deep queue
+        }
+        assert!(p.decide().bits < 4);
+    }
+
+    #[test]
+    fn local_fallback_engages_and_probes_deterministically() {
+        let mut cfg = PolicyConfig::default();
+        quick(&mut cfg);
+        cfg.local_fallback = true;
+        cfg.probe_every = 4;
+        cfg.ewma_alpha = 1.0; // no smoothing: recovery needs `sustain` good probes exactly
+        let mut p = DevicePolicy::new(cfg);
+        for _ in 0..60 {
+            p.observe(&bad_stats(), 0);
+            p.decide();
+        }
+        // bottom rung reached: local-only with every 4th decision a probe
+        let kinds: Vec<bool> = (0..8).map(|_| p.decide().local_only).collect();
+        let probes = kinds.iter().filter(|l| !**l).count();
+        assert_eq!(probes, 2, "every probe_every-th decision uplinks: {kinds:?}");
+        // two good probes climb back out of local-only
+        for _ in 0..20 {
+            let d = p.decide();
+            if !d.local_only {
+                p.observe(&good_stats(), 0);
+            }
+        }
+        assert!(!p.decide().local_only);
+    }
+
+    #[test]
+    fn constant_channel_converges_and_stops_switching() {
+        for (stats, depth) in [(bad_stats(), 0usize), (good_stats(), 0), (good_stats(), 50)] {
+            let mut cfg = PolicyConfig::default();
+            quick(&mut cfg);
+            let mut p = DevicePolicy::new(cfg);
+            let mut tail = Vec::new();
+            for i in 0..400 {
+                let d = p.decide();
+                if i >= 300 {
+                    tail.push(d.clone());
+                }
+                p.observe(&stats, depth);
+            }
+            assert!(
+                tail.windows(2).all(|w| w[0] == w[1]) && !tail[0].switched,
+                "decisions still moving under a constant channel: {:?}",
+                tail.first()
+            );
+            assert!(p.steps() <= 4, "ladder is short; steps must be bounded");
+        }
+    }
+
+    #[test]
+    fn decision_sequences_are_bitwise_deterministic() {
+        let mut cfg = PolicyConfig::default();
+        cfg.local_fallback = true;
+        let run = || {
+            let mut p = DevicePolicy::new(cfg.clone());
+            let mut out = Vec::new();
+            for i in 0..200 {
+                out.push(p.decide());
+                let s = if i % 3 == 0 { good_stats() } else { bad_stats() };
+                p.observe(&s, i % 7);
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn switched_flags_probe_transitions() {
+        let mut cfg = PolicyConfig::default();
+        quick(&mut cfg);
+        cfg.local_fallback = true;
+        cfg.probe_every = 3;
+        let mut p = DevicePolicy::new(cfg);
+        for _ in 0..60 {
+            p.observe(&bad_stats(), 0);
+            p.decide();
+        }
+        let mut saw_switch = false;
+        for _ in 0..6 {
+            let d = p.decide();
+            saw_switch |= d.switched;
+        }
+        assert!(saw_switch, "local->probe->local transitions mark switched");
+    }
+}

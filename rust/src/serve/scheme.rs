@@ -28,6 +28,7 @@ use crate::runtime::{Backend, Module};
 use crate::simulator::{DeviceSim, DeviceTimings, MemoryReport, NetworkSim};
 use crate::tensor::{argmax, max_confidence, Tensor};
 use anyhow::{ensure, Result};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Downlink reply payload: logits (num_classes f32) + small header.
@@ -67,6 +68,20 @@ pub trait DeviceSide: Send {
 
     /// Run the on-device phase for one sensor sample (unit batch).
     fn encode(&mut self, image: &Tensor) -> Result<LocalResult>;
+
+    /// Switch the quantizer to a different exported bit width — the
+    /// adaptive policy's rate actuator ([`crate::serve::policy`]).
+    /// Subsequent `encode` calls transmit at `bits`. Pre-validated
+    /// candidates only: encoders for every `RunConfig::candidate_widths`
+    /// entry are built at construction, so a width the manifest never
+    /// exported fails at `build()`, not here. Schemes without a
+    /// quantizer reject the call.
+    fn set_bits(&mut self, bits: u32) -> Result<()> {
+        anyhow::bail!(
+            "{} does not support per-request width switching (asked for {bits}-bit)",
+            self.scheme().name()
+        )
+    }
 
     /// Static on-device memory accounting (Fig 20).
     fn memory_report(&self) -> MemoryReport;
@@ -261,9 +276,51 @@ const LZW_DICT_SRAM: usize = 20 * 1024;
 
 /// Only the anytime transport re-chunks the quantized symbol stream;
 /// skipping the capture keeps the per-request copy off the ARQ/bench hot
-/// path.
+/// path. An adaptive policy with an anytime rung can switch into the
+/// packetized transport mid-run, so it forces the capture too.
 fn capture_symbols(cfg: &RunConfig) -> bool {
     matches!(cfg.net.delivery, crate::net::DeliveryPolicy::Anytime { .. })
+        || cfg.policy.as_ref().is_some_and(|p| p.has_anytime_rung())
+}
+
+/// Pre-built spare [`TxEncoder`]s for every adaptive-policy candidate
+/// width other than the active `cfg.bits`, keyed by width. Empty with
+/// the policy off — the single-encoder fast path is untouched then.
+fn alt_encoders(
+    cfg: &RunConfig,
+    meta: &Meta,
+    scheme: Scheme,
+) -> Result<HashMap<u32, TxEncoder>> {
+    let mut alts = HashMap::new();
+    for w in cfg.candidate_widths() {
+        if w != cfg.bits {
+            alts.insert(w, TxEncoder::new(Codebook::new(meta.codebook(scheme, w)?)?));
+        }
+    }
+    Ok(alts)
+}
+
+/// Swap the active encoder for the `bits`-wide spare (O(1), no
+/// allocation: the displaced encoder parks in the spares map under its
+/// own width). No-op when already at `bits`.
+fn swap_encoder(
+    tx: &mut TxEncoder,
+    alts: &mut HashMap<u32, TxEncoder>,
+    current: &mut u32,
+    bits: u32,
+) -> Result<()> {
+    if bits == *current {
+        return Ok(());
+    }
+    let mut next = alts.remove(&bits).ok_or_else(|| {
+        anyhow::anyhow!(
+            "no {bits}-bit encoder prepared (policy candidate widths are validated at build time)"
+        )
+    })?;
+    std::mem::swap(tx, &mut next);
+    alts.insert(*current, next);
+    *current = bits;
+    Ok(())
 }
 
 fn memory_report_for(cfg: &RunConfig, meta: &Meta, scheme: Scheme) -> MemoryReport {
@@ -308,6 +365,10 @@ impl DeviceSide for AgileDevice {
         })
     }
 
+    fn set_bits(&mut self, bits: u32) -> Result<()> {
+        self.inner.set_bits(bits)
+    }
+
     fn memory_report(&self) -> MemoryReport {
         self.mem
     }
@@ -317,6 +378,8 @@ impl DeviceSide for AgileDevice {
 pub struct DeepcodDevice {
     encoder: Arc<dyn Module>,
     tx: TxEncoder,
+    bits: u32,
+    alt_tx: HashMap<u32, TxEncoder>,
     sim: DeviceSim,
     nn_macs: u64,
     mem: MemoryReport,
@@ -331,6 +394,8 @@ impl DeepcodDevice {
         Ok(Self {
             encoder,
             tx: TxEncoder::new(codebook),
+            bits: cfg.bits,
+            alt_tx: alt_encoders(cfg, meta, Scheme::Deepcod)?,
             sim: DeviceSim::new(cfg.device.clone()),
             nn_macs: meta.macs.deepcod_device,
             mem: memory_report_for(cfg, meta, Scheme::Deepcod),
@@ -366,6 +431,10 @@ impl DeviceSide for DeepcodDevice {
         })
     }
 
+    fn set_bits(&mut self, bits: u32) -> Result<()> {
+        swap_encoder(&mut self.tx, &mut self.alt_tx, &mut self.bits, bits)
+    }
+
     fn memory_report(&self) -> MemoryReport {
         self.mem
     }
@@ -375,6 +444,8 @@ impl DeviceSide for DeepcodDevice {
 pub struct SpinnDevice {
     device_exe: Arc<dyn Module>,
     tx: TxEncoder,
+    bits: u32,
+    alt_tx: HashMap<u32, TxEncoder>,
     sim: DeviceSim,
     nn_macs: u64,
     exit_threshold: f32,
@@ -390,6 +461,8 @@ impl SpinnDevice {
         Ok(Self {
             device_exe,
             tx: TxEncoder::new(codebook),
+            bits: cfg.bits,
+            alt_tx: alt_encoders(cfg, meta, Scheme::Spinn)?,
             sim: DeviceSim::new(cfg.device.clone()),
             nn_macs: meta.macs.spinn_device,
             exit_threshold: meta.spinn_exit.threshold as f32,
@@ -438,6 +511,10 @@ impl DeviceSide for SpinnDevice {
             timings,
             exited_early: false,
         })
+    }
+
+    fn set_bits(&mut self, bits: u32) -> Result<()> {
+        swap_encoder(&mut self.tx, &mut self.alt_tx, &mut self.bits, bits)
     }
 
     fn memory_report(&self) -> MemoryReport {

@@ -39,6 +39,7 @@ use crate::serve::engine::{self, FleetSpec, Placement, SimEngine};
 use crate::serve::fabric::{
     send_reply, ChannelTransport, OffloadMsg, Reply, TcpTransport, Transport, UplinkBody,
 };
+use crate::serve::policy::{DevicePolicy, PolicyOutcome};
 use crate::serve::scheme::{
     assemble_outcome, make_device_side, make_fuser, make_server_side, ServerSide,
 };
@@ -128,7 +129,39 @@ pub struct PipelineReport {
     pub scale_outs: usize,
     /// autoscale shard retirements over the run (0 with the controller off)
     pub scale_ins: usize,
+    /// adaptive-policy accounting (`None` with the policy off — and the
+    /// JSON form omits every policy field then, so policy-off reports
+    /// stay byte-identical to the pre-policy pipeline)
+    pub policy: Option<PolicyReport>,
 }
+
+/// Adaptive-policy accounting of one run ([`PipelineReport::policy`]).
+#[derive(Debug, Clone)]
+pub struct PolicyReport {
+    /// per-request decision changes across the run, deterministic probe
+    /// transitions included
+    pub switches: usize,
+    /// requests answered by the device-local head alone (no uplink)
+    pub local_only: usize,
+    /// mean chosen quantizer width over offloaded requests (0 when
+    /// nothing offloaded)
+    pub mean_bits: f64,
+    /// (width, offloaded requests encoded at that width), ascending
+    pub widths: Vec<(u32, usize)>,
+}
+
+/// Registry counter names for the per-width histogram, indexed by
+/// `width - 1` (the registry requires `&'static str` names).
+const POLICY_WIDTH_COUNTERS: [&str; 8] = [
+    "policy_width_1_requests",
+    "policy_width_2_requests",
+    "policy_width_3_requests",
+    "policy_width_4_requests",
+    "policy_width_5_requests",
+    "policy_width_6_requests",
+    "policy_width_7_requests",
+    "policy_width_8_requests",
+];
 
 impl PipelineReport {
     /// Deterministic machine-readable form: insertion-ordered JSON (see
@@ -148,7 +181,7 @@ impl PipelineReport {
                 .field_f64("active_s", s.active_s)
                 .finish()
         }));
-        JsonObj::new()
+        let obj = JsonObj::new()
             .field_usize("requests", self.requests)
             .field_str("clock", self.clock.name())
             .field_f64("wall_s", self.wall_s)
@@ -173,8 +206,26 @@ impl PipelineReport {
             .field_f64("slo_p99_s", self.slo_p99_s)
             .field_f64("slo_attainment", self.slo_attainment)
             .field_usize("scale_outs", self.scale_outs)
-            .field_usize("scale_ins", self.scale_ins)
-            .finish()
+            .field_usize("scale_ins", self.scale_ins);
+        // policy fields exist only when the policy ran: policy-off JSON is
+        // byte-identical to the pre-policy report (the bit-identity the
+        // golden snapshot pins)
+        let obj = match &self.policy {
+            None => obj,
+            Some(p) => {
+                let widths = json_array(p.widths.iter().map(|(w, n)| {
+                    JsonObj::new()
+                        .field_u64("bits", *w as u64)
+                        .field_usize("requests", *n)
+                        .finish()
+                }));
+                obj.field_usize("policy_switches", p.switches)
+                    .field_usize("policy_local_only", p.local_only)
+                    .field_f64("policy_mean_bits", p.mean_bits)
+                    .field_raw("policy_widths", &widths)
+            }
+        };
+        obj.finish()
     }
 
     /// Build the report as a view over the metrics registry: every field
@@ -252,6 +303,31 @@ impl PipelineReport {
             },
             scale_outs: m.counter("scale_outs") as usize,
             scale_ins: m.counter("scale_ins") as usize,
+            // reads never create registry entries (`counter` is a plain
+            // lookup), so policy-off registries stay untouched here
+            policy: if m.counter("policy_enabled") > 0 {
+                let uplinks = m.counter("policy_uplinks");
+                let widths: Vec<(u32, usize)> = POLICY_WIDTH_COUNTERS
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, name)| {
+                        let c = m.counter(name);
+                        (c > 0).then_some((i as u32 + 1, c as usize))
+                    })
+                    .collect();
+                Some(PolicyReport {
+                    switches: m.counter("policy_switches") as usize,
+                    local_only: m.counter("policy_local_only") as usize,
+                    mean_bits: if uplinks == 0 {
+                        0.0
+                    } else {
+                        m.counter("policy_bits_sum") as f64 / uplinks as f64
+                    },
+                    widths,
+                })
+            } else {
+                None
+            },
         }
     }
 }
@@ -353,6 +429,9 @@ pub struct ServedOutcome {
     /// is included.
     pub wall_s: f64,
     pub outcome: RequestOutcome,
+    /// what the adaptive policy chose for this request (`None` with the
+    /// policy off)
+    pub policy: Option<PolicyOutcome>,
 }
 
 /// Server-side failure delivered to the waiting device thread, so its
@@ -401,6 +480,13 @@ pub enum ConfigError {
     /// non-zero model off the event engine (batch pricing exists only
     /// there)
     InvalidServiceModel { reason: String },
+    /// `bits` (or an adaptive-policy candidate width) has no codebook
+    /// exported in the manifest for this scheme — previously an anyhow
+    /// error from deep inside a spawned device thread
+    UnsupportedBits { bits: u32, scheme: Scheme, available: Vec<u32> },
+    /// malformed or unusable adaptive-policy configuration
+    /// ([`crate::serve::policy::PolicyConfig::validate`])
+    InvalidPolicy { reason: String },
 }
 
 impl std::fmt::Display for ConfigError {
@@ -442,6 +528,12 @@ impl std::fmt::Display for ConfigError {
             ),
             ConfigError::InvalidAutoscale { reason } => write!(f, "{reason}"),
             ConfigError::InvalidServiceModel { reason } => write!(f, "{reason}"),
+            ConfigError::UnsupportedBits { bits, scheme, available } => write!(
+                f,
+                "no {bits}-bit codebook exported for {} (the manifest has {available:?})",
+                scheme.name()
+            ),
+            ConfigError::InvalidPolicy { reason } => write!(f, "adaptive policy: {reason}"),
         }
     }
 }
@@ -452,36 +544,78 @@ impl std::error::Error for ConfigError {}
 /// the waiting device's reply channel.
 type BatchItem = (Tensor, Sender<Reply>);
 
+/// Fleet topology and control-plane knobs, grouped (the PR-10
+/// typed-config redesign; [`ServeBuilder::fleet`]). These are
+/// builder-level knobs: they describe the simulated fleet around one
+/// [`RunConfig`], not the per-request pipeline itself.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// concurrent simulated sensor devices
+    pub devices: usize,
+    /// total requests, assigned round-robin across devices
+    pub requests: usize,
+    /// remote servers, each with its own batch queue (`> 1` requires the
+    /// sim clock's event engine)
+    pub servers: usize,
+    /// device→server placement policy for multi-server topologies
+    pub placement: Placement,
+    /// per-batch virtual service-time pricing + per-server capacity
+    /// weights (sim event engine only; the zero default is unpriced)
+    pub service: ServiceModel,
+    /// the autoscale SLO control plane (`None` = fixed fleet)
+    pub autoscale: Option<AutoscaleConfig>,
+    /// end-to-end p99 latency SLO target, seconds (0 = unset)
+    pub slo_p99_s: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            devices: 1,
+            requests: 64,
+            servers: 1,
+            placement: Placement::default(),
+            service: ServiceModel::default(),
+            autoscale: None,
+            slo_p99_s: 0.0,
+        }
+    }
+}
+
 /// Builder for a scheme-agnostic serving [`Service`].
 ///
 /// Replaces the pre-redesign pattern of hand-mutating [`RunConfig`] fields
 /// and calling `run_pipeline(cfg, meta, testset, n_devices, n_requests,
 /// arrival)`: every knob is a builder method, and `build()` loads the
 /// trained metadata and test set from the artifacts tree.
+///
+/// Knobs are grouped into typed sub-configs edited in place —
+/// [`ServeBuilder::fleet`] ([`FleetConfig`]), [`ServeBuilder::batch`]
+/// ([`BatchConfig`]), [`ServeBuilder::net`] ([`crate::net::NetConfig`])
+/// and [`ServeBuilder::policy`]
+/// ([`crate::serve::policy::PolicyConfig`]) — replacing the old flat
+/// setter soup (`devices`, `max_batch`, `loss_rate`, …), which remains
+/// as deprecated delegating shims. [`ServeBuilder::from_config`] ⇄
+/// [`ServeBuilder::to_config`] round-trip losslessly over the
+/// [`RunConfig`]-representable subset (property-tested).
 #[derive(Debug, Clone)]
 pub struct ServeBuilder {
     artifacts_dir: PathBuf,
     dataset: String,
     scheme: Scheme,
     backend: BackendKind,
-    devices: usize,
-    requests: usize,
+    fleet: FleetConfig,
+    batch: crate::config::BatchConfig,
     arrival: Arrival,
-    max_batch: usize,
-    batch_deadline_us: u64,
     bits: u32,
     alpha: Option<f64>,
     device_profile: Option<DeviceProfile>,
     network_profile: Option<NetworkProfile>,
     net: crate::net::NetConfig,
+    policy: Option<crate::serve::policy::PolicyConfig>,
     clock: ClockKind,
     arrival_seed: Option<u64>,
-    servers: usize,
-    placement: Placement,
     sim_engine: SimEngine,
-    service_model: ServiceModel,
-    autoscale: Option<AutoscaleConfig>,
-    slo_p99_s: f64,
     trace: Tracer,
     connect: Option<String>,
 }
@@ -493,27 +627,50 @@ impl ServeBuilder {
             dataset: dataset.into(),
             scheme: Scheme::Agile,
             backend: BackendKind::default(),
-            devices: 1,
-            requests: 64,
+            fleet: FleetConfig::default(),
+            batch: crate::config::BatchConfig::default(),
             arrival: Arrival::Periodic { hz: 1e9 },
-            max_batch: 8,
-            batch_deadline_us: 2000,
             bits: 4,
             alpha: None,
             device_profile: None,
             network_profile: None,
             net: crate::net::NetConfig::default(),
+            policy: None,
             clock: ClockKind::Wall,
             arrival_seed: None,
-            servers: 1,
-            placement: Placement::default(),
             sim_engine: SimEngine::default(),
-            service_model: ServiceModel::default(),
-            autoscale: None,
-            slo_p99_s: 0.0,
             trace: Tracer::off(),
             connect: None,
         }
+    }
+
+    /// Edit the fleet topology / control-plane group in place:
+    /// `.fleet(|f| { f.devices = 64; f.servers = 4; })`.
+    pub fn fleet(mut self, edit: impl FnOnce(&mut FleetConfig)) -> Self {
+        edit(&mut self.fleet);
+        self
+    }
+
+    /// Edit the dynamic-batcher group in place:
+    /// `.batch(|b| { b.max_batch = 4; b.deadline_us = 500; })`.
+    pub fn batch(mut self, edit: impl FnOnce(&mut crate::config::BatchConfig)) -> Self {
+        edit(&mut self.batch);
+        self
+    }
+
+    /// Edit the channel group in place:
+    /// `.net(|n| { n.loss = GilbertElliott::uniform(0.3); n.seed = 7; })`.
+    pub fn net(mut self, edit: impl FnOnce(&mut crate::net::NetConfig)) -> Self {
+        edit(&mut self.net);
+        self
+    }
+
+    /// Enable the per-request adaptive split/rate policy
+    /// ([`crate::serve::policy`]). The candidate widths are validated
+    /// against the manifest's exported codebooks before serving starts.
+    pub fn policy(mut self, policy: crate::serve::policy::PolicyConfig) -> Self {
+        self.policy = Some(policy);
+        self
     }
 
     /// Artifacts directory (default: `$AGILENN_ARTIFACTS` or `./artifacts`).
@@ -539,14 +696,16 @@ impl ServeBuilder {
     }
 
     /// Number of concurrent simulated sensor devices.
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.devices = n)")]
     pub fn devices(mut self, n: usize) -> Self {
-        self.devices = n;
+        self.fleet.devices = n;
         self
     }
 
     /// Total requests, assigned round-robin across devices.
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.requests = n)")]
     pub fn requests(mut self, n: usize) -> Self {
-        self.requests = n;
+        self.fleet.requests = n;
         self
     }
 
@@ -589,15 +748,17 @@ impl ServeBuilder {
     /// Number of remote servers, each with its own batch queue (default
     /// 1). `servers > 1` requires the sim clock's event engine — the
     /// threaded paths reject it at `stream()`.
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.servers = n)")]
     pub fn servers(mut self, n: usize) -> Self {
-        self.servers = n;
+        self.fleet.servers = n;
         self
     }
 
     /// Device→server placement policy for multi-server topologies
     /// (default: [`Placement::Static`], `server = device % servers`).
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.placement = p)")]
     pub fn placement(mut self, placement: Placement) -> Self {
-        self.placement = placement;
+        self.fleet.placement = placement;
         self
     }
 
@@ -618,35 +779,39 @@ impl ServeBuilder {
     /// autoscale controller watches. The default zero model keeps the
     /// engine timeline bit-identical to the unpriced engine. Sim event
     /// engine only; see [`ServiceModel`].
+    #[deprecated(note = "grouped configs: use .fleet(|f| { f.service.base_s = ..; f.service.per_sample_s = ..; })")]
     pub fn service_model(mut self, base_s: f64, per_sample_s: f64) -> Self {
-        self.service_model.base_s = base_s;
-        self.service_model.per_sample_s = per_sample_s;
+        self.fleet.service.base_s = base_s;
+        self.fleet.service.per_sample_s = per_sample_s;
         self
     }
 
     /// Per-server capacity weights: a shard's service time divides by its
     /// weight, and [`Placement::WeightedLeastLoaded`] divides its load by
     /// it. Servers beyond the vector weigh 1.0.
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.service.capacities = w)")]
     pub fn capacities(mut self, weights: Vec<f64>) -> Self {
-        self.service_model.capacities = weights;
+        self.fleet.service.capacities = weights;
         self
     }
 
     /// Enable the autoscale SLO control plane ([`AutoscaleConfig`]): the
-    /// [`ServeBuilder::servers`] count becomes the *initial* active set,
+    /// `fleet.servers` count becomes the *initial* active set,
     /// grown/shrunk by the controller within `[min_servers, max_servers]`.
     /// Sim event engine only; see `docs/serving.md`, "Autoscaling & SLO
     /// control".
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.autoscale = Some(cfg))")]
     pub fn autoscale(mut self, cfg: AutoscaleConfig) -> Self {
-        self.autoscale = Some(cfg);
+        self.fleet.autoscale = Some(cfg);
         self
     }
 
     /// End-to-end p99 latency SLO target, seconds, for the report's
     /// SLO-attainment accounting (`slo_attainment` = fraction of requests
     /// finishing within this bound). 0 (the default) disables it.
+    #[deprecated(note = "grouped configs: use .fleet(|f| f.slo_p99_s = s)")]
     pub fn slo_p99(mut self, slo_s: f64) -> Self {
-        self.slo_p99_s = slo_s;
+        self.fleet.slo_p99_s = slo_s;
         self
     }
 
@@ -675,14 +840,16 @@ impl ServeBuilder {
     }
 
     /// Dynamic batcher: max batch (must be an exported remote batch size).
+    #[deprecated(note = "grouped configs: use .batch(|b| b.max_batch = n)")]
     pub fn max_batch(mut self, b: usize) -> Self {
-        self.max_batch = b;
+        self.batch.max_batch = b;
         self
     }
 
     /// Dynamic batcher: max queueing delay before dispatch.
+    #[deprecated(note = "grouped configs: use .batch(|b| b.deadline_us = us)")]
     pub fn batch_deadline_us(mut self, us: u64) -> Self {
-        self.batch_deadline_us = us;
+        self.batch.deadline_us = us;
         self
     }
 
@@ -711,12 +878,14 @@ impl ServeBuilder {
     }
 
     /// Packet-loss process on the uplink channel (default: lossless).
+    #[deprecated(note = "grouped configs: use .net(|n| n.loss = loss)")]
     pub fn loss(mut self, loss: GilbertElliott) -> Self {
         self.net.loss = loss;
         self
     }
 
     /// Convenience: independent (Bernoulli) packet loss at `rate`.
+    #[deprecated(note = "grouped configs: use .net(|n| n.loss = GilbertElliott::uniform(rate))")]
     pub fn loss_rate(mut self, rate: f64) -> Self {
         self.net.loss = GilbertElliott::uniform(rate);
         self
@@ -724,18 +893,21 @@ impl ServeBuilder {
 
     /// Replayable time-varying bandwidth trace (default: constant profile
     /// bandwidth).
+    #[deprecated(note = "grouped configs: use .net(|n| n.trace = Some(trace))")]
     pub fn bandwidth_trace(mut self, trace: BandwidthTrace) -> Self {
         self.net.trace = Some(trace);
         self
     }
 
     /// Uplink delivery policy: ARQ (default) or deadline-bounded anytime.
+    #[deprecated(note = "grouped configs: use .net(|n| n.delivery = policy)")]
     pub fn delivery(mut self, policy: DeliveryPolicy) -> Self {
         self.net.delivery = policy;
         self
     }
 
     /// Packet ordering for the anytime transport (default: importance).
+    #[deprecated(note = "grouped configs: use .net(|n| n.order = order)")]
     pub fn packet_order(mut self, order: PacketOrder) -> Self {
         self.net.order = order;
         self
@@ -743,6 +915,7 @@ impl ServeBuilder {
 
     /// Max application bytes per anytime packet, header included
     /// (default: link MTU).
+    #[deprecated(note = "grouped configs: use .net(|n| n.packet_payload = Some(bytes))")]
     pub fn packet_payload(mut self, bytes: usize) -> Self {
         self.net.packet_payload = Some(bytes);
         self
@@ -750,6 +923,7 @@ impl ServeBuilder {
 
     /// Seed for the channel's loss process; all stochastic link behavior
     /// is deterministic given this seed.
+    #[deprecated(note = "grouped configs: use .net(|n| n.seed = seed)")]
     pub fn net_seed(mut self, seed: u64) -> Self {
         self.net.seed = seed;
         self
@@ -761,8 +935,8 @@ impl ServeBuilder {
         cfg.backend = self.backend;
         cfg.bits = self.bits;
         cfg.alpha_override = self.alpha;
-        cfg.max_batch = self.max_batch;
-        cfg.batch_deadline_us = self.batch_deadline_us;
+        cfg.batch = self.batch.clone();
+        cfg.policy = self.policy.clone();
         if let Some(p) = &self.device_profile {
             cfg.device = p.clone();
         }
@@ -771,6 +945,25 @@ impl ServeBuilder {
         }
         cfg.net = self.net.clone();
         cfg
+    }
+
+    /// Rebuild a builder from a [`RunConfig`] — the inverse of
+    /// [`ServeBuilder::to_config`]: `from_config(b.to_config()).to_config()
+    /// == b.to_config()` for every builder (property-tested). Fleet/arrival
+    /// knobs live outside `RunConfig` and come back as defaults.
+    pub fn from_config(cfg: RunConfig) -> Self {
+        let mut b = Self::new(&cfg.dataset);
+        b.artifacts_dir = cfg.artifacts_dir.clone();
+        b.scheme = cfg.scheme;
+        b.backend = cfg.backend;
+        b.bits = cfg.bits;
+        b.alpha = cfg.alpha_override;
+        b.batch = cfg.batch.clone();
+        b.policy = cfg.policy.clone();
+        b.device_profile = Some(cfg.device.clone());
+        b.network_profile = Some(cfg.network.clone());
+        b.net = cfg.net.clone();
+        b
     }
 
     /// Assemble the [`Service`]: load the trained metadata + test set
@@ -793,15 +986,17 @@ impl ServeBuilder {
             Some(seed) => self.arrival.with_seed(seed),
             None => self.arrival,
         };
-        Ok(Service::from_parts(cfg, meta, testset, self.devices, self.requests, arrival)?
-            .with_clock(self.clock)
-            .with_servers(self.servers, self.placement)
-            .with_sim_engine(self.sim_engine)
-            .with_service_model(self.service_model)
-            .with_autoscale(self.autoscale)
-            .with_slo_p99(self.slo_p99_s)
-            .with_tracer(self.trace)
-            .with_connect(self.connect))
+        Ok(
+            Service::from_parts(cfg, meta, testset, self.fleet.devices, self.fleet.requests, arrival)?
+                .with_clock(self.clock)
+                .with_servers(self.fleet.servers, self.fleet.placement)
+                .with_sim_engine(self.sim_engine)
+                .with_service_model(self.fleet.service)
+                .with_autoscale(self.fleet.autoscale)
+                .with_slo_p99(self.fleet.slo_p99_s)
+                .with_tracer(self.trace)
+                .with_connect(self.connect),
+        )
     }
 
     /// Resolve the pieces the serving daemon needs: the run configuration
@@ -949,8 +1144,8 @@ impl Service {
         if self.servers < 1 {
             return Err(ConfigError::NoServers);
         }
-        if !REMOTE_BATCH_SIZES.contains(&self.cfg.max_batch) {
-            return Err(ConfigError::UnsupportedMaxBatch { max_batch: self.cfg.max_batch });
+        if !REMOTE_BATCH_SIZES.contains(&self.cfg.batch.max_batch) {
+            return Err(ConfigError::UnsupportedMaxBatch { max_batch: self.cfg.batch.max_batch });
         }
         let on_engine = self.clock == ClockKind::Sim && self.sim_engine == SimEngine::Event;
         if self.servers > 1 && !on_engine {
@@ -997,6 +1192,50 @@ impl Service {
                 return Err(ConfigError::InvalidAutoscale { reason });
             }
         }
+        let quantizes = matches!(self.cfg.scheme, Scheme::Agile | Scheme::Deepcod | Scheme::Spinn);
+        if let Some(p) = &self.cfg.policy {
+            if let Err(reason) = p.validate() {
+                return Err(ConfigError::InvalidPolicy { reason });
+            }
+            if !quantizes {
+                return Err(ConfigError::InvalidPolicy {
+                    reason: format!(
+                        "{} does not quantize features; the adaptive policy has no width actuator",
+                        self.cfg.scheme.name()
+                    ),
+                });
+            }
+            if self.connect.is_some() {
+                return Err(ConfigError::InvalidPolicy {
+                    reason: "a remote daemon pins one bit width at the handshake; \
+                             run the policy in-process"
+                        .into(),
+                });
+            }
+            if p.local_fallback && !matches!(self.cfg.scheme, Scheme::Agile | Scheme::Spinn) {
+                return Err(ConfigError::InvalidPolicy {
+                    reason: format!(
+                        "{} has no on-device classification head, so local_fallback \
+                         cannot resolve requests locally",
+                        self.cfg.scheme.name()
+                    ),
+                });
+            }
+        }
+        // every width the run can transmit at — the static `bits` plus the
+        // policy's candidate ladder — must have an exported codebook
+        if quantizes {
+            let available = self.meta.codebook_widths(self.cfg.scheme);
+            for w in self.cfg.candidate_widths() {
+                if !available.contains(&w) {
+                    return Err(ConfigError::UnsupportedBits {
+                        bits: w,
+                        scheme: self.cfg.scheme,
+                        available,
+                    });
+                }
+            }
+        }
         Ok(())
     }
 
@@ -1023,10 +1262,10 @@ impl Service {
         let server = make_server_side(backend.as_ref(), &self.cfg, &self.meta)?;
         // some schemes export fewer remote batch sizes (edge-only: max 4)
         let max_batch = match &server {
-            Some(s) => self.cfg.max_batch.min(s.max_batch()),
-            None => self.cfg.max_batch,
+            Some(s) => self.cfg.batch.max_batch.min(s.max_batch()),
+            None => self.cfg.batch.max_batch,
         };
-        let deadline_s = self.cfg.batch_deadline_us as f64 * 1e-6;
+        let deadline_s = self.cfg.batch.deadline_s();
         // the sim clock must know every participant up front — a thread
         // that registers late could otherwise watch time advance past it
         let clock = match self.clock {
@@ -1270,6 +1509,14 @@ struct StreamAgg {
     /// count into `within_slo`
     slo_p99_s: f64,
     within_slo: u64,
+    /// true once any outcome carried a policy decision; gates the policy
+    /// registry entries so policy-off registries stay byte-identical
+    policy_seen: bool,
+    policy_switches: u64,
+    policy_local: u64,
+    policy_bits_sum: u64,
+    policy_uplinks: u64,
+    policy_widths: std::collections::BTreeMap<u32, u64>,
 }
 
 impl StreamAgg {
@@ -1282,6 +1529,17 @@ impl StreamAgg {
         self.lat.record(out.wall_s);
         if self.slo_p99_s > 0.0 && out.wall_s <= self.slo_p99_s {
             self.within_slo += 1;
+        }
+        if let Some(p) = &out.policy {
+            self.policy_seen = true;
+            self.policy_switches += p.switched as u64;
+            if p.local_only {
+                self.policy_local += 1;
+            } else {
+                self.policy_bits_sum += p.bits as u64;
+                self.policy_uplinks += 1;
+                *self.policy_widths.entry(p.bits).or_insert(0) += 1;
+            }
         }
         let b = &out.outcome.breakdown;
         self.net_lat.record(b.network_s);
@@ -1318,6 +1576,19 @@ impl StreamAgg {
         m.insert_hist("phase_compression_s", self.phase_compression);
         m.insert_hist("phase_network_s", self.phase_network);
         m.insert_hist("phase_remote_s", self.phase_remote);
+        // policy entries exist only when the policy ran, so a policy-off
+        // registry (and everything derived from it) is byte-identical to
+        // the pre-policy pipeline's
+        if self.policy_seen {
+            m.counter_add("policy_enabled", 1);
+            m.counter_add("policy_switches", self.policy_switches);
+            m.counter_add("policy_local_only", self.policy_local);
+            m.counter_add("policy_bits_sum", self.policy_bits_sum);
+            m.counter_add("policy_uplinks", self.policy_uplinks);
+            for (w, n) in self.policy_widths {
+                m.counter_add(POLICY_WIDTH_COUNTERS[(w - 1) as usize], n);
+            }
+        }
         m
     }
 }
@@ -1435,7 +1706,10 @@ fn decode_and_enqueue(
             send_reply(
                 clock,
                 &m.reply,
-                Err(RemoteFailure(format!("decoding request {}: {e:#}", m.id))),
+                Reply {
+                    result: Err(RemoteFailure(format!("decoding request {}: {e:#}", m.id))),
+                    queue_depth: queue.len() as u32,
+                },
             );
             clock.notify();
             None
@@ -1468,7 +1742,9 @@ pub(crate) fn server_loop(
     let lane = Lane::Server(0);
     let mut queue: BatchQueue<BatchItem> = BatchQueue::new(max_batch, deadline_s);
     let mut agg = ShardAgg::default();
-    let mut run_batch = |batch: Vec<Pending<BatchItem>>, server: &mut dyn ServerSide| {
+    // `qlen` is the batch queue's length after this batch popped — stamped
+    // onto every reply as the freshest possible depth advertisement
+    let mut run_batch = |batch: Vec<Pending<BatchItem>>, server: &mut dyn ServerSide, qlen: usize| {
         let feats: Vec<_> = batch.iter().map(|p| p.payload.0.clone()).collect();
         // dispatch instant, taken before the batch executes: queue wait is
         // enqueue → dispatch on both clocks (under the sim clock virtual
@@ -1486,14 +1762,25 @@ pub(crate) fn server_loop(
                 let seq = agg.batches as u64;
                 tracer.instant(lane, EventKind::BatchDispatch, seq, dispatched, feats.len() as f64);
                 for (p, row) in batch.into_iter().zip(rows) {
-                    send_reply(&clock, &p.payload.1, Ok(row));
+                    send_reply(
+                        &clock,
+                        &p.payload.1,
+                        Reply { result: Ok(row), queue_depth: qlen as u32 },
+                    );
                 }
             }
             Err(e) => {
                 let msg = format!("remote batch of {} failed: {e:#}", batch.len());
                 eprintln!("{msg}");
                 for p in batch {
-                    send_reply(&clock, &p.payload.1, Err(RemoteFailure(msg.clone())));
+                    send_reply(
+                        &clock,
+                        &p.payload.1,
+                        Reply {
+                            result: Err(RemoteFailure(msg.clone())),
+                            queue_depth: qlen as u32,
+                        },
+                    );
                 }
             }
         }
@@ -1509,13 +1796,15 @@ pub(crate) fn server_loop(
                     clock.msg_received();
                     if let Some(batch) = decode_and_enqueue(m, server.as_mut(), &mut queue, &clock)
                     {
-                        run_batch(batch, server.as_mut());
+                        let qlen = queue.len();
+                        run_batch(batch, server.as_mut(), qlen);
                     }
                     depth.store(queue.len(), Ordering::Relaxed);
                 }
                 Err(TryRecvError::Empty) => {
                     if let Some(batch) = queue.poll_deadline(clock.now()) {
-                        run_batch(batch, server.as_mut());
+                        let qlen = queue.len();
+                        run_batch(batch, server.as_mut(), qlen);
                         depth.store(queue.len(), Ordering::Relaxed);
                         continue;
                     }
@@ -1534,13 +1823,15 @@ pub(crate) fn server_loop(
                 Ok(m) => {
                     if let Some(batch) = decode_and_enqueue(m, server.as_mut(), &mut queue, &clock)
                     {
-                        run_batch(batch, server.as_mut());
+                        let qlen = queue.len();
+                        run_batch(batch, server.as_mut(), qlen);
                     }
                     depth.store(queue.len(), Ordering::Relaxed);
                 }
                 Err(RecvTimeoutError::Timeout) => {
                     if let Some(batch) = queue.poll_deadline(clock.now()) {
-                        run_batch(batch, server.as_mut());
+                        let qlen = queue.len();
+                        run_batch(batch, server.as_mut(), qlen);
                         depth.store(queue.len(), Ordering::Relaxed);
                     }
                 }
@@ -1550,7 +1841,7 @@ pub(crate) fn server_loop(
     }
     let tail = queue.flush();
     if !tail.is_empty() {
-        run_batch(tail, server.as_mut());
+        run_batch(tail, server.as_mut(), 0);
     }
     depth.store(0, Ordering::Relaxed);
     agg
@@ -1608,6 +1899,9 @@ fn device_loop(
         PacketOrder::Index => None,
     };
     let packetizer = Packetizer::new(cfg.net.payload_cap(cfg.network.mtu), order);
+    // per-device adaptive split/rate policy; `None` keeps every branch
+    // below on the pre-policy code path (the bit-identity contract)
+    let mut policy = cfg.policy.clone().map(DevicePolicy::new);
     // wall mode paces against a per-device anchor taken *after* model
     // loading (the pre-clock behavior: a slow init must not turn the
     // first arrivals into a past-due burst); sim mode waits in virtual
@@ -1631,9 +1925,30 @@ fn device_loop(
         let lane = Lane::Device(device_index as u32);
         let rid = i as u64;
         tracer.instant(lane, EventKind::Arrival, rid, times[j], 0.0);
+        // consult the adaptive policy *before* encoding: the decision
+        // picks the quantizer width for this request's uplink (or drops
+        // the uplink entirely under the local-only fallback)
+        let decision = policy.as_mut().map(|p| p.decide());
+        if let Some(d) = &decision {
+            if d.switched {
+                let arg = if d.local_only { 0.0 } else { d.bits as f64 };
+                tracer.instant(lane, EventKind::PolicySwitch, rid, times[j], arg);
+            }
+            if !d.local_only {
+                device.set_bits(d.bits)?;
+            }
+        }
         let idx = i % testset.len();
         let img = testset.image(idx)?;
         let mut local = device.encode(&img)?;
+        if decision.as_ref().is_some_and(|d| d.local_only) {
+            // resolve on device: drop the uplink and its pricing — a
+            // request the policy keeps local never quantizes/compresses
+            local.frame = None;
+            local.symbols = None;
+            local.timings.quantize_s = 0.0;
+            local.timings.compress_s = 0.0;
+        }
 
         let mut remote: Option<Vec<f32>> = None;
         let mut remote_s = 0.0f64;
@@ -1655,13 +1970,20 @@ fn device_loop(
             if tx_start > compute_done {
                 tracer.span(lane, EventKind::RadioWait, rid, compute_done, tx_start, 0.0);
             }
-            let (body, mut stats) = match (&cfg.net.delivery, local.symbols.take()) {
+            // the adaptive policy overrides the configured delivery for
+            // this request; without a policy this is `&cfg.net.delivery`
+            // and the match below behaves exactly as before
+            let delivery = match &decision {
+                Some(d) => &d.delivery,
+                None => &cfg.net.delivery,
+            };
+            let (body, mut stats) = match (delivery, local.symbols.take()) {
                 (DeliveryPolicy::Anytime { .. }, Some(symbols)) => {
                     let bits = frame.bits;
                     let pkts = packetizer.packetize(i as u64, &symbols, bits)?;
                     let (arrived, stats) = transmit_packets_traced(
                         &mut chan,
-                        &cfg.net.delivery,
+                        delivery,
                         &pkts,
                         tx_start,
                         &tracer,
@@ -1717,6 +2039,11 @@ fn device_loop(
                 t_remote_wall.elapsed().as_secs_f64()
             };
             remote = Some(row);
+            if let Some(p) = policy.as_mut() {
+                // feed the EWMAs: this exchange's link stats plus the
+                // fresh queue-depth advertisement stamped on the reply
+                p.observe(&stats, transport.queue_depth());
+            }
             tracer.span(lane, EventKind::Remote, rid, t_remote, t_remote + remote_s, 0.0);
             t_done = clock.now() + downlink_s;
             tracer.span(lane, EventKind::Downlink, rid, t_done - downlink_s, t_done, 0.0);
@@ -1759,6 +2086,11 @@ fn device_loop(
                 req_start.elapsed().as_secs_f64()
             },
             outcome,
+            policy: decision.as_ref().map(|d| PolicyOutcome {
+                bits: d.bits,
+                switched: d.switched,
+                local_only: d.local_only,
+            }),
         };
         if tx_done.send(served).is_err() {
             break; // stream consumer gone; stop producing
@@ -1777,10 +2109,14 @@ mod tests {
             .artifacts_dir("/tmp/arts")
             .scheme(Scheme::Deepcod)
             .backend(BackendKind::Reference)
-            .devices(4)
-            .requests(128)
-            .max_batch(4)
-            .batch_deadline_us(500)
+            .fleet(|f| {
+                f.devices = 4;
+                f.requests = 128;
+            })
+            .batch(|b| {
+                b.max_batch = 4;
+                b.deadline_us = 500;
+            })
             .bits(2)
             .alpha(0.7)
             .network_profile(NetworkProfile::ble_270kbps())
@@ -1789,8 +2125,8 @@ mod tests {
         assert_eq!(cfg.dataset, "svhns");
         assert_eq!(cfg.scheme, Scheme::Deepcod);
         assert_eq!(cfg.backend, BackendKind::Reference);
-        assert_eq!(cfg.max_batch, 4);
-        assert_eq!(cfg.batch_deadline_us, 500);
+        assert_eq!(cfg.batch.max_batch, 4);
+        assert_eq!(cfg.batch.deadline_us, 500);
         assert_eq!(cfg.bits, 2);
         assert_eq!(cfg.alpha_override, Some(0.7));
         assert_eq!(cfg.network.name, "BLE-270kbps");
@@ -1804,20 +2140,22 @@ mod tests {
         let base = RunConfig::new(cfg.artifacts_dir.clone(), "x", Scheme::Agile);
         assert_eq!(cfg.backend, base.backend);
         assert_eq!(cfg.bits, base.bits);
-        assert_eq!(cfg.max_batch, base.max_batch);
-        assert_eq!(cfg.batch_deadline_us, base.batch_deadline_us);
+        assert_eq!(cfg.batch, base.batch);
+        assert_eq!(cfg.policy, base.policy);
         assert_eq!(cfg.alpha_override, None);
     }
 
     #[test]
     fn builder_maps_net_knobs_onto_run_config() {
         let cfg = ServeBuilder::new("svhns")
-            .loss(GilbertElliott::bursty(0.3, 4.0))
-            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.05 })
-            .packet_order(PacketOrder::Index)
-            .packet_payload(64)
-            .net_seed(7)
-            .bandwidth_trace(BandwidthTrace::constant(1e6))
+            .net(|n| {
+                n.loss = GilbertElliott::bursty(0.3, 4.0);
+                n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.05 };
+                n.order = PacketOrder::Index;
+                n.packet_payload = Some(64);
+                n.seed = 7;
+                n.trace = Some(BandwidthTrace::constant(1e6));
+            })
             .to_config();
         assert!(!cfg.net.is_ideal());
         assert!((cfg.net.loss.expected_loss_rate() - 0.3).abs() < 1e-9);
@@ -1828,6 +2166,50 @@ mod tests {
         assert!(cfg.net.trace.is_some());
         // defaults stay on the ideal pre-channel link
         assert!(ServeBuilder::new("x").to_config().net.is_ideal());
+    }
+
+    #[test]
+    fn from_config_to_config_round_trips() {
+        let cfg = ServeBuilder::new("svhns")
+            .scheme(Scheme::Spinn)
+            .backend(BackendKind::Reference)
+            .bits(2)
+            .alpha(0.6)
+            .batch(|b| {
+                b.max_batch = 4;
+                b.deadline_us = 750;
+            })
+            .net(|n| {
+                n.seed = 5;
+                n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.02 };
+            })
+            .policy(crate::serve::policy::PolicyConfig::default())
+            .device_profile(DeviceProfile::stm32h743())
+            .network_profile(NetworkProfile::ble_270kbps())
+            .to_config();
+        assert_eq!(ServeBuilder::from_config(cfg.clone()).to_config(), cfg);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_flat_setters_delegate_to_grouped_configs() {
+        let via_shims = ServeBuilder::new("x")
+            .max_batch(4)
+            .batch_deadline_us(500)
+            .loss_rate(0.25)
+            .net_seed(3)
+            .to_config();
+        let via_groups = ServeBuilder::new("x")
+            .batch(|b| {
+                b.max_batch = 4;
+                b.deadline_us = 500;
+            })
+            .net(|n| {
+                n.loss = GilbertElliott::uniform(0.25);
+                n.seed = 3;
+            })
+            .to_config();
+        assert_eq!(via_shims, via_groups);
     }
 
     #[test]

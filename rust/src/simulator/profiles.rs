@@ -8,7 +8,7 @@
 
 
 /// Embedded-device cost model parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DeviceProfile {
     pub name: String,
     /// CPU frequency in Hz (STM32F746: 216 MHz, scalable; §7.5)
@@ -73,7 +73,7 @@ impl DeviceProfile {
 }
 
 /// Wireless link model.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NetworkProfile {
     pub name: String,
     /// application-layer goodput, bits per second

@@ -106,23 +106,26 @@ impl EvalSpec {
         let mut b = ServeBuilder::new(self.dataset.as_str())
             .backend(self.backend)
             .scheme(self.scheme)
-            .devices(self.devices)
-            .requests(self.requests)
+            .fleet(|f| {
+                f.devices = self.devices;
+                f.requests = self.requests;
+            })
             .rate_hz(self.rate_hz)
             .arrival_seed(self.arrival_seed)
-            .net_seed(self.net_seed)
-            .max_batch(self.max_batch)
+            .net(|n| n.seed = self.net_seed)
+            .batch(|c| c.max_batch = self.max_batch)
             .clock(self.clock)
             .sim_engine(self.sim_engine);
         if let Some(dir) = &self.artifacts_dir {
             b = b.artifacts_dir(dir);
         }
         if self.loss > 0.0 {
-            b = b.loss(if self.burst > 1.0 {
+            let loss = if self.burst > 1.0 {
                 GilbertElliott::bursty(self.loss, self.burst)
             } else {
                 GilbertElliott::uniform(self.loss)
-            });
+            };
+            b = b.net(|n| n.loss = loss);
         }
         b
     }
@@ -381,6 +384,7 @@ mod tests {
                 placement: vec![crate::serve::Placement::Static],
                 servers: vec![1],
                 autoscale: vec![false],
+                policy: vec![false],
             },
             eval: EvalSpec { devices: 2, requests: 32, rate_hz: 200.0, ..EvalSpec::default() },
             strategy: StrategyKind::Exhaustive,

@@ -14,11 +14,11 @@
 
 use crate::net::DeliveryPolicy;
 use crate::report::{json_array, JsonObj};
-use crate::serve::{AutoscaleConfig, Placement, ServeBuilder};
+use crate::serve::{AutoscaleConfig, Placement, PolicyConfig, ServeBuilder};
 use anyhow::{bail, ensure, Result};
 
 /// Candidate values per serving knob; the search grid is the cross
-/// product of all seven axes.
+/// product of all eight axes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchSpace {
     /// dynamic-batcher deadline, microseconds
@@ -37,6 +37,11 @@ pub struct SearchSpace {
     /// the controller grow toward the servers-axis value as a ceiling;
     /// engine clock only)
     pub autoscale: Vec<bool>,
+    /// whether the per-request adaptive split/rate policy runs (`true`
+    /// arms [`PolicyConfig::default`] on every device half; the searched
+    /// `bits` axis then sets the starting/static width while the policy
+    /// adapts around it)
+    pub policy: Vec<bool>,
 }
 
 impl Default for SearchSpace {
@@ -51,13 +56,14 @@ impl Default for SearchSpace {
             placement: vec![Placement::Static],
             servers: vec![1, 2],
             autoscale: vec![false],
+            policy: vec![false],
         }
     }
 }
 
 impl SearchSpace {
     /// Per-axis lengths, least-significant axis first.
-    fn radices(&self) -> [usize; 7] {
+    fn radices(&self) -> [usize; 8] {
         [
             self.batch_deadline_us.len(),
             self.packet_payload.len(),
@@ -66,13 +72,22 @@ impl SearchSpace {
             self.placement.len(),
             self.servers.len(),
             self.autoscale.len(),
+            self.policy.len(),
         ]
     }
 
     /// Every axis must offer at least one value.
     pub fn validate(&self) -> Result<()> {
-        let names =
-            ["deadlines-us", "payloads", "bits", "delivery", "placements", "servers", "autoscale"];
+        let names = [
+            "deadlines-us",
+            "payloads",
+            "bits",
+            "delivery",
+            "placements",
+            "servers",
+            "autoscale",
+            "policy",
+        ];
         for (n, name) in self.radices().iter().zip(names) {
             ensure!(*n > 0, "search axis --{name} is empty");
         }
@@ -127,6 +142,7 @@ impl SearchSpace {
             placement: self.placement[genome[4]],
             servers: self.servers[genome[5]],
             autoscale: self.autoscale[genome[6]],
+            policy: self.policy[genome[7]],
         }
     }
 
@@ -173,6 +189,7 @@ impl SearchSpace {
             )
             .field_raw("servers", &json_array(self.servers.iter().map(|v| v.to_string())))
             .field_raw("autoscale", &json_array(self.autoscale.iter().map(|v| v.to_string())))
+            .field_raw("policy", &json_array(self.policy.iter().map(|v| v.to_string())))
             .finish()
     }
 }
@@ -187,24 +204,33 @@ pub struct TunePoint {
     pub placement: Placement,
     pub servers: usize,
     pub autoscale: bool,
+    pub policy: bool,
 }
 
 impl TunePoint {
     /// Apply this point's knobs on top of an eval-spec builder.
     pub fn apply(&self, mut b: ServeBuilder) -> ServeBuilder {
         b = b
-            .batch_deadline_us(self.batch_deadline_us)
+            .batch(|c| c.deadline_us = self.batch_deadline_us)
             .bits(self.bits)
-            .delivery(self.delivery.clone())
-            .placement(self.placement)
-            .servers(self.servers);
+            .net(|n| n.delivery = self.delivery.clone())
+            .fleet(|f| {
+                f.placement = self.placement;
+                f.servers = self.servers;
+            });
         if let Some(bytes) = self.packet_payload {
-            b = b.packet_payload(bytes);
+            b = b.net(|n| n.packet_payload = Some(bytes));
         }
         if self.autoscale {
             // the servers axis becomes the controller's ceiling: start
             // from one shard and let SLO pressure grow the fleet
-            b = b.servers(1).autoscale(AutoscaleConfig::new(1, self.servers));
+            b = b.fleet(|f| {
+                f.servers = 1;
+                f.autoscale = Some(AutoscaleConfig::new(1, self.servers));
+            });
+        }
+        if self.policy {
+            b = b.policy(PolicyConfig::default());
         }
         b
     }
@@ -225,6 +251,7 @@ impl TunePoint {
         obj.field_str("placement", self.placement.name())
             .field_usize("servers", self.servers)
             .field_bool("autoscale", self.autoscale)
+            .field_bool("policy", self.policy)
             .finish()
     }
 
@@ -254,6 +281,7 @@ impl TunePoint {
             placement: v.str_at("placement")?.parse()?,
             servers: v.usize_at("servers")?,
             autoscale: v.get("autoscale")?.as_bool()?,
+            policy: v.get("policy")?.as_bool()?,
         })
     }
 }
@@ -340,13 +368,14 @@ mod tests {
             placement: vec![Placement::Static, Placement::LeastLoaded],
             servers: vec![1, 2],
             autoscale: vec![false, true],
+            policy: vec![false, true],
         }
     }
 
     #[test]
     fn mixed_radix_indexing_is_a_bijection() {
         let s = space();
-        assert_eq!(s.len(), 128);
+        assert_eq!(s.len(), 256);
         let mut keys = std::collections::HashSet::new();
         for i in 0..s.len() {
             let g = s.genome(i);
@@ -374,7 +403,7 @@ mod tests {
     #[test]
     fn point_key_roundtrips_through_the_parser() {
         let s = space();
-        for i in [0, 13, 37, 63, 101, 127] {
+        for i in [0, 13, 37, 63, 101, 127, 201, 255] {
             let p = s.point(i);
             let v = crate::json::Value::parse(&p.key()).unwrap();
             let back = TunePoint::parse(&v).unwrap();
@@ -393,12 +422,35 @@ mod tests {
             placement: Placement::RoundRobin,
             servers: 3,
             autoscale: false,
+            policy: false,
         };
         let cfg = p.apply(ServeBuilder::new("x")).to_config();
-        assert_eq!(cfg.batch_deadline_us, 750);
+        assert_eq!(cfg.batch.deadline_us, 750);
         assert_eq!(cfg.net.packet_payload, Some(96));
         assert_eq!(cfg.bits, 2);
         assert_eq!(cfg.net.delivery, DeliveryPolicy::Anytime { deadline_s: 0.004 });
+        assert!(cfg.policy.is_none());
+    }
+
+    #[test]
+    fn policy_point_arms_the_adaptive_policy() {
+        let p = TunePoint {
+            batch_deadline_us: 500,
+            packet_payload: None,
+            bits: 4,
+            delivery: DeliveryPolicy::Arq,
+            placement: Placement::Static,
+            servers: 1,
+            autoscale: false,
+            policy: true,
+        };
+        let cfg = p.apply(ServeBuilder::new("x")).to_config();
+        assert_eq!(cfg.policy, Some(PolicyConfig::default()));
+        // the policy digit is part of the point's identity, so the
+        // execution log never conflates static and adaptive variants
+        let mut off = p.clone();
+        off.policy = false;
+        assert_ne!(off.key(), p.key());
     }
 
     #[test]

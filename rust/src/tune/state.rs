@@ -199,6 +199,7 @@ mod tests {
             placement: Placement::Static,
             servers,
             autoscale: false,
+            policy: false,
         }
     }
 

@@ -182,6 +182,7 @@ mod tests {
             placement: vec![Placement::Static, Placement::LeastLoaded],
             servers: vec![1, 2],
             autoscale: vec![false],
+            policy: vec![false],
         }
     }
 

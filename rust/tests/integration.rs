@@ -20,8 +20,8 @@ use agilenn::obs::{
 };
 use agilenn::runtime::{make_backend, ReferenceBackend};
 use agilenn::serve::{
-    AutoscaleConfig, ClockKind, ConfigError, Daemon, Placement, PipelineReport, ServeBuilder,
-    Service, SimEngine,
+    AutoscaleConfig, ClockKind, ConfigError, Daemon, Placement, PipelineReport, PolicyConfig,
+    ServeBuilder, Service, SimEngine,
 };
 use agilenn::tune::{self, ranking, EvalSpec, SearchSpace, StrategyKind, TuneConfig};
 use agilenn::workload::{Arrival, TestSet};
@@ -254,8 +254,8 @@ fn reference_serve_runs_all_five_schemes_through_the_batched_pipeline() {
     let n = 12;
     for scheme in Scheme::all() {
         let rep = reference_builder(scheme)
-            .devices(2)
-            .requests(n)
+            .fleet(|f| f.devices = 2)
+            .fleet(|f| f.requests = n)
             .rate_hz(500.0)
             .build()
             .unwrap()
@@ -280,7 +280,7 @@ fn reference_serve_runs_all_five_schemes_through_the_batched_pipeline() {
 fn reference_streaming_outcomes_are_observable_per_request() {
     let n = 16;
     let mut stream =
-        reference_builder(Scheme::Agile).devices(2).requests(n).build().unwrap().stream().unwrap();
+        reference_builder(Scheme::Agile).fleet(|f| f.devices = 2).fleet(|f| f.requests = n).build().unwrap().stream().unwrap();
     let mut ids = std::collections::HashSet::new();
     let mut count = 0;
     for out in stream.by_ref() {
@@ -303,7 +303,7 @@ fn serve_builder_reference_needs_no_artifacts_directory() {
     let cfg = reference_builder(Scheme::Agile).to_config();
     assert!(Meta::load(&cfg.dataset_dir()).is_err(), "test must point at no artifacts");
     assert!(TestSet::load(&cfg.dataset_dir().join("test.bin")).is_err());
-    let rep = reference_builder(Scheme::Agile).requests(4).build().unwrap().run().unwrap();
+    let rep = reference_builder(Scheme::Agile).fleet(|f| f.requests = 4).build().unwrap().run().unwrap();
     assert_eq!(rep.requests, 4);
     // and make_backend resolves without touching the filesystem
     let backend = make_backend(&cfg, &SyntheticSpec::new(SYNTHETIC_DATASET).meta()).unwrap();
@@ -320,13 +320,13 @@ fn reference_lossy_serve_is_seed_deterministic() {
     // and transport counters (wall-clock fields excepted)
     let run = || {
         reference_builder(Scheme::Agile)
-            .devices(2)
-            .requests(24)
-            .max_batch(1)
-            .loss(GilbertElliott::bursty(0.3, 4.0))
-            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.01 })
-            .packet_payload(64)
-            .net_seed(9)
+            .fleet(|f| f.devices = 2)
+            .fleet(|f| f.requests = 24)
+            .batch(|b| b.max_batch = 1)
+            .net(|n| n.loss = GilbertElliott::bursty(0.3, 4.0))
+            .net(|n| n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.01 })
+            .net(|n| n.packet_payload = Some(64))
+            .net(|n| n.seed = 9)
             .build()
             .unwrap()
             .run()
@@ -351,16 +351,16 @@ fn reference_anytime_transport_decodes_partial_frames_under_heavy_loss() {
     // p99_net_s measures the transport alone — and the pacing costs no
     // wall time
     let rep = reference_builder(Scheme::Agile)
-        .devices(1)
-        .requests(16)
-        .max_batch(1)
+        .fleet(|f| f.devices = 1)
+        .fleet(|f| f.requests = 16)
+        .batch(|b| b.max_batch = 1)
         .arrival(Arrival::Periodic { hz: 30.0 })
         .clock(ClockKind::Sim)
-        .loss(GilbertElliott::uniform(0.5))
+        .net(|n| n.loss = GilbertElliott::uniform(0.5))
         // tight deadline: one pass, no time for full recovery
-        .delivery(DeliveryPolicy::Anytime { deadline_s: 0.004 })
-        .packet_payload(64)
-        .net_seed(3)
+        .net(|n| n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.004 })
+        .net(|n| n.packet_payload = Some(64))
+        .net(|n| n.seed = 3)
         .build()
         .unwrap()
         .run()
@@ -382,9 +382,9 @@ fn reference_zero_loss_channel_reproduces_the_ideal_link_numbers() {
     // identical to the pre-channel NetworkSim pricing
     use agilenn::simulator::NetworkSim;
     let mut stream = reference_builder(Scheme::Agile)
-        .devices(1)
-        .requests(8)
-        .max_batch(1)
+        .fleet(|f| f.devices = 1)
+        .fleet(|f| f.requests = 8)
+        .batch(|b| b.max_batch = 1)
         .arrival(Arrival::Periodic { hz: 30.0 })
         .clock(ClockKind::Sim)
         .build()
@@ -411,13 +411,13 @@ fn reference_sim_clock_serve_is_bit_reproducible_and_never_sleeps() {
     // latency quantiles and net counters
     let run = || -> PipelineReport {
         reference_builder(Scheme::Agile)
-            .devices(8)
-            .requests(512)
+            .fleet(|f| f.devices = 8)
+            .fleet(|f| f.requests = 512)
             .rate_hz(200.0)
             .arrival_seed(11)
-            .max_batch(1)
-            .loss(GilbertElliott::bursty(0.2, 4.0))
-            .net_seed(5)
+            .batch(|b| b.max_batch = 1)
+            .net(|n| n.loss = GilbertElliott::bursty(0.2, 4.0))
+            .net(|n| n.seed = 5)
             .clock(ClockKind::Sim)
             .build()
             .unwrap()
@@ -449,13 +449,13 @@ fn reference_wall_and_sim_clocks_agree_on_the_seed_deterministic_fields() {
     // must not move any deterministic field
     let run = |clock: ClockKind| -> PipelineReport {
         reference_builder(Scheme::Agile)
-            .devices(2)
-            .requests(16)
+            .fleet(|f| f.devices = 2)
+            .fleet(|f| f.requests = 16)
             .rate_hz(120.0)
             .arrival_seed(3)
-            .max_batch(1)
-            .loss(GilbertElliott::uniform(0.1))
-            .net_seed(4)
+            .batch(|b| b.max_batch = 1)
+            .net(|n| n.loss = GilbertElliott::uniform(0.1))
+            .net(|n| n.seed = 4)
             .clock(clock)
             .build()
             .unwrap()
@@ -500,13 +500,13 @@ fn reference_loopback_daemon_matches_the_event_engine_bitwise() {
     // subset) cross the real socket.
     for delivery in [DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.004 }] {
         let configure = |b: ServeBuilder| {
-            b.devices(3)
-                .requests(24)
+            b.fleet(|f| f.devices = 3)
+                .fleet(|f| f.requests = 24)
                 .arrival(Arrival::Periodic { hz: 1e9 }) // unpaced: wall run is instant
-                .max_batch(4)
-                .loss(GilbertElliott::bursty(0.25, 4.0))
-                .delivery(delivery.clone())
-                .net_seed(5)
+                .batch(|b| b.max_batch = 4)
+                .net(|n| n.loss = GilbertElliott::bursty(0.25, 4.0))
+                .net(|n| n.delivery = delivery.clone())
+                .net(|n| n.seed = 5)
         };
         let label = delivery.name();
         let mut engine_stream = configure(reference_builder(Scheme::Agile))
@@ -572,7 +572,7 @@ fn reference_remote_client_requires_wall_clock_and_one_server() {
     assert!(err.to_string().contains("requires the wall clock"), "{err:#}");
     let err = reference_builder(Scheme::Agile)
         .connect("127.0.0.1:1")
-        .servers(2)
+        .fleet(|f| f.servers = 2)
         .clock(ClockKind::Sim) // servers>1 needs sim; the remote check must still win
         .build()
         .unwrap()
@@ -592,8 +592,8 @@ fn reference_daemon_handshake_rejects_a_mismatched_client() {
     let (addr, daemon) = spawn_loopback_daemon();
     let err = reference_builder(Scheme::Agile)
         .bits(2)
-        .devices(1)
-        .requests(2)
+        .fleet(|f| f.devices = 1)
+        .fleet(|f| f.requests = 2)
         .connect(&addr)
         .build()
         .unwrap()
@@ -614,7 +614,7 @@ fn wall_pacing_anchor_holds_on_both_transports() {
     // transport or a real loopback socket.
     let schedule_end = 3.0 / 100.0;
     let paced =
-        |b: ServeBuilder| b.devices(2).requests(8).arrival(Arrival::Periodic { hz: 100.0 });
+        |b: ServeBuilder| b.fleet(|f| f.devices = 2).fleet(|f| f.requests = 8).arrival(Arrival::Periodic { hz: 100.0 });
     let in_process =
         paced(reference_builder(Scheme::Agile)).build().unwrap().run().unwrap();
     assert!(
@@ -644,7 +644,7 @@ fn dropping_the_stream_shuts_down_both_transports_cleanly() {
     // device loops notice the closed outcome channel and stop producing,
     // worker threads unwind, and (for the socket path) the daemon survives
     // the abandoned connections and still honors a later shutdown
-    let slow = |b: ServeBuilder| b.devices(2).requests(200).rate_hz(50.0);
+    let slow = |b: ServeBuilder| b.fleet(|f| f.devices = 2).fleet(|f| f.requests = 200).rate_hz(50.0);
     let mut stream =
         slow(reference_builder(Scheme::Agile)).build().unwrap().stream().unwrap();
     assert!(stream.by_ref().take(2).count() == 2);
@@ -667,9 +667,9 @@ fn dropping_the_stream_shuts_down_both_transports_cleanly() {
 fn reference_radio_contention_grows_with_offered_rate_never_shrinks() {
     let run = |hz: f64| -> PipelineReport {
         reference_builder(Scheme::Agile)
-            .devices(1)
-            .requests(48)
-            .max_batch(1)
+            .fleet(|f| f.devices = 1)
+            .fleet(|f| f.requests = 48)
+            .batch(|b| b.max_batch = 1)
             .arrival(Arrival::Periodic { hz })
             .clock(ClockKind::Sim)
             .build()
@@ -707,13 +707,13 @@ fn reference_scheme_clock_delivery_matrix_smoke() {
                 let label =
                     format!("{} / {} / {}", scheme.name(), clock.name(), delivery.name());
                 let rep = reference_builder(scheme)
-                    .devices(2)
-                    .requests(n)
+                    .fleet(|f| f.devices = 2)
+                    .fleet(|f| f.requests = n)
                     .rate_hz(500.0)
                     .clock(clock)
-                    .loss(GilbertElliott::uniform(0.1))
-                    .delivery(delivery)
-                    .net_seed(1)
+                    .net(|n| n.loss = GilbertElliott::uniform(0.1))
+                    .net(|n| n.delivery = delivery)
+                    .net(|n| n.seed = 1)
                     .build()
                     .unwrap()
                     .run()
@@ -799,14 +799,14 @@ fn reference_event_engine_matches_threaded_sim_across_the_scheme_delivery_matrix
         for delivery in [DeliveryPolicy::Arq, DeliveryPolicy::Anytime { deadline_s: 0.004 }] {
             let run = |engine: SimEngine| -> PipelineReport {
                 reference_builder(scheme)
-                    .devices(3)
-                    .requests(30)
+                    .fleet(|f| f.devices = 3)
+                    .fleet(|f| f.requests = 30)
                     .arrival(Arrival::Periodic { hz: 50.0 })
                     .clock(ClockKind::Sim)
                     .sim_engine(engine)
-                    .loss(GilbertElliott::uniform(0.1))
-                    .delivery(delivery.clone())
-                    .net_seed(1)
+                    .net(|n| n.loss = GilbertElliott::uniform(0.1))
+                    .net(|n| n.delivery = delivery.clone())
+                    .net(|n| n.seed = 1)
                     .build()
                     .unwrap()
                     .run()
@@ -830,14 +830,14 @@ fn reference_event_engine_matches_threaded_sim_with_golden_style_lossy_anytime()
     // reproducibility is pinned by the engine-run snapshot instead)
     let run = |engine: SimEngine| -> PipelineReport {
         reference_builder(Scheme::Agile)
-            .devices(8)
-            .requests(128)
+            .fleet(|f| f.devices = 8)
+            .fleet(|f| f.requests = 128)
             .arrival(Arrival::Periodic { hz: 25.0 })
-            .max_batch(4)
-            .loss(GilbertElliott::bursty(0.2, 4.0))
-            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.02 })
-            .packet_payload(128)
-            .net_seed(5)
+            .batch(|b| b.max_batch = 4)
+            .net(|n| n.loss = GilbertElliott::bursty(0.2, 4.0))
+            .net(|n| n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.02 })
+            .net(|n| n.packet_payload = Some(128))
+            .net(|n| n.seed = 5)
             .clock(ClockKind::Sim)
             .sim_engine(engine)
             .build()
@@ -859,15 +859,15 @@ fn reference_event_engine_is_bit_reproducible_including_means() {
     // bitwise, and so does the serialized report
     let run = || -> PipelineReport {
         reference_builder(Scheme::Agile)
-            .devices(16)
-            .requests(512)
+            .fleet(|f| f.devices = 16)
+            .fleet(|f| f.requests = 512)
             .rate_hz(150.0)
             .arrival_seed(3)
-            .servers(4)
-            .placement(Placement::LeastLoaded)
+            .fleet(|f| f.servers = 4)
+            .fleet(|f| f.placement = Placement::LeastLoaded)
             .clock(ClockKind::Sim)
-            .loss(GilbertElliott::bursty(0.2, 4.0))
-            .net_seed(5)
+            .net(|n| n.loss = GilbertElliott::bursty(0.2, 4.0))
+            .net(|n| n.seed = 5)
             .build()
             .unwrap()
             .run()
@@ -887,8 +887,8 @@ fn reference_event_engine_is_bit_reproducible_including_means() {
 
 fn fleet_builder(devices: usize, requests: usize) -> ServeBuilder {
     reference_builder(Scheme::Agile)
-        .devices(devices)
-        .requests(requests)
+        .fleet(|f| f.devices = devices)
+        .fleet(|f| f.requests = requests)
         .rate_hz(200.0)
         .arrival_seed(7)
         .clock(ClockKind::Sim)
@@ -897,8 +897,8 @@ fn fleet_builder(devices: usize, requests: usize) -> ServeBuilder {
 #[test]
 fn reference_multi_server_run_reports_per_shard_accounting() {
     let rep = fleet_builder(8, 160)
-        .servers(4)
-        .placement(Placement::LeastLoaded)
+        .fleet(|f| f.servers = 4)
+        .fleet(|f| f.placement = Placement::LeastLoaded)
         .build()
         .unwrap()
         .run()
@@ -926,7 +926,7 @@ fn reference_least_loaded_balances_better_than_static_on_a_skewed_fleet() {
     // queues drain to empty between bursts and every tie would pile onto
     // server 0).
     let run = |placement: Placement| {
-        fleet_builder(6, 240).servers(4).placement(placement).build().unwrap().run().unwrap()
+        fleet_builder(6, 240).fleet(|f| f.servers = 4).fleet(|f| f.placement = placement).build().unwrap().run().unwrap()
     };
     let imbalance = |rep: &PipelineReport| {
         let max = rep.shards.iter().map(|s| s.requests).max().unwrap();
@@ -965,8 +965,8 @@ fn reference_least_loaded_balances_better_than_static_on_a_skewed_fleet() {
 #[test]
 fn reference_round_robin_spreads_offloads_within_one_request() {
     let rep = fleet_builder(5, 200)
-        .servers(4)
-        .placement(Placement::RoundRobin)
+        .fleet(|f| f.servers = 4)
+        .fleet(|f| f.placement = Placement::RoundRobin)
         .build()
         .unwrap()
         .run()
@@ -985,8 +985,8 @@ fn reference_static_placement_is_deterministic_under_device_renumbering() {
     let (devices, requests, servers) = (6usize, 120usize, 4usize);
     let run = || {
         fleet_builder(devices, requests)
-            .servers(servers)
-            .placement(Placement::Static)
+            .fleet(|f| f.servers = servers)
+            .fleet(|f| f.placement = Placement::Static)
             .build()
             .unwrap()
             .run()
@@ -1007,7 +1007,7 @@ fn reference_multi_server_requires_the_event_engine() {
     // wall clock: no engine -> reject
     let err = fleet_builder(4, 16)
         .clock(ClockKind::Wall)
-        .servers(2)
+        .fleet(|f| f.servers = 2)
         .build()
         .unwrap()
         .run()
@@ -1015,7 +1015,7 @@ fn reference_multi_server_requires_the_event_engine() {
     assert!(err.to_string().contains("event engine"), "{err}");
     // sim clock forced onto the threaded fabric: also reject
     let err = fleet_builder(4, 16)
-        .servers(2)
+        .fleet(|f| f.servers = 2)
         .sim_engine(SimEngine::Threads)
         .build()
         .unwrap()
@@ -1031,8 +1031,8 @@ fn reference_fleet_scale_smoke() {
     // and the perfgate; this keeps `cargo test` honest about scale without
     // slowing it down
     let rep = fleet_builder(2_000, 50_000)
-        .servers(4)
-        .placement(Placement::LeastLoaded)
+        .fleet(|f| f.servers = 4)
+        .fleet(|f| f.placement = Placement::LeastLoaded)
         .build()
         .unwrap()
         .run()
@@ -1070,16 +1070,19 @@ fn autoscale_cfg() -> AutoscaleConfig {
 /// and the sustained queue-p95 breach forces a scale-out.
 fn autoscaled_builder() -> ServeBuilder {
     reference_builder(Scheme::Agile)
-        .devices(32)
-        .requests(6400)
+        .fleet(|f| f.devices = 32)
+        .fleet(|f| f.requests = 6400)
         .arrival(Arrival::Diurnal { period_s: 16.0, base_hz: 0.2, peak_hz: 60.0, seed: 7 })
         .clock(ClockKind::Sim)
-        .servers(2)
-        .placement(Placement::WeightedLeastLoaded)
-        .batch_deadline_us(500)
-        .service_model(1e-3, 3e-3)
-        .autoscale(autoscale_cfg())
-        .slo_p99(200e-3)
+        .fleet(|f| f.servers = 2)
+        .fleet(|f| f.placement = Placement::WeightedLeastLoaded)
+        .batch(|b| b.deadline_us = 500)
+        .fleet(|f| {
+            f.service.base_s = 1e-3;
+            f.service.per_sample_s = 3e-3;
+        })
+        .fleet(|f| f.autoscale = Some(autoscale_cfg()))
+        .fleet(|f| f.slo_p99_s = 200e-3)
 }
 
 #[test]
@@ -1118,7 +1121,7 @@ fn reference_controller_off_runs_the_fixed_fleet_code_path_bit_identically() {
     // pre-autoscale fixed-fleet path — reproducible byte for byte, with
     // the new report fields pinned to their fixed-fleet values
     let run = |p: Placement| {
-        fleet_builder(8, 400).servers(2).placement(p).build().unwrap().run().unwrap()
+        fleet_builder(8, 400).fleet(|f| f.servers = 2).fleet(|f| f.placement = p).build().unwrap().run().unwrap()
     };
     let (a, b) = (run(Placement::LeastLoaded), run(Placement::LeastLoaded));
     assert_eq!(a.to_ordered_json(), b.to_ordered_json());
@@ -1176,6 +1179,7 @@ fn tune_space() -> SearchSpace {
         placement: vec![Placement::Static],
         servers: vec![1, 2],
         autoscale: vec![false],
+        policy: vec![false],
     }
 }
 
@@ -1293,9 +1297,9 @@ fn reference_tune_skips_infeasible_points_gracefully() {
 fn reference_config_error_is_typed_and_downcastable() {
     // unsupported batch size: caught at stream() time with a typed error
     let err = reference_builder(Scheme::Agile)
-        .devices(2)
-        .requests(8)
-        .max_batch(3)
+        .fleet(|f| f.devices = 2)
+        .fleet(|f| f.requests = 8)
+        .batch(|b| b.max_batch = 3)
         .build()
         .unwrap()
         .stream()
@@ -1306,7 +1310,7 @@ fn reference_config_error_is_typed_and_downcastable() {
     }
     // multi-server off the event engine: same typed surface
     let err =
-        fleet_builder(4, 16).clock(ClockKind::Wall).servers(2).build().unwrap().run().unwrap_err();
+        fleet_builder(4, 16).clock(ClockKind::Wall).fleet(|f| f.servers = 2).build().unwrap().run().unwrap_err();
     match err.downcast_ref::<ConfigError>() {
         Some(ConfigError::MultiServerNeedsEventEngine { servers: 2, .. }) => {}
         other => panic!("expected MultiServerNeedsEventEngine, got {other:?}"),
@@ -1315,7 +1319,7 @@ fn reference_config_error_is_typed_and_downcastable() {
 
 #[test]
 fn pipeline_report_ordered_json_is_stable_and_parseable() {
-    let rep = fleet_builder(4, 40).servers(2).build().unwrap().run().unwrap();
+    let rep = fleet_builder(4, 40).fleet(|f| f.servers = 2).build().unwrap().run().unwrap();
     let text = rep.to_ordered_json();
     assert_eq!(text, rep.to_ordered_json(), "same report must serialize byte-identically");
     let v = agilenn::json::Value::parse(&text).expect("report JSON must parse");
@@ -1326,20 +1330,148 @@ fn pipeline_report_ordered_json_is_stable_and_parseable() {
 }
 
 // ---------------------------------------------------------------------------
+// per-request adaptive policy (serve::policy)
+// ---------------------------------------------------------------------------
+
+/// A lossy saturating fleet with the default adaptive ladder on: 30%
+/// bursty loss inflates the EWMA retransmit rounds past `rounds_high`,
+/// so the ladder actually walks during the run.
+fn adaptive_builder() -> ServeBuilder {
+    reference_builder(Scheme::Agile)
+        .fleet(|f| {
+            f.devices = 8;
+            f.requests = 256;
+        })
+        .rate_hz(200.0)
+        .arrival_seed(11)
+        .batch(|b| b.max_batch = 4)
+        .net(|n| {
+            n.loss = GilbertElliott::bursty(0.3, 4.0);
+            n.packet_payload = Some(64);
+            n.seed = 5;
+        })
+        .clock(ClockKind::Sim)
+        .policy(PolicyConfig::default())
+}
+
+#[test]
+fn adaptive_policy_decisions_are_bit_reproducible() {
+    // the policy is pure state-machine arithmetic over the seeded channel's
+    // NetStats, so two consecutive runs — decisions, switches, widths, and
+    // every report field downstream of them — must agree bitwise
+    let run = || adaptive_builder().build().unwrap().run().unwrap();
+    let (a, b) = (run(), run());
+    assert_eq!(
+        a.to_ordered_json(),
+        b.to_ordered_json(),
+        "adaptive runs must be bit-stable across consecutive runs"
+    );
+    let pol = a.policy.as_ref().expect("a policy-on run must carry a policy report");
+    assert!(pol.switches >= 1, "30% bursty loss must force at least one ladder move");
+    assert_eq!(pol.local_only, 0, "local fallback is off in this config");
+    assert!(
+        pol.mean_bits >= 1.0 && pol.mean_bits <= 4.0,
+        "mean width must stay inside the [1,2,4] ladder, got {}",
+        pol.mean_bits
+    );
+    let offloaded: usize = pol.widths.iter().map(|&(_, n)| n).sum();
+    assert!(offloaded > 0 && offloaded <= a.requests, "width histogram covers offloaded uplinks");
+    assert!(pol.widths.iter().all(|&(w, _)| [1, 2, 4].contains(&w)), "only ladder widths appear");
+}
+
+#[test]
+fn policy_off_report_has_no_policy_fields() {
+    // the policy-off ≡ PR-9 contract, surface half: without `.policy(..)`
+    // the report must not grow a policy section and the serialized JSON
+    // must be byte-identical to the pre-policy schema (the committed
+    // golden snapshot in `golden_sim_pipeline_report_is_bit_stable` pins
+    // the field *values* across commits; this pins the field *set*)
+    let rep = golden_run();
+    assert!(rep.policy.is_none(), "policy-off runs must not synthesize a policy report");
+    let text = rep.to_ordered_json();
+    assert!(
+        !text.contains("policy"),
+        "policy-off JSON must carry no policy keys, got: {text}"
+    );
+    // and a policy-on run does grow exactly those fields
+    let on = adaptive_builder().build().unwrap().run().unwrap().to_ordered_json();
+    for key in ["policy_switches", "policy_local_only", "policy_mean_bits", "policy_widths"] {
+        assert!(on.contains(key), "policy-on JSON must carry {key}");
+    }
+}
+
+#[test]
+fn policy_misconfiguration_is_a_typed_error() {
+    // a ladder width with no exported codebook — the synthetic world
+    // ships 1..=6 — is caught against the manifest before serving starts
+    let err = reference_builder(Scheme::Agile)
+        .fleet(|f| {
+            f.devices = 2;
+            f.requests = 8;
+        })
+        .clock(ClockKind::Sim)
+        .policy(PolicyConfig { widths: vec![2, 7], ..PolicyConfig::default() })
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap_err();
+    match err.downcast_ref::<ConfigError>() {
+        Some(ConfigError::UnsupportedBits { bits: 7, scheme: Scheme::Agile, available }) => {
+            assert_eq!(available, &[1, 2, 3, 4, 5, 6]);
+        }
+        other => panic!("expected UnsupportedBits, got {other:?}"),
+    }
+    // a scheme that never quantizes features has no width actuator
+    let err = reference_builder(Scheme::Mcunet)
+        .fleet(|f| {
+            f.devices = 2;
+            f.requests = 8;
+        })
+        .clock(ClockKind::Sim)
+        .policy(PolicyConfig::default())
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<ConfigError>(), Some(ConfigError::InvalidPolicy { .. })),
+        "expected InvalidPolicy for a non-quantizing scheme, got {err:?}"
+    );
+    // the local-only rung needs an on-device head: DeepCOD has none
+    let err = reference_builder(Scheme::Deepcod)
+        .fleet(|f| {
+            f.devices = 2;
+            f.requests = 8;
+        })
+        .clock(ClockKind::Sim)
+        .policy(PolicyConfig { local_fallback: true, ..PolicyConfig::default() })
+        .build()
+        .unwrap()
+        .stream()
+        .unwrap_err();
+    match err.downcast_ref::<ConfigError>() {
+        Some(ConfigError::InvalidPolicy { reason }) => {
+            assert!(reason.contains("local_fallback"), "reason names the knob: {reason}")
+        }
+        other => panic!("expected InvalidPolicy, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // golden snapshot: PR 3's reproducibility contract
 // ---------------------------------------------------------------------------
 
 fn golden_builder() -> ServeBuilder {
     reference_builder(Scheme::Agile)
-        .devices(8)
-        .requests(256)
+        .fleet(|f| f.devices = 8)
+        .fleet(|f| f.requests = 256)
         .rate_hz(200.0)
         .arrival_seed(11)
-        .max_batch(4)
-        .loss(GilbertElliott::bursty(0.2, 4.0))
-        .delivery(DeliveryPolicy::Anytime { deadline_s: 0.02 })
-        .packet_payload(128)
-        .net_seed(5)
+        .batch(|b| b.max_batch = 4)
+        .net(|n| n.loss = GilbertElliott::bursty(0.2, 4.0))
+        .net(|n| n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.02 })
+        .net(|n| n.packet_payload = Some(128))
+        .net(|n| n.seed = 5)
         .clock(ClockKind::Sim)
 }
 
@@ -1571,8 +1703,8 @@ fn reference_threaded_sim_fabric_emits_traces_too() {
     // the legacy thread-per-device fabric routes through the same sink
     let sink = Arc::new(RecordingSink::new());
     let rep = reference_builder(Scheme::Agile)
-        .devices(4)
-        .requests(64)
+        .fleet(|f| f.devices = 4)
+        .fleet(|f| f.requests = 64)
         .rate_hz(200.0)
         .clock(ClockKind::Sim)
         .sim_engine(SimEngine::Threads)
@@ -1832,8 +1964,8 @@ mod pjrt_artifact_tests {
             let rep = ServeBuilder::new(&c.cfg.dataset)
                 .artifacts_dir(c.cfg.artifacts_dir.clone())
                 .scheme(scheme)
-                .devices(2)
-                .requests(n)
+                .fleet(|f| f.devices = 2)
+                .fleet(|f| f.requests = n)
                 .rate_hz(500.0)
                 .build()
                 .unwrap()
@@ -1859,8 +1991,8 @@ mod pjrt_artifact_tests {
         let mut stream = ServeBuilder::new(&c.cfg.dataset)
             .artifacts_dir(c.cfg.artifacts_dir.clone())
             .scheme(Scheme::Agile)
-            .devices(2)
-            .requests(n)
+            .fleet(|f| f.devices = 2)
+            .fleet(|f| f.requests = n)
             .build()
             .unwrap()
             .stream()
@@ -1921,13 +2053,13 @@ mod pjrt_artifact_tests {
             ServeBuilder::new(&c.cfg.dataset)
                 .artifacts_dir(c.cfg.artifacts_dir.clone())
                 .scheme(Scheme::Agile)
-                .devices(2)
-                .requests(24)
-                .max_batch(1) // b1 executable everywhere: bitwise-stable logits
-                .loss(GilbertElliott::bursty(0.3, 4.0))
-                .delivery(DeliveryPolicy::Anytime { deadline_s: 0.01 })
-                .packet_payload(64)
-                .net_seed(9)
+                .fleet(|f| f.devices = 2)
+                .fleet(|f| f.requests = 24)
+                .batch(|b| b.max_batch = 1) // b1 executable everywhere: bitwise-stable logits
+                .net(|n| n.loss = GilbertElliott::bursty(0.3, 4.0))
+                .net(|n| n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.01 })
+                .net(|n| n.packet_payload = Some(64))
+                .net(|n| n.seed = 9)
                 .build()
                 .unwrap()
                 .run()
@@ -1950,15 +2082,15 @@ mod pjrt_artifact_tests {
         let rep = ServeBuilder::new(&c.cfg.dataset)
             .artifacts_dir(c.cfg.artifacts_dir.clone())
             .scheme(Scheme::Agile)
-            .devices(1)
-            .requests(16)
-            .max_batch(1)
+            .fleet(|f| f.devices = 1)
+            .fleet(|f| f.requests = 16)
+            .batch(|b| b.max_batch = 1)
             .arrival(Arrival::Periodic { hz: 30.0 })
             .clock(ClockKind::Sim)
-            .loss(GilbertElliott::uniform(0.5))
-            .delivery(DeliveryPolicy::Anytime { deadline_s: 0.004 })
-            .packet_payload(64)
-            .net_seed(3)
+            .net(|n| n.loss = GilbertElliott::uniform(0.5))
+            .net(|n| n.delivery = DeliveryPolicy::Anytime { deadline_s: 0.004 })
+            .net(|n| n.packet_payload = Some(64))
+            .net(|n| n.seed = 3)
             .build()
             .unwrap()
             .run()
@@ -1978,9 +2110,9 @@ mod pjrt_artifact_tests {
         let mut stream = ServeBuilder::new(&c.cfg.dataset)
             .artifacts_dir(c.cfg.artifacts_dir.clone())
             .scheme(Scheme::Agile)
-            .devices(1)
-            .requests(8)
-            .max_batch(1)
+            .fleet(|f| f.devices = 1)
+            .fleet(|f| f.requests = 8)
+            .batch(|b| b.max_batch = 1)
             .arrival(Arrival::Periodic { hz: 30.0 })
             .clock(ClockKind::Sim)
             .build()
@@ -2007,13 +2139,13 @@ mod pjrt_artifact_tests {
             ServeBuilder::new(&c.cfg.dataset)
                 .artifacts_dir(c.cfg.artifacts_dir.clone())
                 .scheme(Scheme::Agile)
-                .devices(8)
-                .requests(512)
+                .fleet(|f| f.devices = 8)
+                .fleet(|f| f.requests = 512)
                 .rate_hz(200.0)
                 .arrival_seed(11)
-                .max_batch(1)
-                .loss(GilbertElliott::bursty(0.2, 4.0))
-                .net_seed(5)
+                .batch(|b| b.max_batch = 1)
+                .net(|n| n.loss = GilbertElliott::bursty(0.2, 4.0))
+                .net(|n| n.seed = 5)
                 .clock(ClockKind::Sim)
                 .build()
                 .unwrap()
@@ -2044,13 +2176,13 @@ mod pjrt_artifact_tests {
             ServeBuilder::new(&c.cfg.dataset)
                 .artifacts_dir(c.cfg.artifacts_dir.clone())
                 .scheme(Scheme::Agile)
-                .devices(2)
-                .requests(16)
+                .fleet(|f| f.devices = 2)
+                .fleet(|f| f.requests = 16)
                 .rate_hz(120.0)
                 .arrival_seed(3)
-                .max_batch(1)
-                .loss(GilbertElliott::uniform(0.1))
-                .net_seed(4)
+                .batch(|b| b.max_batch = 1)
+                .net(|n| n.loss = GilbertElliott::uniform(0.1))
+                .net(|n| n.seed = 4)
                 .clock(clock)
                 .build()
                 .unwrap()
@@ -2078,9 +2210,9 @@ mod pjrt_artifact_tests {
             ServeBuilder::new(&c.cfg.dataset)
                 .artifacts_dir(c.cfg.artifacts_dir.clone())
                 .scheme(Scheme::Agile)
-                .devices(1)
-                .requests(48)
-                .max_batch(1)
+                .fleet(|f| f.devices = 1)
+                .fleet(|f| f.requests = 48)
+                .batch(|b| b.max_batch = 1)
                 .arrival(Arrival::Periodic { hz })
                 .clock(ClockKind::Sim)
                 .build()

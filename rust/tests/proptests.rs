@@ -5,11 +5,14 @@
 use agilenn::compression::quantizer::{bitpack, bitunpack, Codebook};
 use agilenn::compression::{lzw, RxDecoder, TxEncoder};
 use agilenn::coordinator::batcher::{pad_batch_size, BatchQueue, REMOTE_BATCH_SIZES};
+use agilenn::config::{BackendKind, Scheme};
 use agilenn::net::{
-    reassemble_symbols, Channel, GilbertElliott, Packetizer, PACKET_HEADER_BYTES,
+    reassemble_symbols, BandwidthTrace, Channel, DeliveryPolicy, GilbertElliott, NetStats,
+    PacketOrder, Packetizer, PACKET_HEADER_BYTES,
 };
+use agilenn::serve::{DevicePolicy, PolicyConfig, ServeBuilder};
 use agilenn::obs::{chrome_trace_json, EventKind, Lane, TraceEvent};
-use agilenn::simulator::{NetworkProfile, NetworkSim};
+use agilenn::simulator::{DeviceProfile, NetworkProfile, NetworkSim};
 use agilenn::tensor::{argmax, softmax, Tensor};
 use agilenn::tune::{ranking, Objectives};
 use agilenn::xai;
@@ -513,5 +516,186 @@ fn prop_chrome_trace_export_is_recording_order_invariant() {
         assert_eq!(a, b, "seed {seed}: export must not depend on recording order");
         let v = agilenn::json::Value::parse(&a).expect("export must be valid JSON");
         assert!(v.as_arr().unwrap().len() >= n, "metadata + one entry per event");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serving config: from_config ⇄ to_config is lossless
+// ---------------------------------------------------------------------------
+
+/// A random valid [`PolicyConfig`]: an ascending width subset of 1..=8
+/// plus randomized bands that keep `validate()`'s invariants
+/// (rate_low < rate_high, depth_low < depth_high, sustain >= 1).
+fn rand_policy(rng: &mut Rng) -> PolicyConfig {
+    let mut widths: Vec<u32> = (1..=8).filter(|_| rng.usize(3) == 0).collect();
+    if widths.is_empty() {
+        widths = vec![1 + rng.usize(8) as u32];
+    }
+    let rate_low = 0.4 + 0.3 * rng.f32() as f64;
+    PolicyConfig {
+        widths,
+        ewma_alpha: 0.05 + 0.9 * rng.f32() as f64,
+        rate_low,
+        rate_high: (rate_low + 0.05 + 0.2 * rng.f32() as f64).min(1.0),
+        rounds_high: 0.5 + 2.0 * rng.f32() as f64,
+        goodput_low_bps: if rng.usize(2) == 0 { 0.0 } else { 1e5 },
+        depth_high: 5 + rng.usize(8),
+        depth_low: rng.usize(4),
+        sustain: 1 + rng.usize(3) as u32,
+        cooldown: rng.usize(9) as u32,
+        anytime_deadline_s: if rng.usize(4) == 0 { 0.0 } else { 0.01 + 0.05 * rng.f32() as f64 },
+        local_fallback: rng.usize(2) == 0,
+        probe_every: 1 + rng.usize(16) as u32,
+    }
+}
+
+/// A builder with every `RunConfig`-backed knob randomized through the
+/// grouped sub-config surface.
+fn rand_serve_builder(rng: &mut Rng) -> ServeBuilder {
+    const SCHEMES: [Scheme; 5] =
+        [Scheme::Agile, Scheme::Deepcod, Scheme::Spinn, Scheme::Mcunet, Scheme::EdgeOnly];
+    let loss = if rng.usize(2) == 0 {
+        GilbertElliott::uniform(rng.f32() as f64 * 0.5)
+    } else {
+        GilbertElliott::bursty(rng.f32() as f64 * 0.5, 1.0 + rng.f32() as f64 * 7.0)
+    };
+    let delivery = if rng.usize(2) == 0 {
+        DeliveryPolicy::Arq
+    } else {
+        DeliveryPolicy::Anytime { deadline_s: 0.005 + rng.f32() as f64 * 0.05 }
+    };
+    let order = if rng.usize(2) == 0 { PacketOrder::Importance } else { PacketOrder::Index };
+    let payload = if rng.usize(2) == 0 { None } else { Some(32 + rng.usize(512)) };
+    let trace =
+        if rng.usize(2) == 0 { None } else { Some(BandwidthTrace::constant(1e5 + rng.f32() as f64 * 1e7)) };
+    let seed = rng.next();
+    let mut b = ServeBuilder::new(["svhns", "cifar"][rng.usize(2)])
+        .artifacts_dir(["/nonexistent/a", "/nonexistent/b"][rng.usize(2)])
+        .scheme(SCHEMES[rng.usize(SCHEMES.len())])
+        .backend(if rng.usize(2) == 0 { BackendKind::Reference } else { BackendKind::Pjrt })
+        .bits(1 + rng.usize(6) as u32);
+    // draw outside the closures: capturing `rng` would borrow it twice
+    let (max_batch, deadline_us) = (1 << rng.usize(4), rng.next() % 5_000);
+    b = b.batch(move |bt| {
+        bt.max_batch = max_batch;
+        bt.deadline_us = deadline_us;
+    });
+    b = b.net(move |n| {
+        n.loss = loss;
+        n.delivery = delivery;
+        n.order = order;
+        n.packet_payload = payload;
+        n.trace = trace;
+        n.seed = seed;
+    });
+    if rng.usize(2) == 0 {
+        b = b.alpha(rng.f32() as f64);
+    }
+    if rng.usize(2) == 0 {
+        b = b.policy(rand_policy(rng));
+    }
+    if rng.usize(2) == 0 {
+        b = b.device_profile(if rng.usize(2) == 0 {
+            DeviceProfile::stm32f746()
+        } else {
+            DeviceProfile::stm32h743()
+        });
+    }
+    if rng.usize(2) == 0 {
+        b = b.network_profile(if rng.usize(2) == 0 {
+            NetworkProfile::wifi_6mbps()
+        } else {
+            NetworkProfile::ble_270kbps()
+        });
+    }
+    b
+}
+
+#[test]
+fn prop_serve_builder_config_round_trip_is_lossless() {
+    // from_config is the exact inverse of to_config on the RunConfig
+    // surface: rebuilding a builder from its resolved config and
+    // resolving again must reproduce the config field for field —
+    // including the grouped batch/net sub-configs and the optional
+    // policy ladder
+    for seed in 1..=300u64 {
+        let mut rng = Rng::new(seed);
+        let cfg = rand_serve_builder(&mut rng).to_config();
+        let back = ServeBuilder::from_config(cfg.clone()).to_config();
+        assert_eq!(back, cfg, "seed {seed}: from_config ⇄ to_config must be lossless");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// adaptive policy: hysteresis converges on a constant channel
+// ---------------------------------------------------------------------------
+
+/// A random constant channel observation: one `NetStats` + advertised
+/// depth fed back verbatim after every offloaded decision.
+fn rand_observation(rng: &mut Rng) -> (NetStats, usize) {
+    let delivered = rng.usize(101);
+    let stats = NetStats {
+        packets_sent: 5,
+        packets_lost: rng.usize(3),
+        retransmit_rounds: rng.usize(4),
+        features_total: 100,
+        features_delivered: delivered,
+        app_bytes_offered: 400,
+        app_bytes_delivered: 4 * delivered,
+        complete: delivered == 100,
+        radio_wait_s: 0.0,
+        uplink_s: 0.005 + rng.f32() as f64 * 0.05,
+        airtime_s: 0.004,
+    };
+    (stats, rng.usize(14))
+}
+
+#[test]
+fn prop_policy_hysteresis_converges_and_never_flaps_on_a_constant_channel() {
+    // the good/bad signal bands are disjoint, so a constant observation
+    // stream classifies one way forever: the ladder walks monotonically
+    // to its resting rung — at most one step per rung — and then freezes.
+    // Decisions are pure state-machine arithmetic, so a second identical
+    // run reproduces the sequence exactly.
+    for seed in 1..=150u64 {
+        let mut rng = Rng::new(seed);
+        let cfg = rand_policy(&mut rng);
+        cfg.validate().expect("rand_policy must generate valid configs");
+        let (stats, depth) = rand_observation(&mut rng);
+        let run = || {
+            let mut pol = DevicePolicy::new(cfg.clone());
+            let mut decisions = Vec::with_capacity(600);
+            let mut steps_at_burn_in = 0;
+            for i in 0..600 {
+                let d = pol.decide();
+                if !d.local_only {
+                    pol.observe(&stats, depth); // local-only skips the uplink
+                }
+                decisions.push(d);
+                if i == 399 {
+                    steps_at_burn_in = pol.steps();
+                }
+            }
+            (decisions, steps_at_burn_in, pol.steps())
+        };
+        let (decisions, steps_at_burn_in, steps) = run();
+        // monotone descent (or none): one transition per rung at most —
+        // widths.len()-1 width steps, plus anytime, plus local-only
+        let max_steps = (cfg.widths.len() + 1) as u64;
+        assert!(steps <= max_steps, "seed {seed}: {steps} ladder steps > bound {max_steps}");
+        // converged: 400 observations cover any descent (each step needs
+        // at most sustain + cooldown <= 11 of them, over at most 9 rungs),
+        // so the ladder must be frozen across the tail...
+        assert_eq!(steps, steps_at_burn_in, "seed {seed}: ladder stepped after burn-in");
+        // ...and the decision stream's width constant
+        let tail = &decisions[400..];
+        assert!(
+            tail.windows(2).all(|w| w[0].bits == w[1].bits),
+            "seed {seed}: width still moving after burn-in"
+        );
+        // bitwise double-run determinism of the decision sequence
+        let (again, _, steps2) = run();
+        assert_eq!(decisions, again, "seed {seed}: decisions must reproduce exactly");
+        assert_eq!(steps, steps2);
     }
 }
